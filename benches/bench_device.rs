@@ -1,0 +1,31 @@
+//! L3 hot-path benches: pulse trains and analog MVMs on the device
+//! substrate (the inner loops of every pulse-level experiment).
+
+use analog_rider::device::{presets, DeviceArray, IoChain};
+use analog_rider::util::bench::{consume, Bench};
+use analog_rider::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::from_seed(1);
+
+    let mut arr = DeviceArray::sample(128, 128, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
+    let r = b.run("pulse_all_random/128x128", || {
+        arr.pulse_all_random(&mut rng);
+    });
+    println!("{}", r.report_throughput("pulses", (128 * 128) as f64));
+
+    let dw = vec![0.01f32; 128 * 128];
+    let r = b.run("analog_update/128x128", || {
+        arr.analog_update(&dw, &mut rng);
+    });
+    println!("{}", r.report_throughput("cells", (128 * 128) as f64));
+
+    let io = IoChain::default();
+    let x: Vec<f32> = (0..16 * 256).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+    let w: Vec<f32> = (0..256 * 128).map(|i| ((i % 13) as f32 - 6.0) / 13.0).collect();
+    let r = b.run("io_mvm/16x256x128", || {
+        consume(io.mvm(&x, &w, 16, 256, 128, &mut rng, false));
+    });
+    println!("{}", r.report_throughput("flops", (2 * 16 * 256 * 128) as f64));
+}

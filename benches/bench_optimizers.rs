@@ -1,0 +1,34 @@
+//! Rust-native optimizer step costs (theory-experiment inner loops).
+
+use analog_rider::analog::*;
+use analog_rider::device::presets;
+use analog_rider::optim::Quadratic;
+use analog_rider::util::bench::Bench;
+use analog_rider::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::from_seed(3);
+    let obj = Quadratic::new(256, 1.0, 4.0, 0.3, &mut rng);
+    let p = presets::PRECISE;
+
+    let mut sgd = AnalogSgd::new(256, &p, 0.3, 0.1, 0.05, 0.1, &mut rng);
+    println!("{}", b.run("analog_sgd_step/d256", || {
+        sgd.step(&obj, &mut rng);
+    }).report());
+
+    let mut tt = TikiTaka::new(256, &p, 0.3, 0.1, TtVariant::V2, 0.1, 0.05, 0.1, &mut rng);
+    println!("{}", b.run("ttv2_step/d256", || {
+        tt.step(&obj, &mut rng);
+    }).report());
+
+    let mut rider = Rider::new(256, &p, 0.3, 0.1, RiderHypers::default(), 0.1, &mut rng);
+    println!("{}", b.run("erider_step/d256", || {
+        rider.step(&obj, &mut rng);
+    }).report());
+
+    let mut agad = Agad::new(256, &p, 0.3, 0.1, 0.1, 0.05, 0.05, 0.1, &mut rng);
+    println!("{}", b.run("agad_step/d256", || {
+        agad.step(&obj, &mut rng);
+    }).report());
+}

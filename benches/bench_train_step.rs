@@ -1,0 +1,47 @@
+//! End-to-end HLO step cost per (model, algorithm): the request-path
+//! latency of the coordinator (Tables 1/2, Figs 2/4/5 regeneration cost).
+//! Skips silently when artifacts are absent.
+
+use analog_rider::data::Dataset;
+use analog_rider::runtime::{Executor, Registry};
+use analog_rider::train::{TrainConfig, Trainer};
+use analog_rider::util::bench::Bench;
+
+fn main() {
+    let dir = Registry::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("BENCH\tskipped (run `make artifacts` first)");
+        return;
+    }
+    let reg = Registry::load(dir).unwrap();
+    let exec = Executor::cpu().unwrap();
+    let ds = Dataset::digits(64, 5);
+    let b = Bench {
+        warmup: std::time::Duration::from_millis(2000),
+        measure: std::time::Duration::from_secs(6),
+        ..Bench::default()
+    };
+    for (model, algo) in [
+        ("fcn", "sgd"),
+        ("fcn", "ttv2"),
+        ("fcn", "agad"),
+        ("fcn", "erider"),
+        ("lenet", "erider"),
+        ("convnet3", "erider"),
+    ] {
+        let mut cfg = TrainConfig::new(model, algo);
+        cfg.steps = 1;
+        let mut t = Trainer::new(&exec, &reg, cfg).unwrap();
+        let spec = reg.model(model).unwrap();
+        let d = spec.d_in.min(ds.d);
+        let mut x = vec![0.0f32; spec.batch * spec.d_in];
+        for (i, v) in ds.x[..spec.batch * d].iter().enumerate() {
+            x[i] = *v;
+        }
+        let y: Vec<i32> = ds.y[..spec.batch].to_vec();
+        let r = b.run(&format!("step/{model}/{algo}"), || {
+            t.step(&x, &y).unwrap();
+        });
+        println!("{}", r.report_throughput("steps", 1.0));
+    }
+}

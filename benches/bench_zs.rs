@@ -1,0 +1,22 @@
+//! Fig. 1 regeneration cost: ZS calibration throughput per table row.
+
+use analog_rider::analog::zs::{self, ZsVariant};
+use analog_rider::device::{presets, DeviceArray};
+use analog_rider::util::bench::Bench;
+use analog_rider::util::rng::Rng;
+
+fn main() {
+    let b = Bench {
+        measure: std::time::Duration::from_millis(800),
+        ..Bench::default()
+    };
+    for side in [64usize, 128, 256] {
+        let mut rng = Rng::from_seed(2);
+        let mut arr =
+            DeviceArray::sample(side, side, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
+        let r = b.run(&format!("zs_100_pulses/{side}x{side}"), || {
+            zs::run(&mut arr, 100, ZsVariant::Cyclic, &mut rng);
+        });
+        println!("{}", r.report_throughput("pulses", (side * side * 100) as f64));
+    }
+}

@@ -1,0 +1,45 @@
+//! Quickstart: calibrate a device array with zero-shifting, then train a
+//! small analog FCN with E-RIDER on the synthetic digits — the two core
+//! capabilities of the library in ~40 lines.
+//!
+//! Run: `cargo run --release --example quickstart` (needs `make artifacts`).
+
+use analog_rider::analog::zs::{self, ZsVariant};
+use analog_rider::data::Dataset;
+use analog_rider::device::{presets, DeviceArray};
+use analog_rider::runtime::{Executor, Registry};
+use analog_rider::train::{TrainConfig, Trainer};
+use analog_rider::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. pulse-level: estimate the symmetric points of a 64x64 ReRAM tile
+    let mut rng = Rng::from_seed(1);
+    let mut arr = DeviceArray::sample(64, 64, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
+    let res = zs::run(&mut arr, 2000, ZsVariant::Cyclic, &mut rng);
+    println!(
+        "ZS calibration: rel. mean error {:.2}% after {} pulses",
+        100.0 * res.rel_mean_error(),
+        res.pulses
+    );
+
+    // 2. NN-level: train the analog FCN with E-RIDER through the AOT
+    //    artifacts (Python is not involved at this point).
+    let reg = Registry::load(Registry::default_dir())?;
+    let exec = Executor::cpu()?;
+    let mut cfg = TrainConfig::new("fcn", "erider");
+    cfg.steps = 200;
+    cfg.ref_mean = 0.4; // non-ideal reference: SPs centred at +0.4
+    cfg.ref_std = 0.2;
+    cfg.log = true;
+    let train = Dataset::digits(320, 7);
+    let test = Dataset::digits(200, 8);
+    let mut t = Trainer::new(&exec, &reg, cfg)?;
+    let r = t.train(&train, Some(&test))?;
+    println!(
+        "E-RIDER: loss {:.3} -> {:.3}, test acc {:.1}%",
+        r.losses[0],
+        r.final_loss(20),
+        r.final_eval_acc
+    );
+    Ok(())
+}

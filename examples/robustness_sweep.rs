@@ -1,0 +1,29 @@
+//! Mini Table-2-style robustness sweep: TT-v2 vs E-RIDER on the analog
+//! FCN across reference (SP) offsets, three seeds.
+//!
+//! Run: `cargo run --release --example robustness_sweep` (needs artifacts).
+
+use analog_rider::coordinator::experiments::training::{robustness_grid, ExpCtx};
+use analog_rider::runtime::{Executor, Registry};
+
+fn main() -> anyhow::Result<()> {
+    let reg = Registry::load(Registry::default_dir())?;
+    let exec = Executor::cpu()?;
+    let ctx = ExpCtx {
+        exec: &exec,
+        reg: &reg,
+        steps: 300,
+        seeds: vec![1, 2],
+    };
+    let t = robustness_grid(
+        &ctx,
+        "robustness_example",
+        "fcn",
+        &["ttv2", "erider"],
+        &[0.0, 0.4],
+        &[0.1, 0.4],
+        None,
+    )?;
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! SP-calibration deep dive (the Fig. 1 scenario): sweep the ZS pulse
+//! budget and the device granularity, printing the accuracy/cost
+//! trade-off and the device-dilemma slope of Theorem 2.2.
+
+use analog_rider::analog::zs::{self, ZsVariant};
+use analog_rider::device::{presets, DeviceArray};
+use analog_rider::util::rng::Rng;
+use analog_rider::util::stats;
+
+fn main() {
+    println!("== offsets vs pulse budget (64x64, dw_min 1e-3) ==");
+    for n in [250u64, 1000, 4000] {
+        let mut rng = Rng::new(3, n);
+        let mut arr = DeviceArray::sample(64, 64, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
+        let res = zs::run(&mut arr, n, ZsVariant::Cyclic, &mut rng);
+        println!(
+            "  N={n:<6} mean offset {:+.4}  std offset {:+.4}  per-cell |err| {:.4}",
+            res.mean_offset(),
+            res.std_offset(),
+            res.mean_abs_error()
+        );
+    }
+
+    println!("== device dilemma: pulses for <=2% rel error vs dw_min ==");
+    let schedule: Vec<u64> = (0..14).map(|i| 100u64 << i).collect();
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    for dwm in [4e-3, 2e-3, 1e-3, 5e-4] {
+        let mk = |rng: &mut Rng| {
+            let mut p = presets::PRECISE.clone();
+            p.dw_min = dwm;
+            DeviceArray::sample(48, 48, &p, 0.4, 0.2, 0.1, rng)
+        };
+        if let Some((n, err)) = zs::pulses_to_target(mk, 0.02, &schedule, ZsVariant::Cyclic, 5) {
+            println!("  dw_min={dwm:.0e}: N={n} (err {:.2}%)", 100.0 * err);
+            xs.push(dwm);
+            ys.push(n as f64);
+        }
+    }
+    if xs.len() >= 3 {
+        println!(
+            "  log-log slope: {:.2}  (Theorem 2.2 predicts ~ -1)",
+            stats::loglog_slope(&xs, &ys)
+        );
+    }
+}

@@ -1,0 +1,268 @@
+"""L2: the paper's analog training algorithm family, as JAX step functions.
+
+Every algorithm is expressed over the unified tile state of `model.py` and
+mutates analog arrays exclusively through the L1 `pulse_update` kernel
+(the Analog Update, paper Eq. 2). One step function per algorithm; all of
+them share the signature
+
+    step(tiles, biases, x, labels, key, hypers, dev) -> (tiles', biases', loss)
+
+so `aot.py` can lower them uniformly and the Rust coordinator can drive
+any of them through one code path.
+
+Hyper-parameter vector `hypers` (f32[12], runtime-sweepable from Rust):
+  0 lr_fast      alpha  -- P/A array learning rate
+  1 lr_transfer  beta   -- W array transfer learning rate
+  2 eta                 -- Q moving-average stepsize (Eq. 12)
+  3 gamma               -- residual scale (Eq. 8)
+  4 flip_p              -- chopper flip probability (Eq. 17)
+  5 thresh              -- TT-v2/AGAD digital-buffer transfer threshold
+  6 lr_digital          -- digital bias learning rate
+  7 read_noise          -- analog read-out noise std for transfer reads
+  8..11 reserved
+
+Device vector `dev` (f32[8]):
+  0 dw_min  1 sigma_c2c  2 tau_max  3 tau_min
+  4 out_noise  5 inp_res  6 out_res  7 out_bound
+
+Algorithms (see DESIGN.md section 3):
+  sgd     -- Analog SGD (Eq. 2 applied to the gradient): drifts to SP.
+  ttv1    -- Tiki-Taka v1: fast array A + direct transfer.
+  ttv2    -- Tiki-Taka v2: + digital accumulation buffer w/ thresholding.
+  agad    -- chopped transfer + offset-corrected reference (baseline).
+  erider  -- E-RIDER (Algorithm 3); RIDER == flip_p = 0 (Algorithm 2);
+             two-stage Residual Learning == eta = 0 after `zs` calibration.
+  digital -- exact SGD (pre-training / upper-bound baseline).
+  zs      -- Algorithm 1 zero-shifting calibration of the P arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels import pulse_update
+
+# hyper indices
+LR_FAST, LR_TRANSFER, ETA, GAMMA, FLIP_P, THRESH, LR_DIGITAL, READ_NOISE = range(8)
+N_HYPERS = 12
+N_DEV = 8
+
+
+def _pulse(arr, dw, ap, am, key, dev):
+    """Analog Update of one array through the L1 kernel."""
+    ku, kz = jax.random.split(key)
+    u = jax.random.uniform(ku, arr.shape)
+    z = jax.random.normal(kz, arr.shape)
+    return pulse_update(
+        arr, dw, ap, am, u, z, dev[0], dev[1], dev[2], dev[3]
+    )
+
+
+def _read(arr, key, read_noise):
+    """Noisy analog read-out of an array (used by transfer steps)."""
+    return arr + read_noise * jax.random.normal(key, arr.shape)
+
+
+def _flip_choppers(tiles, key, flip_p):
+    """Draw the Markov choppers (Eq. 17), one per crossbar input line
+    (AIHWKit-style input chopping; a scalar-chopper tile would swing its
+    whole residual at every flip, which destabilises training).
+
+    Returns (new tiles, per-tile mean-flip fraction)."""
+    out = []
+    flips = []
+    for i, t in enumerate(tiles):
+        kf = jax.random.fold_in(key, 7919 + i)
+        flip = (jax.random.uniform(kf, t["c"].shape) < flip_p).astype(jnp.float32)
+        c = jnp.where(flip > 0.5, -t["c"], t["c"])
+        out.append(dict(t, c=c))
+        flips.append(flip.mean())
+    return out, flips
+
+
+def _digital_bias(biases, gb, lr):
+    return [b - lr * g for b, g in zip(biases, gb)]
+
+
+# ------------------------------------------------------------------ steps
+
+
+def step_sgd(spec, tiles, biases, x, labels, key, hypers, dev):
+    """Plain Analog SGD: w <- AnalogUpdate(w, -alpha * grad)."""
+    kg, kp = jax.random.split(jax.random.fold_in(key, 0))
+    loss, gw, gb = M.loss_and_grads(
+        spec, tiles, biases, x, labels, kg, dev, "plain", 0.0
+    )
+    new_tiles = []
+    for i, (t, g) in enumerate(zip(tiles, gw)):
+        kt = jax.random.fold_in(kp, i)
+        w = _pulse(t["w"], -hypers[LR_FAST] * g, t["wap"], t["wam"], kt, dev)
+        new_tiles.append(dict(t, w=w))
+    return new_tiles, _digital_bias(biases, gb, hypers[LR_DIGITAL]), loss
+
+
+def step_ttv1(spec, tiles, biases, x, labels, key, hypers, dev):
+    """Tiki-Taka v1: gradient -> fast array A (the `p` leaf); every step,
+    transfer the reference-corrected read  (A - q)  into W. The forward
+    pass runs at the *combined* weight W + gamma (A - q) (the AIHWKit
+    transfer compound): A is part of the logical weight, which damps the
+    A->W loop (proportional + integral control)."""
+    kg, kp = jax.random.split(jax.random.fold_in(key, 1))
+    loss, gw, gb = M.loss_and_grads(
+        spec, tiles, biases, x, labels, kg, dev, "residual", hypers[GAMMA]
+    )
+    new_tiles = []
+    for i, (t, g) in enumerate(zip(tiles, gw)):
+        kt = jax.random.fold_in(kp, i)
+        k1, k2, k3 = jax.random.split(kt, 3)
+        p = _pulse(t["p"], -hypers[LR_FAST] * g, t["pap"], t["pam"], k1, dev)
+        r = _read(p, k2, hypers[READ_NOISE]) - t["q"]
+        w = _pulse(t["w"], hypers[LR_TRANSFER] * r, t["wap"], t["wam"], k3, dev)
+        new_tiles.append(dict(t, p=p, w=w))
+    return new_tiles, _digital_bias(biases, gb, hypers[LR_DIGITAL]), loss
+
+
+def _thresholded_transfer(t, h, key, hypers, dev):
+    """TT-v2 digital buffer: move whole multiples of `thresh` from the
+    buffer into pulsed updates of W; keep the remainder digital."""
+    thresh = hypers[THRESH]
+    quanta = jnp.trunc(h / thresh)
+    dw = hypers[LR_TRANSFER] * quanta * thresh
+    w = _pulse(t["w"], dw, t["wap"], t["wam"], key, dev)
+    return w, h - quanta * thresh
+
+
+def step_ttv2(spec, tiles, biases, x, labels, key, hypers, dev):
+    """Tiki-Taka v2: like v1 but reads accumulate in a digital buffer and
+    only threshold-crossing amounts are pulsed into W. Combined-weight
+    forward as in v1."""
+    kg, kp = jax.random.split(jax.random.fold_in(key, 2))
+    loss, gw, gb = M.loss_and_grads(
+        spec, tiles, biases, x, labels, kg, dev, "residual", hypers[GAMMA]
+    )
+    new_tiles = []
+    for i, (t, g) in enumerate(zip(tiles, gw)):
+        kt = jax.random.fold_in(kp, i)
+        k1, k2, k3 = jax.random.split(kt, 3)
+        p = _pulse(t["p"], -hypers[LR_FAST] * g, t["pap"], t["pam"], k1, dev)
+        h = t["h"] + (_read(p, k2, hypers[READ_NOISE]) - t["q"])
+        w, h = _thresholded_transfer(dict(t, p=p), h, k3, hypers, dev)
+        new_tiles.append(dict(t, p=p, h=h, w=w))
+    return new_tiles, _digital_bias(biases, gb, hypers[LR_DIGITAL]), loss
+
+
+def step_agad(spec, tiles, biases, x, labels, key, hypers, dev):
+    """AGAD-style baseline (Rasch et al.): chopped gradient accumulation
+    plus reference-offset correction on chopper flips. Combined-weight
+    forward W + gamma c (A - q); unlike E-RIDER, q is only refreshed at
+    flip boundaries (no low-pass SP filtering) and there is no residual
+    bilevel structure (paper Appendix B.2)."""
+    kg, kp, kc = jax.random.split(jax.random.fold_in(key, 3), 3)
+    tiles, flips = _flip_choppers(tiles, kc, hypers[FLIP_P])
+    loss, gw, gb = M.loss_and_grads(
+        spec, tiles, biases, x, labels, kg, dev, "residual", hypers[GAMMA]
+    )
+    new_tiles = []
+    for i, (t, g, flip) in enumerate(zip(tiles, gw, flips)):
+        kt = jax.random.fold_in(kp, i)
+        k1, k2, k3 = jax.random.split(kt, 3)
+        c = t["c"]  # [K,1], broadcasts over columns
+        p = _pulse(t["p"], -hypers[LR_FAST] * c * g, t["pap"], t["pam"], k1, dev)
+        r = _read(p, k2, hypers[READ_NOISE])
+        # de-chopped, offset-corrected accumulation
+        h = t["h"] + c * (r - t["q"])
+        # offset estimate refresh, weighted by the fraction of lines that
+        # flipped this step (Rasch-style fast offset correction)
+        q = (1.0 - hypers[ETA] * flip) * t["q"] + hypers[ETA] * flip * r
+        w, h = _thresholded_transfer(dict(t, p=p), h, k3, hypers, dev)
+        new_tiles.append(dict(t, p=p, h=h, q=q, w=w))
+    return new_tiles, _digital_bias(biases, gb, hypers[LR_DIGITAL]), loss
+
+
+def step_erider(spec, tiles, biases, x, labels, key, hypers, dev):
+    """E-RIDER (Algorithm 3). RIDER is flip_p = 0; two-stage Residual
+    Learning is eta = 0 with `q` pre-set by `zs_calibrate`.
+
+    Per iteration k (paper Eq. 17/18 + Eq. 12):
+      1. draw chopper c_k (Markov flip w.p. p); on flip the analog shadow
+         Q~ is re-programmed from digital Q (cost tracked by the
+         coordinator),
+      2. grads at W-bar = W + gamma c_k (P - Q),
+      3. P   <- AnalogUpdate(P, -alpha c_k grad)            (18a)
+      4. Q   <- (1-eta) Q + eta read(P)                     (12, digital)
+      5. W   <- AnalogUpdate(W, beta c_k (read(P) - Q_k))   (18b)
+    """
+    kg, kp, kc = jax.random.split(jax.random.fold_in(key, 4), 3)
+    tiles, _ = _flip_choppers(tiles, kc, hypers[FLIP_P])
+    loss, gw, gb = M.loss_and_grads(
+        spec, tiles, biases, x, labels, kg, dev, "residual", hypers[GAMMA]
+    )
+    new_tiles = []
+    for i, (t, g) in enumerate(zip(tiles, gw)):
+        kt = jax.random.fold_in(kp, i)
+        k1, k2, k3 = jax.random.split(kt, 3)
+        c = t["c"]  # [K,1], broadcasts over columns
+        p = _pulse(t["p"], -hypers[LR_FAST] * c * g, t["pap"], t["pam"], k1, dev)
+        r = _read(p, k2, hypers[READ_NOISE])
+        q_old = t["q"]
+        q = (1.0 - hypers[ETA]) * q_old + hypers[ETA] * r
+        w = _pulse(
+            t["w"], hypers[LR_TRANSFER] * c * (r - q_old), t["wap"], t["wam"], k3, dev
+        )
+        new_tiles.append(dict(t, p=p, q=q, w=w))
+    return new_tiles, _digital_bias(biases, gb, hypers[LR_DIGITAL]), loss
+
+
+def step_digital(spec, tiles, biases, x, labels, key, hypers, dev):
+    """Exact digital SGD on the `w` leaves (pre-training / upper bound)."""
+    loss, gw, gb = M.loss_and_grads(
+        spec, tiles, biases, x, labels, key, dev, "digital", 0.0
+    )
+    new_tiles = [
+        dict(t, w=jnp.clip(t["w"] - hypers[LR_DIGITAL] * g, -1.0, 1.0))
+        for t, g in zip(tiles, gw)
+    ]
+    return new_tiles, _digital_bias(biases, gb, hypers[LR_DIGITAL]), loss
+
+
+STEPS = {
+    "sgd": step_sgd,
+    "ttv1": step_ttv1,
+    "ttv2": step_ttv2,
+    "agad": step_agad,
+    "erider": step_erider,
+    "digital": step_digital,
+}
+
+
+# ----------------------------------------------------------- ZS calibration
+
+
+def zs_calibrate(spec, tiles, n, key, dev):
+    """Algorithm 1 (stochastic): n alternating +-dw_min pulses on every P
+    array, then store the read-out as the reference estimate `q`.
+
+    `n` is a traced uint32 scalar -- the Rust coordinator sweeps the pulse
+    budget at runtime through ONE artifact (lax.while_loop, not unroll).
+    """
+    new_tiles = []
+    for i, t in enumerate(tiles):
+        tkey = jax.random.fold_in(key, i)
+
+        def body(state):
+            j, p, k = state
+            k, ks, kp = jax.random.split(k, 3)
+            sign = jnp.where(
+                jax.random.uniform(ks, p.shape) < 0.5, 1.0, -1.0
+            )
+            p = _pulse(p, sign * dev[0], t["pap"], t["pam"], kp, dev)
+            return j + 1, p, k
+
+        def cond(state):
+            return state[0] < n
+
+        _, p, _ = jax.lax.while_loop(cond, body, (jnp.uint32(0), t["p"], tkey))
+        new_tiles.append(dict(t, p=p, q=p))
+    return new_tiles

@@ -1,0 +1,273 @@
+"""AOT compilation: lower every model x function to HLO text artifacts.
+
+Emits, per model m in {fcn, lenet, convnet3}:
+
+  m_init          (key, params[3]=[ref_mean, ref_std, sigma_gamma]) -> state
+  m_step_<algo>   (state.., x, labels, key, hypers[12], dev[8]) -> state.., loss
+                  for algo in {sgd, ttv1, ttv2, agad, erider, digital}
+  m_eval          (state.., x, labels, key, hypers, dev) -> loss, ncorrect
+  m_eval_digital  (state.., x, labels)                   -> loss, ncorrect
+  m_zs            (state.., n, key, dev) -> state..      (Algorithm 1)
+
+plus artifacts/manifest.json (shapes/dtypes/roles for the Rust runtime)
+and artifacts/parity.json (deterministic kernel test vectors for the Rust
+device-substrate parity tests).
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import algorithms as A
+from . import model as M
+from . import state as S
+from .kernels import ref
+
+BATCH = 16
+EVAL_BATCH = 200
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(name, sds):
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32", jnp.uint32.dtype: "u32"}[
+        sds.dtype
+    ]
+    return {"name": name, "shape": list(sds.shape), "dtype": dt}
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"models": {}, "artifacts": {}, "hyper_index": {}, "dev_index": {}}
+        self.manifest["hyper_index"] = {
+            "lr_fast": 0, "lr_transfer": 1, "eta": 2, "gamma": 3,
+            "flip_p": 4, "thresh": 5, "lr_digital": 6, "read_noise": 7,
+            "n_hypers": A.N_HYPERS,
+        }
+        self.manifest["dev_index"] = {
+            "dw_min": 0, "sigma_c2c": 1, "tau_max": 2, "tau_min": 3,
+            "out_noise": 4, "inp_res": 5, "out_res": 6, "out_bound": 7,
+            "n_dev": A.N_DEV,
+        }
+
+    def emit(self, name, fn, in_specs, in_names, out_names):
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *in_specs)
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [_io_entry(n, s) for n, s in zip(in_names, in_specs)],
+            "outputs": [_io_entry(n, s) for n, s in zip(out_names, outs)],
+        }
+        print(f"  {name}: {len(text)/1e3:.0f} kB hlo, {len(in_specs)} in / {len(outs)} out")
+
+
+def emit_model(em: Emitter, mname: str):
+    spec = M.MODELS[mname]
+    st_specs = S.abstract_state(spec)
+    st_names = [n for n, _, _, _ in S.leaf_specs(spec)]
+    em.manifest["models"][mname] = {
+        "batch": BATCH,
+        "eval_batch": EVAL_BATCH,
+        "d_in": spec.d_in,
+        "n_classes": spec.n_classes,
+        "state": [
+            {"name": n, "shape": list(sh), "role": role, "tile": ti}
+            for n, sh, role, ti in S.leaf_specs(spec)
+        ],
+    }
+    key_s = _sds((2,), jnp.uint32)
+    hyp_s = _sds((A.N_HYPERS,))
+    dev_s = _sds((A.N_DEV,))
+    x_s = _sds((BATCH, spec.d_in))
+    y_s = _sds((BATCH,), jnp.int32)
+    ex_s = _sds((EVAL_BATCH, spec.d_in))
+    ey_s = _sds((EVAL_BATCH,), jnp.int32)
+
+    # ---- init
+    def init_fn(key, params):
+        tiles, biases = M.init_state(spec, key, params[0], params[1], params[2])
+        return tuple(S.flatten(tiles, biases))
+
+    em.emit(
+        f"{mname}_init", init_fn, [key_s, _sds((3,))], ["key", "params"], st_names
+    )
+
+    # ---- steps
+    for algo, step in A.STEPS.items():
+        def step_fn(*args, _step=step):
+            flat = args[: len(st_specs)]
+            x, labels, key, hypers, dev = args[len(st_specs):]
+            tiles, biases = S.unflatten(spec, list(flat))
+            t2, b2, loss = _step(spec, tiles, biases, x, labels, key, hypers, dev)
+            return tuple(S.flatten(t2, b2)) + (loss,)
+
+        em.emit(
+            f"{mname}_step_{algo}",
+            step_fn,
+            st_specs + [x_s, y_s, key_s, hyp_s, dev_s],
+            st_names + ["x", "labels", "key", "hypers", "dev"],
+            st_names + ["loss"],
+        )
+
+    # ---- eval (analog, at the effective weights) and digital eval
+    def eval_fn(*args):
+        flat = args[: len(st_specs)]
+        x, labels, key, hypers, dev = args[len(st_specs):]
+        tiles, biases = S.unflatten(spec, list(flat))
+        loss = M.loss_fn(
+            spec, tiles, biases, x, labels, key, dev, "residual", hypers[A.GAMMA]
+        )
+        ncorr = M.accuracy_count(
+            spec, tiles, biases, x, labels, jax.random.fold_in(key, 99), dev,
+            "residual", hypers[A.GAMMA],
+        )
+        return loss, ncorr
+
+    em.emit(
+        f"{mname}_eval",
+        eval_fn,
+        st_specs + [ex_s, ey_s, key_s, hyp_s, dev_s],
+        st_names + ["x", "labels", "key", "hypers", "dev"],
+        ["loss", "ncorrect"],
+    )
+
+    def eval_dig_fn(*args):
+        flat = args[: len(st_specs)]
+        x, labels = args[len(st_specs):]
+        tiles, biases = S.unflatten(spec, list(flat))
+        key = jax.random.PRNGKey(0)
+        dev = jnp.zeros((A.N_DEV,))
+        loss = M.loss_fn(spec, tiles, biases, x, labels, key, dev, "digital", 0.0)
+        ncorr = M.accuracy_count(
+            spec, tiles, biases, x, labels, key, dev, "digital", 0.0
+        )
+        return loss, ncorr
+
+    em.emit(
+        f"{mname}_eval_digital",
+        eval_dig_fn,
+        st_specs + [ex_s, ey_s],
+        st_names + ["x", "labels"],
+        ["loss", "ncorrect"],
+    )
+
+    # ---- ZS calibration (dynamic pulse budget)
+    def zs_fn(*args):
+        flat = args[: len(st_specs)]
+        n, key, dev = args[len(st_specs):]
+        tiles, biases = S.unflatten(spec, list(flat))
+        t2 = A.zs_calibrate(spec, tiles, n, key, dev)
+        return tuple(S.flatten(t2, biases))
+
+    em.emit(
+        f"{mname}_zs",
+        zs_fn,
+        st_specs + [_sds((), jnp.uint32), key_s, dev_s],
+        st_names + ["n", "key", "dev"],
+        st_names,
+    )
+
+
+def emit_parity(out_dir):
+    """Deterministic kernel test vectors for the Rust device substrate."""
+    rng = np.random.default_rng(1234)
+    cases = []
+    for dw_min in (0.4622, 0.0949, 1e-3):
+        shape = (4, 9)
+        w = rng.uniform(-0.9, 0.9, shape).astype(np.float32)
+        dw = rng.uniform(-0.3, 0.3, shape).astype(np.float32)
+        gamma = np.exp(0.2 * rng.standard_normal(shape)).astype(np.float32)
+        wsp = rng.uniform(-0.5, 0.5, shape).astype(np.float32)
+        ap = np.maximum(gamma * (1 + wsp), 0.05).astype(np.float32)
+        am = np.maximum(gamma * (1 - wsp), 0.05).astype(np.float32)
+        z = np.zeros(shape, np.float32)
+        out = ref.ref_pulse_update(
+            jnp.array(w), jnp.array(dw), jnp.array(ap), jnp.array(am),
+            jnp.array(z), jnp.array(z), dw_min=dw_min, sigma_c2c=0.0,
+            deterministic=True,
+        )
+        cases.append(
+            {
+                "kind": "pulse_update",
+                "dw_min": dw_min,
+                "w": w.ravel().tolist(),
+                "dw": dw.ravel().tolist(),
+                "alpha_p": ap.ravel().tolist(),
+                "alpha_m": am.ravel().tolist(),
+                "rows": shape[0],
+                "cols": shape[1],
+                "expected": np.asarray(out).ravel().tolist(),
+            }
+        )
+    # analog MVM, deterministic (quantization only)
+    for b, k, n in ((3, 7, 5), (8, 16, 4)):
+        x = rng.uniform(-2, 2, (b, k)).astype(np.float32)
+        w = rng.uniform(-1, 1, (k, n)).astype(np.float32)
+        z = np.zeros((b, n), np.float32)
+        y = ref.ref_analog_mvm(jnp.array(x), jnp.array(w), jnp.array(z),
+                               deterministic=True)
+        cases.append(
+            {
+                "kind": "analog_mvm",
+                "x": x.ravel().tolist(),
+                "w": w.ravel().tolist(),
+                "b": b, "k": k, "n": n,
+                "expected": np.asarray(y).ravel().tolist(),
+            }
+        )
+    with open(os.path.join(out_dir, "parity.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"  parity.json: {len(cases)} cases")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="fcn,lenet,convnet3")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(args.out)
+    # Merge with an existing manifest so partial --models runs compose.
+    man_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(man_path):
+        old = json.load(open(man_path))
+        em.manifest["models"].update(old.get("models", {}))
+        em.manifest["artifacts"].update(old.get("artifacts", {}))
+    for mname in args.models.split(","):
+        print(f"model {mname}:")
+        emit_model(em, mname)
+    emit_parity(args.out)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(em.manifest, f, indent=1)
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""JAX-side analog device model (paper Appendix F.1).
+
+The SoftBoundsReference family: per-cell potentiation/depression slopes
+(alpha_p, alpha_m) = (gamma + rho, gamma - rho), device-to-device sampled.
+The symmetric point (SP, Definition 1.1) of a cell is the weight where
+q_plus = q_minus; with tau = 1 it is exactly rho / gamma, so we *control*
+the SP distribution of a simulated array (the paper's "reference mean /
+reference std" sweeps) by sampling w_sp ~ N(ref_mean, ref_std) and setting
+rho = gamma * w_sp.
+
+Two hardware presets are mirrored from AIHWKit (paper Table 3); the Rust
+substrate (`rust/src/device/presets.rs`) carries the same numbers and is
+parity-tested against this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+# ---------------------------------------------------------------- presets
+
+# Paper Table 3. `dw_min` is the response granularity; `d2d` the
+# device-to-device asymmetry spread; `c2c` the cycle-to-cycle write noise.
+PRESETS = {
+    # HfO2-based ReRAM (Gong et al., 2022) — ~4-5 conductance states.
+    "hfo2": dict(tau_min=1.0, tau_max=1.0, dw_min=0.4622, d2d=0.7125, c2c=0.2174),
+    # ReRamArrayOM preset — ~21 states.
+    "om": dict(tau_min=1.0, tau_max=1.0, dw_min=0.0949, d2d=0.7829, c2c=0.4158),
+    # High-precision device used in the Fig. 1 pulse-complexity study.
+    "precise": dict(tau_min=1.0, tau_max=1.0, dw_min=0.001, d2d=0.7125, c2c=0.2174),
+    # Idealized symmetric device (for digital-parity sanity checks).
+    "ideal": dict(tau_min=1.0, tau_max=1.0, dw_min=1e-5, d2d=0.0, c2c=0.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class IoConfig:
+    """Analog IO chain parameters (paper Table 7)."""
+
+    inp_res: float = 1.0 / 127.0   # 7-bit DAC
+    out_res: float = 1.0 / 511.0   # 9-bit ADC
+    out_bound: float = 12.0
+    out_noise: float = 0.06
+
+
+def sample_device(key, shape, ref_mean, ref_std, sigma_gamma=0.1, tau=1.0):
+    """Sample per-cell (alpha_p, alpha_m) with a controlled SP distribution.
+
+    Args:
+      key: PRNG key.
+      shape: tile shape.
+      ref_mean / ref_std: SP distribution parameters (scalars, traced OK).
+      sigma_gamma: lognormal spread of the common slope magnitude.
+
+    Returns (alpha_p, alpha_m); both positive (training-friendly,
+    Definition 2.1).
+    """
+    k1, k2 = jax.random.split(key)
+    gamma = jnp.exp(sigma_gamma * jax.random.normal(k1, shape))
+    w_sp = ref_mean + ref_std * jax.random.normal(k2, shape)
+    # Keep the SP strictly inside the conductance window.
+    w_sp = jnp.clip(w_sp, -0.85 * tau, 0.85 * tau)
+    rho = gamma * w_sp / tau
+    alpha_p = gamma + rho
+    alpha_m = gamma - rho
+    # Positive-definiteness (Definition 2.1): floor the slopes.
+    floor = 0.05
+    return jnp.maximum(alpha_p, floor), jnp.maximum(alpha_m, floor)
+
+
+def symmetric_point(alpha_p, alpha_m, tau_max=1.0, tau_min=1.0):
+    """Ground-truth per-cell SP (see kernels.ref.symmetric_point)."""
+    return ref.symmetric_point(alpha_p, alpha_m, tau_max, tau_min)

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for analog in-memory training.
+
+`analog_mvm`   — noisy quantized crossbar MVM (forward + backward MVMs).
+`pulse_update` — asymmetric pulsed conductance update (the Analog Update,
+                 paper Eq. 2).
+`ref`          — pure-jnp oracles the kernels are tested against.
+"""
+
+from .analog_mvm import analog_mvm
+from .pulse_update import pulse_update
+from . import ref
+
+__all__ = ["analog_mvm", "pulse_update", "ref"]

@@ -1,0 +1,120 @@
+"""Pallas kernel: noisy, quantized crossbar matrix-vector multiply.
+
+The analog forward/backward hot-spot. The crossbar tile is the natural
+MXU-shaped unit of work: each grid step loads an [bm, K] activation block
+and a [K, bn] conductance block into VMEM, runs the DAC stage (ABS_MAX
+noise management + input quantization) in-register, one MXU matmul, then
+the ADC stage (read noise + output quantization + clipping) fused on the
+way out. The HBM<->VMEM schedule that AIHWKit expresses with CUDA
+threadblocks is expressed here with the BlockSpec grid.
+
+IO chain parameters follow the paper's Appendix F Table 7 (7-bit DAC,
+9-bit ADC, out_noise 0.06, out_bound 12).
+
+interpret=True is mandatory on this CPU image (see kernels/pulse_update).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BM = 32   # activation rows per block
+_BN = 512  # output columns per block
+
+
+def _analog_mvm_kernel(params_ref, x_ref, w_ref, z_ref, out_ref):
+    """One [bm, K] x [K, bn] block of the analog MVM."""
+    inp_res = params_ref[0]
+    out_res = params_ref[1]
+    out_bound = params_ref[2]
+    out_noise = params_ref[3]
+    det = params_ref[4]
+
+    x = x_ref[...]
+    w = w_ref[...]
+    z = z_ref[...]
+
+    # DAC: per-row ABS_MAX noise management + input quantization.
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(scale > 0.0, scale, 1.0)
+    xq = jnp.round((x / scale) / inp_res) * inp_res
+
+    # Crossbar: Kirchhoff summation == matmul on the MXU.
+    y = jnp.dot(xq, w, preferred_element_type=jnp.float32)
+
+    # ADC: read noise, quantization, output bound, undo noise management.
+    y = y + jnp.where(det > 0.5, 0.0, out_noise) * z
+    yq = jnp.round(y / out_res) * out_res
+    yq = jnp.clip(yq, -out_bound, out_bound)
+    out_ref[...] = yq * scale
+
+
+def _pad_to(a, rows, cols):
+    r = (-a.shape[0]) % rows
+    c = (-a.shape[1]) % cols
+    if r or c:
+        a = jnp.pad(a, ((0, r), (0, c)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("deterministic",))
+def analog_mvm(
+    x,
+    w,
+    z,
+    inp_res=1.0 / 127.0,
+    out_res=1.0 / 511.0,
+    out_bound=12.0,
+    out_noise=0.06,
+    deterministic=False,
+):
+    """Noisy quantized y = x @ w.
+
+    Args:
+      x: [B, K] activations.
+      w: [K, N] crossbar conductances.
+      z: [B, N] standard normals for ADC read noise.
+      scalars: IO chain parameters (traced; sweepable from Rust at runtime).
+      deterministic: disable read noise (quantization stays — it is a
+        deterministic non-ideality), for parity testing.
+
+    Returns: [B, N] float32.
+    """
+    b, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    xp = _pad_to(x, _BM, 1)
+    wp = _pad_to(w, 1, _BN)
+    zp = _pad_to(z, _BM, _BN)
+    pb, pn = xp.shape[0], wp.shape[1]
+    grid = (pb // _BM, pn // _BN)
+
+    params = jnp.stack(
+        [
+            jnp.asarray(inp_res, jnp.float32),
+            jnp.asarray(out_res, jnp.float32),
+            jnp.asarray(out_bound, jnp.float32),
+            jnp.asarray(out_noise, jnp.float32),
+            jnp.asarray(1.0 if deterministic else 0.0, jnp.float32),
+            jnp.asarray(0.0, jnp.float32),
+        ]
+    )
+
+    out = pl.pallas_call(
+        _analog_mvm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((6,), lambda i, j: (0,)),
+            pl.BlockSpec((_BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, _BN), lambda i, j: (0, j)),
+            pl.BlockSpec((_BM, _BN), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((_BM, _BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, pn), jnp.float32),
+        interpret=True,
+    )(params, xp, wp, zp)
+    return out[:b, :n]

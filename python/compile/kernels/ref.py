@@ -1,0 +1,146 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package must agree with its oracle here (exactly in deterministic mode,
+distributionally in stochastic mode). The Rust device substrate
+(`rust/src/device/`) is additionally checked against these through the
+parity vectors emitted by `aot.py` (artifacts/parity.json).
+
+Device model (paper Appendix F.1, SoftBoundsReference):
+
+    q_plus(w)  = alpha_p * (1 - w / tau_max)
+    q_minus(w) = alpha_m * (1 + w / tau_min)
+
+Analog Update (paper Eq. 2/5), single-shot abstraction of a pulse train:
+
+    dw >= 0:  w' = w + dw * q_plus(w)  * (1 + c2c noise) + rounding noise
+    dw <  0:  w' = w + dw * q_minus(w) * (1 + c2c noise) + rounding noise
+
+with clipping to [-tau_min, tau_max]. Noise model (Assumption 3.4 +
+Eq. 108/109): the desired increment |dw| is realised as n = |dw|/dw_min
+pulses; stochastic rounding of n contributes variance
+dw_min^2 * frac*(1-frac) * q^2, and per-pulse c2c noise contributes
+n * (dw_min * sigma_c2c)^2 * q^2.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def q_plus(w, alpha_p, tau_max):
+    """Potentiation response function (paper Eq. 103, left)."""
+    return alpha_p * (1.0 - w / tau_max)
+
+
+def q_minus(w, alpha_m, tau_min):
+    """Depression response function (paper Eq. 103, right)."""
+    return alpha_m * (1.0 + w / tau_min)
+
+
+def f_sym(w, alpha_p, alpha_m, tau_max, tau_min):
+    """Symmetric component F = (q- + q+)/2 (paper Eq. 6a)."""
+    return 0.5 * (q_minus(w, alpha_m, tau_min) + q_plus(w, alpha_p, tau_max))
+
+
+def g_asym(w, alpha_p, alpha_m, tau_max, tau_min):
+    """Asymmetric component G = (q- - q+)/2 (paper Eq. 6b)."""
+    return 0.5 * (q_minus(w, alpha_m, tau_min) - q_plus(w, alpha_p, tau_max))
+
+
+def symmetric_point(alpha_p, alpha_m, tau_max, tau_min):
+    """Ground-truth SP: solve q_plus(w) = q_minus(w) (Definition 1.1).
+
+    Note: paper Eq. (110) as printed has a sign slip; the correct closed
+    form is  w = (a+ - a-) / (a+/tau_max + a-/tau_min),  which gives
+    w = rho/gamma when tau = 1 and alpha_pm = gamma +- rho.
+    """
+    return (alpha_p - alpha_m) / (alpha_p / tau_max + alpha_m / tau_min)
+
+
+def ref_pulse_update(
+    w,
+    dw,
+    alpha_p,
+    alpha_m,
+    u,
+    z,
+    *,
+    dw_min,
+    sigma_c2c,
+    tau_max=1.0,
+    tau_min=1.0,
+    deterministic=False,
+):
+    """Oracle for the `pulse_update` kernel.
+
+    Args:
+      w:        current weights (any shape)
+      dw:       desired increment, same shape
+      alpha_p:  per-cell potentiation magnitude (gamma + rho)
+      alpha_m:  per-cell depression magnitude (gamma - rho)
+      u:        uniform(0,1) variates, same shape (stochastic rounding)
+      z:        standard normal variates, same shape (c2c noise)
+      dw_min:   response granularity (scalar)
+      sigma_c2c: cycle-to-cycle relative std (scalar)
+      deterministic: if True, round-to-nearest pulse count, no noise
+                     (the parity mode shared with the Rust substrate).
+
+    Returns: updated weights, clipped to [-tau_min, tau_max].
+    """
+    qp = q_plus(w, alpha_p, tau_max)
+    qm = q_minus(w, alpha_m, tau_min)
+    q = jnp.where(dw >= 0, qp, qm)
+    # Response functions are only meaningful inside the conductance
+    # window; clipping below keeps us there, but guard q >= 0 anyway.
+    q = jnp.maximum(q, 0.0)
+    mag = jnp.abs(dw)
+    sign = jnp.sign(dw)
+    if deterministic:
+        n = jnp.round(mag / dw_min)
+        delta = sign * n * dw_min * q
+    else:
+        n_lo = jnp.floor(mag / dw_min)
+        frac = mag / dw_min - n_lo
+        n = n_lo + (u < frac).astype(w.dtype)
+        # c2c: per-pulse multiplicative noise aggregates with sqrt(n).
+        c2c_std = jnp.sqrt(n) * dw_min * sigma_c2c
+        delta = sign * (n * dw_min + c2c_std * z) * q
+    return jnp.clip(w + delta, -tau_min, tau_max)
+
+
+def ref_analog_mvm(
+    x,
+    w,
+    z,
+    *,
+    inp_res=1.0 / 127.0,
+    out_res=1.0 / 511.0,
+    out_bound=12.0,
+    out_noise=0.06,
+    deterministic=False,
+):
+    """Oracle for the `analog_mvm` kernel: y = x @ w through the crossbar.
+
+    Models the analog IO chain of Appendix F Table 7:
+      1. noise management ABS_MAX: scale rows of x by their abs-max,
+      2. 7-bit DAC quantization of the scaled input in [-1, 1],
+      3. analog matmul,
+      4. additive output (read) noise,
+      5. 9-bit ADC quantization + clipping at +-out_bound,
+      6. rescale by the input scale.
+
+    Args:
+      x: [B, K] activations;  w: [K, N] conductances;
+      z: [B, N] standard normals (output noise).
+    """
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(scale > 0, scale, 1.0)
+    xn = x / scale
+    xq = jnp.round(xn / inp_res) * inp_res
+    y = xq @ w
+    if not deterministic:
+        y = y + out_noise * z
+    yq = jnp.round(y / out_res) * out_res
+    yq = jnp.clip(yq, -out_bound, out_bound)
+    return yq * scale

@@ -1,0 +1,312 @@
+"""L2: analog neural-network models (paper Section 4 workloads).
+
+Every analog layer (fully connected and convolution-as-im2col) routes its
+forward MVM and its backward (transposed) MVM through the L1 `analog_mvm`
+Pallas kernel via a custom VJP, so gradients are computed *through the
+analog hardware*, as on-chip training requires. Weight gradients
+(outer products) are returned exactly; they are then *applied* through the
+L1 `pulse_update` kernel by the algorithms in `algorithms.py`, which is
+where the pulsed-update non-idealities enter.
+
+Models (paper Section 4 / Appendix F.3):
+  * `fcn`      -- 784-256-128-10, sigmoid (Table 2).
+  * `lenet`    -- LeNet-5-style CNN: 2x conv5 + 2 FC, tanh (Table 1).
+  * `convnet3` -- 3-channel conv net, the CIFAR-100/ResNet stand-in
+                  (Fig. 4 mid/right, Table 8 protocol).
+
+State layout per analog tile (shared across ALL algorithms so one init
+artifact serves every step artifact; unused leaves are simply carried):
+  w    main array            p    residual/fast array (A in TT, P in RIDER)
+  q    reference (digital)   h    digital transfer buffer (TT-v2/AGAD)
+  wap/wam  device (alpha+, alpha-) of the W array
+  pap/pam  device (alpha+, alpha-) of the P array
+  c    per-input-line chopper signs, shape (fan_in, 1) — AIHWKit-style
+       input chopping: each crossbar input line carries its own chopper
+plus one digital bias vector per layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import devices
+from .kernels import analog_mvm
+
+# ------------------------------------------------------------------ specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Fc:
+    d_in: int
+    d_out: int
+    act: str  # 'tanh' | 'sigmoid' | 'none'
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    c_in: int
+    c_out: int
+    k: int
+    padding: str  # 'SAME' | 'VALID'
+    pool: int  # avg-pool window after activation (1 = none)
+    act: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    input_shape: Tuple[int, ...]  # (C,H,W) for conv nets, (D,) for MLPs
+    layers: Tuple
+    n_classes: int
+
+    @property
+    def d_in(self) -> int:
+        d = 1
+        for s in self.input_shape:
+            d *= s
+        return d
+
+
+MODELS = {
+    "fcn": ModelSpec(
+        "fcn",
+        (784,),
+        (Fc(784, 256, "sigmoid"), Fc(256, 128, "sigmoid"), Fc(128, 10, "none")),
+        10,
+    ),
+    "lenet": ModelSpec(
+        "lenet",
+        (1, 28, 28),
+        (
+            Conv(1, 8, 5, "VALID", 2, "tanh"),
+            Conv(8, 16, 5, "VALID", 2, "tanh"),
+            Fc(256, 128, "tanh"),
+            Fc(128, 10, "none"),
+        ),
+        10,
+    ),
+    "convnet3": ModelSpec(
+        "convnet3",
+        (3, 16, 16),
+        (
+            Conv(3, 16, 3, "SAME", 2, "tanh"),
+            Conv(16, 32, 3, "SAME", 2, "tanh"),
+            Fc(512, 64, "tanh"),
+            Fc(64, 10, "none"),
+        ),
+        10,
+    ),
+}
+
+
+def tile_shape(layer) -> Tuple[int, int]:
+    """Crossbar tile shape of a layer: [fan_in, fan_out]."""
+    if isinstance(layer, Fc):
+        return (layer.d_in, layer.d_out)
+    return (layer.c_in * layer.k * layer.k, layer.c_out)
+
+
+# --------------------------------------------------- analog MVM custom VJP
+
+
+@jax.custom_vjp
+def crossbar_mvm(x, w, z_fwd, z_bwd, inp_res, out_res, out_bound, out_noise):
+    """y = x @ w through the analog crossbar, analog backward.
+
+    z_fwd: [B, N] ADC noise for the forward pass.
+    z_bwd: [B, K] ADC noise for the backward (transposed) pass.
+    """
+    return analog_mvm(
+        x, w, z_fwd, inp_res=inp_res, out_res=out_res,
+        out_bound=out_bound, out_noise=out_noise,
+    )
+
+
+def _crossbar_fwd(x, w, z_fwd, z_bwd, inp_res, out_res, out_bound, out_noise):
+    y = analog_mvm(
+        x, w, z_fwd, inp_res=inp_res, out_res=out_res,
+        out_bound=out_bound, out_noise=out_noise,
+    )
+    return y, (x, w, z_bwd, inp_res, out_res, out_bound, out_noise)
+
+
+def _crossbar_bwd(res, g):
+    x, w, z_bwd, inp_res, out_res, out_bound, out_noise = res
+    # Backward MVM runs through the same crossbar, transposed -- the analog
+    # backward pass of on-chip training.
+    dx = analog_mvm(
+        g, w.T, z_bwd, inp_res=inp_res, out_res=out_res,
+        out_bound=out_bound, out_noise=out_noise,
+    )
+    # The outer-product weight gradient is exact here; its *application*
+    # is pulsed (kernels.pulse_update) inside the training algorithms.
+    dw = x.T @ g
+    zf = jnp.zeros_like
+    return (dx, dw, jnp.zeros(g.shape, g.dtype), jnp.zeros(dx.shape, dx.dtype),
+            zf(inp_res), zf(out_res), zf(out_bound), zf(out_noise))
+
+
+crossbar_mvm.defvjp(_crossbar_fwd, _crossbar_bwd)
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _act(name, x):
+    if name == "tanh":
+        return jnp.tanh(x)
+    if name == "sigmoid":
+        return jax.nn.sigmoid(x)
+    return x
+
+
+def _avg_pool(x, p):
+    """x: [B, C, H, W] -> [B, C, H/p, W/p]."""
+    b, c, h, w = x.shape
+    x = x.reshape(b, c, h // p, p, w // p, p)
+    return x.mean(axis=(3, 5))
+
+
+def _patches(x, layer):
+    """im2col: [B,C,H,W] -> ([B*H'*W', C*k*k], (H', W'))."""
+    pat = jax.lax.conv_general_dilated_patches(
+        x, (layer.k, layer.k), (1, 1), layer.padding
+    )  # [B, C*k*k, H', W']
+    b, f, hh, ww = pat.shape
+    pat = pat.transpose(0, 2, 3, 1).reshape(b * hh * ww, f)
+    return pat, (hh, ww)
+
+
+def _tile_mvm(x2d, tile, mode, gamma, key, dev):
+    """Analog MVM against a tile's effective weight.
+
+    mode 'plain':    y = <x, W>                      (SGD / TT / AGAD fwd)
+    mode 'residual': y = <x, W> + gamma*c*(<x, P> - x@Q)   (RIDER W-bar)
+    mode 'digital':  y = x @ W (exact; pre-training / digital baselines)
+    """
+    inp_res, out_res, out_bound, out_noise = dev[5], dev[6], dev[7], dev[4]
+    if mode == "digital":
+        return x2d @ tile["w"]
+    b = x2d.shape[0]
+    n = tile["w"].shape[1]
+    kdim = tile["w"].shape[0]
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    zf1 = jax.random.normal(k1, (b, n))
+    zb1 = jax.random.normal(k2, (b, kdim))
+    y = crossbar_mvm(x2d, tile["w"], zf1, zb1, inp_res, out_res, out_bound, out_noise)
+    if mode == "residual":
+        zf2 = jax.random.normal(k3, (b, n))
+        zb2 = jax.random.normal(k4, (b, kdim))
+        # per-input-line chopping: the DAC applies c to each input line,
+        # so the P array sees chopped activations (and the gradient w.r.t.
+        # P is automatically c-modulated, Eq. 18a).
+        xc = x2d * tile["c"][:, 0][None, :]
+        yp = crossbar_mvm(
+            xc, tile["p"], zf2, zb2, inp_res, out_res, out_bound, out_noise
+        )
+        y = y + gamma * (yp - xc @ jax.lax.stop_gradient(tile["q"]))
+    return y
+
+
+def forward(spec, tiles, biases, x, key, dev, mode, gamma):
+    """Run the model. x: [B, d_in] flat; returns logits [B, n_classes].
+
+    `mode`/`gamma` select the effective-weight composition (see _tile_mvm).
+    """
+    b = x.shape[0]
+    if len(spec.input_shape) == 3:
+        h = x.reshape((b,) + spec.input_shape)
+    else:
+        h = x
+    for i, layer in enumerate(spec.layers):
+        lkey = jax.random.fold_in(key, i)
+        if isinstance(layer, Conv):
+            pat, (hh, ww) = _patches(h, layer)
+            y = _tile_mvm(pat, tiles[i], mode, gamma, lkey, dev)
+            y = y + biases[i][None, :]
+            y = y.reshape(b, hh, ww, layer.c_out).transpose(0, 3, 1, 2)
+            y = _act(layer.act, y)
+            if layer.pool > 1:
+                y = _avg_pool(y, layer.pool)
+            h = y
+        else:
+            if h.ndim > 2:
+                h = h.reshape(b, -1)
+            y = _tile_mvm(h, tiles[i], mode, gamma, lkey, dev)
+            y = y + biases[i][None, :]
+            h = _act(layer.act, y)
+    return h
+
+
+def loss_fn(spec, tiles, biases, x, labels, key, dev, mode, gamma):
+    """Mean softmax cross-entropy."""
+    logits = forward(spec, tiles, biases, x, key, dev, mode, gamma)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    return nll
+
+
+def loss_and_grads(spec, tiles, biases, x, labels, key, dev, mode, gamma):
+    """Returns (loss, per-tile dL/dW at the effective weights, dL/dbias).
+
+    dL/dW of the `w` leaf *is* the paper's grad-at-W-bar for 'residual'
+    mode (the P/Q contributions are tied to the same activations), and the
+    plain gradient for 'plain' mode.
+    """
+
+    def f(ws, bs):
+        t2 = [dict(t, w=w) for t, w in zip(tiles, ws)]
+        return loss_fn(spec, t2, bs, x, labels, key, dev, mode, gamma)
+
+    ws = [t["w"] for t in tiles]
+    loss, (gw, gb) = jax.value_and_grad(f, argnums=(0, 1))(ws, list(biases))
+    return loss, gw, gb
+
+
+def accuracy_count(spec, tiles, biases, x, labels, key, dev, mode, gamma):
+    logits = forward(spec, tiles, biases, x, key, dev, mode, gamma)
+    pred = jnp.argmax(logits, axis=-1)
+    return (pred == labels).sum().astype(jnp.float32)
+
+
+# ------------------------------------------------------------------- init
+
+
+def init_state(spec, key, ref_mean, ref_std, sigma_gamma):
+    """Fresh training state: Glorot weights + per-cell device sampling.
+
+    The SPs of both the W-array and the P-array are drawn i.i.d. from
+    N(ref_mean, ref_std) -- the paper's non-ideal-reference scenario.
+    Returns (tiles, biases).
+    """
+    tiles = []
+    biases = []
+    for i, layer in enumerate(spec.layers):
+        kdim, n = tile_shape(layer)
+        k = jax.random.fold_in(key, i)
+        kw, kdw, kdp = jax.random.split(k, 3)
+        lim = jnp.sqrt(6.0 / (kdim + n))
+        # Analog arrays store weights in the conductance window [-1, 1];
+        # Glorot init for these fan-ins is well inside it.
+        w = jax.random.uniform(kw, (kdim, n), jnp.float32, -lim, lim)
+        wap, wam = devices.sample_device(kdw, (kdim, n), ref_mean, ref_std, sigma_gamma)
+        pap, pam = devices.sample_device(kdp, (kdim, n), ref_mean, ref_std, sigma_gamma)
+        tiles.append(
+            dict(
+                w=w,
+                p=jnp.zeros((kdim, n), jnp.float32),
+                q=jnp.zeros((kdim, n), jnp.float32),
+                h=jnp.zeros((kdim, n), jnp.float32),
+                wap=wap,
+                wam=wam,
+                pap=pap,
+                pam=pam,
+                c=jnp.ones((kdim, 1), jnp.float32),
+            )
+        )
+        biases.append(jnp.zeros((n,), jnp.float32))
+    return tiles, biases

@@ -1,0 +1,68 @@
+"""Flat-state interface between the JAX pytrees and the Rust coordinator.
+
+The Rust runtime sees a model's training state as a flat, ordered list of
+f32 arrays. This module defines that order, converts in both directions,
+and produces the manifest entries that let Rust address leaves by role
+(e.g. find every `w` leaf when deploying a digitally pre-trained
+checkpoint onto the analog arrays).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import model as M
+
+# Fixed per-tile leaf order. Rust indexes state by this.
+TILE_LEAVES = ("w", "p", "q", "h", "wap", "wam", "pap", "pam", "c")
+
+
+def leaf_specs(spec):
+    """[(name, shape, role, tile_index)] for a model's flat state."""
+    out = []
+    for i, layer in enumerate(spec.layers):
+        kdim, n = M.tile_shape(layer)
+        for leaf in TILE_LEAVES:
+            shape = (kdim, 1) if leaf == "c" else (kdim, n)
+            out.append((f"t{i}.{leaf}", shape, leaf, i))
+    for i, layer in enumerate(spec.layers):
+        _, n = M.tile_shape(layer)
+        out.append((f"b{i}", (n,), "bias", i))
+    return out
+
+
+def flatten(tiles, biases):
+    flat = []
+    for t in tiles:
+        for leaf in TILE_LEAVES:
+            flat.append(t[leaf])
+    flat.extend(biases)
+    return flat
+
+
+def unflatten(spec, flat):
+    n_tiles = len(spec.layers)
+    tiles = []
+    idx = 0
+    for _ in range(n_tiles):
+        t = {}
+        for leaf in TILE_LEAVES:
+            t[leaf] = flat[idx]
+            idx += 1
+        tiles.append(t)
+    biases = list(flat[idx : idx + n_tiles])
+    assert idx + n_tiles == len(flat)
+    return tiles, biases
+
+
+def state_len(spec):
+    return len(spec.layers) * (len(TILE_LEAVES) + 1)
+
+
+def abstract_state(spec):
+    """ShapeDtypeStructs for the flat state (for jit.lower)."""
+    import jax
+
+    return [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape, _, _ in leaf_specs(spec)
+    ]

@@ -1,0 +1,86 @@
+"""AOT manifest consistency: artifact inventory, state layouts, parity
+vectors. Runs against a built artifacts/ directory if present (make
+artifacts); otherwise validates the emitter logic on a small model."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import algorithms as A
+from compile import aot
+from compile import model as M
+from compile import state as S
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_roundtrippable():
+    """Lowered HLO text parses back through xla_client (the same parser
+    family the Rust xla crate uses)."""
+    def f(x, y):
+        return (x @ y,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(f).lower(spec, spec))
+    assert "ENTRY" in text and "f32[4,4]" in text
+
+
+def test_state_len_consistent_across_models():
+    for name, spec in M.MODELS.items():
+        n_layers = len(spec.layers)
+        assert S.state_len(spec) == n_layers * 10
+        specs = S.leaf_specs(spec)
+        assert len(specs) == S.state_len(spec)
+        roles = [r for _, _, r, _ in specs]
+        assert roles.count("w") == n_layers
+        assert roles.count("bias") == n_layers
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_inventory():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    for mname in ("fcn", "lenet", "convnet3"):
+        assert mname in man["models"]
+        for art in ("init", "eval", "eval_digital", "zs"):
+            assert f"{mname}_{art}" in man["artifacts"]
+        for algo in A.STEPS:
+            assert f"{mname}_step_{algo}" in man["artifacts"]
+    # every artifact file exists
+    for name, a in man["artifacts"].items():
+        assert os.path.exists(os.path.join(ART, a["file"])), name
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_state_matches_leaf_specs():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    for mname, spec in M.MODELS.items():
+        entries = man["models"][mname]["state"]
+        want = S.leaf_specs(spec)
+        assert len(entries) == len(want)
+        for e, (n, sh, role, ti) in zip(entries, want):
+            assert e["name"] == n and e["role"] == role
+            assert tuple(e["shape"]) == tuple(sh)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "parity.json")),
+    reason="artifacts not built",
+)
+def test_parity_vectors_valid():
+    par = json.load(open(os.path.join(ART, "parity.json")))
+    assert len(par["cases"]) >= 5
+    for c in par["cases"]:
+        if c["kind"] == "pulse_update":
+            n = c["rows"] * c["cols"]
+            assert len(c["w"]) == len(c["expected"]) == n
+        else:
+            assert len(c["expected"]) == c["b"] * c["n"]

@@ -1,0 +1,66 @@
+"""Device-model tests: SP control, F/G identities, response properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import devices
+from compile.kernels import ref
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    mean=st.floats(-0.5, 0.5),
+    std=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sample_device_controls_sp(mean, std, seed):
+    """The sampled array's SP distribution matches (ref_mean, ref_std)."""
+    key = jax.random.PRNGKey(seed)
+    ap, am = devices.sample_device(key, (64, 64), mean, std, sigma_gamma=0.1)
+    sp = devices.symmetric_point(ap, am)
+    # SPs are clipped to +-0.85, so compare against the clipped target.
+    k1, k2 = jax.random.split(key)
+    want = jnp.clip(mean + std * jax.random.normal(k2, (64, 64)), -0.85, 0.85)
+    assert abs(float(sp.mean()) - float(want.mean())) < 0.06
+    assert abs(float(sp.std()) - float(want.std())) < 0.06
+
+
+def test_sample_device_positive_definite():
+    """Training-friendly response (Definition 2.1): slopes stay positive."""
+    key = jax.random.PRNGKey(0)
+    ap, am = devices.sample_device(key, (128, 128), 0.4, 1.0, sigma_gamma=0.3)
+    assert float(ap.min()) >= 0.05
+    assert float(am.min()) >= 0.05
+
+
+def test_fg_decomposition_identity():
+    """F +- G recovers q_-/q_+ (Eq. 6)."""
+    w = jnp.linspace(-0.9, 0.9, 13)
+    ap = jnp.full_like(w, 1.3)
+    am = jnp.full_like(w, 0.7)
+    f = ref.f_sym(w, ap, am, 1.0, 1.0)
+    g = ref.g_asym(w, ap, am, 1.0, 1.0)
+    np.testing.assert_allclose(f - g, ref.q_plus(w, ap, 1.0), atol=1e-6)
+    np.testing.assert_allclose(f + g, ref.q_minus(w, am, 1.0), atol=1e-6)
+
+
+def test_g_vanishes_exactly_at_sp():
+    """Definition 1.1: G(w_sp) = 0."""
+    ap, am = jnp.array([1.4]), jnp.array([0.6])
+    sp = ref.symmetric_point(ap, am, 1.0, 1.0)
+    g = ref.g_asym(sp, ap, am, 1.0, 1.0)
+    np.testing.assert_allclose(g, 0.0, atol=1e-7)
+
+
+def test_symmetric_device_sp_is_zero():
+    ap = am = jnp.array([0.9])
+    assert float(ref.symmetric_point(ap, am, 1.0, 1.0)[0]) == 0.0
+
+
+def test_presets_cover_paper_table3():
+    assert devices.PRESETS["hfo2"]["dw_min"] == 0.4622
+    assert devices.PRESETS["om"]["dw_min"] == 0.0949
+    for p in devices.PRESETS.values():
+        assert p["dw_min"] > 0

@@ -1,0 +1,194 @@
+"""Kernel-vs-oracle tests — the core L1 correctness signal.
+
+Deterministic mode must match the pure-jnp oracle exactly (same graph up
+to fusion); stochastic mode must match in expectation / distribution.
+Hypothesis sweeps shapes, dtypes-compatible ranges and seeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import analog_mvm, pulse_update, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+# ---------------------------------------------------------------- pulse_update
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    cols=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+    dw_min=st.sampled_from([1e-4, 1e-3, 1e-2, 0.0949, 0.4622]),
+)
+def test_pulse_update_matches_ref_deterministic(rows, cols, seed, dw_min):
+    k = jax.random.split(jax.random.PRNGKey(seed), 6)
+    shape = (rows, cols)
+    w = _rand(k[0], shape, -0.9, 0.9)
+    dw = _rand(k[1], shape, -0.3, 0.3)
+    gamma = jnp.exp(0.3 * jax.random.normal(k[2], shape))
+    rho = 0.3 * jax.random.normal(k[3], shape)
+    ap, am = gamma + jnp.abs(rho), jnp.maximum(gamma - jnp.abs(rho), 0.05)
+    u = _rand(k[4], shape, 0.0, 1.0)
+    z = jax.random.normal(k[5], shape)
+
+    got = pulse_update(w, dw, ap, am, u, z, dw_min, 0.3, 1.0, 1.0, deterministic=True)
+    want = ref.ref_pulse_update(
+        w, dw, ap, am, u, z, dw_min=dw_min, sigma_c2c=0.3, deterministic=True
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(1, 16),
+    cols=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pulse_update_matches_ref_stochastic(rows, cols, seed):
+    """With identical variates, kernel and oracle agree exactly."""
+    k = jax.random.split(jax.random.PRNGKey(seed), 6)
+    shape = (rows, cols)
+    w = _rand(k[0], shape, -0.9, 0.9)
+    dw = _rand(k[1], shape, -0.2, 0.2)
+    ap = _rand(k[2], shape, 0.5, 1.5)
+    am = _rand(k[3], shape, 0.5, 1.5)
+    u = _rand(k[4], shape, 0.0, 1.0)
+    z = jax.random.normal(k[5], shape)
+
+    got = pulse_update(w, dw, ap, am, u, z, 1e-3, 0.2, 1.0, 1.0)
+    want = ref.ref_pulse_update(
+        w, dw, ap, am, u, z, dw_min=1e-3, sigma_c2c=0.2, deterministic=False
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_pulse_update_1d_shape():
+    shape = (37,)
+    k = jax.random.split(jax.random.PRNGKey(0), 6)
+    w = _rand(k[0], shape, -0.5, 0.5)
+    dw = _rand(k[1], shape, -0.1, 0.1)
+    one = jnp.ones(shape)
+    u = _rand(k[4], shape, 0.0, 1.0)
+    z = jax.random.normal(k[5], shape)
+    out = pulse_update(w, dw, one, one, u, z, 1e-3, 0.0, 1.0, 1.0, deterministic=True)
+    assert out.shape == shape
+
+
+def test_pulse_update_stays_in_bounds():
+    shape = (8, 128)
+    k = jax.random.split(jax.random.PRNGKey(1), 6)
+    w = _rand(k[0], shape, -1.0, 1.0)
+    dw = _rand(k[1], shape, -5.0, 5.0)  # huge updates
+    one = jnp.ones(shape)
+    u = _rand(k[4], shape, 0.0, 1.0)
+    z = jax.random.normal(k[5], shape)
+    out = pulse_update(w, dw, one, one, u, z, 1e-2, 0.5, 1.0, 1.0)
+    assert jnp.all(out <= 1.0) and jnp.all(out >= -1.0)
+
+
+def test_pulse_update_symmetric_point_is_fixed():
+    """At the SP with symmetric devices, up/down pulses cancel in expectation."""
+    shape = (4, 64)
+    w = jnp.zeros(shape)  # SP of a symmetric device is 0
+    one = jnp.ones(shape)
+    up = pulse_update(
+        w, jnp.full(shape, 1e-3), one, one, 0.5 * one, 0.0 * one, 1e-3, 0.0, 1.0, 1.0,
+        deterministic=True,
+    )
+    down = pulse_update(
+        up, jnp.full(shape, -1e-3), one, one, 0.5 * one, 0.0 * one, 1e-3, 0.0, 1.0, 1.0,
+        deterministic=True,
+    )
+    # residual is second order in dw_min (state-dependent response):
+    np.testing.assert_allclose(down, w, atol=3e-6)
+
+
+def test_pulse_update_asymmetry_drifts_to_sp():
+    """Alternating pulses on an asymmetric device drift towards its SP
+    (the SP-attraction property the whole paper builds on)."""
+    shape = (1, 64)
+    ap = jnp.full(shape, 1.2)  # rho = 0.2, gamma = 1.0 -> SP = 0.2
+    am = jnp.full(shape, 0.8)
+    sp = ref.symmetric_point(ap, am, 1.0, 1.0)
+    w = jnp.zeros(shape)
+    half = jnp.full(shape, 0.5)
+    zero = jnp.zeros(shape)
+    for i in range(400):
+        s = 1.0 if i % 2 == 0 else -1.0
+        w = pulse_update(
+            w, jnp.full(shape, s * 1e-2), ap, am, half, zero, 1e-2, 0.0, 1.0, 1.0,
+            deterministic=True,
+        )
+    assert jnp.max(jnp.abs(w - sp)) < 0.05
+
+
+# ----------------------------------------------------------------- analog_mvm
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 33),
+    kdim=st.integers(1, 96),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_analog_mvm_matches_ref(b, kdim, n, seed):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k[0], (b, kdim), -2.0, 2.0)
+    w = _rand(k[1], (kdim, n), -1.0, 1.0)
+    z = jax.random.normal(k[2], (b, n))
+    got = analog_mvm(x, w, z)
+    want = ref.ref_analog_mvm(x, w, z)
+    # Tiled accumulation can land exactly on an ADC rounding boundary and
+    # flip one LSB vs the oracle's summation order; allow one output
+    # quantum (out_res * per-row scale <= 2) on a tiny fraction of cells.
+    diff = np.abs(np.asarray(got) - np.asarray(want))
+    lsb = 2.0 / 511.0 * 1.1
+    assert float(diff.max()) <= lsb, f"max diff {diff.max()}"
+    frac_exact = float((diff < 1e-5).mean())
+    assert frac_exact > 0.99, f"only {frac_exact:.4f} exact"
+
+
+def test_analog_mvm_deterministic_flag_drops_noise():
+    k = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = _rand(k[0], (4, 16), -1.0, 1.0)
+    w = _rand(k[1], (16, 8), -1.0, 1.0)
+    z1 = jax.random.normal(k[2], (4, 8))
+    z2 = -z1
+    a = analog_mvm(x, w, z1, deterministic=True)
+    b = analog_mvm(x, w, z2, deterministic=True)
+    np.testing.assert_allclose(a, b, atol=0)
+
+
+def test_analog_mvm_close_to_ideal_matmul():
+    """The analog chain is a perturbation, not a different operator."""
+    k = jax.random.split(jax.random.PRNGKey(9), 3)
+    x = _rand(k[0], (16, 64), -1.0, 1.0)
+    w = _rand(k[1], (64, 32), -0.5, 0.5)
+    z = jax.random.normal(k[2], (16, 32))
+    y = analog_mvm(x, w, z)
+    ideal = x @ w
+    err = jnp.abs(y - ideal)
+    # per-element error dominated by quantization + 0.06 read noise, scaled
+    # by the per-row ABS_MAX (<= 1 here).
+    assert float(jnp.mean(err)) < 0.12
+    assert float(jnp.max(err)) < 0.6
+
+
+def test_analog_mvm_zero_input_row():
+    """ABS_MAX noise management must not divide by zero."""
+    x = jnp.zeros((2, 8))
+    w = jnp.ones((8, 4))
+    z = jnp.zeros((2, 4))
+    y = analog_mvm(x, w, z, deterministic=True)
+    np.testing.assert_allclose(y, jnp.zeros((2, 4)), atol=1e-6)

@@ -1,0 +1,113 @@
+"""Model tests: shapes, im2col correctness, gradient flow, init."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import state as S
+
+TINY = M.ModelSpec("tiny", (16,), (M.Fc(16, 12, "tanh"), M.Fc(12, 4, "none")), 4)
+DEV = jnp.array([1e-3, 0.0, 1.0, 1.0, 0.06, 1 / 127, 1 / 511, 12.0])
+
+
+def _init(spec, seed=0):
+    return M.init_state(spec, jax.random.PRNGKey(seed), 0.1, 0.2, 0.1)
+
+
+@pytest.mark.parametrize("name", ["fcn", "lenet", "convnet3"])
+def test_forward_shapes(name):
+    spec = M.MODELS[name]
+    tiles, biases = _init(spec)
+    x = jnp.ones((4, spec.d_in))
+    logits = M.forward(spec, tiles, biases, x, jax.random.PRNGKey(1), DEV, "plain", 0.0)
+    assert logits.shape == (4, spec.n_classes)
+
+
+def test_im2col_matches_conv():
+    """Our patches + matmul path equals lax.conv_general_dilated."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 3, 8, 8))
+    layer = M.Conv(3, 5, 3, "SAME", 1, "none")
+    wk = jax.random.normal(jax.random.PRNGKey(4), (3 * 9, 5))
+    pat, (hh, ww) = M._patches(x, layer)
+    got = (pat @ wk).reshape(2, hh, ww, 5).transpose(0, 3, 1, 2)
+    # conv_general_dilated_patches flattens features as (C, kh, kw)
+    wconv = wk.reshape(3, 3, 3, 5).transpose(3, 0, 1, 2)  # OIHW
+    want = jax.lax.conv_general_dilated(
+        x, wconv, (1, 1), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_digital_mode_is_exact():
+    tiles, biases = _init(TINY)
+    x = jnp.ones((3, 16))
+    y1 = M.forward(TINY, tiles, biases, x, jax.random.PRNGKey(0), DEV, "digital", 0.0)
+    h = jnp.tanh(x @ tiles[0]["w"] + biases[0])
+    want = h @ tiles[1]["w"] + biases[1]
+    np.testing.assert_allclose(y1, want, rtol=1e-6)
+
+
+def test_grads_flow_to_all_tiles():
+    tiles, biases = _init(TINY)
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 16))
+    labels = jnp.arange(8) % 4
+    loss, gw, gb = M.loss_and_grads(
+        TINY, tiles, biases, x, labels, jax.random.PRNGKey(6), DEV, "plain", 0.0
+    )
+    assert jnp.isfinite(loss)
+    for g in gw + gb:
+        assert float(jnp.abs(g).max()) > 0
+
+
+def test_residual_mode_grad_matches_wbar_semantics():
+    """In residual mode, dL/dw equals the gradient at W-bar; dL/dp is
+    gamma * (c-modulated) times that (tied activations; c is per input
+    line, broadcast over output columns)."""
+    tiles, biases = _init(TINY)
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 16))
+    labels = jnp.arange(4) % 4
+    key = jax.random.PRNGKey(8)
+    gamma = 0.3
+
+    def f(ws, ps):
+        t2 = [dict(t, w=w, p=p) for t, w, p in zip(tiles, ws, ps)]
+        # deterministic IO so the two grads see identical noise
+        devd = DEV.at[4].set(0.0)
+        return M.loss_fn(TINY, t2, biases, x, labels, key, devd, "residual", gamma)
+
+    ws = [t["w"] for t in tiles]
+    ps = [t["p"] for t in tiles]
+    gw, gp = jax.grad(f, argnums=(0, 1))(ws, ps)
+    for t, a, b in zip(tiles, gw, gp):
+        want = gamma * t["c"] * a  # [K,1] broadcasts over columns
+        np.testing.assert_allclose(b, want, rtol=2e-2, atol=5e-4)
+
+
+def test_flatten_unflatten_roundtrip():
+    tiles, biases = _init(TINY)
+    flat = S.flatten(tiles, biases)
+    assert len(flat) == S.state_len(TINY)
+    t2, b2 = S.unflatten(TINY, flat)
+    for ta, tb in zip(tiles, t2):
+        for leaf in S.TILE_LEAVES:
+            np.testing.assert_array_equal(ta[leaf], tb[leaf])
+    for ba, bb in zip(biases, b2):
+        np.testing.assert_array_equal(ba, bb)
+
+
+def test_leaf_specs_match_init_shapes():
+    tiles, biases = _init(TINY)
+    flat = S.flatten(tiles, biases)
+    for (name, shape, role, _), arr in zip(S.leaf_specs(TINY), flat):
+        assert tuple(shape) == arr.shape, name
+
+
+def test_init_respects_ref_mean():
+    spec = M.MODELS["fcn"]
+    tiles, _ = M.init_state(spec, jax.random.PRNGKey(0), 0.4, 0.05, 0.1)
+    from compile import devices
+    sp = devices.symmetric_point(tiles[0]["pap"], tiles[0]["pam"])
+    assert abs(float(sp.mean()) - 0.4) < 0.03

@@ -1,0 +1,20 @@
+//! The paper's analog-training algorithm family on the Rust substrate
+//! (pulse-level; used by the theory experiments and Fig. 1/Fig. 4-left).
+//! The NN-scale variants of the same algorithms live in the AOT
+//! artifacts (python/compile/algorithms.py) and are driven by `train`.
+
+pub mod agad;
+pub mod pulse_counter;
+pub mod residual;
+pub mod rider;
+pub mod sgd;
+pub mod tiki_taka;
+pub mod zs;
+
+pub use agad::Agad;
+pub use pulse_counter::PulseCost;
+pub use residual::TwoStageResidual;
+pub use rider::{Rider, RiderHypers};
+pub use sgd::AnalogSgd;
+pub use tiki_taka::{TikiTaka, TtVariant};
+pub use zs::{ZsResult, ZsVariant};

@@ -1,0 +1,61 @@
+//! Pulse / programming cost accounting (the currency of Fig. 4 left and
+//! Corollary 3.9): update pulses on analog arrays, weight-programming
+//! events for reference synchronization, and digital ops for context.
+
+/// Accumulated costs of a training or calibration run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PulseCost {
+    /// pulses applied to analog arrays during optimizer updates
+    pub update_pulses: u64,
+    /// pulses spent on SP calibration (ZS stage)
+    pub calibration_pulses: u64,
+    /// weight-programming events (cells reprogrammed, e.g. Q-tilde sync)
+    pub programming_events: u64,
+    /// digital scalar ops (moving averages, buffers) — context only
+    pub digital_ops: u64,
+}
+
+impl PulseCost {
+    pub fn total_pulses(&self) -> u64 {
+        self.update_pulses + self.calibration_pulses
+    }
+
+    pub fn add(&mut self, other: &PulseCost) {
+        self.update_pulses += other.update_pulses;
+        self.calibration_pulses += other.calibration_pulses;
+        self.programming_events += other.programming_events;
+        self.digital_ops += other.digital_ops;
+    }
+
+    /// The paper's training-cost formula for HLO-driven runs where
+    /// per-pulse counts aren't observable: steps × weights × BL, with
+    /// average update pulse length BL (Fig. 4 caption uses BL = 5).
+    pub fn training_estimate(steps: u64, weights: u64, bl: u64) -> u64 {
+        steps * weights * bl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn additivity() {
+        let mut a = PulseCost {
+            update_pulses: 10,
+            calibration_pulses: 5,
+            programming_events: 2,
+            digital_ops: 100,
+        };
+        let b = a;
+        a.add(&b);
+        assert_eq!(a.update_pulses, 20);
+        assert_eq!(a.total_pulses(), 30);
+    }
+
+    #[test]
+    fn paper_formula() {
+        // epochs × (data/B) × BL per weight: 2 epochs × 100 steps × BL 5
+        assert_eq!(PulseCost::training_estimate(200, 1, 5), 1000);
+    }
+}

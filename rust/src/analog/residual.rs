@@ -1,0 +1,141 @@
+//! Two-stage Residual Learning (paper Algorithm 4): ZS calibration of the
+//! P-device SP first (N pulses), then residual training with the
+//! reference frozen at the estimate (RIDER with eta = 0, flip_p = 0).
+//! This is the theoretical baseline of Corollary 3.9: total pulse cost
+//! O(K + N) = O(δ⁻² + δ⁻¹ Δw_min⁻¹) versus RIDER's O(δ⁻²).
+
+use crate::analog::pulse_counter::PulseCost;
+use crate::analog::rider::{Rider, RiderHypers};
+use crate::analog::zs::{self, ZsVariant};
+use crate::device::Preset;
+use crate::optim::Objective;
+use crate::util::rng::Rng;
+
+pub struct TwoStageResidual {
+    pub inner: Rider,
+    pub calibration_pulses: u64,
+}
+
+impl TwoStageResidual {
+    /// Build the optimizer and immediately run the ZS stage with
+    /// `zs_pulses` pulse cycles on the P array.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        dim: usize,
+        preset: &Preset,
+        ref_mean: f64,
+        ref_std: f64,
+        mut hypers: RiderHypers,
+        sigma: f64,
+        zs_pulses: u64,
+        rng: &mut Rng,
+    ) -> Self {
+        // stage 2 runs with the reference frozen
+        hypers.eta = 0.0;
+        hypers.flip_p = 0.0;
+        let mut inner = Rider::new(dim, preset, ref_mean, ref_std, hypers, sigma, rng);
+        // stage 1: ZS on the P device
+        let before = inner.p.pulse_count;
+        let res = zs::run(&mut inner.p, zs_pulses, ZsVariant::Cyclic, rng);
+        inner.set_reference(res.estimate);
+        let calibration_pulses = inner.p.pulse_count - before;
+        Self {
+            inner,
+            calibration_pulses,
+        }
+    }
+
+    pub fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
+        self.inner.step(obj, rng)
+    }
+
+    pub fn cost(&self) -> PulseCost {
+        let mut c = self.inner.cost();
+        // ZS pulses were counted into p.pulse_count; reclassify them.
+        c.update_pulses -= self.calibration_pulses;
+        c.calibration_pulses = self.calibration_pulses;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::optim::Quadratic;
+    use crate::util::stats;
+
+    #[test]
+    fn well_calibrated_two_stage_converges() {
+        let mut rng = Rng::from_seed(1);
+        let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
+        let mut opt = TwoStageResidual::new(
+            16,
+            &presets::preset("om").unwrap(),
+            0.4,
+            0.1,
+            RiderHypers::default(),
+            0.2,
+            4000,
+            &mut rng,
+        );
+        let mut losses = Vec::new();
+        for _ in 0..5000 {
+            losses.push(opt.step(&obj, &mut rng));
+        }
+        let tail = stats::mean(&losses[losses.len() - 200..]);
+        let init = losses[0];
+        assert!(tail < 0.4 * init, "init {init} tail {tail}");
+    }
+
+    #[test]
+    fn calibration_pulses_accounted() {
+        let mut rng = Rng::from_seed(2);
+        let opt = TwoStageResidual::new(
+            8,
+            &presets::preset("om").unwrap(),
+            0.3,
+            0.1,
+            RiderHypers::default(),
+            0.1,
+            100,
+            &mut rng,
+        );
+        let c = opt.cost();
+        assert_eq!(c.calibration_pulses, 100 * 8);
+        assert_eq!(c.update_pulses, 0); // no training steps yet
+    }
+
+    #[test]
+    fn poor_calibration_leaves_reference_error() {
+        // Figure 2's mechanism: too few ZS pulses => reference error.
+        let mut rng = Rng::from_seed(3);
+        let few = TwoStageResidual::new(
+            16,
+            &presets::preset("precise").unwrap(),
+            0.4,
+            0.1,
+            RiderHypers::default(),
+            0.1,
+            20,
+            &mut rng,
+        );
+        let mut rng2 = Rng::from_seed(3);
+        let many = TwoStageResidual::new(
+            16,
+            &presets::preset("precise").unwrap(),
+            0.4,
+            0.1,
+            RiderHypers::default(),
+            0.1,
+            4000,
+            &mut rng2,
+        );
+        assert!(
+            many.inner.q_tracking_error() < few.inner.q_tracking_error(),
+            "many {} few {}",
+            many.inner.q_tracking_error(),
+            few.inner.q_tracking_error()
+        );
+    }
+}

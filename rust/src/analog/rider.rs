@@ -1,0 +1,348 @@
+//! RIDER / E-RIDER (paper Algorithms 2 and 3) — the contribution.
+//!
+//! Three sequences:
+//!   P  (analog)  — residual array; absorbs the stochastic gradient and,
+//!                  through the |·|G term, is *attracted to its own SP*;
+//!   Q  (digital) — moving average of P reads (Eq. 12): a first-order
+//!                  low-pass filter (Lemma 3.10) that isolates the
+//!                  low-frequency SP drift => Q tracks the SP;
+//!   W  (analog)  — main array, updated by the zero-shifted residual
+//!                  β c (P - Q) (Eq. 18b).
+//! The chopper c (Eq. 17) moves the gradient component of P's update into
+//! the high-frequency band so the filter separates it from the SP drift;
+//! the analog shadow Q~ is re-programmed from digital Q only on chopper
+//! flips (programming cost accounting below).
+
+use crate::analog::pulse_counter::PulseCost;
+use crate::device::{DeviceArray, Preset};
+use crate::optim::Objective;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RiderHypers {
+    /// alpha — P array learning rate
+    pub lr_fast: f64,
+    /// beta — W transfer learning rate
+    pub lr_transfer: f64,
+    /// eta — Q moving-average stepsize (Eq. 12)
+    pub eta: f64,
+    /// gamma — residual scale in W-bar (Eq. 8)
+    pub gamma: f64,
+    /// chopper flip probability p (Eq. 17); 0 => RIDER
+    pub flip_p: f64,
+    /// analog read-out noise std
+    pub read_noise: f64,
+}
+
+impl Default for RiderHypers {
+    fn default() -> Self {
+        Self {
+            lr_fast: 0.3,
+            lr_transfer: 0.02,
+            eta: 0.005,
+            gamma: 0.3,
+            flip_p: 0.02,
+            read_noise: 0.005,
+        }
+    }
+}
+
+pub struct Rider {
+    pub p: DeviceArray,
+    pub w: DeviceArray,
+    /// digital SP-tracking sequence Q_k
+    pub q: Vec<f32>,
+    /// chopper sign c_k
+    pub c: f64,
+    pub hypers: RiderHypers,
+    pub sigma: f64,
+    pub programming_events: u64,
+    wbar_buf: Vec<f32>,
+    grad_buf: Vec<f32>,
+    dw_buf: Vec<f32>,
+}
+
+impl Rider {
+    pub fn new(
+        dim: usize,
+        preset: &Preset,
+        ref_mean: f64,
+        ref_std: f64,
+        hypers: RiderHypers,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        Self {
+            p: DeviceArray::sample(1, dim, preset, ref_mean, ref_std, 0.1, rng),
+            w: DeviceArray::sample(1, dim, preset, ref_mean, ref_std, 0.1, rng),
+            q: vec![0.0; dim],
+            c: 1.0,
+            hypers,
+            sigma,
+            programming_events: 0,
+            wbar_buf: vec![0.0; dim],
+            grad_buf: vec![0.0; dim],
+            dw_buf: vec![0.0; dim],
+        }
+    }
+
+    /// Pre-set Q (two-stage Residual Learning uses a ZS estimate here,
+    /// then freezes it with eta = 0).
+    pub fn set_reference(&mut self, q: Vec<f32>) {
+        assert_eq!(q.len(), self.q.len());
+        self.q = q;
+    }
+
+    /// Effective weights W-bar = W + gamma c (P - Q).
+    pub fn wbar(&mut self) -> &[f32] {
+        let g = (self.hypers.gamma * self.c) as f32;
+        for i in 0..self.q.len() {
+            self.wbar_buf[i] = self.w.w[i] + g * (self.p.w[i] - self.q[i]);
+        }
+        &self.wbar_buf
+    }
+
+    /// One E-RIDER iteration (Algorithm 3). Returns loss at W-bar.
+    pub fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
+        let h = self.hypers;
+        // 1. chopper draw; on flip, the analog shadow Q~ is re-programmed
+        //    from the digital Q (cost: one programming event per cell).
+        if h.flip_p > 0.0 && rng.bernoulli(h.flip_p) {
+            self.c = -self.c;
+            self.programming_events += self.q.len() as u64;
+        }
+        // 2. gradient at W-bar
+        let loss = {
+            let wbar = self.wbar();
+            obj.loss(wbar)
+        };
+        let wbar = self.wbar_buf.clone();
+        obj.noisy_grad(&wbar, self.sigma, rng, &mut self.grad_buf);
+        // 3. P <- AnalogUpdate(P, -alpha c g)      (Eq. 18a)
+        let ac = (h.lr_fast * self.c) as f32;
+        for (d, g) in self.dw_buf.iter_mut().zip(&self.grad_buf) {
+            *d = -ac * *g;
+        }
+        self.p.analog_update(&self.dw_buf, rng);
+        // 4. read P; Q <- (1-eta) Q + eta r        (Eq. 12, digital)
+        let r = self.p.read(h.read_noise, rng);
+        let eta = h.eta as f32;
+        // 5. W <- AnalogUpdate(W, beta c (r - Q_k)) (Eq. 18b, uses old Q)
+        let bc = (h.lr_transfer * self.c) as f32;
+        for i in 0..r.len() {
+            self.dw_buf[i] = bc * (r[i] - self.q[i]);
+            self.q[i] = (1.0 - eta) * self.q[i] + eta * r[i];
+        }
+        self.w.analog_update(&self.dw_buf, rng);
+        loss
+    }
+
+    /// ||Q - SP(P-device)||_mean — the SP-tracking error (Lemma 3.5).
+    pub fn q_tracking_error(&self) -> f64 {
+        let sps = self.p.symmetric_points();
+        self.q
+            .iter()
+            .zip(&sps)
+            .map(|(q, s)| (q - s).abs() as f64)
+            .sum::<f64>()
+            / self.q.len() as f64
+    }
+
+    /// Convergence metric terms of Eq. (14).
+    pub fn metrics(&mut self, obj: &dyn Objective) -> (f64, f64, f64) {
+        let w_err = match obj.optimum() {
+            Some(ws) => {
+                let wbar = self.wbar().to_vec();
+                wbar.iter()
+                    .zip(&ws)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+            }
+            None => f64::NAN,
+        };
+        let pq = self
+            .p
+            .w
+            .iter()
+            .zip(&self.q)
+            .map(|(p, q)| ((p - q) as f64).powi(2))
+            .sum::<f64>();
+        let g_sq = self.p.mean_g_sq() * self.p.len() as f64;
+        (w_err, pq, g_sq)
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.w.w
+    }
+
+    pub fn cost(&self) -> PulseCost {
+        PulseCost {
+            update_pulses: self.p.pulse_count + self.w.pulse_count,
+            programming_events: self.programming_events,
+            digital_ops: self.q.len() as u64,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::optim::Quadratic;
+    use crate::util::stats;
+
+    fn quad(dim: usize, rng: &mut Rng) -> Quadratic {
+        Quadratic::new(dim, 1.0, 4.0, 0.3, rng)
+    }
+
+    #[test]
+    fn converges_under_nonzero_sp() {
+        let mut rng = Rng::from_seed(1);
+        let obj = quad(16, &mut rng);
+        let mut opt = Rider::new(
+            16,
+            &presets::preset("om").unwrap(),
+            0.5,
+            0.2,
+            RiderHypers::default(),
+            0.2,
+            &mut rng,
+        );
+        let mut losses = Vec::new();
+        for _ in 0..5000 {
+            losses.push(opt.step(&obj, &mut rng));
+        }
+        let init = losses[0];
+        let tail = stats::mean(&losses[losses.len() - 200..]);
+        assert!(tail < 0.35 * init, "init {init} tail {tail}");
+    }
+
+    #[test]
+    fn q_tracks_sp() {
+        // Lemma 3.5 / Theorem 3.7: the tracking error shrinks decisively
+        // from its initial value (Q starts at 0, SPs near 0.5).
+        let mut rng = Rng::from_seed(2);
+        let obj = quad(16, &mut rng);
+        let mut opt = Rider::new(
+            16,
+            &presets::preset("om").unwrap(),
+            0.5,
+            0.1,
+            RiderHypers {
+                lr_fast: 0.3,
+                eta: 0.01,
+                flip_p: 0.1,
+                ..Default::default()
+            },
+            0.3,
+            &mut rng,
+        );
+        let init_err = opt.q_tracking_error();
+        for _ in 0..4000 {
+            opt.step(&obj, &mut rng);
+        }
+        let final_err = opt.q_tracking_error();
+        assert!(
+            final_err < 0.5 * init_err,
+            "init {init_err} final {final_err}"
+        );
+    }
+
+    #[test]
+    fn chopper_flip_probability_respected() {
+        let mut rng = Rng::from_seed(3);
+        let obj = quad(4, &mut rng);
+        let mut opt = Rider::new(
+            4,
+            &presets::preset("ideal").unwrap(),
+            0.0,
+            0.0,
+            RiderHypers {
+                flip_p: 0.5,
+                ..Default::default()
+            },
+            0.1,
+            &mut rng,
+        );
+        let mut flips = 0;
+        let mut prev = opt.c;
+        for _ in 0..2000 {
+            opt.step(&obj, &mut rng);
+            if opt.c != prev {
+                flips += 1;
+                prev = opt.c;
+            }
+        }
+        let rate = flips as f64 / 2000.0;
+        assert!((rate - 0.5).abs() < 0.05, "{rate}");
+        // every flip costs dim programming events
+        assert_eq!(opt.programming_events, flips * 4);
+    }
+
+    #[test]
+    fn rider_no_flips_when_p_zero() {
+        let mut rng = Rng::from_seed(4);
+        let obj = quad(4, &mut rng);
+        let mut opt = Rider::new(
+            4,
+            &presets::preset("om").unwrap(),
+            0.2,
+            0.1,
+            RiderHypers {
+                flip_p: 0.0,
+                ..Default::default()
+            },
+            0.1,
+            &mut rng,
+        );
+        for _ in 0..200 {
+            opt.step(&obj, &mut rng);
+        }
+        assert_eq!(opt.c, 1.0);
+        assert_eq!(opt.programming_events, 0);
+    }
+
+    #[test]
+    fn beats_analog_sgd_under_offset() {
+        // the headline ordering at theory scale: RIDER's compensated
+        // iterate ends closer to the optimum than raw analog SGD when the
+        // SP is far from 0 and gradients are noisy.
+        use crate::analog::sgd::AnalogSgd;
+        let mut rng = Rng::from_seed(5);
+        let obj = Quadratic {
+            lambda: vec![1.0; 8],
+            w_star: vec![0.1; 8],
+        };
+        let preset = presets::preset("om").unwrap();
+        let mut sgd = AnalogSgd::new(8, &preset, 0.7, 0.05, 0.05, 0.5, &mut rng);
+        let mut rider = Rider::new(
+            8,
+            &preset,
+            0.7,
+            0.05,
+            RiderHypers::default(),
+            0.5,
+            &mut rng,
+        );
+        for _ in 0..5000 {
+            sgd.step(&obj, &mut rng);
+            rider.step(&obj, &mut rng);
+        }
+        let dist = |w: &[f32]| {
+            w.iter()
+                .zip(&obj.w_star)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let d_sgd = dist(sgd.weights());
+        let d_rider = {
+            let wb = rider.wbar().to_vec();
+            dist(&wb)
+        };
+        assert!(
+            d_rider < d_sgd,
+            "rider {d_rider} should beat sgd {d_sgd} under SP offset"
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Analog SGD (paper Eq. 2 applied directly): the baseline whose bias
+//! towards the device SP (Eq. 4) motivates everything else.
+
+use crate::analog::pulse_counter::PulseCost;
+use crate::device::{DeviceArray, Preset};
+use crate::optim::Objective;
+use crate::util::rng::Rng;
+
+pub struct AnalogSgd {
+    pub w: DeviceArray,
+    pub alpha: f64,
+    pub sigma: f64,
+    grad_buf: Vec<f32>,
+    dw_buf: Vec<f32>,
+}
+
+impl AnalogSgd {
+    pub fn new(
+        dim: usize,
+        preset: &Preset,
+        ref_mean: f64,
+        ref_std: f64,
+        alpha: f64,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        Self {
+            w: DeviceArray::sample(1, dim, preset, ref_mean, ref_std, 0.1, rng),
+            alpha,
+            sigma,
+            grad_buf: vec![0.0; dim],
+            dw_buf: vec![0.0; dim],
+        }
+    }
+
+    /// One SGD step; returns the loss at the pre-step iterate.
+    pub fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
+        let loss = obj.loss(&self.w.w);
+        obj.noisy_grad(&self.w.w, self.sigma, rng, &mut self.grad_buf);
+        for (d, g) in self.dw_buf.iter_mut().zip(&self.grad_buf) {
+            *d = (-self.alpha * *g as f64) as f32;
+        }
+        self.w.analog_update(&self.dw_buf, rng);
+        loss
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.w.w
+    }
+
+    pub fn cost(&self) -> PulseCost {
+        PulseCost {
+            update_pulses: self.w.pulse_count,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::optim::Quadratic;
+    use crate::util::stats;
+
+    #[test]
+    fn converges_on_zero_sp_device() {
+        let mut rng = Rng::from_seed(1);
+        let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
+        let mut opt = AnalogSgd::new(
+            16, &presets::preset("ideal").unwrap(), 0.0, 0.0, 0.05, 0.01, &mut rng,
+        );
+        let mut losses = Vec::new();
+        for _ in 0..2000 {
+            losses.push(opt.step(&obj, &mut rng));
+        }
+        let head = stats::mean(&losses[..50]);
+        let tail = stats::mean(&losses[losses.len() - 50..]);
+        assert!(tail < 0.05 * head, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn biased_towards_sp_under_noise() {
+        // Eq. 4: with gradient noise and nonzero SP, the iterate settles
+        // displaced from the optimum, towards the SP.
+        let mut rng = Rng::from_seed(2);
+        let obj = Quadratic {
+            lambda: vec![1.0; 8],
+            w_star: vec![0.0; 8],
+        };
+        let mut opt = AnalogSgd::new(
+            8, &presets::preset("om").unwrap(), 0.6, 0.05, 0.05, 0.5, &mut rng,
+        );
+        for _ in 0..4000 {
+            opt.step(&obj, &mut rng);
+        }
+        let mean_w: f64 =
+            opt.weights().iter().map(|&x| x as f64).sum::<f64>() / 8.0;
+        assert!(mean_w > 0.1, "expected drift towards SP 0.6, got {mean_w}");
+    }
+
+    #[test]
+    fn counts_pulses() {
+        let mut rng = Rng::from_seed(3);
+        let obj = Quadratic::new(4, 1.0, 1.0, 0.3, &mut rng);
+        let mut opt = AnalogSgd::new(
+            4, &presets::preset("om").unwrap(), 0.0, 0.0, 0.1, 0.0, &mut rng,
+        );
+        for _ in 0..10 {
+            opt.step(&obj, &mut rng);
+        }
+        assert!(opt.cost().update_pulses > 0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Tiki-Taka v1/v2 (Gokmen & Haensch 2020; Gokmen 2021): the zero-SP
+//! two-array baselines of Tables 1–2. A fast array A integrates the
+//! gradient; its (reference-subtracted) read-out is transferred into the
+//! slow array W — directly in v1, through a thresholded digital buffer in
+//! v2. Both assume the reference `q` equals the A-device SP; the paper's
+//! point is that a nonzero/unknown SP breaks that assumption.
+
+use crate::analog::pulse_counter::PulseCost;
+use crate::device::{DeviceArray, Preset};
+use crate::optim::Objective;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TtVariant {
+    V1,
+    V2,
+}
+
+pub struct TikiTaka {
+    pub a: DeviceArray,
+    pub w: DeviceArray,
+    /// digital accumulation buffer (v2)
+    pub h: Vec<f32>,
+    /// assumed reference (SP estimate; zero unless calibrated)
+    pub q: Vec<f32>,
+    pub variant: TtVariant,
+    pub lr_fast: f64,
+    pub lr_transfer: f64,
+    pub thresh: f64,
+    pub read_noise: f64,
+    pub sigma: f64,
+    /// mixing weight of the fast array in the forward pass: the logical
+    /// weight is W_eff = W + gamma_tt (A - q) (AIHWKit transfer compound)
+    pub gamma_tt: f64,
+    grad_buf: Vec<f32>,
+    dw_buf: Vec<f32>,
+    weff_buf: Vec<f32>,
+}
+
+impl TikiTaka {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        dim: usize,
+        preset: &Preset,
+        ref_mean: f64,
+        ref_std: f64,
+        variant: TtVariant,
+        lr_fast: f64,
+        lr_transfer: f64,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let a = DeviceArray::sample(1, dim, preset, ref_mean, ref_std, 0.1, rng);
+        let w = DeviceArray::sample(1, dim, preset, ref_mean, ref_std, 0.1, rng);
+        Self {
+            a,
+            w,
+            h: vec![0.0; dim],
+            q: vec![0.0; dim],
+            variant,
+            lr_fast,
+            lr_transfer,
+            thresh: preset.dw_min.max(1e-3),
+            read_noise: 0.01,
+            sigma,
+            gamma_tt: 1.0,
+            grad_buf: vec![0.0; dim],
+            dw_buf: vec![0.0; dim],
+            weff_buf: vec![0.0; dim],
+        }
+    }
+
+    /// Logical (effective) weights W + gamma_tt (A - q).
+    pub fn w_eff(&mut self) -> &[f32] {
+        let g = self.gamma_tt as f32;
+        for i in 0..self.weff_buf.len() {
+            self.weff_buf[i] = self.w.w[i] + g * (self.a.w[i] - self.q[i]);
+        }
+        &self.weff_buf
+    }
+
+    /// Calibrate the reference to an SP estimate (two-stage pipelines).
+    pub fn set_reference(&mut self, q: Vec<f32>) {
+        assert_eq!(q.len(), self.q.len());
+        self.q = q;
+    }
+
+    pub fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
+        // gradient at the effective (combined) weight: the A-array is part
+        // of the logical weight, which is what damps the A->W transfer
+        // loop (proportional + integral control).
+        let weff = self.w_eff().to_vec();
+        let loss = obj.loss(&weff);
+        obj.noisy_grad(&weff, self.sigma, rng, &mut self.grad_buf);
+        // A <- AnalogUpdate(A, -lr_fast * g)
+        for (d, g) in self.dw_buf.iter_mut().zip(&self.grad_buf) {
+            *d = (-self.lr_fast * *g as f64) as f32;
+        }
+        self.a.analog_update(&self.dw_buf, rng);
+        // reference-corrected read
+        let r = self.a.read(self.read_noise, rng);
+        match self.variant {
+            TtVariant::V1 => {
+                for i in 0..r.len() {
+                    self.dw_buf[i] = (self.lr_transfer * (r[i] - self.q[i]) as f64) as f32;
+                }
+                self.w.analog_update(&self.dw_buf, rng);
+            }
+            TtVariant::V2 => {
+                let t = self.thresh as f32;
+                for i in 0..r.len() {
+                    self.h[i] += r[i] - self.q[i];
+                    let quanta = (self.h[i] / t).trunc();
+                    self.dw_buf[i] = (self.lr_transfer * (quanta * t) as f64) as f32;
+                    self.h[i] -= quanta * t;
+                }
+                self.w.analog_update(&self.dw_buf, rng);
+            }
+        }
+        loss
+    }
+
+    pub fn weights(&mut self) -> &[f32] {
+        self.w_eff()
+    }
+
+    pub fn cost(&self) -> PulseCost {
+        PulseCost {
+            update_pulses: self.a.pulse_count + self.w.pulse_count,
+            digital_ops: if self.variant == TtVariant::V2 {
+                self.h.len() as u64
+            } else {
+                0
+            },
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::optim::Quadratic;
+    use crate::util::stats;
+
+    fn run(variant: TtVariant, ref_mean: f64, steps: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Rng::from_seed(seed);
+        let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
+        let mut opt = TikiTaka::new(
+            16,
+            &presets::preset("om").unwrap(),
+            ref_mean,
+            0.1,
+            variant,
+            0.1,
+            0.05,
+            0.1,
+            &mut rng,
+        );
+        let mut losses = Vec::new();
+        for _ in 0..steps {
+            losses.push(opt.step(&obj, &mut rng));
+        }
+        (
+            losses[0],
+            stats::mean(&losses[losses.len() - 50..]),
+        )
+    }
+
+    #[test]
+    fn v1_converges_zero_sp() {
+        let (init, tail) = run(TtVariant::V1, 0.0, 1500, 1);
+        assert!(tail < 0.35 * init, "init {init} tail {tail}");
+    }
+
+    #[test]
+    fn v2_converges_zero_sp() {
+        let (init, tail) = run(TtVariant::V2, 0.0, 1500, 2);
+        assert!(tail < 0.35 * init, "init {init} tail {tail}");
+    }
+
+    #[test]
+    fn v2_buffer_keeps_remainder() {
+        let mut rng = Rng::from_seed(3);
+        let obj = Quadratic::new(4, 1.0, 1.0, 0.3, &mut rng);
+        let mut opt = TikiTaka::new(
+            4,
+            &presets::preset("om").unwrap(),
+            0.0,
+            0.0,
+            TtVariant::V2,
+            0.1,
+            0.05,
+            0.1,
+            &mut rng,
+        );
+        for _ in 0..50 {
+            opt.step(&obj, &mut rng);
+        }
+        let t = opt.thresh as f32;
+        assert!(opt.h.iter().all(|&h| h.abs() <= t * 1.001), "{:?}", opt.h);
+    }
+
+    #[test]
+    fn calibrated_reference_helps_under_offset() {
+        // Two-stage logic: with q set to the true SPs, TT under a large
+        // SP offset matches (or beats) the uncalibrated run.
+        let mut rng = Rng::from_seed(4);
+        let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
+        let preset = presets::preset("om").unwrap();
+        let mk = |rng: &mut Rng| {
+            TikiTaka::new(16, &preset, 0.6, 0.1, TtVariant::V2, 0.1, 0.05, 0.3, rng)
+        };
+        let mut uncal = mk(&mut rng);
+        let mut cal = mk(&mut rng);
+        let truth = cal.a.symmetric_points();
+        cal.set_reference(truth);
+        let (mut lu, mut lc) = (Vec::new(), Vec::new());
+        for _ in 0..2000 {
+            lu.push(uncal.step(&obj, &mut rng));
+            lc.push(cal.step(&obj, &mut rng));
+        }
+        let tu = stats::mean(&lu[lu.len() - 100..]);
+        let tc = stats::mean(&lc[lc.len() - 100..]);
+        assert!(tc <= tu * 1.2, "calibrated {tc} vs uncalibrated {tu}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Algorithm 1: the zero-shifting (ZS) SP-estimation procedure
+//! (Kim et al., 2019), in both the stochastic variant analysed by
+//! Theorem 2.2 and the cyclic variant of Appendix C.3/C.4.
+//!
+//! ZS sends alternating up/down pulses; the asymmetric component G drives
+//! the weight towards the device SP, so after N pulses the read-out is an
+//! SP estimate. Pulse accounting is exact (DeviceArray counts pulses).
+
+use crate::device::DeviceArray;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ZsVariant {
+    /// ε_n uniformly ±Δw_min per cell (Algorithm 1 as analysed).
+    Stochastic,
+    /// strict up/down alternation (the hardware implementation).
+    Cyclic,
+}
+
+/// Result of a calibration run.
+#[derive(Clone, Debug)]
+pub struct ZsResult {
+    /// per-cell SP estimates (final read-out)
+    pub estimate: Vec<f32>,
+    /// per-cell ground-truth SPs
+    pub truth: Vec<f32>,
+    /// pulses spent
+    pub pulses: u64,
+    /// trajectory of mean ||G(W_n)||^2 (Theorem 2.2 metric), sampled
+    /// every `sample_every` cycles
+    pub g_sq_trace: Vec<f64>,
+}
+
+impl ZsResult {
+    /// Offset of the estimated mean from the true mean (Fig. 1a).
+    pub fn mean_offset(&self) -> f64 {
+        let est: Vec<f64> = self.estimate.iter().map(|&x| x as f64).collect();
+        let tru: Vec<f64> = self.truth.iter().map(|&x| x as f64).collect();
+        stats::mean(&tru) - stats::mean(&est)
+    }
+
+    /// Offset of the estimated std from the true std (Fig. 1a).
+    pub fn std_offset(&self) -> f64 {
+        let est: Vec<f64> = self.estimate.iter().map(|&x| x as f64).collect();
+        let tru: Vec<f64> = self.truth.iter().map(|&x| x as f64).collect();
+        stats::std(&tru) - stats::std(&est)
+    }
+
+    /// Relative error of the estimated mean (Fig. 1b criterion).
+    pub fn rel_mean_error(&self) -> f64 {
+        let est: Vec<f64> = self.estimate.iter().map(|&x| x as f64).collect();
+        let tru: Vec<f64> = self.truth.iter().map(|&x| x as f64).collect();
+        let tm = stats::mean(&tru);
+        if tm.abs() < 1e-12 {
+            return (stats::mean(&est) - tm).abs();
+        }
+        ((stats::mean(&est) - tm) / tm).abs()
+    }
+
+    /// Mean absolute per-cell estimation error.
+    pub fn mean_abs_error(&self) -> f64 {
+        self.estimate
+            .iter()
+            .zip(&self.truth)
+            .map(|(e, t)| (e - t).abs() as f64)
+            .sum::<f64>()
+            / self.estimate.len() as f64
+    }
+}
+
+/// Run ZS for `n_pulses` pulse cycles on the array (mutates it).
+pub fn run(
+    arr: &mut DeviceArray,
+    n_pulses: u64,
+    variant: ZsVariant,
+    rng: &mut Rng,
+) -> ZsResult {
+    let truth = arr.symmetric_points();
+    let before = arr.pulse_count;
+    let sample_every = (n_pulses / 64).max(1);
+    let mut trace = Vec::new();
+    for k in 0..n_pulses {
+        match variant {
+            ZsVariant::Stochastic => arr.pulse_all_random(rng),
+            ZsVariant::Cyclic => arr.pulse_all(k % 2 == 0, rng),
+        }
+        if k % sample_every == 0 {
+            trace.push(arr.mean_g_sq());
+        }
+    }
+    ZsResult {
+        estimate: arr.w.clone(),
+        truth,
+        pulses: arr.pulse_count - before,
+        g_sq_trace: trace,
+    }
+}
+
+/// Smallest pulse budget (from a doubling schedule) whose relative
+/// SP-mean error is below `target` — the Fig. 1b measurement.
+pub fn pulses_to_target(
+    make_array: impl Fn(&mut Rng) -> DeviceArray,
+    target_rel_err: f64,
+    schedule: &[u64],
+    variant: ZsVariant,
+    seed: u64,
+) -> Option<(u64, f64)> {
+    for &n in schedule {
+        let mut rng = Rng::new(seed, n);
+        let mut arr = make_array(&mut rng);
+        let res = run(&mut arr, n, variant, &mut rng);
+        let err = res.rel_mean_error();
+        if err <= target_rel_err {
+            return Some((n, err));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::device::response::{Response, SoftBounds};
+
+    #[test]
+    fn zs_converges_to_sp_uniform_device() {
+        let dev = SoftBounds::from_gamma_rho(1.0, 0.25);
+        let sp = dev.symmetric_point();
+        let mut arr = DeviceArray::uniform(8, 8, &dev, 0.005, 0.0);
+        let mut rng = Rng::from_seed(1);
+        let res = run(&mut arr, 4000, ZsVariant::Stochastic, &mut rng);
+        // per-cell spread of the stochastic variant is Theta(sqrt(dw_min))
+        assert!(res.mean_abs_error() < 0.1, "{}", res.mean_abs_error());
+        // ... but the array mean is tight
+        let est_mean = res.estimate.iter().map(|&x| x as f64).sum::<f64>()
+            / res.estimate.len() as f64;
+        assert!((est_mean - sp).abs() < 0.03, "{est_mean} vs {sp}");
+        assert_eq!(res.pulses, 4000 * 64);
+    }
+
+    #[test]
+    fn cyclic_matches_stochastic_scale() {
+        let dev = SoftBounds::from_gamma_rho(1.0, 0.2);
+        let mut rng = Rng::from_seed(2);
+        let mut a1 = DeviceArray::uniform(4, 4, &dev, 0.01, 0.0);
+        let mut a2 = a1.clone();
+        let r1 = run(&mut a1, 2000, ZsVariant::Stochastic, &mut rng);
+        let r2 = run(&mut a2, 2000, ZsVariant::Cyclic, &mut rng);
+        assert!(r1.mean_abs_error() < 0.15, "{}", r1.mean_abs_error());
+        // the cyclic variant cancels the random-walk term: tighter
+        assert!(r2.mean_abs_error() < 0.05, "{}", r2.mean_abs_error());
+    }
+
+    #[test]
+    fn g_sq_decreases() {
+        // Theorem 2.2: average ||G||^2 shrinks towards the Θ(Δw) floor.
+        let mut rng = Rng::from_seed(3);
+        let mut arr = DeviceArray::sample(
+            16, 16, &presets::preset("precise").unwrap(), 0.3, 0.2, 0.1, &mut rng,
+        );
+        let res = run(&mut arr, 3000, ZsVariant::Stochastic, &mut rng);
+        let first = res.g_sq_trace[0];
+        let last = *res.g_sq_trace.last().unwrap();
+        assert!(last < 0.2 * first, "first {first} last {last}");
+    }
+
+    #[test]
+    fn more_pulses_better_estimate() {
+        let mk = |rng: &mut Rng| {
+            DeviceArray::sample(
+                16, 16, &presets::preset("precise").unwrap(), 0.4, 0.1, 0.1, rng,
+            )
+        };
+        let mut errs = Vec::new();
+        for &n in &[50u64, 500, 5000] {
+            let mut rng = Rng::new(7, n);
+            let mut arr = mk(&mut rng);
+            let res = run(&mut arr, n, ZsVariant::Stochastic, &mut rng);
+            errs.push(res.mean_abs_error());
+        }
+        assert!(errs[2] < errs[0], "{errs:?}");
+    }
+}

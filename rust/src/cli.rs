@@ -1,0 +1,135 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `rider <subcommand> [--flag value]... [--switch]...`
+//! Values are typed lazily (`get_f64`, `get_usize`, ...), with defaults
+//! supplied at the call site so every experiment documents its knobs.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable) — first token is the
+    /// subcommand, the rest `--key value` or bare `--switch` pairs.
+    pub fn parse_tokens(tokens: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = tokens.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument '{}'", tok));
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                args.flags.insert(k.to_string(), v.to_string());
+                continue;
+            }
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    args.flags.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => args.switches.push(key.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        let toks: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse_tokens(&toks)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated f64 list.
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse_tokens(&toks("train --model fcn --steps 500 --verbose")).unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("model"), Some("fcn"));
+        assert_eq!(a.get_usize("steps", 0), 500);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse_tokens(&toks("x --lr=0.5 --list=1,2,3")).unwrap();
+        assert_eq!(a.get_f64("lr", 0.0), 0.5);
+        assert_eq!(a.get_f64_list("list", &[]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn negative_values() {
+        let a = Args::parse_tokens(&toks("x --mean=-0.4")).unwrap();
+        assert_eq!(a.get_f64("mean", 0.0), -0.4);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse_tokens(&toks("x stray")).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_tokens(&toks("run")).unwrap();
+        assert_eq!(a.get_f64("missing", 1.5), 1.5);
+        assert_eq!(a.get_str("m", "fcn"), "fcn");
+    }
+}

@@ -1,0 +1,197 @@
+//! Experiment configuration: typed structs + a TOML-subset parser so
+//! runs can be driven by config files (`rider train --config runs/x.toml`)
+//! as well as CLI flags. The subset covers what configs need: `[section]`
+//! headers, `key = value` with strings, numbers, booleans and flat arrays.
+
+use std::collections::BTreeMap;
+
+/// A parsed config: section -> key -> raw value string.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{}: {}", path, e))?;
+        Config::parse(&src)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize(&self, section: &str, key: &str, default: usize) -> usize {
+        self.f64(section, key, default as f64) as usize
+    }
+
+    pub fn str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn f64_list(&self, section: &str, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(section, key) {
+            Some(Value::Arr(xs)) => xs.iter().filter_map(Value::as_f64).collect(),
+            _ => default.to_vec(),
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' outside of quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+        let mut out = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            out.push(parse_value(p)?);
+        }
+        return Ok(Value::Arr(out));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{}'", s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"
+# experiment config
+[train]
+model = "fcn"          # model name
+steps = 2000
+lr_fast = 0.5
+use_chopper = true
+ref_means = [0.0, 0.2, 0.4]
+
+[device]
+preset = "hfo2"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SRC).unwrap();
+        assert_eq!(c.str("train", "model", ""), "fcn");
+        assert_eq!(c.usize("train", "steps", 0), 2000);
+        assert_eq!(c.f64("train", "lr_fast", 0.0), 0.5);
+        assert!(c.bool("train", "use_chopper", false));
+        assert_eq!(c.f64_list("train", "ref_means", &[]), vec![0.0, 0.2, 0.4]);
+        assert_eq!(c.str("device", "preset", ""), "hfo2");
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Config::parse(SRC).unwrap();
+        assert_eq!(c.f64("train", "nope", 7.5), 7.5);
+        assert_eq!(c.str("nosection", "x", "d"), "d");
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse("[s]\nname = \"a#b\"\n").unwrap();
+        assert_eq!(c.str("s", "name", ""), "a#b");
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        assert!(Config::parse("[s]\njust a line\n").is_err());
+        assert!(Config::parse("[s]\nx = @@\n").is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! One module per paper figure/table (DESIGN.md section 4 index).
+
+pub mod fig1;
+pub mod theory;
+pub mod training;

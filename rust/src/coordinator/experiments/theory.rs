@@ -1,0 +1,172 @@
+//! Theory validation: Theorem 2.2 (ZS rate + Θ(Δw) floor), Theorem C.2
+//! (last-iterate geometric convergence), Theorem 3.7 (RIDER O(1/sqrt K)
+//! on a strongly convex quadratic), Corollary 3.9 (pulse-complexity
+//! crossover vs the two-stage pipeline), Lemma 3.10 (filter response).
+
+use crate::analog::rider::{Rider, RiderHypers};
+use crate::analog::residual::TwoStageResidual;
+use crate::analog::zs::{self, ZsVariant};
+use crate::coordinator::metrics::RunDir;
+use crate::device::{presets, DeviceArray};
+use crate::optim::Quadratic;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::Table;
+
+pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
+    let rd = RunDir::create("theory")?;
+    let mut out = Vec::new();
+
+    // --- Theorem 2.2: avg ||G||^2 vs N, and the Θ(Δw_min) floor
+    let mut t1 = Table::new(
+        "Thm 2.2: ZS average ||G(W_n)||^2 vs N (precise device)",
+        &["N", "avg ||G||^2", "floor est"],
+    );
+    for &n in &[250u64, 1000, 4000, 16000] {
+        let mut rng = Rng::new(seed, n);
+        let mut arr =
+            DeviceArray::sample(32, 32, &presets::PRECISE, 0.3, 0.2, 0.1, &mut rng);
+        let res = zs::run(&mut arr, n, ZsVariant::Stochastic, &mut rng);
+        let avg = stats::mean(&res.g_sq_trace);
+        let floor = *res.g_sq_trace.last().unwrap();
+        t1.row(vec![n.to_string(), format!("{avg:.5}"), format!("{floor:.5}")]);
+    }
+    rd.write_table("thm22", &t1)?;
+    out.push(t1);
+
+    // --- Theorem C.2: last-iterate error is geometric in N
+    let mut t2 = Table::new(
+        "Thm C.2: last-iterate |w - sp| vs N (uniform monotone device)",
+        &["N", "mean |w - sp|"],
+    );
+    for &n in &[50u64, 200, 800, 3200] {
+        let dev = crate::device::SoftBounds::from_gamma_rho(1.0, 0.3);
+        let mut arr = DeviceArray::uniform(16, 16, &dev, 1e-3, 0.0);
+        let mut rng = Rng::new(seed, n);
+        let res = zs::run(&mut arr, n, ZsVariant::Cyclic, &mut rng);
+        t2.row(vec![n.to_string(), format!("{:.5}", res.mean_abs_error())]);
+    }
+    rd.write_table("thmC2", &t2)?;
+    out.push(t2);
+
+    // --- Theorem 3.7: RIDER error metric E_K ~ O(1/sqrt(K)) + floor
+    let mut t3 = Table::new(
+        "Thm 3.7: RIDER E_K terms vs K (strongly convex quadratic)",
+        &["K", "||W-W*||^2", "||P-Q||^2", "||G_p(P)||^2"],
+    );
+    for &k_total in &[500usize, 2000, 8000] {
+        let mut rng = Rng::new(seed, k_total as u64);
+        let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
+        let mut opt = Rider::new(
+            16, &presets::PRECISE, 0.4, 0.1, RiderHypers::default(), 0.3, &mut rng,
+        );
+        let (mut sw, mut spq, mut sg) = (0.0, 0.0, 0.0);
+        for _ in 0..k_total {
+            opt.step(&obj, &mut rng);
+            let (a, b, c) = opt.metrics(&obj);
+            sw += a;
+            spq += b;
+            sg += c;
+        }
+        let k = k_total as f64;
+        t3.row(vec![
+            k_total.to_string(),
+            format!("{:.4}", sw / k),
+            format!("{:.4}", spq / k),
+            format!("{:.4}", sg / k),
+        ]);
+    }
+    rd.write_table("thm37", &t3)?;
+    out.push(t3);
+
+    // --- Corollary 3.9: total pulses to a target loss, RIDER vs two-stage
+    let mut t4 = Table::new(
+        "Cor 3.9: pulses to reach loss<=0.05, RIDER vs two-stage ZS+Residual",
+        &["method", "calib pulses", "update pulses", "total"],
+    );
+    {
+        let mut rng = Rng::new(seed, 99);
+        let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
+        let target = 0.05;
+        // RIDER: no calibration stage
+        let mut rider = Rider::new(
+            16, &presets::PRECISE, 0.4, 0.1, RiderHypers::default(), 0.3, &mut rng,
+        );
+        let mut ema = f64::NAN;
+        for _ in 0..30000 {
+            let l = rider.step(&obj, &mut rng);
+            ema = if ema.is_nan() { l } else { 0.98 * ema + 0.02 * l };
+            if ema < target {
+                break;
+            }
+        }
+        let rc = rider.cost();
+        t4.row(vec![
+            "RIDER".into(),
+            rc.calibration_pulses.to_string(),
+            rc.update_pulses.to_string(),
+            rc.total_pulses().to_string(),
+        ]);
+        // two-stage with a pulse budget scaled to 1/dw_min (Thm 2.2)
+        let zs_budget = (2.0 / presets::PRECISE.dw_min) as u64;
+        let mut two = TwoStageResidual::new(
+            16, &presets::PRECISE, 0.4, 0.1, RiderHypers::default(), 0.3,
+            zs_budget, &mut rng,
+        );
+        let mut ema = f64::NAN;
+        for _ in 0..30000 {
+            let l = two.step(&obj, &mut rng);
+            ema = if ema.is_nan() { l } else { 0.98 * ema + 0.02 * l };
+            if ema < target {
+                break;
+            }
+        }
+        let tc = two.cost();
+        t4.row(vec![
+            "two-stage ZS+Residual".into(),
+            tc.calibration_pulses.to_string(),
+            tc.update_pulses.to_string(),
+            tc.total_pulses().to_string(),
+        ]);
+    }
+    rd.write_table("cor39", &t4)?;
+    out.push(t4);
+    Ok(out)
+}
+
+/// Lemma 3.10: |H(e^{jw})|^2 of the moving-average filter + an empirical
+/// chopping demo (Fig. 3): the filter passes the DC drift and kills the
+/// chopped (sign-flipping) component.
+pub fn fig3(eta: f64) -> anyhow::Result<Table> {
+    let rd = RunDir::create("fig3")?;
+    let mut t = Table::new(
+        &format!("Fig 3 / Lemma 3.10: |H|^2 at eta={eta}"),
+        &["omega/pi", "|H|^2 analytic", "|H|^2 empirical"],
+    );
+    for &wpi in &[0.0, 0.1, 0.25, 0.5, 0.75, 1.0] {
+        let w = wpi * std::f64::consts::PI;
+        let denom = 1.0 + (1.0 - eta) * (1.0 - eta) - 2.0 * (1.0 - eta) * w.cos();
+        let analytic = if denom == 0.0 { f64::INFINITY } else { eta * eta / denom };
+        // empirical: drive the MA filter with a sinusoid, measure gain^2
+        let n = 4096;
+        let mut q = 0.0f64;
+        let mut out_pow = 0.0;
+        let mut in_pow = 0.0;
+        for k in 0..n {
+            let x = (w * k as f64).cos();
+            q = (1.0 - eta) * q + eta * x;
+            if k > n / 2 {
+                in_pow += x * x;
+                out_pow += q * q;
+            }
+        }
+        let empirical = out_pow / in_pow;
+        t.row(vec![
+            format!("{wpi:.2}"),
+            format!("{analytic:.4}"),
+            format!("{empirical:.4}"),
+        ]);
+    }
+    rd.write_table("fig3", &t)?;
+    Ok(t)
+}

@@ -1,0 +1,90 @@
+//! Run-directory management and metric emission (CSV + JSONL), so every
+//! experiment leaves a machine-readable trace under `runs/`.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub struct RunDir {
+    pub path: PathBuf,
+}
+
+impl RunDir {
+    /// Create (or reuse) `runs/<name>`.
+    pub fn create(name: &str) -> Result<RunDir> {
+        let base = std::env::var("RIDER_RUNS").unwrap_or_else(|_| "runs".to_string());
+        let path = Path::new(&base).join(name);
+        fs::create_dir_all(&path).with_context(|| format!("mkdir {}", path.display()))?;
+        Ok(RunDir { path })
+    }
+
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+
+    /// Write a table both as rendered text and CSV.
+    pub fn write_table(&self, name: &str, table: &Table) -> Result<()> {
+        fs::write(self.file(&format!("{name}.txt")), table.render())?;
+        fs::write(self.file(&format!("{name}.csv")), table.to_csv())?;
+        Ok(())
+    }
+
+    /// Write a loss/metric curve as CSV: step,value.
+    pub fn write_curve(&self, name: &str, values: &[f64]) -> Result<()> {
+        let mut s = String::from("step,value\n");
+        for (i, v) in values.iter().enumerate() {
+            s.push_str(&format!("{i},{v}\n"));
+        }
+        fs::write(self.file(&format!("{name}.csv")), s)?;
+        Ok(())
+    }
+
+    /// Append one JSON record to `<name>.jsonl`.
+    pub fn append_jsonl(&self, name: &str, record: &Json) -> Result<()> {
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.file(&format!("{name}.jsonl")))?;
+        writeln!(f, "{}", record.dump())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj};
+
+    fn tmp_rundir(name: &str) -> RunDir {
+        std::env::set_var("RIDER_RUNS", std::env::temp_dir().join("rider_runs_test"));
+        RunDir::create(name).unwrap()
+    }
+
+    #[test]
+    fn writes_curve_and_table() {
+        let rd = tmp_rundir("t1");
+        rd.write_curve("loss", &[1.0, 0.5, 0.25]).unwrap();
+        let csv = fs::read_to_string(rd.file("loss.csv")).unwrap();
+        assert!(csv.contains("2,0.25"));
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into()]);
+        rd.write_table("tab", &t).unwrap();
+        assert!(rd.file("tab.csv").exists());
+        assert!(rd.file("tab.txt").exists());
+    }
+
+    #[test]
+    fn jsonl_appends() {
+        let rd = tmp_rundir("t2");
+        let _ = fs::remove_file(rd.file("m.jsonl"));
+        rd.append_jsonl("m", &obj(vec![("v", num(1.0))])).unwrap();
+        rd.append_jsonl("m", &obj(vec![("v", num(2.0))])).unwrap();
+        let s = fs::read_to_string(rd.file("m.jsonl")).unwrap();
+        assert_eq!(s.lines().count(), 2);
+    }
+}

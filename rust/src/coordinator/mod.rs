@@ -1,0 +1,8 @@
+//! Experiment coordination: run directories, metric sinks, sweeps, and
+//! the per-figure/table experiment harness.
+
+pub mod experiments;
+pub mod metrics;
+pub mod sweep;
+
+pub use metrics::RunDir;

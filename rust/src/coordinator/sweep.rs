@@ -1,0 +1,126 @@
+//! Grid sweeps over (ref_mean, ref_std, seed) — the measurement pattern
+//! behind Tables 1/2/8 and Fig. 4. Rust-native (device-substrate)
+//! experiments fan out over worker threads; HLO-driven sweeps run on one
+//! PJRT client (the artifacts themselves are multi-threaded by XLA).
+
+use crate::util::stats;
+
+/// One cell of a robustness grid: per-seed metric samples.
+#[derive(Clone, Debug, Default)]
+pub struct Cell {
+    pub samples: Vec<f64>,
+}
+
+impl Cell {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn std(&self) -> f64 {
+        stats::std(&self.samples)
+    }
+
+    pub fn pm(&self) -> String {
+        crate::util::table::Table::pm(self.mean(), self.std())
+    }
+}
+
+/// A (mean x std) grid of cells for one method.
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub means: Vec<f64>,
+    pub stds: Vec<f64>,
+    pub cells: Vec<Cell>, // row-major [mean][std]
+}
+
+impl Grid {
+    pub fn new(means: &[f64], stds: &[f64]) -> Grid {
+        Grid {
+            means: means.to_vec(),
+            stds: stds.to_vec(),
+            cells: vec![Cell::default(); means.len() * stds.len()],
+        }
+    }
+
+    pub fn cell_mut(&mut self, mi: usize, si: usize) -> &mut Cell {
+        &mut self.cells[mi * self.stds.len() + si]
+    }
+
+    pub fn cell(&self, mi: usize, si: usize) -> &Cell {
+        &self.cells[mi * self.stds.len() + si]
+    }
+}
+
+/// Run a closure over every (mean, std, seed) combination on `threads`
+/// worker threads; the closure must be Sync and return the metric.
+pub fn run_grid<F>(
+    means: &[f64],
+    stds: &[f64],
+    seeds: &[u64],
+    threads: usize,
+    f: F,
+) -> Grid
+where
+    F: Fn(f64, f64, u64) -> f64 + Sync,
+{
+    let mut jobs = Vec::new();
+    for (mi, &m) in means.iter().enumerate() {
+        for (si, &s) in stds.iter().enumerate() {
+            for &seed in seeds {
+                jobs.push((mi, si, m, s, seed));
+            }
+        }
+    }
+    let results = std::sync::Mutex::new(vec![Vec::new(); means.len() * stds.len()]);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (mi, si, m, s, seed) = jobs[i];
+                let v = f(m, s, seed);
+                results.lock().unwrap()[mi * stds.len() + si].push(v);
+            });
+        }
+    });
+    let mut grid = Grid::new(means, stds);
+    for (i, samples) in results.into_inner().unwrap().into_iter().enumerate() {
+        grid.cells[i].samples = samples;
+    }
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_runs_all_combinations() {
+        let g = run_grid(&[0.0, 0.5], &[0.1, 0.2, 0.3], &[1, 2, 3, 4], 4, |m, s, seed| {
+            m + s + seed as f64
+        });
+        for mi in 0..2 {
+            for si in 0..3 {
+                assert_eq!(g.cell(mi, si).samples.len(), 4);
+            }
+        }
+        // deterministic content regardless of thread interleaving
+        let c = g.cell(1, 2);
+        let mut sorted = c.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(sorted, vec![0.8 + 1.0, 0.8 + 2.0, 0.8 + 3.0, 0.8 + 4.0]);
+    }
+
+    #[test]
+    fn cell_stats() {
+        let c = Cell {
+            samples: vec![90.0, 92.0, 94.0],
+        };
+        assert!((c.mean() - 92.0).abs() < 1e-12);
+        assert!((c.std() - 2.0).abs() < 1e-12);
+        assert!(c.pm().starts_with("92.00±"));
+    }
+}

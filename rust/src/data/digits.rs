@@ -1,0 +1,204 @@
+//! Procedural digit dataset — the offline stand-in for MNIST (DESIGN.md
+//! §2). Each digit class 0–9 is a fixed set of strokes in a normalized
+//! box, rasterized at 28x28 with a random affine jitter (shift/scale),
+//! stroke-thickness variation and pixel noise. The task has the same
+//! structure as MNIST (10-way, near-separable, translation-sensitive),
+//! which is what the paper's algorithm orderings depend on.
+
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 28;
+pub const D_IN: usize = SIDE * SIDE;
+
+/// Stroke endpoints in a [0,1]^2 box per digit (7-segment-inspired plus
+/// diagonals where needed).
+fn strokes(digit: usize) -> &'static [((f32, f32), (f32, f32))] {
+    // segment coordinates: (x, y) with y down
+    const TOP: ((f32, f32), (f32, f32)) = ((0.2, 0.1), (0.8, 0.1));
+    const MID: ((f32, f32), (f32, f32)) = ((0.2, 0.5), (0.8, 0.5));
+    const BOT: ((f32, f32), (f32, f32)) = ((0.2, 0.9), (0.8, 0.9));
+    const TL: ((f32, f32), (f32, f32)) = ((0.2, 0.1), (0.2, 0.5));
+    const TR: ((f32, f32), (f32, f32)) = ((0.8, 0.1), (0.8, 0.5));
+    const BL: ((f32, f32), (f32, f32)) = ((0.2, 0.5), (0.2, 0.9));
+    const BR: ((f32, f32), (f32, f32)) = ((0.8, 0.5), (0.8, 0.9));
+    match digit {
+        0 => &[TOP, BOT, TL, TR, BL, BR],
+        1 => &[((0.5, 0.1), (0.5, 0.9)), ((0.35, 0.25), (0.5, 0.1))],
+        2 => &[TOP, TR, MID, BL, BOT],
+        3 => &[TOP, TR, MID, BR, BOT],
+        4 => &[TL, MID, TR, BR],
+        5 => &[TOP, TL, MID, BR, BOT],
+        6 => &[TOP, TL, MID, BL, BR, BOT],
+        7 => &[TOP, ((0.8, 0.1), (0.4, 0.9))],
+        8 => &[TOP, MID, BOT, TL, TR, BL, BR],
+        9 => &[TOP, MID, BOT, TL, TR, BR],
+        _ => unreachable!(),
+    }
+}
+
+/// Render one digit into a 28x28 buffer.
+pub fn render(digit: usize, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), D_IN);
+    out.fill(0.0);
+    // affine jitter
+    let scale = rng.uniform_in(0.75, 1.0) as f32;
+    let dx = rng.uniform_in(-2.5, 2.5) as f32;
+    let dy = rng.uniform_in(-2.5, 2.5) as f32;
+    let theta = rng.uniform_in(-0.18, 0.18) as f32;
+    let (sin, cos) = theta.sin_cos();
+    let thick = rng.uniform_in(0.9, 1.6) as f32;
+    let cx = SIDE as f32 / 2.0;
+    let cy = SIDE as f32 / 2.0;
+
+    for &((x0, y0), (x1, y1)) in strokes(digit) {
+        // map to pixel coordinates with jitter
+        let map = |x: f32, y: f32| {
+            let px = (x - 0.5) * scale * SIDE as f32;
+            let py = (y - 0.5) * scale * SIDE as f32;
+            (
+                cx + cos * px - sin * py + dx,
+                cy + sin * px + cos * py + dy,
+            )
+        };
+        let (ax, ay) = map(x0, y0);
+        let (bx, by) = map(x1, y1);
+        let steps = (((bx - ax).abs() + (by - ay).abs()) as usize + 2) * 2;
+        for s in 0..=steps {
+            let t = s as f32 / steps as f32;
+            let px = ax + t * (bx - ax);
+            let py = ay + t * (by - ay);
+            // soft disc of radius `thick`
+            let r = thick.ceil() as i64;
+            for oy in -r..=r {
+                for ox in -r..=r {
+                    let ix = px.round() as i64 + ox;
+                    let iy = py.round() as i64 + oy;
+                    if ix < 0 || iy < 0 || ix >= SIDE as i64 || iy >= SIDE as i64 {
+                        continue;
+                    }
+                    let d2 = (px - ix as f32).powi(2) + (py - iy as f32).powi(2);
+                    let v = (1.0 - d2 / (thick * thick)).max(0.0);
+                    let idx = iy as usize * SIDE + ix as usize;
+                    out[idx] = out[idx].max(v);
+                }
+            }
+        }
+    }
+    // pixel noise + centering: analog arrays drift toward their SP,
+    // which injects a common-mode weight shift; zero-mean inputs make
+    // the network first layer insensitive to it (standard normalization,
+    // same role as MNIST mean subtraction).
+    let mut mean = 0.0f32;
+    for v in out.iter_mut() {
+        *v = (*v + 0.08 * rng.normal() as f32).clamp(0.0, 1.0);
+        mean += *v;
+    }
+    mean /= out.len() as f32;
+    for v in out.iter_mut() {
+        *v -= mean;
+    }
+}
+
+/// A rendered dataset: images [n, 784] (flat), labels [n].
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Dataset {
+    /// Render a class-balanced digit dataset.
+    pub fn digits(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed, 0xD161);
+        let mut x = vec![0.0f32; n * D_IN];
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let digit = i % 10;
+            render(digit, &mut rng, &mut x[i * D_IN..(i + 1) * D_IN]);
+            y.push(digit as i32);
+        }
+        Dataset {
+            x,
+            y,
+            n,
+            d: D_IN,
+        }
+    }
+
+    pub fn sample(&self, i: usize) -> (&[f32], i32) {
+        (&self.x[i * self.d..(i + 1) * self.d], self.y[i])
+    }
+
+    /// Gather a batch by indices into a flat buffer.
+    pub fn gather(&self, idx: &[usize], xout: &mut Vec<f32>, yout: &mut Vec<i32>) {
+        xout.clear();
+        yout.clear();
+        for &i in idx {
+            xout.extend_from_slice(&self.x[i * self.d..(i + 1) * self.d]);
+            yout.push(self.y[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_digits_distinct() {
+        let mut rng = Rng::from_seed(1);
+        let mut imgs = Vec::new();
+        for d in 0..10 {
+            let mut buf = vec![0.0; D_IN];
+            render(d, &mut rng, &mut buf);
+            // nontrivial ink (images are mean-centred, so count the
+            // positive excursions)
+            let ink: f32 = buf.iter().filter(|v| **v > 0.2).sum();
+            assert!(ink > 10.0, "digit {d} ink {ink}");
+            imgs.push(buf);
+        }
+        // pairwise distances nonzero
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let d2: f32 = imgs[a]
+                    .iter()
+                    .zip(&imgs[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!(d2 > 1.0, "digits {a},{b} too similar");
+            }
+        }
+    }
+
+    #[test]
+    fn same_class_varies() {
+        let mut rng = Rng::from_seed(2);
+        let mut a = vec![0.0; D_IN];
+        let mut b = vec![0.0; D_IN];
+        render(3, &mut rng, &mut a);
+        render(3, &mut rng, &mut b);
+        let d2: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!(d2 > 0.5, "jitter should vary renders");
+    }
+
+    #[test]
+    fn dataset_balanced_and_bounded() {
+        let ds = Dataset::digits(200, 7);
+        assert_eq!(ds.n, 200);
+        for c in 0..10 {
+            assert_eq!(ds.y.iter().filter(|&&y| y == c).count(), 20);
+        }
+        assert!(ds.x.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Dataset::digits(20, 9);
+        let b = Dataset::digits(20, 9);
+        assert_eq!(a.x, b.x);
+        let c = Dataset::digits(20, 10);
+        assert_ne!(a.x, c.x);
+    }
+}

@@ -1,0 +1,9 @@
+//! Data pipeline: procedural datasets (offline substitutes for
+//! MNIST / CIFAR — DESIGN.md §2) and the shuffling batcher.
+
+pub mod batcher;
+pub mod digits;
+pub mod synth_cifar;
+
+pub use batcher::Batcher;
+pub use digits::Dataset;

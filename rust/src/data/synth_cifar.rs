@@ -1,0 +1,97 @@
+//! Synthetic 3-channel texture dataset — the CIFAR-100 stand-in for the
+//! convnet3 experiments (Fig. 4 mid/right, Table 8 protocol). Each class
+//! is a colored oriented grating with class-specific frequency, phase
+//! structure and color balance, plus additive noise; conv layers are
+//! required to separate them (orientation/frequency selectivity), which
+//! is the property the CIFAR experiments exercise.
+
+use crate::data::digits::Dataset;
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 16;
+pub const CH: usize = 3;
+pub const D_IN: usize = CH * SIDE * SIDE;
+pub const N_CLASSES: usize = 10;
+
+/// Render one texture sample of `class` into `out` (CHW layout).
+pub fn render(class: usize, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), D_IN);
+    let theta = class as f32 * std::f32::consts::PI / N_CLASSES as f32
+        + rng.uniform_in(-0.1, 0.1) as f32;
+    let freq = 0.5 + (class % 5) as f32 * 0.35 + rng.uniform_in(-0.05, 0.05) as f32;
+    let phase = rng.uniform_in(0.0, std::f32::consts::TAU as f64) as f32;
+    // class-specific color mix
+    let cmix = [
+        0.5 + 0.5 * ((class * 37) as f32 * 0.61).sin(),
+        0.5 + 0.5 * ((class * 53) as f32 * 0.37).sin(),
+        0.5 + 0.5 * ((class * 71) as f32 * 0.23).sin(),
+    ];
+    let (sin, cos) = theta.sin_cos();
+    for c in 0..CH {
+        for yy in 0..SIDE {
+            for xx in 0..SIDE {
+                let u = xx as f32 / SIDE as f32 - 0.5;
+                let v = yy as f32 / SIDE as f32 - 0.5;
+                let proj = (u * cos + v * sin) * std::f32::consts::TAU * freq * 4.0;
+                let g = (proj + phase).sin() * 0.5 + 0.5;
+                let val = cmix[c] * g + 0.1 * rng.normal() as f32;
+                out[c * SIDE * SIDE + yy * SIDE + xx] = val.clamp(0.0, 1.0) - 0.5;
+            }
+        }
+    }
+}
+
+/// Render a class-balanced texture dataset (reuses `Dataset` container).
+pub fn dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed, 0xC1FA);
+    let mut x = vec![0.0f32; n * D_IN];
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % N_CLASSES;
+        render(class, &mut rng, &mut x[i * D_IN..(i + 1) * D_IN]);
+        y.push(class as i32);
+    }
+    Dataset { x, y, n, d: D_IN }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_distinct_in_mean_image() {
+        let ds = dataset(400, 3);
+        let mut means = vec![vec![0.0f64; D_IN]; N_CLASSES];
+        let mut counts = vec![0usize; N_CLASSES];
+        for i in 0..ds.n {
+            let (x, y) = ds.sample(i);
+            let c = y as usize;
+            counts[c] += 1;
+            for (m, v) in means[c].iter_mut().zip(x) {
+                *m += *v as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c as f64;
+            }
+        }
+        for a in 0..N_CLASSES {
+            for b in (a + 1)..N_CLASSES {
+                let d2: f64 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!(d2 > 0.05, "classes {a},{b} mean distance {d2}");
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_and_shaped() {
+        let ds = dataset(50, 1);
+        assert_eq!(ds.d, 768);
+        assert!(ds.x.iter().all(|&v| (-0.5..=0.5).contains(&v)));
+    }
+}

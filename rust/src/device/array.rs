@@ -1,0 +1,342 @@
+//! Crossbar device array: a tile of soft-bounds cells in SoA layout,
+//! pulse-accurate. This is the substrate for the pulse-level experiments
+//! (Fig. 1, Theorems 2.2/C.2) and the Rust-native algorithm family; it
+//! mirrors the JAX device model exactly (parity-tested on shared vectors).
+
+use crate::device::presets::Preset;
+use crate::device::response::{Response, SoftBounds};
+use crate::util::rng::Rng;
+
+/// A crossbar tile: per-cell weights and device parameters, flat
+/// row-major `rows x cols` storage.
+#[derive(Clone, Debug)]
+pub struct DeviceArray {
+    pub rows: usize,
+    pub cols: usize,
+    pub w: Vec<f32>,
+    pub alpha_p: Vec<f32>,
+    pub alpha_m: Vec<f32>,
+    pub tau_max: f32,
+    pub tau_min: f32,
+    /// response granularity (weight change per pulse at q = 1)
+    pub dw_min: f32,
+    /// cycle-to-cycle multiplicative noise std
+    pub c2c: f32,
+    /// pulses applied so far (pulse accounting)
+    pub pulse_count: u64,
+}
+
+impl DeviceArray {
+    /// Sample a tile from a preset with a controlled SP distribution:
+    /// per-cell SP ~ N(ref_mean, ref_std) (clipped inside the window),
+    /// slope magnitude gamma ~ exp(sigma_gamma * N(0,1)).
+    pub fn sample(
+        rows: usize,
+        cols: usize,
+        preset: &Preset,
+        ref_mean: f64,
+        ref_std: f64,
+        sigma_gamma: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let n = rows * cols;
+        let mut ap = Vec::with_capacity(n);
+        let mut am = Vec::with_capacity(n);
+        let floor = 0.05f64;
+        for _ in 0..n {
+            let gamma = (sigma_gamma * rng.normal()).exp();
+            let sp = (ref_mean + ref_std * rng.normal())
+                .clamp(-0.85 * preset.tau_min, 0.85 * preset.tau_max);
+            let rho = gamma * sp / preset.tau_max;
+            ap.push(((gamma + rho).max(floor)) as f32);
+            am.push(((gamma - rho).max(floor)) as f32);
+        }
+        Self {
+            rows,
+            cols,
+            w: vec![0.0; n],
+            alpha_p: ap,
+            alpha_m: am,
+            tau_max: preset.tau_max as f32,
+            tau_min: preset.tau_min as f32,
+            dw_min: preset.dw_min as f32,
+            c2c: preset.c2c as f32,
+            pulse_count: 0,
+        }
+    }
+
+    /// A uniform tile where every cell shares one response model.
+    pub fn uniform(rows: usize, cols: usize, dev: &SoftBounds, dw_min: f64, c2c: f64) -> Self {
+        let n = rows * cols;
+        Self {
+            rows,
+            cols,
+            w: vec![0.0; n],
+            alpha_p: vec![dev.alpha_p as f32; n],
+            alpha_m: vec![dev.alpha_m as f32; n],
+            tau_max: dev.tau_max as f32,
+            tau_min: dev.tau_min as f32,
+            dw_min: dw_min as f32,
+            c2c: c2c as f32,
+            pulse_count: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.w.is_empty()
+    }
+
+    /// Per-cell response model.
+    pub fn cell(&self, i: usize) -> SoftBounds {
+        SoftBounds::new(
+            self.alpha_p[i] as f64,
+            self.alpha_m[i] as f64,
+            self.tau_max as f64,
+            self.tau_min as f64,
+        )
+    }
+
+    /// Ground-truth SP of every cell.
+    pub fn symmetric_points(&self) -> Vec<f32> {
+        (0..self.len())
+            .map(|i| self.cell(i).symmetric_point() as f32)
+            .collect()
+    }
+
+    #[inline]
+    fn q_at(&self, i: usize, w: f32, up: bool) -> f32 {
+        if up {
+            (self.alpha_p[i] * (1.0 - w / self.tau_max)).max(0.0)
+        } else {
+            (self.alpha_m[i] * (1.0 + w / self.tau_min)).max(0.0)
+        }
+    }
+
+    /// Apply a single ±dw_min pulse to cell `i` (the hardware primitive).
+    #[inline]
+    pub fn pulse_cell(&mut self, i: usize, up: bool, rng: &mut Rng) {
+        let w = self.w[i];
+        let q = self.q_at(i, w, up);
+        let noise = if self.c2c > 0.0 {
+            1.0 + self.c2c * rng.normal() as f32
+        } else {
+            1.0
+        };
+        let step = self.dw_min * q * noise;
+        let nw = if up { w + step } else { w - step };
+        self.w[i] = nw.clamp(-self.tau_min, self.tau_max);
+        self.pulse_count += 1;
+    }
+
+    /// One ZS cycle: apply the same polarity to every cell.
+    pub fn pulse_all(&mut self, up: bool, rng: &mut Rng) {
+        for i in 0..self.len() {
+            self.pulse_cell(i, up, rng);
+        }
+    }
+
+    /// One stochastic ZS cycle: independent random polarity per cell.
+    pub fn pulse_all_random(&mut self, rng: &mut Rng) {
+        for i in 0..self.len() {
+            let up = rng.next_u32() & 1 == 0;
+            self.pulse_cell(i, up, rng);
+        }
+    }
+
+    /// Analog Update (paper Eq. 2): realise the desired per-cell
+    /// increment `dw` as a stochastically-rounded pulse train with c2c
+    /// noise — the aggregated (single-shot) model shared with the JAX
+    /// kernel. Counts the pulses it would have sent.
+    pub fn analog_update(&mut self, dw: &[f32], rng: &mut Rng) {
+        debug_assert_eq!(dw.len(), self.len());
+        let dwm = self.dw_min;
+        for i in 0..self.len() {
+            let d = dw[i];
+            if d == 0.0 {
+                continue;
+            }
+            let up = d >= 0.0;
+            let q = self.q_at(i, self.w[i], up);
+            let mag = d.abs();
+            let pulses_f = mag / dwm;
+            let n_lo = pulses_f.floor();
+            let frac = pulses_f - n_lo;
+            let n = n_lo + if (rng.uniform() as f32) < frac { 1.0 } else { 0.0 };
+            if n == 0.0 {
+                continue;
+            }
+            let c2c = if self.c2c > 0.0 {
+                n.sqrt() * dwm * self.c2c * rng.normal() as f32
+            } else {
+                0.0
+            };
+            let delta = (n * dwm + c2c) * q;
+            let nw = if up { self.w[i] + delta } else { self.w[i] - delta };
+            self.w[i] = nw.clamp(-self.tau_min, self.tau_max);
+            self.pulse_count += n as u64;
+        }
+    }
+
+    /// Deterministic variant (round-to-nearest, no noise) — the parity
+    /// mode shared with `kernels/ref.py`.
+    pub fn analog_update_det(&mut self, dw: &[f32]) {
+        let dwm = self.dw_min;
+        for i in 0..self.len() {
+            let d = dw[i];
+            let up = d >= 0.0;
+            let q = self.q_at(i, self.w[i], up);
+            let n = (d.abs() / dwm).round();
+            if n == 0.0 {
+                continue;
+            }
+            let delta = n * dwm * q;
+            let nw = if up { self.w[i] + delta } else { self.w[i] - delta };
+            self.w[i] = nw.clamp(-self.tau_min, self.tau_max);
+            self.pulse_count += n as u64;
+        }
+    }
+
+    /// Noisy read-out of the full tile.
+    pub fn read(&self, read_noise: f64, rng: &mut Rng) -> Vec<f32> {
+        self.w
+            .iter()
+            .map(|&w| w + (read_noise * rng.normal()) as f32)
+            .collect()
+    }
+
+    /// Program the tile to target weights (counts programming pulses).
+    pub fn program(&mut self, target: &[f32], rng: &mut Rng) {
+        debug_assert_eq!(target.len(), self.len());
+        let dw: Vec<f32> = target.iter().zip(&self.w).map(|(t, w)| t - w).collect();
+        self.analog_update(&dw, rng);
+    }
+
+    /// Mean asymmetric magnitude ||G(w)||^2 / n over the tile — the
+    /// Theorem 2.2 convergence metric.
+    pub fn mean_g_sq(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.len() {
+            let g = self.cell(i).g_asym(self.w[i] as f64);
+            s += g * g;
+        }
+        s / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    fn small(rng: &mut Rng) -> DeviceArray {
+        DeviceArray::sample(8, 8, &presets::preset("om").unwrap(), 0.3, 0.2, 0.1, rng)
+    }
+
+    #[test]
+    fn sample_controls_sp() {
+        let mut rng = Rng::from_seed(1);
+        let arr = DeviceArray::sample(
+            64,
+            64,
+            &presets::preset("precise").unwrap(),
+            0.4,
+            0.1,
+            0.1,
+            &mut rng,
+        );
+        let sps = arr.symmetric_points();
+        let mean = sps.iter().map(|&x| x as f64).sum::<f64>() / sps.len() as f64;
+        assert!((mean - 0.4).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn pulses_stay_in_window() {
+        prop::check("bounds", 20, |rng| {
+            let mut arr = small(rng);
+            for _ in 0..200 {
+                arr.pulse_all_random(rng);
+            }
+            prop_assert!(arr
+                .w
+                .iter()
+                .all(|&w| (-arr.tau_min..=arr.tau_max).contains(&w)));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pulse_count_accounting() {
+        let mut rng = Rng::from_seed(2);
+        let mut arr = small(&mut rng);
+        arr.pulse_all(true, &mut rng);
+        assert_eq!(arr.pulse_count, 64);
+        let dw = vec![3.5 * arr.dw_min; arr.len()];
+        let before = arr.pulse_count;
+        arr.analog_update_det(&dw);
+        // round(3.5) = 4 pulses per cell
+        assert_eq!(arr.pulse_count - before, 4 * 64);
+    }
+
+    #[test]
+    fn alternating_pulses_drift_to_sp() {
+        // The SP-attraction property that ZS exploits.
+        let mut rng = Rng::from_seed(3);
+        let dev = SoftBounds::from_gamma_rho(1.0, 0.3);
+        let sp = dev.symmetric_point();
+        let mut arr = DeviceArray::uniform(4, 4, &dev, 0.01, 0.0);
+        for k in 0..2000 {
+            arr.pulse_all(k % 2 == 0, &mut rng);
+        }
+        for &w in &arr.w {
+            assert!((w as f64 - sp).abs() < 0.05, "w={w} sp={sp}");
+        }
+    }
+
+    #[test]
+    fn deterministic_update_matches_expected_value() {
+        let dev = SoftBounds::from_gamma_rho(1.2, 0.1);
+        let mut arr = DeviceArray::uniform(1, 1, &dev, 0.001, 0.0);
+        arr.w[0] = 0.25;
+        arr.analog_update_det(&[0.1]);
+        let q = dev.q_plus(0.25);
+        let want = 0.25 + 0.1 * q;
+        assert!((arr.w[0] as f64 - want).abs() < 1e-3, "{} vs {want}", arr.w[0]);
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased() {
+        // E[update] must equal the desired dw * q even when |dw| < dw_min.
+        let dev = SoftBounds::symmetric();
+        let mut rng = Rng::from_seed(7);
+        let mut sum = 0.0;
+        let trials = 20_000;
+        for _ in 0..trials {
+            let mut arr = DeviceArray::uniform(1, 1, &dev, 0.01, 0.0);
+            arr.analog_update(&[0.0037], &mut rng);
+            sum += arr.w[0] as f64;
+        }
+        let mean = sum / trials as f64;
+        assert!((mean - 0.0037).abs() < 2e-4, "{mean}");
+    }
+
+    #[test]
+    fn program_reaches_target() {
+        let mut rng = Rng::from_seed(9);
+        let dev = SoftBounds::from_gamma_rho(1.0, 0.2);
+        let mut arr = DeviceArray::uniform(2, 2, &dev, 1e-4, 0.0);
+        let target = vec![0.5f32, -0.3, 0.1, 0.0];
+        // a couple of programming iterations (response scales the step)
+        for _ in 0..8 {
+            arr.program(&target, &mut rng);
+        }
+        for (w, t) in arr.w.iter().zip(&target) {
+            assert!((w - t).abs() < 0.02, "{w} vs {t}");
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Analog IO chain (paper Appendix F Table 7): DAC input quantization
+//! with ABS_MAX noise management, crossbar MVM, ADC read noise + output
+//! quantization + clipping. Mirrors `kernels/analog_mvm.py` (parity-
+//! tested on the shared vectors in artifacts/parity.json).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct IoChain {
+    pub inp_res: f32,
+    pub out_res: f32,
+    pub out_bound: f32,
+    pub out_noise: f32,
+}
+
+impl Default for IoChain {
+    fn default() -> Self {
+        Self {
+            inp_res: 1.0 / 127.0, // 7-bit DAC
+            out_res: 1.0 / 511.0, // 9-bit ADC
+            out_bound: 12.0,
+            out_noise: 0.06,
+        }
+    }
+}
+
+impl IoChain {
+    pub fn ideal() -> Self {
+        Self {
+            inp_res: 1e-9,
+            out_res: 1e-9,
+            out_bound: 1e9,
+            out_noise: 0.0,
+        }
+    }
+
+    /// y[b,n] = x[b,k] @ w[k,n] through the analog chain.
+    /// `deterministic` drops read noise (quantization stays).
+    pub fn mvm(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        b: usize,
+        k: usize,
+        n: usize,
+        rng: &mut Rng,
+        deterministic: bool,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), b * k);
+        assert_eq!(w.len(), k * n);
+        let mut out = vec![0.0f32; b * n];
+        let mut xq = vec![0.0f32; k];
+        for bi in 0..b {
+            let row = &x[bi * k..(bi + 1) * k];
+            // ABS_MAX noise management
+            let mut scale = 0.0f32;
+            for &v in row {
+                scale = scale.max(v.abs());
+            }
+            let scale = if scale > 0.0 { scale } else { 1.0 };
+            // DAC quantization
+            for (j, &v) in row.iter().enumerate() {
+                xq[j] = ((v / scale) / self.inp_res).round() * self.inp_res;
+            }
+            // crossbar (Kirchhoff summation)
+            let orow = &mut out[bi * n..(bi + 1) * n];
+            for (j, &xv) in xq.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[j * n..(j + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+            // ADC: noise, quantization, bound, undo scaling
+            for o in orow.iter_mut() {
+                let mut y = *o;
+                if !deterministic && self.out_noise > 0.0 {
+                    y += self.out_noise * rng.normal() as f32;
+                }
+                y = (y / self.out_res).round() * self.out_res;
+                y = y.clamp(-self.out_bound, self.out_bound);
+                *o = y * scale;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_to_ideal_matmul() {
+        let io = IoChain::default();
+        let mut rng = Rng::from_seed(5);
+        let (b, k, n) = (4, 16, 8);
+        let x: Vec<f32> = (0..b * k).map(|i| ((i * 37 % 17) as f32 - 8.0) / 8.0).collect();
+        let w: Vec<f32> = (0..k * n).map(|i| ((i * 53 % 13) as f32 - 6.0) / 13.0).collect();
+        let y = io.mvm(&x, &w, b, k, n, &mut rng, true);
+        // ideal
+        for bi in 0..b {
+            for ni in 0..n {
+                let mut s = 0.0f32;
+                for ki in 0..k {
+                    s += x[bi * k + ki] * w[ki * n + ni];
+                }
+                assert!((y[bi * n + ni] - s).abs() < 0.1, "{} vs {}", y[bi * n + ni], s);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_safe() {
+        let io = IoChain::default();
+        let mut rng = Rng::from_seed(1);
+        let y = io.mvm(&[0.0; 8], &[1.0; 8], 1, 8, 1, &mut rng, true);
+        assert_eq!(y[0], 0.0);
+    }
+
+    #[test]
+    fn output_bound_clips() {
+        let io = IoChain {
+            out_bound: 0.5,
+            ..IoChain::default()
+        };
+        let mut rng = Rng::from_seed(1);
+        let y = io.mvm(&[1.0; 4], &[1.0; 4], 1, 4, 1, &mut rng, true);
+        // scale = 1, raw product = 4 -> clipped to 0.5
+        assert!((y[0] - 0.5).abs() < 1e-6);
+    }
+}

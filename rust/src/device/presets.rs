@@ -1,0 +1,111 @@
+//! Hardware presets mirrored from AIHWKit (paper Table 3) plus synthetic
+//! sweeps over the number of conductance states (Fig. 4 left).
+
+/// Static device-family parameters (per-cell slopes are sampled at array
+/// construction; see `DeviceArray::sample`).
+#[derive(Clone, Debug)]
+pub struct Preset {
+    pub name: &'static str,
+    pub tau_max: f64,
+    pub tau_min: f64,
+    /// response granularity Δw_min
+    pub dw_min: f64,
+    /// device-to-device asymmetry spread σ± (paper Table 3)
+    pub d2d: f64,
+    /// cycle-to-cycle write noise σ_c2c
+    pub c2c: f64,
+}
+
+impl Preset {
+    /// Number of conductance states ≈ window / Δw_min.
+    pub fn n_states(&self) -> f64 {
+        (self.tau_max + self.tau_min) / self.dw_min
+    }
+}
+
+/// HfO2-based ReRAM (Gong et al., 2022): ~4–5 states, the low-state
+/// regime of Tables 1–2.
+pub const HFO2: Preset = Preset {
+    name: "hfo2",
+    tau_max: 1.0,
+    tau_min: 1.0,
+    dw_min: 0.4622,
+    d2d: 0.7125,
+    c2c: 0.2174,
+};
+
+/// ReRamArrayOM preset (Gong et al., 2022): ~21 states.
+pub const OM: Preset = Preset {
+    name: "om",
+    tau_max: 1.0,
+    tau_min: 1.0,
+    dw_min: 0.0949,
+    d2d: 0.7829,
+    c2c: 0.4158,
+};
+
+/// High-precision device used for the Fig. 1 pulse-complexity study.
+pub const PRECISE: Preset = Preset {
+    name: "precise",
+    tau_max: 1.0,
+    tau_min: 1.0,
+    dw_min: 0.001,
+    d2d: 0.7125,
+    c2c: 0.2174,
+};
+
+/// Near-ideal device (digital-parity sanity checks).
+pub const IDEAL: Preset = Preset {
+    name: "ideal",
+    tau_max: 1.0,
+    tau_min: 1.0,
+    dw_min: 1e-5,
+    d2d: 0.0,
+    c2c: 0.0,
+};
+
+pub fn preset(name: &str) -> Option<Preset> {
+    match name {
+        "hfo2" => Some(HFO2),
+        "om" => Some(OM),
+        "precise" => Some(PRECISE),
+        "ideal" => Some(IDEAL),
+        _ => None,
+    }
+}
+
+/// A preset with a given number of conductance states (Fig. 4 left sweep).
+pub fn with_states(base: &Preset, n_states: f64) -> Preset {
+    Preset {
+        name: "states-sweep",
+        dw_min: (base.tau_max + base.tau_min) / n_states,
+        ..base.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_numbers() {
+        assert_eq!(HFO2.dw_min, 0.4622);
+        assert_eq!(HFO2.d2d, 0.7125);
+        assert_eq!(HFO2.c2c, 0.2174);
+        assert_eq!(OM.dw_min, 0.0949);
+    }
+
+    #[test]
+    fn states_counts() {
+        assert!((HFO2.n_states() - 4.327).abs() < 0.01);
+        assert!((OM.n_states() - 21.07).abs() < 0.05);
+        let p = with_states(&HFO2, 2000.0);
+        assert!((p.n_states() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(preset("hfo2").is_some());
+        assert!(preset("nope").is_none());
+    }
+}

@@ -1,0 +1,22 @@
+//! `analog-rider` — Rust + JAX + Pallas reproduction of
+//! "Dynamic Symmetric Point Tracking: Tackling Non-ideal Reference in
+//! Analog In-memory Training" (RIDER / E-RIDER).
+//!
+//! Layers (see DESIGN.md):
+//! * L1/L2 (build-time Python): Pallas kernels + JAX models/algorithms,
+//!   AOT-lowered to HLO text artifacts.
+//! * L3 (this crate): pulse-accurate device substrate, the algorithm
+//!   family at pulse level, the PJRT runtime that executes the AOT
+//!   artifacts, the training coordinator, and the experiment harness
+//!   that regenerates every figure and table of the paper.
+
+pub mod analog;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod optim;
+pub mod runtime;
+pub mod train;
+pub mod util;

@@ -1,0 +1,214 @@
+//! `rider` — the launcher. One subcommand per paper experiment plus
+//! generic `train` / `calibrate` entry points. See README for usage.
+
+use analog_rider::cli::Args;
+use analog_rider::coordinator::experiments::{fig1, theory, training};
+use analog_rider::runtime::{Executor, Registry};
+use analog_rider::train::{DevParams, TrainConfig, Trainer};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn ctx_seeds(args: &Args) -> Vec<u64> {
+    let n = args.get_usize("seeds", 1);
+    (1..=n as u64).collect()
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            println!(
+                "rider — analog in-memory training with dynamic SP tracking\n\
+                 \n\
+                 experiments (paper figure/table reproduction):\n\
+                 \u{20}  rider fig1   [--side 512] [--seed 42]\n\
+                 \u{20}  rider fig2   [--steps N] [--seeds K]\n\
+                 \u{20}  rider fig3   [--eta 0.1]\n\
+                 \u{20}  rider fig4   [--steps N] [--target 0.2]\n\
+                 \u{20}  rider fig5   [--steps N] [--seeds K]\n\
+                 \u{20}  rider table1 | table2 | table8  [--steps N] [--seeds K]\n\
+                 \u{20}  rider ablations [--steps N]\n\
+                 \u{20}  rider theory [--seed S]\n\
+                 \n\
+                 generic:\n\
+                 \u{20}  rider train --model fcn --algo erider [--steps N] [--ref-mean M]\n\
+                 \u{20}             [--ref-std S] [--preset hfo2|om|precise|ideal]\n\
+                 \u{20}  rider calibrate --pulses N [--side 128] [--dw-min 1e-3]\n\
+                 \u{20}  rider all    (reduced-size full suite; writes runs/)"
+            );
+            Ok(())
+        }
+        "fig1" => {
+            let mut p = fig1::Fig1Params::default();
+            p.side = args.get_usize("side", p.side);
+            p.seed = args.get_u64("seed", p.seed);
+            let (a, b) = fig1::run(&p)?;
+            print!("{}", a.render());
+            print!("{}", b.render());
+            Ok(())
+        }
+        "fig3" => {
+            let t = theory::fig3(args.get_f64("eta", 0.1))?;
+            print!("{}", t.render());
+            Ok(())
+        }
+        "theory" => {
+            for t in theory::run(args.get_u64("seed", 7))? {
+                print!("{}", t.render());
+            }
+            Ok(())
+        }
+        "calibrate" => {
+            use analog_rider::analog::zs::{self, ZsVariant};
+            use analog_rider::device::{presets, DeviceArray};
+            use analog_rider::util::rng::Rng;
+            let side = args.get_usize("side", 128);
+            let n = args.get_u64("pulses", 2000);
+            let mut preset = presets::PRECISE.clone();
+            preset.dw_min = args.get_f64("dw-min", preset.dw_min);
+            let mut rng = Rng::from_seed(args.get_u64("seed", 0));
+            let mut arr = DeviceArray::sample(side, side, &preset, 0.4, 0.2, 0.1, &mut rng);
+            let res = zs::run(&mut arr, n, ZsVariant::Cyclic, &mut rng);
+            println!(
+                "ZS over {side}x{side}, N={n}: mean offset {:+.4}, std offset {:+.4}, \
+                 rel mean err {:.2}%, pulses {}",
+                res.mean_offset(),
+                res.std_offset(),
+                100.0 * res.rel_mean_error(),
+                res.pulses
+            );
+            Ok(())
+        }
+        sub => {
+            // everything below needs artifacts
+            let reg = Registry::load(Registry::default_dir())?;
+            let exec = Executor::cpu()?;
+            let ctx = training::ExpCtx {
+                exec: &exec,
+                reg: &reg,
+                steps: args.get_usize("steps", 400),
+                seeds: ctx_seeds(args),
+            };
+            match sub {
+                "train" => {
+                    let model = args.get_str("model", "fcn");
+                    let algo = args.get_str("algo", "erider");
+                    let mut cfg = TrainConfig::new(&model, &algo);
+                    cfg.steps = args.get_usize("steps", 500);
+                    cfg.ref_mean = args.get_f64("ref-mean", 0.3) as f32;
+                    cfg.ref_std = args.get_f64("ref-std", 0.2) as f32;
+                    cfg.seed = args.get_u64("seed", 0);
+                    cfg.zs_pulses = args.get_u64("zs-pulses", 0);
+                    cfg.eval_every = args.get_usize("eval-every", 100);
+                    cfg.log = true;
+                    if let Some(p) = args.get("preset") {
+                        let preset = analog_rider::device::preset(p)
+                            .ok_or_else(|| anyhow::anyhow!("unknown preset {p}"))?;
+                        cfg.dev = DevParams::from_preset(&preset);
+                    }
+                    let train = analog_rider::data::Dataset::digits(
+                        args.get_usize("train-n", 320),
+                        cfg.seed ^ 0xDA7A,
+                    );
+                    let test = analog_rider::data::Dataset::digits(200, cfg.seed ^ 0x7E57);
+                    let mut t = Trainer::new(&exec, &reg, cfg)?;
+                    let res = t.train(&train, Some(&test))?;
+                    println!(
+                        "final loss {:.4}, test acc {:.2}%, update pulses {}, \
+                         calib pulses {}",
+                        res.final_loss(30),
+                        res.final_eval_acc,
+                        res.cost.update_pulses,
+                        res.cost.calibration_pulses
+                    );
+                    Ok(())
+                }
+                "fig2" => {
+                    print!("{}", training::fig2(&ctx)?.render());
+                    Ok(())
+                }
+                "fig4" => {
+                    print!("{}", training::fig4_left(&ctx, args.get_f64("target", 1.0))?.render());
+                    let means = args.get_f64_list("means", &[0.4]);
+                    let stds = args.get_f64_list("stds", &[0.05, 0.4, 1.0]);
+                    let t = training::robustness_grid(
+                        &ctx, "fig4_mr", "convnet3",
+                        &["ttv2", "agad", "erider"], &means, &stds, None,
+                    )?;
+                    print!("{}", t.render());
+                    Ok(())
+                }
+                "fig5" => {
+                    print!("{}", training::fig5(&ctx)?.render());
+                    Ok(())
+                }
+                "table1" => {
+                    let means = args.get_f64_list("means", &[0.0, 0.4]);
+                    let stds = args.get_f64_list("stds", &[0.05, 0.4, 1.0]);
+                    let t = training::robustness_grid(
+                        &ctx, "table1", "lenet",
+                        &["ttv2", "agad", "erider"], &means, &stds, None,
+                    )?;
+                    print!("{}", t.render());
+                    Ok(())
+                }
+                "table2" => {
+                    let means = args.get_f64_list("means", &[0.0, 0.4]);
+                    let stds = args.get_f64_list("stds", &[0.05, 0.4, 1.0]);
+                    let t = training::robustness_grid(
+                        &ctx, "table2", "fcn",
+                        &["ttv2", "agad", "erider"], &means, &stds, None,
+                    )?;
+                    print!("{}", t.render());
+                    Ok(())
+                }
+                "table8" => {
+                    print!("{}", training::table8(&ctx)?.render());
+                    Ok(())
+                }
+                "ablations" => {
+                    let (t9, t10) = training::ablations(&ctx)?;
+                    print!("{}", t9.render());
+                    print!("{}", t10.render());
+                    Ok(())
+                }
+                "all" => {
+                    let p = fig1::Fig1Params {
+                        side: 64,
+                        dw_mins: vec![5e-3, 2e-3, 1e-3],
+                        ..Default::default()
+                    };
+                    let (a, b) = fig1::run(&p)?;
+                    print!("{}{}", a.render(), b.render());
+                    for t in theory::run(7)? {
+                        print!("{}", t.render());
+                    }
+                    print!("{}", theory::fig3(0.1)?.render());
+                    print!("{}", training::fig2(&ctx)?.render());
+                    print!("{}", training::fig5(&ctx)?.render());
+                    let (t9, t10) = training::ablations(&ctx)?;
+                    print!("{}{}", t9.render(), t10.render());
+                    let t = training::robustness_grid(
+                        &ctx, "table2", "fcn",
+                        &["ttv2", "agad", "erider"], &[0.0, 0.4], &[0.05, 0.4],
+                        None,
+                    )?;
+                    print!("{}", t.render());
+                    Ok(())
+                }
+                other => anyhow::bail!("unknown subcommand '{other}' (try `rider help`)"),
+            }
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Objectives for the theory-validation experiments (Theorems 2.2, C.2,
+//! 3.7; Corollary 3.9): strongly convex quadratics and logistic
+//! regression, with exact and noisy gradient oracles.
+
+use crate::util::rng::Rng;
+
+/// A differentiable objective with a stochastic gradient oracle.
+pub trait Objective: Send + Sync {
+    fn dim(&self) -> usize;
+    fn loss(&self, w: &[f32]) -> f64;
+    fn grad(&self, w: &[f32], out: &mut [f32]);
+    /// Stochastic gradient: exact gradient + noise of scale `sigma`.
+    fn noisy_grad(&self, w: &[f32], sigma: f64, rng: &mut Rng, out: &mut [f32]) {
+        self.grad(w, out);
+        if sigma > 0.0 {
+            for g in out.iter_mut() {
+                *g += (sigma * rng.normal()) as f32;
+            }
+        }
+    }
+    /// The optimum, if known in closed form.
+    fn optimum(&self) -> Option<Vec<f32>> {
+        None
+    }
+}
+
+/// Strongly convex quadratic f(w) = 0.5 Σ λ_d (w_d - w*_d)^2.
+#[derive(Clone, Debug)]
+pub struct Quadratic {
+    pub lambda: Vec<f32>,
+    pub w_star: Vec<f32>,
+}
+
+impl Quadratic {
+    /// Condition number kappa: eigenvalues log-spaced in [mu, mu*kappa].
+    pub fn new(dim: usize, mu: f64, kappa: f64, w_star_scale: f64, rng: &mut Rng) -> Self {
+        let lambda = (0..dim)
+            .map(|i| {
+                let t = if dim > 1 { i as f64 / (dim - 1) as f64 } else { 0.0 };
+                (mu * kappa.powf(t)) as f32
+            })
+            .collect();
+        let w_star = (0..dim)
+            .map(|_| (w_star_scale * rng.uniform_in(-1.0, 1.0)) as f32)
+            .collect();
+        Self { lambda, w_star }
+    }
+}
+
+impl Objective for Quadratic {
+    fn dim(&self) -> usize {
+        self.lambda.len()
+    }
+
+    fn loss(&self, w: &[f32]) -> f64 {
+        w.iter()
+            .zip(&self.w_star)
+            .zip(&self.lambda)
+            .map(|((w, ws), l)| 0.5 * (*l as f64) * ((w - ws) as f64).powi(2))
+            .sum()
+    }
+
+    fn grad(&self, w: &[f32], out: &mut [f32]) {
+        for i in 0..w.len() {
+            out[i] = self.lambda[i] * (w[i] - self.w_star[i]);
+        }
+    }
+
+    fn optimum(&self) -> Option<Vec<f32>> {
+        Some(self.w_star.clone())
+    }
+}
+
+/// L2-regularized logistic regression on a fixed synthetic dataset.
+#[derive(Clone, Debug)]
+pub struct Logistic {
+    pub x: Vec<f32>, // n x d
+    pub y: Vec<f32>, // ±1
+    pub n: usize,
+    pub d: usize,
+    pub reg: f32,
+}
+
+impl Logistic {
+    pub fn synthetic(n: usize, d: usize, reg: f64, rng: &mut Rng) -> Self {
+        let mut teacher = vec![0.0f32; d];
+        rng.fill_normal_f32(&mut teacher);
+        let mut x = vec![0.0f32; n * d];
+        rng.fill_normal_f32(&mut x);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut s = 0.0f32;
+            for j in 0..d {
+                s += x[i * d + j] * teacher[j];
+            }
+            let flip = rng.bernoulli(0.05);
+            let label = if (s > 0.0) != flip { 1.0 } else { -1.0 };
+            y.push(label);
+        }
+        Self { x, y, n, d, reg: reg as f32 }
+    }
+}
+
+impl Objective for Logistic {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn loss(&self, w: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        for i in 0..self.n {
+            let mut s = 0.0f32;
+            for j in 0..self.d {
+                s += self.x[i * self.d + j] * w[j];
+            }
+            let m = (self.y[i] * s) as f64;
+            total += (1.0 + (-m).exp()).ln();
+        }
+        total / self.n as f64
+            + 0.5 * self.reg as f64 * w.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+    }
+
+    fn grad(&self, w: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        for i in 0..self.n {
+            let mut s = 0.0f32;
+            for j in 0..self.d {
+                s += self.x[i * self.d + j] * w[j];
+            }
+            let m = self.y[i] * s;
+            let sig = 1.0 / (1.0 + (m as f64).exp()) as f32; // σ(-m)
+            let coef = -self.y[i] * sig / self.n as f32;
+            for j in 0..self.d {
+                out[j] += coef * self.x[i * self.d + j];
+            }
+        }
+        for j in 0..self.d {
+            out[j] += self.reg * w[j];
+        }
+    }
+
+    fn noisy_grad(&self, w: &[f32], _sigma: f64, rng: &mut Rng, out: &mut [f32]) {
+        // minibatch-of-one stochastic gradient (natural noise)
+        let i = rng.below(self.n);
+        let mut s = 0.0f32;
+        for j in 0..self.d {
+            s += self.x[i * self.d + j] * w[j];
+        }
+        let m = self.y[i] * s;
+        let sig = 1.0 / (1.0 + (m as f64).exp()) as f32;
+        let coef = -self.y[i] * sig;
+        for j in 0..self.d {
+            out[j] = coef * self.x[i * self.d + j] + self.reg * w[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_grad_is_zero_at_optimum() {
+        let mut rng = Rng::from_seed(0);
+        let q = Quadratic::new(8, 0.5, 10.0, 0.5, &mut rng);
+        let mut g = vec![0.0; 8];
+        q.grad(&q.w_star.clone(), &mut g);
+        assert!(g.iter().all(|v| v.abs() < 1e-7));
+        assert!(q.loss(&q.w_star) < 1e-12);
+    }
+
+    #[test]
+    fn quadratic_gd_converges() {
+        let mut rng = Rng::from_seed(1);
+        let q = Quadratic::new(16, 0.2, 20.0, 0.5, &mut rng);
+        let mut w = vec![0.0f32; 16];
+        let mut g = vec![0.0f32; 16];
+        for _ in 0..500 {
+            q.grad(&w, &mut g);
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= 0.2 * gi;
+            }
+        }
+        assert!(q.loss(&w) < 1e-6, "{}", q.loss(&w));
+    }
+
+    #[test]
+    fn logistic_grad_matches_finite_diff() {
+        let mut rng = Rng::from_seed(2);
+        let obj = Logistic::synthetic(64, 6, 0.01, &mut rng);
+        let w: Vec<f32> = (0..6).map(|i| 0.1 * i as f32 - 0.2).collect();
+        let mut g = vec![0.0f32; 6];
+        obj.grad(&w, &mut g);
+        let eps = 1e-3f32;
+        for j in 0..6 {
+            let mut wp = w.clone();
+            wp[j] += eps;
+            let mut wm = w.clone();
+            wm[j] -= eps;
+            let fd = (obj.loss(&wp) - obj.loss(&wm)) / (2.0 * eps as f64);
+            assert!((fd - g[j] as f64).abs() < 1e-3, "dim {}: {} vs {}", j, fd, g[j]);
+        }
+    }
+
+    #[test]
+    fn logistic_sgd_reduces_loss() {
+        let mut rng = Rng::from_seed(3);
+        let obj = Logistic::synthetic(128, 8, 0.01, &mut rng);
+        let mut w = vec![0.0f32; 8];
+        let mut g = vec![0.0f32; 8];
+        let l0 = obj.loss(&w);
+        for _ in 0..2000 {
+            obj.noisy_grad(&w, 0.0, &mut rng, &mut g);
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= 0.05 * gi;
+            }
+        }
+        assert!(obj.loss(&w) < 0.6 * l0);
+    }
+}

@@ -1,0 +1,291 @@
+//! Artifact registry: parses `artifacts/manifest.json` produced by
+//! `python/compile/aot.py` and exposes typed descriptions of every AOT
+//! artifact (inputs/outputs, shapes, dtypes) and model state layout.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        Ok(IoSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("io missing name"))?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("io missing shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            dtype: Dtype::parse(
+                j.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+            )?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One leaf of a model's flat training state.
+#[derive(Clone, Debug)]
+pub struct StateLeaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// role: w | p | q | h | wap | wam | pap | pam | c | bias
+    pub role: String,
+    pub tile: usize,
+}
+
+impl StateLeaf {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub d_in: usize,
+    pub n_classes: usize,
+    pub state: Vec<StateLeaf>,
+}
+
+impl ModelSpec {
+    /// Total trainable analog weights (`w` leaves).
+    pub fn n_weights(&self) -> usize {
+        self.state
+            .iter()
+            .filter(|l| l.role == "w")
+            .map(StateLeaf::numel)
+            .sum()
+    }
+}
+
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// index of each hyperparameter in the hypers input vector
+    pub hyper_index: BTreeMap<String, usize>,
+    pub n_hypers: usize,
+    /// index of each device parameter in the dev input vector
+    pub dev_index: BTreeMap<String, usize>,
+    pub n_dev: usize,
+}
+
+impl Registry {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let man_path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {}", man_path.display()))?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let state = m
+                .get("state")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("model {name} missing state"))?
+                .iter()
+                .map(|l| {
+                    Ok(StateLeaf {
+                        name: l
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("leaf missing name"))?
+                            .to_string(),
+                        shape: l
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("leaf missing shape"))?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                        role: l
+                            .get("role")
+                            .and_then(Json::as_str)
+                            .unwrap_or("")
+                            .to_string(),
+                        tile: l.get("tile").and_then(Json::as_usize).unwrap_or(0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    batch: m.get("batch").and_then(Json::as_usize).unwrap_or(16),
+                    eval_batch: m.get("eval_batch").and_then(Json::as_usize).unwrap_or(200),
+                    d_in: m.get("d_in").and_then(Json::as_usize).unwrap_or(0),
+                    n_classes: m.get("n_classes").and_then(Json::as_usize).unwrap_or(10),
+                    state,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let parse_ios = |key: &str| -> Result<Vec<IoSpec>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(
+                        a.get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+                    ),
+                    inputs: parse_ios("inputs")?,
+                    outputs: parse_ios("outputs")?,
+                },
+            );
+        }
+
+        let idx_map = |key: &str| -> BTreeMap<String, usize> {
+            j.get(key)
+                .and_then(Json::as_obj)
+                .map(|m| {
+                    m.iter()
+                        .filter(|(k, _)| !k.starts_with("n_"))
+                        .filter_map(|(k, v)| v.as_usize().map(|i| (k.clone(), i)))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let hyper_index = idx_map("hyper_index");
+        let dev_index = idx_map("dev_index");
+        let n_hypers = j
+            .get("hyper_index")
+            .and_then(|h| h.get("n_hypers"))
+            .and_then(Json::as_usize)
+            .unwrap_or(12);
+        let n_dev = j
+            .get("dev_index")
+            .and_then(|h| h.get("n_dev"))
+            .and_then(Json::as_usize)
+            .unwrap_or(8);
+
+        Ok(Registry {
+            dir,
+            models,
+            artifacts,
+            hyper_index,
+            n_hypers,
+            dev_index,
+            n_dev,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}'"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}' (run `make artifacts`)"))
+    }
+
+    /// Default artifacts directory: $RIDER_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RIDER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("rider_test_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+  "models": {"m": {"batch": 4, "eval_batch": 8, "d_in": 6, "n_classes": 2,
+    "state": [{"name": "t0.w", "shape": [6, 2], "role": "w", "tile": 0}]}},
+  "artifacts": {"m_init": {"file": "m_init.hlo.txt",
+    "inputs": [{"name": "key", "shape": [2], "dtype": "u32"}],
+    "outputs": [{"name": "t0.w", "shape": [6, 2], "dtype": "f32"}]}},
+  "hyper_index": {"lr_fast": 0, "n_hypers": 12},
+  "dev_index": {"dw_min": 0, "n_dev": 8}
+}"#,
+        )
+        .unwrap();
+        let reg = Registry::load(&dir).unwrap();
+        let m = reg.model("m").unwrap();
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.n_weights(), 12);
+        let a = reg.artifact("m_init").unwrap();
+        assert_eq!(a.inputs[0].dtype, Dtype::U32);
+        assert_eq!(a.outputs[0].numel(), 12);
+        assert_eq!(reg.hyper_index["lr_fast"], 0);
+        assert!(reg.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! PJRT executor: loads HLO-text artifacts, compiles them once (cached),
+//! and executes them with host tensors. HLO *text* is the interchange
+//! format (see DESIGN.md / /opt/xla-example/README.md): jax >= 0.5 emits
+//! serialized protos with 64-bit ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::artifact::{ArtifactSpec, Registry};
+use crate::runtime::literal::{to_literal, HostTensor};
+
+pub struct Executor {
+    pub client: xla::PjRtClient,
+    cache: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Executor {
+    pub fn cpu() -> Result<Executor> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Executor {
+            client,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) an artifact.
+    pub fn compile(&self, spec: &ArtifactSpec) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&spec.name) {
+            return Ok(exe.clone());
+        }
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache
+            .borrow_mut()
+            .insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host inputs; returns host f32 outputs in
+    /// manifest order. Inputs are validated against the manifest spec.
+    pub fn run(&self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.compile(spec)?;
+        let lits: Vec<xla::Literal> = spec
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(s, t)| to_literal(s, t))
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?;
+        let buf = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: no output buffer", spec.name))?;
+        let root = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the root is one tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                spec.name,
+                spec.outputs.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("output to f32: {e:?}")))
+            .collect()
+    }
+
+    /// Convenience: run an artifact by name from a registry.
+    pub fn run_named(
+        &self,
+        reg: &Registry,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<Vec<f32>>> {
+        let spec = reg.artifact(name)?;
+        self.run(spec, inputs)
+            .with_context(|| format!("running artifact {name}"))
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,113 @@
+//! Host array <-> xla::Literal conversion helpers.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::artifact::{Dtype, IoSpec};
+
+/// A host-side tensor matching an IoSpec.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+            HostTensor::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+}
+
+/// Build a Literal of the given spec's shape/dtype from host data.
+pub fn to_literal(spec: &IoSpec, t: &HostTensor) -> Result<xla::Literal> {
+    if t.len() != spec.numel() {
+        return Err(anyhow!(
+            "{}: expected {} elements, got {}",
+            spec.name,
+            spec.numel(),
+            t.len()
+        ));
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (spec.dtype, t) {
+        (Dtype::F32, HostTensor::F32(v)) => xla::Literal::vec1(v),
+        (Dtype::I32, HostTensor::I32(v)) => xla::Literal::vec1(v),
+        (Dtype::U32, HostTensor::U32(v)) => xla::Literal::vec1(v),
+        _ => return Err(anyhow!("{}: dtype mismatch", spec.name)),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Extract f32 data from a literal (any shape).
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    v.first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty literal for scalar"))
+}
+
+/// PRNG key literal (uint32[2]) from a u64 counter.
+pub fn key_literal(counter: u64) -> Result<xla::Literal> {
+    let k = [(counter >> 32) as u32, counter as u32];
+    Ok(xla::Literal::vec1(&k).reshape(&[2])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: &[usize], dtype: Dtype) -> IoSpec {
+        IoSpec {
+            name: "t".into(),
+            shape: shape.to_vec(),
+            dtype,
+        }
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let s = spec(&[2, 3], Dtype::F32);
+        let data = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = to_literal(&s, &data).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let s = spec(&[4], Dtype::F32);
+        assert!(to_literal(&s, &HostTensor::F32(vec![1.0])).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let s = spec(&[1], Dtype::I32);
+        assert!(to_literal(&s, &HostTensor::F32(vec![1.0])).is_err());
+    }
+
+    #[test]
+    fn key_literal_packs_counter() {
+        let lit = key_literal(0x1234_5678_9ABC_DEF0).unwrap();
+        let v = lit.to_vec::<u32>().unwrap();
+        assert_eq!(v, vec![0x1234_5678, 0x9ABC_DEF0]);
+    }
+}

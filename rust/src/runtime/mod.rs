@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! and executes them from the Rust hot path (Python is never invoked).
+
+pub mod artifact;
+pub mod executor;
+pub mod literal;
+
+pub use artifact::{ArtifactSpec, Dtype, IoSpec, ModelSpec, Registry, StateLeaf};
+pub use executor::Executor;
+pub use literal::HostTensor;

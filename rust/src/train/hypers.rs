@@ -1,0 +1,191 @@
+//! Hyper-parameter and device-parameter vectors for the AOT step
+//! artifacts, with per-algorithm defaults patterned on the paper's
+//! Tables 4–6 (adapted to this simulator's scale).
+
+use crate::device::Preset;
+use crate::runtime::Registry;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hypers {
+    pub lr_fast: f32,
+    pub lr_transfer: f32,
+    pub eta: f32,
+    pub gamma: f32,
+    pub flip_p: f32,
+    pub thresh: f32,
+    pub lr_digital: f32,
+    pub read_noise: f32,
+}
+
+impl Hypers {
+    /// Paper-inspired defaults per algorithm (Tables 4–6 analogues).
+    pub fn for_algo(algo: &str) -> Hypers {
+        match algo {
+            "sgd" => Hypers {
+                lr_fast: 0.5,
+                lr_transfer: 0.0,
+                eta: 0.0,
+                gamma: 0.0,
+                flip_p: 0.0,
+                thresh: 0.1,
+                lr_digital: 0.05,
+                read_noise: 0.01,
+            },
+            "ttv1" => Hypers {
+                lr_fast: 0.5,
+                lr_transfer: 0.1,
+                eta: 0.0,
+                gamma: 1.0,
+                flip_p: 0.0,
+                thresh: 0.1,
+                lr_digital: 0.05,
+                read_noise: 0.01,
+            },
+            "ttv2" => Hypers {
+                lr_fast: 0.5,
+                lr_transfer: 0.1,
+                eta: 0.0,
+                gamma: 1.0,
+                flip_p: 0.0,
+                thresh: 0.1,
+                lr_digital: 0.05,
+                read_noise: 0.01,
+            },
+            "agad" => Hypers {
+                lr_fast: 0.5,
+                lr_transfer: 0.1,
+                eta: 0.3,
+                gamma: 1.0,
+                flip_p: 0.05,
+                thresh: 0.1,
+                lr_digital: 0.05,
+                read_noise: 0.01,
+            },
+            // E-RIDER (paper Table 4/6 analogues, re-tuned for this
+            // simulator: fast residual array, fast Q filter, per-line
+            // choppers at p = 0.05)
+            "erider" => Hypers {
+                lr_fast: 0.5,
+                lr_transfer: 0.3,
+                eta: 0.3,
+                gamma: 1.0,
+                flip_p: 0.05,
+                thresh: 0.1,
+                lr_digital: 0.05,
+                read_noise: 0.01,
+            },
+            "digital" => Hypers {
+                lr_fast: 0.0,
+                lr_transfer: 0.0,
+                eta: 0.0,
+                gamma: 0.0,
+                flip_p: 0.0,
+                thresh: 0.1,
+                lr_digital: 0.1,
+                read_noise: 0.0,
+            },
+            other => panic!("unknown algorithm '{other}'"),
+        }
+    }
+
+    /// RIDER = E-RIDER with the chopper off (paper Section 4).
+    pub fn rider() -> Hypers {
+        Hypers {
+            flip_p: 0.0,
+            ..Hypers::for_algo("erider")
+        }
+    }
+
+    /// Pack into the artifact's hypers input vector.
+    pub fn to_vec(&self, reg: &Registry) -> Vec<f32> {
+        let mut v = vec![0.0f32; reg.n_hypers];
+        let mut set = |k: &str, val: f32| {
+            if let Some(&i) = reg.hyper_index.get(k) {
+                v[i] = val;
+            }
+        };
+        set("lr_fast", self.lr_fast);
+        set("lr_transfer", self.lr_transfer);
+        set("eta", self.eta);
+        set("gamma", self.gamma);
+        set("flip_p", self.flip_p);
+        set("thresh", self.thresh);
+        set("lr_digital", self.lr_digital);
+        set("read_noise", self.read_noise);
+        v
+    }
+}
+
+/// Device parameter vector for the artifacts.
+#[derive(Clone, Copy, Debug)]
+pub struct DevParams {
+    pub dw_min: f32,
+    pub sigma_c2c: f32,
+    pub tau_max: f32,
+    pub tau_min: f32,
+    pub out_noise: f32,
+    pub inp_res: f32,
+    pub out_res: f32,
+    pub out_bound: f32,
+}
+
+impl DevParams {
+    pub fn from_preset(p: &Preset) -> DevParams {
+        DevParams {
+            dw_min: p.dw_min as f32,
+            sigma_c2c: p.c2c as f32,
+            tau_max: p.tau_max as f32,
+            tau_min: p.tau_min as f32,
+            out_noise: 0.06,
+            inp_res: 1.0 / 127.0,
+            out_res: 1.0 / 511.0,
+            out_bound: 12.0,
+        }
+    }
+
+    pub fn to_vec(&self, reg: &Registry) -> Vec<f32> {
+        let mut v = vec![0.0f32; reg.n_dev];
+        let mut set = |k: &str, val: f32| {
+            if let Some(&i) = reg.dev_index.get(k) {
+                v[i] = val;
+            }
+        };
+        set("dw_min", self.dw_min);
+        set("sigma_c2c", self.sigma_c2c);
+        set("tau_max", self.tau_max);
+        set("tau_min", self.tau_min);
+        set("out_noise", self.out_noise);
+        set("inp_res", self.inp_res);
+        set("out_res", self.out_res);
+        set("out_bound", self.out_bound);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rider_is_erider_without_chopper() {
+        let e = Hypers::for_algo("erider");
+        let r = Hypers::rider();
+        assert_eq!(r.flip_p, 0.0);
+        assert_eq!(r.lr_fast, e.lr_fast);
+    }
+
+    #[test]
+    fn all_algos_have_defaults() {
+        for a in ["sgd", "ttv1", "ttv2", "agad", "erider", "digital"] {
+            let h = Hypers::for_algo(a);
+            assert!(h.lr_digital >= 0.0);
+        }
+    }
+
+    #[test]
+    fn preset_to_dev() {
+        let d = DevParams::from_preset(&crate::device::HFO2);
+        assert!((d.dw_min - 0.4622).abs() < 1e-6);
+        assert!((d.sigma_c2c - 0.2174).abs() < 1e-6);
+    }
+}

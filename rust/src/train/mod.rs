@@ -1,0 +1,10 @@
+//! HLO-driven training: state management, hyperparameters and the
+//! trainer loop over the AOT step artifacts.
+
+pub mod hypers;
+pub mod state;
+pub mod trainer;
+
+pub use hypers::{DevParams, Hypers};
+pub use state::ModelState;
+pub use trainer::{TrainConfig, TrainResult, Trainer, BL};

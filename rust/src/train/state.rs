@@ -1,0 +1,147 @@
+//! Model training state held on the Rust side as flat host tensors,
+//! addressed by role through the manifest's leaf table.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{HostTensor, ModelSpec};
+
+/// Flat training state: one host tensor per manifest leaf.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub leaves: Vec<Vec<f32>>,
+}
+
+impl ModelState {
+    pub fn from_outputs(spec: &ModelSpec, outputs: Vec<Vec<f32>>) -> Result<ModelState> {
+        if outputs.len() < spec.state.len() {
+            return Err(anyhow!(
+                "expected >= {} state outputs, got {}",
+                spec.state.len(),
+                outputs.len()
+            ));
+        }
+        let mut outputs = outputs;
+        outputs.truncate(spec.state.len());
+        for (leaf, out) in spec.state.iter().zip(&outputs) {
+            if leaf.numel() != out.len() {
+                return Err(anyhow!(
+                    "leaf {}: expected {} elements, got {}",
+                    leaf.name,
+                    leaf.numel(),
+                    out.len()
+                ));
+            }
+        }
+        Ok(ModelState { leaves: outputs })
+    }
+
+    /// Inputs for a step/eval artifact: the state tensors in order.
+    pub fn to_inputs(&self) -> Vec<HostTensor> {
+        self.leaves
+            .iter()
+            .map(|v| HostTensor::F32(v.clone()))
+            .collect()
+    }
+
+    /// Indices of leaves with a given role.
+    pub fn role_indices(spec: &ModelSpec, role: &str) -> Vec<usize> {
+        spec.state
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Copy the `w` and `bias` leaves from another state (deploying a
+    /// digitally pre-trained checkpoint onto the analog arrays, Table 8).
+    pub fn deploy_weights_from(&mut self, spec: &ModelSpec, src: &ModelState) {
+        for role in ["w", "bias"] {
+            for i in Self::role_indices(spec, role) {
+                self.leaves[i].clone_from(&src.leaves[i]);
+            }
+        }
+    }
+
+    /// Mean absolute value of a role's leaves (diagnostics).
+    pub fn role_mean_abs(&self, spec: &ModelSpec, role: &str) -> f64 {
+        let idx = Self::role_indices(spec, role);
+        let mut s = 0.0;
+        let mut n = 0usize;
+        for i in idx {
+            s += self.leaves[i].iter().map(|&v| v.abs() as f64).sum::<f64>();
+            n += self.leaves[i].len();
+        }
+        if n == 0 {
+            0.0
+        } else {
+            s / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ModelSpec, StateLeaf};
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "m".into(),
+            batch: 2,
+            eval_batch: 4,
+            d_in: 3,
+            n_classes: 2,
+            state: vec![
+                StateLeaf {
+                    name: "t0.w".into(),
+                    shape: vec![3, 2],
+                    role: "w".into(),
+                    tile: 0,
+                },
+                StateLeaf {
+                    name: "t0.p".into(),
+                    shape: vec![3, 2],
+                    role: "p".into(),
+                    tile: 0,
+                },
+                StateLeaf {
+                    name: "b0".into(),
+                    shape: vec![2],
+                    role: "bias".into(),
+                    tile: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn from_outputs_validates() {
+        let s = spec();
+        let ok = ModelState::from_outputs(&s, vec![vec![0.0; 6], vec![0.0; 6], vec![0.0; 2]]);
+        assert!(ok.is_ok());
+        let bad = ModelState::from_outputs(&s, vec![vec![0.0; 5], vec![0.0; 6], vec![0.0; 2]]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn deploy_copies_w_and_bias_only() {
+        let s = spec();
+        let mut dst =
+            ModelState::from_outputs(&s, vec![vec![0.0; 6], vec![0.0; 6], vec![0.0; 2]]).unwrap();
+        let src =
+            ModelState::from_outputs(&s, vec![vec![1.0; 6], vec![2.0; 6], vec![3.0; 2]]).unwrap();
+        dst.deploy_weights_from(&s, &src);
+        assert_eq!(dst.leaves[0], vec![1.0; 6]); // w copied
+        assert_eq!(dst.leaves[1], vec![0.0; 6]); // p untouched
+        assert_eq!(dst.leaves[2], vec![3.0; 2]); // bias copied
+    }
+
+    #[test]
+    fn role_mean_abs_works() {
+        let s = spec();
+        let st =
+            ModelState::from_outputs(&s, vec![vec![-2.0; 6], vec![0.0; 6], vec![0.0; 2]]).unwrap();
+        assert!((st.role_mean_abs(&s, "w") - 2.0).abs() < 1e-12);
+    }
+}

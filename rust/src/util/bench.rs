@@ -1,0 +1,173 @@
+//! Mini-criterion: a benchmarking harness for `cargo bench` targets
+//! (criterion is not available offline). Provides warmup, timed
+//! iterations, outlier-robust statistics and throughput reporting.
+//!
+//! Bench binaries are declared with `harness = false` and call
+//! [`Bench::run`] per case; output is both human-readable and
+//! machine-parseable (one `BENCH\t...` line per case).
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// Configuration for a bench run.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u32,
+    pub max_iters: u32,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1500),
+            min_iters: 10,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+/// Result of one bench case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "BENCH\t{}\titers={}\tmean={}\tmedian={}\tmin={}\tstd={}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.std_ns),
+        )
+    }
+
+    /// Report with an ops/sec throughput figure (e.g. pulses/s, steps/s).
+    pub fn report_throughput(&self, unit: &str, per_iter: f64) -> String {
+        let per_sec = per_iter / (self.mean_ns * 1e-9);
+        format!("{}\tthroughput={:.3e} {}/s", self.report(), per_sec, unit)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{:.1}ns", ns)
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    /// Quick preset used inside `cargo test` smoke checks.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            min_iters: 3,
+            max_iters: 10_000,
+        }
+    }
+
+    /// Run `f` repeatedly, timing each call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + estimate per-iter cost.
+        let wstart = Instant::now();
+        let mut wcount = 0u32;
+        while wstart.elapsed() < self.warmup || wcount < 1 {
+            f();
+            wcount += 1;
+            if wcount >= self.max_iters {
+                break;
+            }
+        }
+        let est_ns = (wstart.elapsed().as_nanos() as f64 / wcount.max(1) as f64).max(1.0);
+        let target = (self.measure.as_nanos() as f64 / est_ns) as u32;
+        let iters = target.clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / samples.len().max(2) as f64;
+        let median = samples[samples.len() / 2];
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            median_ns: median,
+            min_ns: samples[0],
+        }
+    }
+
+    /// Run and print the default report; returns the result for further use.
+    pub fn run_print<F: FnMut()>(&self, name: &str, f: F) -> BenchResult {
+        let r = self.run(name, f);
+        println!("{}", r.report());
+        r
+    }
+}
+
+/// Re-exported for bench bodies that need to defeat the optimizer.
+pub fn consume<T>(x: T) -> T {
+    bb(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(consume(i * i));
+            }
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("us"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let b = Bench::quick();
+        let r = b.run("t", || {
+            consume(1 + 1);
+        });
+        let s = r.report_throughput("ops", 100.0);
+        assert!(s.contains("throughput="));
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundational substrates built in-repo (the offline crate set has no
+//! rand / serde / clap / criterion / proptest): RNG, JSON, statistics,
+//! table rendering, a bench harness and a property-testing harness.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,100 @@
+//! Tiny property-testing harness (proptest is not available offline).
+//!
+//! A property is a closure over a seeded [`crate::util::rng::Rng`]; the
+//! harness runs it across many seeds and reports the first failing seed,
+//! so failures are reproducible by construction. Coordinator invariants
+//! (batcher coverage, state round-trips, pulse accounting, device bounds)
+//! are tested with this.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random cases of a property. The closure receives a fresh
+/// deterministic RNG per case and returns `Err(msg)` to fail.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xDEAD_BEEF ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed, case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{}' failed at case {} (seed {:#x}): {}",
+                name, case, seed, msg
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Generators for common shapes.
+pub mod gen {
+    use super::Rng;
+
+    /// Vector of f64 in [lo, hi).
+    pub fn vec_uniform(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| rng.uniform_in(lo, hi)).collect()
+    }
+
+    /// Vector of f32 in [lo, hi).
+    pub fn vec_uniform_f32(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| rng.uniform_in(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+
+    /// Size in [lo, hi].
+    pub fn size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| {
+            let x = rng.uniform();
+            prop_assert!(x < 0.5, "x was {}", x);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        check("gen ranges", 20, |rng| {
+            let n = gen::size(rng, 1, 64);
+            prop_assert!((1..=64).contains(&n));
+            let v = gen::vec_uniform(rng, n, -2.0, 3.0);
+            prop_assert!(v.iter().all(|x| (-2.0..3.0).contains(x)));
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,234 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so we carry our own: SplitMix64
+//! for seeding/streams and PCG32 (XSH-RR) for the bulk stream, plus
+//! Box–Muller normals with caching. Everything is reproducible from a
+//! `u64` seed, which the experiment configs record.
+
+/// SplitMix64 — tiny, well-distributed; used to expand seeds into streams.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (XSH-RR 64/32): the main generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+    /// cached second Box–Muller normal
+    spare: Option<f64>,
+}
+
+impl Rng {
+    /// Construct from a seed; `stream` selects an independent sequence
+    /// (used to give worker threads / array tiles their own streams).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ stream.wrapping_mul(0xA076_1D64_78BD_642F));
+        let mut rng = Self {
+            state: 0,
+            inc: (sm.next_u64() << 1) | 1,
+            spare: None,
+        };
+        rng.state = sm.next_u64();
+        rng.next_u32();
+        rng
+    }
+
+    pub fn from_seed(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u32() as f64) * (1.0 / 4_294_967_296.0)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        // Lemire-style rejection-free for our purposes (n << 2^32).
+        ((self.next_u32() as u64 * n as u64) >> 32) as usize
+    }
+
+    /// Random sign: +1.0 or -1.0 with equal probability.
+    #[inline]
+    pub fn sign(&mut self) -> f64 {
+        if self.next_u32() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// N(mu, sigma^2).
+    #[inline]
+    pub fn normal_scaled(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fill a buffer with standard normals (f32).
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32;
+        }
+    }
+
+    /// Fill a buffer with U[0,1) (f32).
+    pub fn fill_uniform_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.uniform() as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42, 0);
+        let mut b = Rng::new(42, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Rng::new(42, 0);
+        let mut b = Rng::new(42, 1);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut r = Rng::from_seed(7);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            s += u;
+            s2 += u * u;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "{var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::from_seed(11);
+        let n = 200_000;
+        let (mut s, mut s2, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s += z;
+            s2 += z * z;
+            s3 += z * z * z;
+        }
+        assert!((s / n as f64).abs() < 0.02);
+        assert!((s2 / n as f64 - 1.0).abs() < 0.02);
+        assert!((s3 / n as f64).abs() < 0.05); // symmetry
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::from_seed(3);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::from_seed(9);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn sign_balanced() {
+        let mut r = Rng::from_seed(5);
+        let pos = (0..100_000).filter(|_| r.sign() > 0.0).count();
+        assert!((pos as f64 / 100_000.0 - 0.5).abs() < 0.01);
+    }
+}

@@ -1,0 +1,136 @@
+//! Cross-module property tests on the coordinator invariants
+//! (DESIGN.md section 6) using the in-repo prop harness.
+
+use analog_rider::data::{Batcher, Dataset};
+use analog_rider::device::{presets, DeviceArray, Response, SoftBounds};
+use analog_rider::prop_assert;
+use analog_rider::util::json::Json;
+use analog_rider::util::prop::{self, gen};
+use analog_rider::util::rng::Rng;
+
+#[test]
+fn prop_batcher_epoch_coverage() {
+    prop::check("batcher coverage", 30, |rng| {
+        let n = gen::size(rng, 10, 200);
+        let batch = gen::size(rng, 1, n);
+        let mut b = Batcher::new(n, batch, rng.next_u64());
+        let steps = b.steps_per_epoch();
+        let mut seen = vec![0u32; n];
+        for _ in 0..steps {
+            for &i in b.next() {
+                seen[i] += 1;
+            }
+        }
+        prop_assert!(
+            seen.iter().all(|&c| c <= 1),
+            "sample repeated within epoch"
+        );
+        prop_assert!(
+            seen.iter().filter(|&&c| c == 1).count() == steps * batch,
+            "wrong coverage count"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_device_weights_bounded_under_any_updates() {
+    prop::check("device bounds", 25, |rng| {
+        let rows = gen::size(rng, 1, 12);
+        let cols = gen::size(rng, 1, 12);
+        let mut arr =
+            DeviceArray::sample(rows, cols, &presets::OM, 0.3, 0.5, 0.2, rng);
+        for _ in 0..40 {
+            let dw = gen::vec_uniform_f32(rng, rows * cols, -3.0, 3.0);
+            arr.analog_update(&dw, rng);
+        }
+        prop_assert!(
+            arr.w.iter().all(|&w| (-1.0001..=1.0001).contains(&w)),
+            "weights escaped the conductance window"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sp_is_g_root_for_random_devices() {
+    prop::check("sp root", 100, |rng| {
+        let gamma = rng.uniform_in(0.3, 2.0);
+        let rho = rng.uniform_in(-0.8, 0.8) * gamma;
+        let d = SoftBounds::from_gamma_rho(gamma, rho);
+        let sp = d.symmetric_point();
+        prop_assert!(d.g_asym(sp).abs() < 1e-9, "G(sp) = {}", d.g_asym(sp));
+        prop_assert!(
+            (-1.0..=1.0).contains(&sp),
+            "sp {} outside window",
+            sp
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    prop::check("json roundtrip", 40, |rng| {
+        fn gen_val(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(3) } else { rng.below(5) } {
+                0 => Json::Num((rng.uniform_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                1 => Json::Bool(rng.bernoulli(0.5)),
+                2 => Json::Str(format!("s{}", rng.next_u32())),
+                3 => Json::Arr((0..rng.below(4)).map(|_| gen_val(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(4))
+                        .map(|i| (format!("k{i}"), gen_val(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen_val(rng, 3);
+        let v2 = Json::parse(&v.dump()).map_err(|e| e.to_string())?;
+        prop_assert!(v == v2, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zs_estimate_improves_with_budget() {
+    prop::check("zs monotone-ish", 8, |rng| {
+        let seed = rng.next_u64();
+        let err = |n: u64| {
+            let mut r = Rng::new(seed, 1);
+            let mut arr =
+                DeviceArray::sample(12, 12, &presets::PRECISE, 0.4, 0.1, 0.1, &mut r);
+            analog_rider::analog::zs::run(
+                &mut arr,
+                n,
+                analog_rider::analog::zs::ZsVariant::Cyclic,
+                &mut r,
+            )
+            .mean_abs_error()
+        };
+        prop_assert!(err(4000) < err(40), "budget did not help");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pulse_counter_additive() {
+    prop::check("pulse accounting", 20, |rng| {
+        let dev = SoftBounds::symmetric();
+        let mut arr = DeviceArray::uniform(4, 4, &dev, 0.01, 0.0);
+        let mut expected = 0u64;
+        for _ in 0..10 {
+            let k = gen::size(rng, 0, 5) as f32;
+            let dw = vec![k * 0.01; 16];
+            arr.analog_update_det(&dw);
+            expected += (k as u64) * 16;
+        }
+        prop_assert!(
+            arr.pulse_count == expected,
+            "count {} != expected {}",
+            arr.pulse_count,
+            expected
+        );
+        Ok(())
+    });
+}

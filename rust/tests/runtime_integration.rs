@@ -1,0 +1,183 @@
+//! Integration: load real artifacts, compile, execute, check shapes and
+//! basic training semantics through the full PJRT path.
+
+use analog_rider::runtime::{Executor, HostTensor, Registry};
+use analog_rider::util::rng::Rng;
+
+fn registry() -> Option<Registry> {
+    let dir = Registry::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Registry::load(dir).expect("manifest loads"))
+}
+
+#[test]
+fn manifest_covers_all_models_and_algos() {
+    let Some(reg) = registry() else { return };
+    for m in ["fcn", "lenet", "convnet3"] {
+        assert!(reg.models.contains_key(m), "{m}");
+        for a in ["init", "eval", "eval_digital", "zs"] {
+            assert!(reg.artifacts.contains_key(&format!("{m}_{a}")), "{m}_{a}");
+        }
+        for algo in ["sgd", "ttv1", "ttv2", "agad", "erider", "digital"] {
+            let name = format!("{m}_step_{algo}");
+            assert!(reg.artifacts.contains_key(&name), "{name}");
+        }
+    }
+}
+
+#[test]
+fn init_step_eval_roundtrip_fcn() {
+    let Some(reg) = registry() else { return };
+    let exec = Executor::cpu().expect("pjrt client");
+    let m = reg.model("fcn").unwrap();
+
+    // init
+    let init = reg.artifact("fcn_init").unwrap();
+    let state = exec
+        .run(
+            init,
+            &[
+                HostTensor::U32(vec![1, 2]),
+                HostTensor::F32(vec![0.3, 0.2, 0.1]), // ref_mean, ref_std, sigma_gamma
+            ],
+        )
+        .expect("init runs");
+    assert_eq!(state.len(), m.state.len());
+    for (leaf, out) in m.state.iter().zip(&state) {
+        assert_eq!(leaf.numel(), out.len(), "{}", leaf.name);
+    }
+
+    // one erider step with a random batch
+    let step = reg.artifact("fcn_step_erider").unwrap();
+    let mut rng = Rng::from_seed(7);
+    let mut x = vec![0.0f32; m.batch * m.d_in];
+    rng.fill_uniform_f32(&mut x);
+    let labels: Vec<i32> = (0..m.batch as i32).map(|i| i % 10).collect();
+    let mut hypers = vec![0.0f32; reg.n_hypers];
+    hypers[reg.hyper_index["lr_fast"]] = 0.1;
+    hypers[reg.hyper_index["lr_transfer"]] = 0.05;
+    hypers[reg.hyper_index["eta"]] = 0.01;
+    hypers[reg.hyper_index["gamma"]] = 0.1;
+    hypers[reg.hyper_index["flip_p"]] = 0.1;
+    hypers[reg.hyper_index["thresh"]] = 0.1;
+    hypers[reg.hyper_index["lr_digital"]] = 0.05;
+    hypers[reg.hyper_index["read_noise"]] = 0.01;
+    let mut dev = vec![0.0f32; reg.n_dev];
+    dev[reg.dev_index["dw_min"]] = 0.01;
+    dev[reg.dev_index["sigma_c2c"]] = 0.1;
+    dev[reg.dev_index["tau_max"]] = 1.0;
+    dev[reg.dev_index["tau_min"]] = 1.0;
+    dev[reg.dev_index["out_noise"]] = 0.06;
+    dev[reg.dev_index["inp_res"]] = 1.0 / 127.0;
+    dev[reg.dev_index["out_res"]] = 1.0 / 511.0;
+    dev[reg.dev_index["out_bound"]] = 12.0;
+
+    let mut inputs: Vec<HostTensor> = state.iter().map(|v| HostTensor::F32(v.clone())).collect();
+    inputs.push(HostTensor::F32(x.clone()));
+    inputs.push(HostTensor::I32(labels.clone()));
+    inputs.push(HostTensor::U32(vec![0, 42]));
+    inputs.push(HostTensor::F32(hypers.clone()));
+    inputs.push(HostTensor::F32(dev.clone()));
+    let out = exec.run(step, &inputs).expect("step runs");
+    assert_eq!(out.len(), m.state.len() + 1);
+    let loss = out.last().unwrap()[0];
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+
+    // state must actually change (the P array moved)
+    let p_idx = m.state.iter().position(|l| l.role == "p").unwrap();
+    let moved = state[p_idx]
+        .iter()
+        .zip(&out[p_idx])
+        .any(|(a, b)| (a - b).abs() > 1e-7);
+    assert!(moved, "P array did not move");
+
+    // eval artifact
+    let eval = reg.artifact("fcn_eval").unwrap();
+    let eb = m.eval_batch;
+    let mut ex = vec![0.0f32; eb * m.d_in];
+    rng.fill_uniform_f32(&mut ex);
+    let ey: Vec<i32> = (0..eb as i32).map(|i| i % 10).collect();
+    let mut einputs: Vec<HostTensor> =
+        out[..m.state.len()].iter().map(|v| HostTensor::F32(v.clone())).collect();
+    einputs.push(HostTensor::F32(ex));
+    einputs.push(HostTensor::I32(ey));
+    einputs.push(HostTensor::U32(vec![0, 1]));
+    einputs.push(HostTensor::F32(hypers));
+    einputs.push(HostTensor::F32(dev));
+    let eout = exec.run(eval, &einputs).expect("eval runs");
+    assert_eq!(eout.len(), 2);
+    let ncorrect = eout[1][0];
+    assert!((0.0..=eb as f32).contains(&ncorrect), "ncorrect {ncorrect}");
+
+    // compile cache: init + step + eval
+    assert_eq!(exec.cached_count(), 3);
+}
+
+#[test]
+fn parity_rust_device_vs_jax_kernels() {
+    // artifacts/parity.json: deterministic vectors from kernels/ref.py;
+    // the Rust substrate must match within f32 tolerance.
+    use analog_rider::device::{DeviceArray, IoChain, SoftBounds};
+    use analog_rider::util::json::Json;
+
+    let dir = Registry::default_dir();
+    let path = dir.join("parity.json");
+    if !path.exists() {
+        eprintln!("skipping: parity.json not built");
+        return;
+    }
+    let j = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let cases = j.get("cases").unwrap().as_arr().unwrap();
+    let mut n_pulse = 0;
+    let mut n_mvm = 0;
+    for c in cases {
+        match c.get("kind").unwrap().as_str().unwrap() {
+            "pulse_update" => {
+                n_pulse += 1;
+                let rows = c.get("rows").unwrap().as_usize().unwrap();
+                let cols = c.get("cols").unwrap().as_usize().unwrap();
+                let dw_min = c.get("dw_min").unwrap().as_f64().unwrap();
+                let w = c.get("w").unwrap().as_f32_vec().unwrap();
+                let dw = c.get("dw").unwrap().as_f32_vec().unwrap();
+                let ap = c.get("alpha_p").unwrap().as_f32_vec().unwrap();
+                let am = c.get("alpha_m").unwrap().as_f32_vec().unwrap();
+                let expected = c.get("expected").unwrap().as_f32_vec().unwrap();
+                let mut arr =
+                    DeviceArray::uniform(rows, cols, &SoftBounds::symmetric(), dw_min, 0.0);
+                arr.w = w;
+                arr.alpha_p = ap;
+                arr.alpha_m = am;
+                arr.analog_update_det(&dw);
+                for (i, (got, want)) in arr.w.iter().zip(&expected).enumerate() {
+                    assert!(
+                        (got - want).abs() < 1e-5,
+                        "pulse case cell {i}: {got} vs {want}"
+                    );
+                }
+            }
+            "analog_mvm" => {
+                n_mvm += 1;
+                let b = c.get("b").unwrap().as_usize().unwrap();
+                let k = c.get("k").unwrap().as_usize().unwrap();
+                let n = c.get("n").unwrap().as_usize().unwrap();
+                let x = c.get("x").unwrap().as_f32_vec().unwrap();
+                let w = c.get("w").unwrap().as_f32_vec().unwrap();
+                let expected = c.get("expected").unwrap().as_f32_vec().unwrap();
+                let io = IoChain::default();
+                let mut rng = Rng::from_seed(0);
+                let y = io.mvm(&x, &w, b, k, n, &mut rng, true);
+                for (i, (got, want)) in y.iter().zip(&expected).enumerate() {
+                    assert!(
+                        (got - want).abs() < 2e-3,
+                        "mvm case element {i}: {got} vs {want}"
+                    );
+                }
+            }
+            other => panic!("unknown parity kind {other}"),
+        }
+    }
+    assert!(n_pulse >= 3 && n_mvm >= 2);
+}
