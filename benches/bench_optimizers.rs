@@ -1,6 +1,9 @@
 //! Rust-native optimizer step costs (theory-experiment inner loops).
+//!
+//! Iterates the whole method registry: any method added to
+//! `analog::optimizer::METHODS` is benched here with no further edits.
 
-use analog_rider::analog::*;
+use analog_rider::analog::optimizer::{self, AnalogOptimizer as _};
 use analog_rider::device::presets;
 use analog_rider::optim::Quadratic;
 use analog_rider::util::bench::Bench;
@@ -12,23 +15,13 @@ fn main() {
     let obj = Quadratic::new(256, 1.0, 4.0, 0.3, &mut rng);
     let p = presets::PRECISE;
 
-    let mut sgd = AnalogSgd::new(256, &p, 0.3, 0.1, 0.05, 0.1, &mut rng);
-    println!("{}", b.run("analog_sgd_step/d256", || {
-        sgd.step(&obj, &mut rng);
-    }).report());
-
-    let mut tt = TikiTaka::new(256, &p, 0.3, 0.1, TtVariant::V2, 0.1, 0.05, 0.1, &mut rng);
-    println!("{}", b.run("ttv2_step/d256", || {
-        tt.step(&obj, &mut rng);
-    }).report());
-
-    let mut rider = Rider::new(256, &p, 0.3, 0.1, RiderHypers::default(), 0.1, &mut rng);
-    println!("{}", b.run("erider_step/d256", || {
-        rider.step(&obj, &mut rng);
-    }).report());
-
-    let mut agad = Agad::new(256, &p, 0.3, 0.1, 0.1, 0.05, 0.05, 0.1, &mut rng);
-    println!("{}", b.run("agad_step/d256", || {
-        agad.step(&obj, &mut rng);
-    }).report());
+    for name in optimizer::METHODS {
+        let spec = optimizer::spec(name).expect("registry name");
+        // `residual` pays its ZS calibration here (setup, not timed)
+        let mut opt = spec.build(256, &p, 0.3, 0.1, 0.1, &mut rng);
+        let r = b.run(&format!("{name}_step/d256"), || {
+            opt.step(&obj, &mut rng);
+        });
+        println!("{}", r.report());
+    }
 }

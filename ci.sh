@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI gate for the Rust substrate.
+#
+#   ./ci.sh         tier-1 gate (build + tests) then lint
+#   ./ci.sh lint    lint only (fmt --check, clippy -D warnings)
+#
+# Tier-1 (ROADMAP.md): cargo build --release && cargo test -q.
+# Lint runs after tier-1 and also fails the script; use `./ci.sh lint`
+# to iterate on fmt/clippy alone.
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+lint() {
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+    echo "== cargo clippy (all targets, -D warnings) =="
+    cargo clippy --all-targets -- -D warnings
+}
+
+if [[ "${1:-}" == "lint" ]]; then
+    lint
+    exit 0
+fi
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+lint
+echo "CI OK"

@@ -1,12 +1,17 @@
-//! Quickstart: calibrate a device array with zero-shifting, then train a
-//! small analog FCN with E-RIDER on the synthetic digits — the two core
-//! capabilities of the library in ~40 lines.
+//! Quickstart: calibrate a device array with zero-shifting, train at
+//! pulse level with a registry method picked by name, then train a small
+//! analog FCN with E-RIDER on the synthetic digits — the three core
+//! capabilities of the library in ~60 lines.
 //!
-//! Run: `cargo run --release --example quickstart` (needs `make artifacts`).
+//! Run: `cargo run --release --example quickstart [-- <method>]`
+//! (NN stage needs `make artifacts`; <method> is a registry name:
+//! sgd|ttv1|ttv2|agad|residual|rider|erider, default erider).
 
+use analog_rider::analog::optimizer::{self, AnalogOptimizer as _};
 use analog_rider::analog::zs::{self, ZsVariant};
 use analog_rider::data::Dataset;
 use analog_rider::device::{presets, DeviceArray};
+use analog_rider::optim::Quadratic;
 use analog_rider::runtime::{Executor, Registry};
 use analog_rider::train::{TrainConfig, Trainer};
 use analog_rider::util::rng::Rng;
@@ -22,7 +27,29 @@ fn main() -> anyhow::Result<()> {
         res.pulses
     );
 
-    // 2. NN-level: train the analog FCN with E-RIDER through the AOT
+    // 2. pulse-level training through the registry: any method name maps
+    //    to a spec whose `build` returns a Box<dyn AnalogOptimizer>.
+    let method = std::env::args().nth(1).unwrap_or_else(|| "erider".into());
+    let spec = optimizer::spec_or_err(&method).map_err(|e| anyhow::anyhow!(e))?;
+    let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
+    let mut opt = spec.build(16, &presets::OM, 0.4, 0.1, 0.2, &mut rng);
+    let first = opt.step(&obj, &mut rng);
+    let mut last = first;
+    for _ in 1..3000 {
+        last = opt.step(&obj, &mut rng);
+    }
+    let cost = opt.cost();
+    println!(
+        "{}: quadratic loss {:.3} -> {:.3} in 3000 steps \
+         ({} update pulses, {} calib pulses)",
+        opt.name(),
+        first,
+        last,
+        cost.update_pulses,
+        cost.calibration_pulses
+    );
+
+    // 3. NN-level: train the analog FCN with E-RIDER through the AOT
     //    artifacts (Python is not involved at this point).
     let reg = Registry::load(Registry::default_dir())?;
     let exec = Executor::cpu()?;

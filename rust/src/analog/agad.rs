@@ -4,10 +4,40 @@
 //! gradients at W only (no residual mixing, paper Appendix B.2) and has
 //! no residual-learning mechanism.
 
+use crate::analog::optimizer::AnalogOptimizer;
 use crate::analog::pulse_counter::PulseCost;
 use crate::device::{DeviceArray, Preset};
 use crate::optim::Objective;
 use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AgadHypers {
+    /// A-array learning rate
+    pub lr_fast: f64,
+    /// A → W transfer learning rate
+    pub lr_transfer: f64,
+    /// offset-refresh stepsize applied at chopper flips
+    pub eta: f64,
+    /// chopper flip probability
+    pub flip_p: f64,
+    /// analog read-out noise std
+    pub read_noise: f64,
+    /// mixing weight γ_a of the fast array in the forward pass
+    pub gamma: f64,
+}
+
+impl Default for AgadHypers {
+    fn default() -> Self {
+        Self {
+            lr_fast: 0.2,
+            lr_transfer: 0.02,
+            eta: 0.2,
+            flip_p: 0.05,
+            read_noise: 0.01,
+            gamma: 1.0,
+        }
+    }
+}
 
 pub struct Agad {
     pub a: DeviceArray,
@@ -16,31 +46,23 @@ pub struct Agad {
     /// offset (reference) estimate, refreshed at chopper flips
     pub q: Vec<f32>,
     pub c: f64,
-    pub lr_fast: f64,
-    pub lr_transfer: f64,
-    pub eta: f64,
-    pub flip_p: f64,
+    pub hypers: AgadHypers,
+    /// transfer threshold, derived from the preset granularity
     pub thresh: f64,
-    pub read_noise: f64,
     pub sigma: f64,
     pub programming_events: u64,
-    /// mixing weight of the fast array in the forward pass
-    pub gamma_a: f64,
     grad_buf: Vec<f32>,
     dw_buf: Vec<f32>,
     weff_buf: Vec<f32>,
 }
 
 impl Agad {
-    #[allow(clippy::too_many_arguments)]
     pub fn new(
         dim: usize,
         preset: &Preset,
         ref_mean: f64,
         ref_std: f64,
-        lr_fast: f64,
-        lr_transfer: f64,
-        flip_p: f64,
+        hypers: AgadHypers,
         sigma: f64,
         rng: &mut Rng,
     ) -> Self {
@@ -50,53 +72,62 @@ impl Agad {
             h: vec![0.0; dim],
             q: vec![0.0; dim],
             c: 1.0,
-            lr_fast,
-            lr_transfer,
-            eta: 0.2,
-            flip_p,
+            hypers,
             thresh: preset.dw_min.max(1e-3),
-            read_noise: 0.01,
             sigma,
             programming_events: 0,
-            gamma_a: 1.0,
             grad_buf: vec![0.0; dim],
             dw_buf: vec![0.0; dim],
             weff_buf: vec![0.0; dim],
         }
     }
 
-    /// Effective weights W + gamma_a c (A - q): the chopped fast array is
+    /// Effective weights W + γ_a c (A - q): the chopped fast array is
     /// part of the logical weight (de-chopped by the c factor); q is the
     /// flip-time offset estimate, NOT a filtered SP track — that, plus
     /// the missing residual bilevel structure, is what separates AGAD
     /// from E-RIDER (paper Appendix B.2).
     pub fn w_eff(&mut self) -> &[f32] {
-        let g = (self.gamma_a * self.c) as f32;
+        let g = (self.hypers.gamma * self.c) as f32;
         for i in 0..self.weff_buf.len() {
             self.weff_buf[i] = self.w.w[i] + g * (self.a.w[i] - self.q[i]);
         }
         &self.weff_buf
     }
 
-    pub fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
-        let flipped = self.flip_p > 0.0 && rng.bernoulli(self.flip_p);
+    /// ||q - SP(A-device)||_mean — the offset-estimate error.
+    pub fn q_tracking_error(&self) -> f64 {
+        let sps = self.a.symmetric_points();
+        self.q
+            .iter()
+            .zip(&sps)
+            .map(|(q, s)| (q - s).abs() as f64)
+            .sum::<f64>()
+            / self.q.len() as f64
+    }
+}
+
+impl AnalogOptimizer for Agad {
+    fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
+        let h = self.hypers;
+        let flipped = h.flip_p > 0.0 && rng.bernoulli(h.flip_p);
         if flipped {
             self.c = -self.c;
         }
-        let weff = self.w_eff().to_vec();
-        let loss = obj.loss(&weff);
-        obj.noisy_grad(&weff, self.sigma, rng, &mut self.grad_buf);
+        self.w_eff();
+        let loss = obj.loss(&self.weff_buf);
+        obj.noisy_grad(&self.weff_buf, self.sigma, rng, &mut self.grad_buf);
         // chopped gradient into A
-        let ac = (self.lr_fast * self.c) as f32;
+        let ac = (h.lr_fast * self.c) as f32;
         for (d, g) in self.dw_buf.iter_mut().zip(&self.grad_buf) {
             *d = -ac * *g;
         }
         self.a.analog_update(&self.dw_buf, rng);
-        let r = self.a.read(self.read_noise, rng);
+        let r = self.a.read(h.read_noise, rng);
         // offset refresh on flips: the de-chopped mean of A drifts to the
         // SP, so the read at a flip boundary estimates it.
         if flipped {
-            let eta = self.eta as f32;
+            let eta = h.eta as f32;
             for i in 0..r.len() {
                 self.q[i] = (1.0 - eta) * self.q[i] + eta * r[i];
             }
@@ -108,34 +139,42 @@ impl Agad {
         for i in 0..r.len() {
             self.h[i] += cs * (r[i] - self.q[i]);
             let quanta = (self.h[i] / t).trunc();
-            self.dw_buf[i] = (self.lr_transfer * (quanta * t) as f64) as f32;
+            self.dw_buf[i] = (h.lr_transfer * (quanta * t) as f64) as f32;
             self.h[i] -= quanta * t;
         }
         self.w.analog_update(&self.dw_buf, rng);
         loss
     }
 
-    pub fn weights(&mut self) -> &[f32] {
+    fn weights(&mut self) -> &[f32] {
         self.w_eff()
     }
 
-    pub fn q_tracking_error(&self) -> f64 {
-        let sps = self.a.symmetric_points();
-        self.q
-            .iter()
-            .zip(&sps)
-            .map(|(q, s)| (q - s).abs() as f64)
-            .sum::<f64>()
-            / self.q.len() as f64
+    /// Seed the offset estimate (e.g. from an external calibration).
+    fn set_reference(&mut self, q: Vec<f32>) {
+        assert_eq!(q.len(), self.q.len());
+        self.q = q;
     }
 
-    pub fn cost(&self) -> PulseCost {
+    fn sp_reference(&self) -> &[f32] {
+        &self.q
+    }
+
+    fn cost(&self) -> PulseCost {
         PulseCost {
             update_pulses: self.a.pulse_count + self.w.pulse_count,
             programming_events: self.programming_events,
             digital_ops: self.h.len() as u64 * 2,
             ..Default::default()
         }
+    }
+
+    fn name(&self) -> &'static str {
+        "agad"
+    }
+
+    fn sp_tracking_error(&self) -> Option<f64> {
+        Some(self.q_tracking_error())
     }
 }
 
@@ -155,9 +194,7 @@ mod tests {
             &presets::preset("om").unwrap(),
             0.4,
             0.2,
-            0.2,
-            0.02,
-            0.05,
+            AgadHypers::default(),
             0.2,
             &mut rng,
         );
@@ -182,9 +219,10 @@ mod tests {
             &presets::preset("om").unwrap(),
             0.5,
             0.1,
-            0.2,
-            0.02,
-            0.2,
+            AgadHypers {
+                flip_p: 0.2,
+                ..Default::default()
+            },
             0.4,
             &mut rng,
         );
@@ -208,9 +246,12 @@ mod tests {
             &presets::preset("ideal").unwrap(),
             0.0,
             0.0,
-            0.1,
-            0.05,
-            1.0, // flip every step
+            AgadHypers {
+                lr_fast: 0.1,
+                lr_transfer: 0.05,
+                flip_p: 1.0, // flip every step
+                ..Default::default()
+            },
             0.1,
             &mut rng,
         );

@@ -4,6 +4,7 @@
 //! artifacts (python/compile/algorithms.py) and are driven by `train`.
 
 pub mod agad;
+pub mod optimizer;
 pub mod pulse_counter;
 pub mod residual;
 pub mod rider;
@@ -11,10 +12,11 @@ pub mod sgd;
 pub mod tiki_taka;
 pub mod zs;
 
-pub use agad::Agad;
+pub use agad::{Agad, AgadHypers};
+pub use optimizer::{AnalogOptimizer, Method, OptimizerSpec, METHODS};
 pub use pulse_counter::PulseCost;
-pub use residual::TwoStageResidual;
+pub use residual::{ResidualHypers, TwoStageResidual};
 pub use rider::{Rider, RiderHypers};
-pub use sgd::AnalogSgd;
-pub use tiki_taka::{TikiTaka, TtVariant};
+pub use sgd::{AnalogSgd, SgdHypers};
+pub use tiki_taka::{TikiTaka, TtHypers, TtVariant};
 pub use zs::{ZsResult, ZsVariant};

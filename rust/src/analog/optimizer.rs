@@ -1,0 +1,434 @@
+//! The pulse-level algorithm family behind one interface: the
+//! [`AnalogOptimizer`] trait plus a spec-driven string registry.
+//!
+//! The paper's central comparison (Tables 1–2, Fig. 4, Theorem 3.7 vs
+//! Corollary 3.9) is a sweep *across methods* — Analog SGD, Tiki-Taka
+//! v1/v2, AGAD, two-stage residual learning, RIDER/E-RIDER — all
+//! instances of one transfer-compound family. This module makes that
+//! family addressable by name and config, mirroring the preset registry
+//! in `device/presets.rs`:
+//!
+//! ```text
+//! "sgd" | "ttv1" | "ttv2" | "agad" | "residual" | "rider" | "erider"
+//! ```
+//!
+//! [`OptimizerSpec`] is plain data (serde-friendly: flat scalars, no
+//! borrowed state) carrying the union of the per-method hyperparameters
+//! with per-method defaults; [`OptimizerSpec::build`] instantiates the
+//! concrete struct behind a `Box<dyn AnalogOptimizer>`. Adding a method
+//! is a one-file change: implement the trait, add a [`Method`] arm, and
+//! it appears in every table, sweep, bench, and the registry test.
+
+use crate::analog::agad::{Agad, AgadHypers};
+use crate::analog::pulse_counter::PulseCost;
+use crate::analog::residual::{ResidualHypers, TwoStageResidual};
+use crate::analog::rider::{Rider, RiderHypers};
+use crate::analog::sgd::{AnalogSgd, SgdHypers};
+use crate::analog::tiki_taka::{TikiTaka, TtHypers, TtVariant};
+use crate::cli::Args;
+use crate::config::Config;
+use crate::device::Preset;
+use crate::optim::Objective;
+use crate::util::rng::Rng;
+
+/// A pulse-level analog training method (one logical weight vector,
+/// stepped against an [`Objective`] on the device substrate).
+pub trait AnalogOptimizer {
+    /// One optimizer iteration; returns the loss at the pre-step
+    /// logical weight.
+    fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64;
+
+    /// The logical (effective) weights the method exposes to the
+    /// forward pass — e.g. `W + γ c (P − Q)` for RIDER.
+    ///
+    /// Takes `&mut self` by design: multi-array methods recompute the
+    /// effective weight into an internal scratch buffer on every call
+    /// (allocation-free), so the receiver must be mutable even though
+    /// the method is logically a read. Single-array methods simply
+    /// return their weight slice.
+    fn weights(&mut self) -> &[f32];
+
+    /// Install an external reference (SP estimate) `q` — the two-stage
+    /// pipelines seed this from a ZS calibration run.
+    fn set_reference(&mut self, q: Vec<f32>);
+
+    /// The current reference / SP estimate `q` the method corrects
+    /// reads against (zeros when uncalibrated, fixed for frozen
+    /// references, tracked online for RIDER/E-RIDER/AGAD).
+    fn sp_reference(&self) -> &[f32];
+
+    /// Accumulated pulse / programming cost (the currency of Fig. 4
+    /// left and Corollary 3.9).
+    fn cost(&self) -> PulseCost;
+
+    /// Registry name of the method (`"erider"`, `"ttv2"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Mean `|q − SP|` over the tracked array, when the method keeps a
+    /// reference estimate (Lemma 3.5 metric); `None` otherwise.
+    fn sp_tracking_error(&self) -> Option<f64> {
+        None
+    }
+
+    /// The Eq. (14) convergence terms `(||W̄ − W*||², ||P − Q||²,
+    /// ||G_P(P)||²)` for residual-type methods; `None` otherwise.
+    fn convergence_metrics(&mut self, _obj: &dyn Objective) -> Option<(f64, f64, f64)> {
+        None
+    }
+}
+
+/// Registry identifier of a pulse-level method.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Sgd,
+    TtV1,
+    TtV2,
+    Agad,
+    Residual,
+    Rider,
+    Erider,
+}
+
+/// Every registry name, in canonical (paper-table) order.
+pub const METHODS: &[&str] = &["sgd", "ttv1", "ttv2", "agad", "residual", "rider", "erider"];
+
+impl Method {
+    pub fn parse(name: &str) -> Option<Method> {
+        match name {
+            "sgd" => Some(Method::Sgd),
+            "ttv1" => Some(Method::TtV1),
+            "ttv2" => Some(Method::TtV2),
+            "agad" => Some(Method::Agad),
+            "residual" => Some(Method::Residual),
+            "rider" => Some(Method::Rider),
+            "erider" => Some(Method::Erider),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Sgd => "sgd",
+            Method::TtV1 => "ttv1",
+            Method::TtV2 => "ttv2",
+            Method::Agad => "agad",
+            Method::Residual => "residual",
+            Method::Rider => "rider",
+            Method::Erider => "erider",
+        }
+    }
+}
+
+/// Plain-data description of a pulse-level optimizer: the method name
+/// plus the union of the family's hyperparameters. Fields a method does
+/// not use are ignored by its builder (documented per field). Defaults
+/// are per-method (see [`OptimizerSpec::new`]).
+#[derive(Clone, Copy, Debug)]
+pub struct OptimizerSpec {
+    pub method: Method,
+    /// α — fast-array (or plain SGD) learning rate
+    pub lr_fast: f64,
+    /// β — transfer learning rate (unused by `sgd`)
+    pub lr_transfer: f64,
+    /// η — reference moving-average stepsize (RIDER Eq. 12; AGAD
+    /// flip-time refresh; unused by `sgd`/`ttv1`/`ttv2`)
+    pub eta: f64,
+    /// γ — residual / fast-array mixing weight in the logical weight
+    pub gamma: f64,
+    /// chopper flip probability p (Eq. 17); 0 disables chopping
+    pub flip_p: f64,
+    /// analog read-out noise std
+    pub read_noise: f64,
+    /// ZS calibration budget of the two-stage pipeline (`residual` only)
+    pub zs_pulses: u64,
+}
+
+impl OptimizerSpec {
+    /// The method's paper-default hyperparameters.
+    pub fn new(method: Method) -> OptimizerSpec {
+        let r = RiderHypers::default();
+        let mut s = OptimizerSpec {
+            method,
+            lr_fast: r.lr_fast,
+            lr_transfer: r.lr_transfer,
+            eta: r.eta,
+            gamma: r.gamma,
+            flip_p: r.flip_p,
+            read_noise: r.read_noise,
+            zs_pulses: 2000,
+        };
+        match method {
+            Method::Sgd => {
+                s.lr_fast = SgdHypers::default().lr;
+                s.eta = 0.0;
+                s.flip_p = 0.0;
+            }
+            Method::TtV1 | Method::TtV2 => {
+                let t = TtHypers::default();
+                s.lr_fast = t.lr_fast;
+                s.lr_transfer = t.lr_transfer;
+                s.read_noise = t.read_noise;
+                s.gamma = t.gamma;
+                s.eta = 0.0;
+                s.flip_p = 0.0;
+            }
+            Method::Agad => {
+                let a = AgadHypers::default();
+                s.lr_fast = a.lr_fast;
+                s.lr_transfer = a.lr_transfer;
+                s.eta = a.eta;
+                s.flip_p = a.flip_p;
+                s.read_noise = a.read_noise;
+                s.gamma = a.gamma;
+            }
+            // pure RIDER: no chopper
+            Method::Rider => s.flip_p = 0.0,
+            // E-RIDER: RiderHypers::default() as is
+            Method::Erider => {}
+            // stage 2 freezes the reference: η = p = 0 (Algorithm 4)
+            Method::Residual => {
+                s.eta = 0.0;
+                s.flip_p = 0.0;
+            }
+        }
+        s
+    }
+
+    /// Override hyperparameters from CLI flags (`--lr-fast`,
+    /// `--lr-transfer`, `--eta`, `--gamma`, `--flip-p`, `--read-noise`,
+    /// `--zs-pulses`); absent flags keep the spec's value.
+    pub fn apply_args(&mut self, args: &Args) {
+        self.lr_fast = args.get_f64("lr-fast", self.lr_fast);
+        self.lr_transfer = args.get_f64("lr-transfer", self.lr_transfer);
+        self.eta = args.get_f64("eta", self.eta);
+        self.gamma = args.get_f64("gamma", self.gamma);
+        self.flip_p = args.get_f64("flip-p", self.flip_p);
+        self.read_noise = args.get_f64("read-noise", self.read_noise);
+        self.zs_pulses = args.get_u64("zs-pulses", self.zs_pulses);
+    }
+
+    /// Override hyperparameters from a config-file section (underscore
+    /// keys: `lr_fast = 0.3`, ...); absent keys keep the spec's value.
+    pub fn apply_config(&mut self, cfg: &Config, section: &str) {
+        self.lr_fast = cfg.f64(section, "lr_fast", self.lr_fast);
+        self.lr_transfer = cfg.f64(section, "lr_transfer", self.lr_transfer);
+        self.eta = cfg.f64(section, "eta", self.eta);
+        self.gamma = cfg.f64(section, "gamma", self.gamma);
+        self.flip_p = cfg.f64(section, "flip_p", self.flip_p);
+        self.read_noise = cfg.f64(section, "read_noise", self.read_noise);
+        self.zs_pulses = cfg.f64(section, "zs_pulses", self.zs_pulses as f64) as u64;
+    }
+
+    fn rider_hypers(&self) -> RiderHypers {
+        RiderHypers {
+            lr_fast: self.lr_fast,
+            lr_transfer: self.lr_transfer,
+            eta: self.eta,
+            gamma: self.gamma,
+            flip_p: self.flip_p,
+            read_noise: self.read_noise,
+        }
+    }
+
+    fn tt_hypers(&self, variant: TtVariant) -> TtHypers {
+        TtHypers {
+            variant,
+            lr_fast: self.lr_fast,
+            lr_transfer: self.lr_transfer,
+            read_noise: self.read_noise,
+            gamma: self.gamma,
+        }
+    }
+
+    /// Instantiate the method on a freshly-sampled device tile:
+    /// per-cell SP ~ N(`ref_mean`, `ref_std`) under `preset`, gradient
+    /// noise scale `sigma`.
+    pub fn build(
+        &self,
+        dim: usize,
+        preset: &Preset,
+        ref_mean: f64,
+        ref_std: f64,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Box<dyn AnalogOptimizer> {
+        match self.method {
+            Method::Sgd => Box::new(AnalogSgd::new(
+                dim,
+                preset,
+                ref_mean,
+                ref_std,
+                SgdHypers { lr: self.lr_fast },
+                sigma,
+                rng,
+            )),
+            Method::TtV1 => Box::new(TikiTaka::new(
+                dim,
+                preset,
+                ref_mean,
+                ref_std,
+                self.tt_hypers(TtVariant::V1),
+                sigma,
+                rng,
+            )),
+            Method::TtV2 => Box::new(TikiTaka::new(
+                dim,
+                preset,
+                ref_mean,
+                ref_std,
+                self.tt_hypers(TtVariant::V2),
+                sigma,
+                rng,
+            )),
+            Method::Agad => Box::new(Agad::new(
+                dim,
+                preset,
+                ref_mean,
+                ref_std,
+                AgadHypers {
+                    lr_fast: self.lr_fast,
+                    lr_transfer: self.lr_transfer,
+                    eta: self.eta,
+                    flip_p: self.flip_p,
+                    read_noise: self.read_noise,
+                    gamma: self.gamma,
+                },
+                sigma,
+                rng,
+            )),
+            // stamp the selected registry name so hyper overrides (e.g.
+            // --flip-p on "rider") don't relabel the optimizer
+            Method::Rider | Method::Erider => Box::new(
+                Rider::new(
+                    dim,
+                    preset,
+                    ref_mean,
+                    ref_std,
+                    self.rider_hypers(),
+                    sigma,
+                    rng,
+                )
+                .with_name(self.method.name()),
+            ),
+            Method::Residual => Box::new(TwoStageResidual::new(
+                dim,
+                preset,
+                ref_mean,
+                ref_std,
+                ResidualHypers {
+                    rider: self.rider_hypers(),
+                    zs_pulses: self.zs_pulses,
+                },
+                sigma,
+                rng,
+            )),
+        }
+    }
+}
+
+/// Registry lookup: the default spec for a method name, mirroring
+/// `device::presets::preset`.
+pub fn spec(name: &str) -> Option<OptimizerSpec> {
+    Method::parse(name).map(OptimizerSpec::new)
+}
+
+/// Registry lookup that reports the available names on failure — the
+/// one error message every name-driven consumer shares.
+pub fn spec_or_err(name: &str) -> Result<OptimizerSpec, String> {
+    spec(name).ok_or_else(|| {
+        format!("unknown method '{name}' (registry: {})", METHODS.join(", "))
+    })
+}
+
+/// Validate a user-supplied method-name list against the registry,
+/// expanding the shorthand `"all"` and dropping duplicates (first
+/// occurrence wins, order preserved).
+pub fn resolve_names(names: &[String]) -> Result<Vec<String>, String> {
+    let mut out: Vec<String> = Vec::new();
+    let mut push = |out: &mut Vec<String>, n: &str| {
+        if !out.iter().any(|o| o == n) {
+            out.push(n.to_string());
+        }
+    };
+    for n in names {
+        if n == "all" {
+            for m in METHODS {
+                push(&mut out, m);
+            }
+        } else {
+            spec_or_err(n)?;
+            push(&mut out, n);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::optim::Quadratic;
+
+    #[test]
+    fn registry_covers_every_name() {
+        for name in METHODS {
+            let s = spec(name).expect(name);
+            assert_eq!(s.method.name(), *name);
+        }
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn every_method_builds_and_steps() {
+        let preset = presets::preset("om").unwrap();
+        for name in METHODS {
+            let mut rng = Rng::from_seed(5);
+            let obj = Quadratic::new(4, 1.0, 2.0, 0.3, &mut rng);
+            let mut opt = spec(name).unwrap().build(4, &preset, 0.3, 0.1, 0.1, &mut rng);
+            assert_eq!(opt.name(), *name, "registry name must round-trip");
+            for _ in 0..5 {
+                let l = opt.step(&obj, &mut rng);
+                assert!(l.is_finite(), "{name}: non-finite loss");
+            }
+            assert_eq!(opt.weights().len(), 4);
+            assert_eq!(opt.sp_reference().len(), 4);
+        }
+    }
+
+    #[test]
+    fn cli_flags_override_defaults() {
+        let toks: Vec<String> = ["x", "--lr-fast", "0.77", "--flip-p", "0.5", "--zs-pulses", "42"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse_tokens(&toks).unwrap();
+        let mut s = spec("erider").unwrap();
+        s.apply_args(&args);
+        assert_eq!(s.lr_fast, 0.77);
+        assert_eq!(s.flip_p, 0.5);
+        assert_eq!(s.zs_pulses, 42);
+        // untouched flags keep the method default
+        assert_eq!(s.eta, RiderHypers::default().eta);
+    }
+
+    #[test]
+    fn config_section_overrides_defaults() {
+        let cfg = Config::parse("[optimizer]\nlr_transfer = 0.5\neta = 0.25\n").unwrap();
+        let mut s = spec("rider").unwrap();
+        s.apply_config(&cfg, "optimizer");
+        assert_eq!(s.lr_transfer, 0.5);
+        assert_eq!(s.eta, 0.25);
+        assert_eq!(s.flip_p, 0.0, "rider stays chopper-free by default");
+    }
+
+    #[test]
+    fn resolve_expands_all_dedups_and_rejects_unknown() {
+        let all = resolve_names(&["all".to_string()]).unwrap();
+        assert_eq!(all.len(), METHODS.len());
+        // "all" plus an explicit repeat must not double-run a method
+        let deduped = resolve_names(&["erider".into(), "all".into()]).unwrap();
+        assert_eq!(deduped.len(), METHODS.len());
+        assert_eq!(deduped[0], "erider");
+        assert!(resolve_names(&["ttv2".into(), "bogus".into()]).is_err());
+    }
+}

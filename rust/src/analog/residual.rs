@@ -4,12 +4,31 @@
 //! This is the theoretical baseline of Corollary 3.9: total pulse cost
 //! O(K + N) = O(δ⁻² + δ⁻¹ Δw_min⁻¹) versus RIDER's O(δ⁻²).
 
+use crate::analog::optimizer::AnalogOptimizer;
 use crate::analog::pulse_counter::PulseCost;
 use crate::analog::rider::{Rider, RiderHypers};
 use crate::analog::zs::{self, ZsVariant};
 use crate::device::Preset;
 use crate::optim::Objective;
 use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ResidualHypers {
+    /// stage-2 residual-training hypers; eta and flip_p are forced to 0
+    /// at construction (the reference stays frozen after stage 1)
+    pub rider: RiderHypers,
+    /// stage-1 ZS pulse-cycle budget on the P array
+    pub zs_pulses: u64,
+}
+
+impl Default for ResidualHypers {
+    fn default() -> Self {
+        Self {
+            rider: RiderHypers::default(),
+            zs_pulses: 2000,
+        }
+    }
+}
 
 pub struct TwoStageResidual {
     pub inner: Rider,
@@ -18,25 +37,24 @@ pub struct TwoStageResidual {
 
 impl TwoStageResidual {
     /// Build the optimizer and immediately run the ZS stage with
-    /// `zs_pulses` pulse cycles on the P array.
-    #[allow(clippy::too_many_arguments)]
+    /// `hypers.zs_pulses` pulse cycles on the P array.
     pub fn new(
         dim: usize,
         preset: &Preset,
         ref_mean: f64,
         ref_std: f64,
-        mut hypers: RiderHypers,
+        hypers: ResidualHypers,
         sigma: f64,
-        zs_pulses: u64,
         rng: &mut Rng,
     ) -> Self {
         // stage 2 runs with the reference frozen
-        hypers.eta = 0.0;
-        hypers.flip_p = 0.0;
-        let mut inner = Rider::new(dim, preset, ref_mean, ref_std, hypers, sigma, rng);
+        let mut rh = hypers.rider;
+        rh.eta = 0.0;
+        rh.flip_p = 0.0;
+        let mut inner = Rider::new(dim, preset, ref_mean, ref_std, rh, sigma, rng);
         // stage 1: ZS on the P device
         let before = inner.p.pulse_count;
-        let res = zs::run(&mut inner.p, zs_pulses, ZsVariant::Cyclic, rng);
+        let res = zs::run(&mut inner.p, hypers.zs_pulses, ZsVariant::Cyclic, rng);
         inner.set_reference(res.estimate);
         let calibration_pulses = inner.p.pulse_count - before;
         Self {
@@ -44,17 +62,44 @@ impl TwoStageResidual {
             calibration_pulses,
         }
     }
+}
 
-    pub fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
+impl AnalogOptimizer for TwoStageResidual {
+    fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
         self.inner.step(obj, rng)
     }
 
-    pub fn cost(&self) -> PulseCost {
+    fn weights(&mut self) -> &[f32] {
+        self.inner.weights()
+    }
+
+    /// Replace the frozen reference (overrides the stage-1 ZS estimate).
+    fn set_reference(&mut self, q: Vec<f32>) {
+        self.inner.set_reference(q);
+    }
+
+    fn sp_reference(&self) -> &[f32] {
+        self.inner.sp_reference()
+    }
+
+    fn cost(&self) -> PulseCost {
         let mut c = self.inner.cost();
         // ZS pulses were counted into p.pulse_count; reclassify them.
         c.update_pulses -= self.calibration_pulses;
         c.calibration_pulses = self.calibration_pulses;
         c
+    }
+
+    fn name(&self) -> &'static str {
+        "residual"
+    }
+
+    fn sp_tracking_error(&self) -> Option<f64> {
+        Some(self.inner.q_tracking_error())
+    }
+
+    fn convergence_metrics(&mut self, obj: &dyn Objective) -> Option<(f64, f64, f64)> {
+        Some(self.inner.metrics(obj))
     }
 }
 
@@ -65,6 +110,13 @@ mod tests {
     use crate::optim::Quadratic;
     use crate::util::stats;
 
+    fn hypers(zs_pulses: u64) -> ResidualHypers {
+        ResidualHypers {
+            rider: RiderHypers::default(),
+            zs_pulses,
+        }
+    }
+
     #[test]
     fn well_calibrated_two_stage_converges() {
         let mut rng = Rng::from_seed(1);
@@ -74,9 +126,8 @@ mod tests {
             &presets::preset("om").unwrap(),
             0.4,
             0.1,
-            RiderHypers::default(),
+            hypers(4000),
             0.2,
-            4000,
             &mut rng,
         );
         let mut losses = Vec::new();
@@ -96,9 +147,8 @@ mod tests {
             &presets::preset("om").unwrap(),
             0.3,
             0.1,
-            RiderHypers::default(),
+            hypers(100),
             0.1,
-            100,
             &mut rng,
         );
         let c = opt.cost();
@@ -115,9 +165,8 @@ mod tests {
             &presets::preset("precise").unwrap(),
             0.4,
             0.1,
-            RiderHypers::default(),
+            hypers(20),
             0.1,
-            20,
             &mut rng,
         );
         let mut rng2 = Rng::from_seed(3);
@@ -126,9 +175,8 @@ mod tests {
             &presets::preset("precise").unwrap(),
             0.4,
             0.1,
-            RiderHypers::default(),
+            hypers(4000),
             0.1,
-            4000,
             &mut rng2,
         );
         assert!(

@@ -13,6 +13,7 @@
 //! the analog shadow Q~ is re-programmed from digital Q only on chopper
 //! flips (programming cost accounting below).
 
+use crate::analog::optimizer::AnalogOptimizer;
 use crate::analog::pulse_counter::PulseCost;
 use crate::device::{DeviceArray, Preset};
 use crate::optim::Objective;
@@ -57,6 +58,9 @@ pub struct Rider {
     pub hypers: RiderHypers,
     pub sigma: f64,
     pub programming_events: u64,
+    /// registry name; inferred from `flip_p` at construction, pinned by
+    /// the spec builder so hyper overrides don't relabel the method
+    name: &'static str,
     wbar_buf: Vec<f32>,
     grad_buf: Vec<f32>,
     dw_buf: Vec<f32>,
@@ -77,6 +81,7 @@ impl Rider {
             w: DeviceArray::sample(1, dim, preset, ref_mean, ref_std, 0.1, rng),
             q: vec![0.0; dim],
             c: 1.0,
+            name: if hypers.flip_p > 0.0 { "erider" } else { "rider" },
             hypers,
             sigma,
             programming_events: 0,
@@ -86,24 +91,67 @@ impl Rider {
         }
     }
 
-    /// Pre-set Q (two-stage Residual Learning uses a ZS estimate here,
-    /// then freezes it with eta = 0).
-    pub fn set_reference(&mut self, q: Vec<f32>) {
-        assert_eq!(q.len(), self.q.len());
-        self.q = q;
+    /// Pin the registry name (used by `OptimizerSpec::build`).
+    pub fn with_name(mut self, name: &'static str) -> Self {
+        self.name = name;
+        self
     }
 
-    /// Effective weights W-bar = W + gamma c (P - Q).
-    pub fn wbar(&mut self) -> &[f32] {
+    /// Recompute W-bar = W + gamma c (P - Q) into the scratch buffer.
+    /// Kept separate from [`Rider::wbar`] so `step` can borrow the
+    /// buffer alongside other fields without cloning it.
+    fn compute_wbar(&mut self) {
         let g = (self.hypers.gamma * self.c) as f32;
         for i in 0..self.q.len() {
             self.wbar_buf[i] = self.w.w[i] + g * (self.p.w[i] - self.q[i]);
         }
+    }
+
+    /// Effective weights W-bar = W + gamma c (P - Q).
+    pub fn wbar(&mut self) -> &[f32] {
+        self.compute_wbar();
         &self.wbar_buf
     }
 
+    /// ||Q - SP(P-device)||_mean — the SP-tracking error (Lemma 3.5).
+    pub fn q_tracking_error(&self) -> f64 {
+        let sps = self.p.symmetric_points();
+        self.q
+            .iter()
+            .zip(&sps)
+            .map(|(q, s)| (q - s).abs() as f64)
+            .sum::<f64>()
+            / self.q.len() as f64
+    }
+
+    /// Convergence metric terms of Eq. (14).
+    pub fn metrics(&mut self, obj: &dyn Objective) -> (f64, f64, f64) {
+        let w_err = match obj.optimum() {
+            Some(ws) => {
+                self.compute_wbar();
+                self.wbar_buf
+                    .iter()
+                    .zip(&ws)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+            }
+            None => f64::NAN,
+        };
+        let pq = self
+            .p
+            .w
+            .iter()
+            .zip(&self.q)
+            .map(|(p, q)| ((p - q) as f64).powi(2))
+            .sum::<f64>();
+        let g_sq = self.p.mean_g_sq() * self.p.len() as f64;
+        (w_err, pq, g_sq)
+    }
+}
+
+impl AnalogOptimizer for Rider {
     /// One E-RIDER iteration (Algorithm 3). Returns loss at W-bar.
-    pub fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
+    fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
         let h = self.hypers;
         // 1. chopper draw; on flip, the analog shadow Q~ is re-programmed
         //    from the digital Q (cost: one programming event per cell).
@@ -111,13 +159,11 @@ impl Rider {
             self.c = -self.c;
             self.programming_events += self.q.len() as u64;
         }
-        // 2. gradient at W-bar
-        let loss = {
-            let wbar = self.wbar();
-            obj.loss(wbar)
-        };
-        let wbar = self.wbar_buf.clone();
-        obj.noisy_grad(&wbar, self.sigma, rng, &mut self.grad_buf);
+        // 2. gradient at W-bar (the buffer and grad_buf are disjoint
+        //    fields, so no clone is needed to borrow both)
+        self.compute_wbar();
+        let loss = obj.loss(&self.wbar_buf);
+        obj.noisy_grad(&self.wbar_buf, self.sigma, rng, &mut self.grad_buf);
         // 3. P <- AnalogUpdate(P, -alpha c g)      (Eq. 18a)
         let ac = (h.lr_fast * self.c) as f32;
         for (d, g) in self.dw_buf.iter_mut().zip(&self.grad_buf) {
@@ -137,51 +183,42 @@ impl Rider {
         loss
     }
 
-    /// ||Q - SP(P-device)||_mean — the SP-tracking error (Lemma 3.5).
-    pub fn q_tracking_error(&self) -> f64 {
-        let sps = self.p.symmetric_points();
-        self.q
-            .iter()
-            .zip(&sps)
-            .map(|(q, s)| (q - s).abs() as f64)
-            .sum::<f64>()
-            / self.q.len() as f64
+    /// The logical weight is W-bar (what the forward pass sees), not the
+    /// raw W array.
+    fn weights(&mut self) -> &[f32] {
+        self.wbar()
     }
 
-    /// Convergence metric terms of Eq. (14).
-    pub fn metrics(&mut self, obj: &dyn Objective) -> (f64, f64, f64) {
-        let w_err = match obj.optimum() {
-            Some(ws) => {
-                let wbar = self.wbar().to_vec();
-                wbar.iter()
-                    .zip(&ws)
-                    .map(|(a, b)| ((a - b) as f64).powi(2))
-                    .sum::<f64>()
-            }
-            None => f64::NAN,
-        };
-        let pq = self
-            .p
-            .w
-            .iter()
-            .zip(&self.q)
-            .map(|(p, q)| ((p - q) as f64).powi(2))
-            .sum::<f64>();
-        let g_sq = self.p.mean_g_sq() * self.p.len() as f64;
-        (w_err, pq, g_sq)
+    /// Pre-set Q (two-stage Residual Learning uses a ZS estimate here,
+    /// then freezes it with eta = 0).
+    fn set_reference(&mut self, q: Vec<f32>) {
+        assert_eq!(q.len(), self.q.len());
+        self.q = q;
     }
 
-    pub fn weights(&self) -> &[f32] {
-        &self.w.w
+    fn sp_reference(&self) -> &[f32] {
+        &self.q
     }
 
-    pub fn cost(&self) -> PulseCost {
+    fn cost(&self) -> PulseCost {
         PulseCost {
             update_pulses: self.p.pulse_count + self.w.pulse_count,
             programming_events: self.programming_events,
             digital_ops: self.q.len() as u64,
             ..Default::default()
         }
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn sp_tracking_error(&self) -> Option<f64> {
+        Some(self.q_tracking_error())
+    }
+
+    fn convergence_metrics(&mut self, obj: &dyn Objective) -> Option<(f64, f64, f64)> {
+        Some(self.metrics(obj))
     }
 }
 
@@ -301,6 +338,7 @@ mod tests {
         }
         assert_eq!(opt.c, 1.0);
         assert_eq!(opt.programming_events, 0);
+        assert_eq!(opt.name(), "rider");
     }
 
     #[test]
@@ -308,14 +346,22 @@ mod tests {
         // the headline ordering at theory scale: RIDER's compensated
         // iterate ends closer to the optimum than raw analog SGD when the
         // SP is far from 0 and gradients are noisy.
-        use crate::analog::sgd::AnalogSgd;
+        use crate::analog::sgd::{AnalogSgd, SgdHypers};
         let mut rng = Rng::from_seed(5);
         let obj = Quadratic {
             lambda: vec![1.0; 8],
             w_star: vec![0.1; 8],
         };
         let preset = presets::preset("om").unwrap();
-        let mut sgd = AnalogSgd::new(8, &preset, 0.7, 0.05, 0.05, 0.5, &mut rng);
+        let mut sgd = AnalogSgd::new(
+            8,
+            &preset,
+            0.7,
+            0.05,
+            SgdHypers { lr: 0.05 },
+            0.5,
+            &mut rng,
+        );
         let mut rider = Rider::new(
             8,
             &preset,
@@ -336,10 +382,7 @@ mod tests {
                 .sum::<f64>()
         };
         let d_sgd = dist(sgd.weights());
-        let d_rider = {
-            let wb = rider.wbar().to_vec();
-            dist(&wb)
-        };
+        let d_rider = dist(rider.wbar());
         assert!(
             d_rider < d_sgd,
             "rider {d_rider} should beat sgd {d_sgd} under SP offset"

@@ -1,15 +1,31 @@
 //! Analog SGD (paper Eq. 2 applied directly): the baseline whose bias
 //! towards the device SP (Eq. 4) motivates everything else.
 
+use crate::analog::optimizer::AnalogOptimizer;
 use crate::analog::pulse_counter::PulseCost;
 use crate::device::{DeviceArray, Preset};
 use crate::optim::Objective;
 use crate::util::rng::Rng;
 
+#[derive(Clone, Copy, Debug)]
+pub struct SgdHypers {
+    /// α — learning rate
+    pub lr: f64,
+}
+
+impl Default for SgdHypers {
+    fn default() -> Self {
+        Self { lr: 0.05 }
+    }
+}
+
 pub struct AnalogSgd {
     pub w: DeviceArray,
-    pub alpha: f64,
+    pub hypers: SgdHypers,
     pub sigma: f64,
+    /// stored reference; Analog SGD has no compensation path, so this
+    /// is inspectable (`sp_reference`) but never applied
+    q: Vec<f32>,
     grad_buf: Vec<f32>,
     dw_buf: Vec<f32>,
 }
@@ -20,39 +36,55 @@ impl AnalogSgd {
         preset: &Preset,
         ref_mean: f64,
         ref_std: f64,
-        alpha: f64,
+        hypers: SgdHypers,
         sigma: f64,
         rng: &mut Rng,
     ) -> Self {
         Self {
             w: DeviceArray::sample(1, dim, preset, ref_mean, ref_std, 0.1, rng),
-            alpha,
+            hypers,
             sigma,
+            q: vec![0.0; dim],
             grad_buf: vec![0.0; dim],
             dw_buf: vec![0.0; dim],
         }
     }
+}
 
+impl AnalogOptimizer for AnalogSgd {
     /// One SGD step; returns the loss at the pre-step iterate.
-    pub fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
+    fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
         let loss = obj.loss(&self.w.w);
         obj.noisy_grad(&self.w.w, self.sigma, rng, &mut self.grad_buf);
         for (d, g) in self.dw_buf.iter_mut().zip(&self.grad_buf) {
-            *d = (-self.alpha * *g as f64) as f32;
+            *d = (-self.hypers.lr * *g as f64) as f32;
         }
         self.w.analog_update(&self.dw_buf, rng);
         loss
     }
 
-    pub fn weights(&self) -> &[f32] {
+    fn weights(&mut self) -> &[f32] {
         &self.w.w
     }
 
-    pub fn cost(&self) -> PulseCost {
+    fn set_reference(&mut self, q: Vec<f32>) {
+        assert_eq!(q.len(), self.q.len());
+        self.q = q;
+    }
+
+    fn sp_reference(&self) -> &[f32] {
+        &self.q
+    }
+
+    fn cost(&self) -> PulseCost {
         PulseCost {
             update_pulses: self.w.pulse_count,
             ..Default::default()
         }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
     }
 }
 
@@ -68,7 +100,13 @@ mod tests {
         let mut rng = Rng::from_seed(1);
         let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
         let mut opt = AnalogSgd::new(
-            16, &presets::preset("ideal").unwrap(), 0.0, 0.0, 0.05, 0.01, &mut rng,
+            16,
+            &presets::preset("ideal").unwrap(),
+            0.0,
+            0.0,
+            SgdHypers { lr: 0.05 },
+            0.01,
+            &mut rng,
         );
         let mut losses = Vec::new();
         for _ in 0..2000 {
@@ -89,7 +127,13 @@ mod tests {
             w_star: vec![0.0; 8],
         };
         let mut opt = AnalogSgd::new(
-            8, &presets::preset("om").unwrap(), 0.6, 0.05, 0.05, 0.5, &mut rng,
+            8,
+            &presets::preset("om").unwrap(),
+            0.6,
+            0.05,
+            SgdHypers { lr: 0.05 },
+            0.5,
+            &mut rng,
         );
         for _ in 0..4000 {
             opt.step(&obj, &mut rng);
@@ -104,7 +148,13 @@ mod tests {
         let mut rng = Rng::from_seed(3);
         let obj = Quadratic::new(4, 1.0, 1.0, 0.3, &mut rng);
         let mut opt = AnalogSgd::new(
-            4, &presets::preset("om").unwrap(), 0.0, 0.0, 0.1, 0.0, &mut rng,
+            4,
+            &presets::preset("om").unwrap(),
+            0.0,
+            0.0,
+            SgdHypers { lr: 0.1 },
+            0.0,
+            &mut rng,
         );
         for _ in 0..10 {
             opt.step(&obj, &mut rng);

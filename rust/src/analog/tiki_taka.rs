@@ -5,6 +5,7 @@
 //! v2. Both assume the reference `q` equals the A-device SP; the paper's
 //! point is that a nonzero/unknown SP breaks that assumption.
 
+use crate::analog::optimizer::AnalogOptimizer;
 use crate::analog::pulse_counter::PulseCost;
 use crate::device::{DeviceArray, Preset};
 use crate::optim::Objective;
@@ -16,6 +17,33 @@ pub enum TtVariant {
     V2,
 }
 
+#[derive(Clone, Copy, Debug)]
+pub struct TtHypers {
+    pub variant: TtVariant,
+    /// A-array learning rate
+    pub lr_fast: f64,
+    /// A → W transfer learning rate
+    pub lr_transfer: f64,
+    /// analog read-out noise std
+    pub read_noise: f64,
+    /// mixing weight γ_tt of the fast array in the forward pass: the
+    /// logical weight is W_eff = W + γ_tt (A − q) (AIHWKit transfer
+    /// compound)
+    pub gamma: f64,
+}
+
+impl Default for TtHypers {
+    fn default() -> Self {
+        Self {
+            variant: TtVariant::V2,
+            lr_fast: 0.1,
+            lr_transfer: 0.05,
+            read_noise: 0.01,
+            gamma: 1.0,
+        }
+    }
+}
+
 pub struct TikiTaka {
     pub a: DeviceArray,
     pub w: DeviceArray,
@@ -23,30 +51,22 @@ pub struct TikiTaka {
     pub h: Vec<f32>,
     /// assumed reference (SP estimate; zero unless calibrated)
     pub q: Vec<f32>,
-    pub variant: TtVariant,
-    pub lr_fast: f64,
-    pub lr_transfer: f64,
+    pub hypers: TtHypers,
+    /// v2 transfer threshold, derived from the preset granularity
     pub thresh: f64,
-    pub read_noise: f64,
     pub sigma: f64,
-    /// mixing weight of the fast array in the forward pass: the logical
-    /// weight is W_eff = W + gamma_tt (A - q) (AIHWKit transfer compound)
-    pub gamma_tt: f64,
     grad_buf: Vec<f32>,
     dw_buf: Vec<f32>,
     weff_buf: Vec<f32>,
 }
 
 impl TikiTaka {
-    #[allow(clippy::too_many_arguments)]
     pub fn new(
         dim: usize,
         preset: &Preset,
         ref_mean: f64,
         ref_std: f64,
-        variant: TtVariant,
-        lr_fast: f64,
-        lr_transfer: f64,
+        hypers: TtHypers,
         sigma: f64,
         rng: &mut Rng,
     ) -> Self {
@@ -57,52 +77,45 @@ impl TikiTaka {
             w,
             h: vec![0.0; dim],
             q: vec![0.0; dim],
-            variant,
-            lr_fast,
-            lr_transfer,
+            hypers,
             thresh: preset.dw_min.max(1e-3),
-            read_noise: 0.01,
             sigma,
-            gamma_tt: 1.0,
             grad_buf: vec![0.0; dim],
             dw_buf: vec![0.0; dim],
             weff_buf: vec![0.0; dim],
         }
     }
 
-    /// Logical (effective) weights W + gamma_tt (A - q).
+    /// Logical (effective) weights W + γ_tt (A − q).
     pub fn w_eff(&mut self) -> &[f32] {
-        let g = self.gamma_tt as f32;
+        let g = self.hypers.gamma as f32;
         for i in 0..self.weff_buf.len() {
             self.weff_buf[i] = self.w.w[i] + g * (self.a.w[i] - self.q[i]);
         }
         &self.weff_buf
     }
+}
 
-    /// Calibrate the reference to an SP estimate (two-stage pipelines).
-    pub fn set_reference(&mut self, q: Vec<f32>) {
-        assert_eq!(q.len(), self.q.len());
-        self.q = q;
-    }
-
-    pub fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
+impl AnalogOptimizer for TikiTaka {
+    fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
         // gradient at the effective (combined) weight: the A-array is part
         // of the logical weight, which is what damps the A->W transfer
         // loop (proportional + integral control).
-        let weff = self.w_eff().to_vec();
-        let loss = obj.loss(&weff);
-        obj.noisy_grad(&weff, self.sigma, rng, &mut self.grad_buf);
+        let h = self.hypers;
+        self.w_eff();
+        let loss = obj.loss(&self.weff_buf);
+        obj.noisy_grad(&self.weff_buf, self.sigma, rng, &mut self.grad_buf);
         // A <- AnalogUpdate(A, -lr_fast * g)
         for (d, g) in self.dw_buf.iter_mut().zip(&self.grad_buf) {
-            *d = (-self.lr_fast * *g as f64) as f32;
+            *d = (-h.lr_fast * *g as f64) as f32;
         }
         self.a.analog_update(&self.dw_buf, rng);
         // reference-corrected read
-        let r = self.a.read(self.read_noise, rng);
-        match self.variant {
+        let r = self.a.read(h.read_noise, rng);
+        match h.variant {
             TtVariant::V1 => {
                 for i in 0..r.len() {
-                    self.dw_buf[i] = (self.lr_transfer * (r[i] - self.q[i]) as f64) as f32;
+                    self.dw_buf[i] = (h.lr_transfer * (r[i] - self.q[i]) as f64) as f32;
                 }
                 self.w.analog_update(&self.dw_buf, rng);
             }
@@ -111,7 +124,7 @@ impl TikiTaka {
                 for i in 0..r.len() {
                     self.h[i] += r[i] - self.q[i];
                     let quanta = (self.h[i] / t).trunc();
-                    self.dw_buf[i] = (self.lr_transfer * (quanta * t) as f64) as f32;
+                    self.dw_buf[i] = (h.lr_transfer * (quanta * t) as f64) as f32;
                     self.h[i] -= quanta * t;
                 }
                 self.w.analog_update(&self.dw_buf, rng);
@@ -120,19 +133,36 @@ impl TikiTaka {
         loss
     }
 
-    pub fn weights(&mut self) -> &[f32] {
+    fn weights(&mut self) -> &[f32] {
         self.w_eff()
     }
 
-    pub fn cost(&self) -> PulseCost {
+    /// Calibrate the reference to an SP estimate (two-stage pipelines).
+    fn set_reference(&mut self, q: Vec<f32>) {
+        assert_eq!(q.len(), self.q.len());
+        self.q = q;
+    }
+
+    fn sp_reference(&self) -> &[f32] {
+        &self.q
+    }
+
+    fn cost(&self) -> PulseCost {
         PulseCost {
             update_pulses: self.a.pulse_count + self.w.pulse_count,
-            digital_ops: if self.variant == TtVariant::V2 {
+            digital_ops: if self.hypers.variant == TtVariant::V2 {
                 self.h.len() as u64
             } else {
                 0
             },
             ..Default::default()
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self.hypers.variant {
+            TtVariant::V1 => "ttv1",
+            TtVariant::V2 => "ttv2",
         }
     }
 }
@@ -144,6 +174,13 @@ mod tests {
     use crate::optim::Quadratic;
     use crate::util::stats;
 
+    fn hypers(variant: TtVariant) -> TtHypers {
+        TtHypers {
+            variant,
+            ..TtHypers::default()
+        }
+    }
+
     fn run(variant: TtVariant, ref_mean: f64, steps: usize, seed: u64) -> (f64, f64) {
         let mut rng = Rng::from_seed(seed);
         let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
@@ -152,9 +189,7 @@ mod tests {
             &presets::preset("om").unwrap(),
             ref_mean,
             0.1,
-            variant,
-            0.1,
-            0.05,
+            hypers(variant),
             0.1,
             &mut rng,
         );
@@ -189,9 +224,7 @@ mod tests {
             &presets::preset("om").unwrap(),
             0.0,
             0.0,
-            TtVariant::V2,
-            0.1,
-            0.05,
+            hypers(TtVariant::V2),
             0.1,
             &mut rng,
         );
@@ -210,7 +243,7 @@ mod tests {
         let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
         let preset = presets::preset("om").unwrap();
         let mk = |rng: &mut Rng| {
-            TikiTaka::new(16, &preset, 0.6, 0.1, TtVariant::V2, 0.1, 0.05, 0.3, rng)
+            TikiTaka::new(16, &preset, 0.6, 0.1, hypers(TtVariant::V2), 0.3, rng)
         };
         let mut uncal = mk(&mut rng);
         let mut cal = mk(&mut rng);

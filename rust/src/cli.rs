@@ -77,6 +77,19 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Comma-separated string list (`--methods sgd,ttv2,erider`).
+    pub fn get_str_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(s) => s
+                .split(',')
+                .map(|t| t.trim())
+                .filter(|t| !t.is_empty())
+                .map(|t| t.to_string())
+                .collect(),
+        }
+    }
+
     /// Comma-separated f64 list.
     pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
         match self.get(key) {
@@ -113,6 +126,13 @@ mod tests {
         let a = Args::parse_tokens(&toks("x --lr=0.5 --list=1,2,3")).unwrap();
         assert_eq!(a.get_f64("lr", 0.0), 0.5);
         assert_eq!(a.get_f64_list("list", &[]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn str_lists() {
+        let a = Args::parse_tokens(&toks("x --methods sgd,ttv2,,erider")).unwrap();
+        assert_eq!(a.get_str_list("methods", &[]), vec!["sgd", "ttv2", "erider"]);
+        assert_eq!(a.get_str_list("missing", &["a", "b"]), vec!["a", "b"]);
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! Theory validation: Theorem 2.2 (ZS rate + Θ(Δw) floor), Theorem C.2
 //! (last-iterate geometric convergence), Theorem 3.7 (RIDER O(1/sqrt K)
 //! on a strongly convex quadratic), Corollary 3.9 (pulse-complexity
-//! crossover vs the two-stage pipeline), Lemma 3.10 (filter response).
+//! crossover across the whole method family), Lemma 3.10 (filter
+//! response).
+//!
+//! The cross-method comparisons are name-driven through the optimizer
+//! registry (`analog::optimizer`): `rider theory --method a,b,...`
+//! selects which family members appear in the Cor 3.9 table.
 
-use crate::analog::rider::{Rider, RiderHypers};
-use crate::analog::residual::TwoStageResidual;
+use crate::analog::optimizer::{self, AnalogOptimizer as _};
 use crate::analog::zs::{self, ZsVariant};
 use crate::coordinator::metrics::RunDir;
 use crate::device::{presets, DeviceArray};
@@ -13,7 +17,11 @@ use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::table::Table;
 
-pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
+/// Methods the Cor 3.9 comparison runs when `--method` is not given:
+/// the paper's headline pair.
+pub const DEFAULT_METHODS: &[&str] = &["erider", "residual"];
+
+pub fn run(seed: u64, methods: &[String]) -> anyhow::Result<Vec<Table>> {
     let rd = RunDir::create("theory")?;
     let mut out = Vec::new();
 
@@ -49,21 +57,24 @@ pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
     rd.write_table("thmC2", &t2)?;
     out.push(t2);
 
-    // --- Theorem 3.7: RIDER error metric E_K ~ O(1/sqrt(K)) + floor
+    // --- Theorem 3.7: E-RIDER error metric E_K ~ O(1/sqrt(K)) + floor,
+    //     built by name so the Eq. 14 terms come through the trait.
     let mut t3 = Table::new(
         "Thm 3.7: RIDER E_K terms vs K (strongly convex quadratic)",
         &["K", "||W-W*||^2", "||P-Q||^2", "||G_p(P)||^2"],
     );
+    let erider = optimizer::spec("erider")
+        .expect("erider is a registry method");
     for &k_total in &[500usize, 2000, 8000] {
         let mut rng = Rng::new(seed, k_total as u64);
         let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
-        let mut opt = Rider::new(
-            16, &presets::PRECISE, 0.4, 0.1, RiderHypers::default(), 0.3, &mut rng,
-        );
+        let mut opt = erider.build(16, &presets::PRECISE, 0.4, 0.1, 0.3, &mut rng);
         let (mut sw, mut spq, mut sg) = (0.0, 0.0, 0.0);
         for _ in 0..k_total {
             opt.step(&obj, &mut rng);
-            let (a, b, c) = opt.metrics(&obj);
+            let (a, b, c) = opt
+                .convergence_metrics(&obj)
+                .expect("erider reports the Eq. 14 terms");
             sw += a;
             spq += b;
             sg += c;
@@ -79,54 +90,40 @@ pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
     rd.write_table("thm37", &t3)?;
     out.push(t3);
 
-    // --- Corollary 3.9: total pulses to a target loss, RIDER vs two-stage
+    // --- Corollary 3.9: total pulses to a target loss, across the
+    //     requested slice of the method family (registry-driven).
     let mut t4 = Table::new(
-        "Cor 3.9: pulses to reach loss<=0.05, RIDER vs two-stage ZS+Residual",
-        &["method", "calib pulses", "update pulses", "total"],
+        "Cor 3.9: pulses to reach loss<=0.05 (EMA), by method",
+        &["method", "calib pulses", "update pulses", "prog events", "total", "steps"],
     );
-    {
+    let target = 0.05;
+    let max_steps = 30_000;
+    for name in methods {
+        let spec = optimizer::spec_or_err(name).map_err(|e| anyhow::anyhow!(e))?;
         let mut rng = Rng::new(seed, 99);
         let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
-        let target = 0.05;
-        // RIDER: no calibration stage
-        let mut rider = Rider::new(
-            16, &presets::PRECISE, 0.4, 0.1, RiderHypers::default(), 0.3, &mut rng,
-        );
+        let mut opt = spec.build(16, &presets::PRECISE, 0.4, 0.1, 0.3, &mut rng);
         let mut ema = f64::NAN;
-        for _ in 0..30000 {
-            let l = rider.step(&obj, &mut rng);
+        let mut steps = None;
+        for k in 0..max_steps {
+            let l = opt.step(&obj, &mut rng);
             ema = if ema.is_nan() { l } else { 0.98 * ema + 0.02 * l };
             if ema < target {
+                steps = Some(k + 1);
                 break;
             }
         }
-        let rc = rider.cost();
+        let c = opt.cost();
         t4.row(vec![
-            "RIDER".into(),
-            rc.calibration_pulses.to_string(),
-            rc.update_pulses.to_string(),
-            rc.total_pulses().to_string(),
-        ]);
-        // two-stage with a pulse budget scaled to 1/dw_min (Thm 2.2)
-        let zs_budget = (2.0 / presets::PRECISE.dw_min) as u64;
-        let mut two = TwoStageResidual::new(
-            16, &presets::PRECISE, 0.4, 0.1, RiderHypers::default(), 0.3,
-            zs_budget, &mut rng,
-        );
-        let mut ema = f64::NAN;
-        for _ in 0..30000 {
-            let l = two.step(&obj, &mut rng);
-            ema = if ema.is_nan() { l } else { 0.98 * ema + 0.02 * l };
-            if ema < target {
-                break;
-            }
-        }
-        let tc = two.cost();
-        t4.row(vec![
-            "two-stage ZS+Residual".into(),
-            tc.calibration_pulses.to_string(),
-            tc.update_pulses.to_string(),
-            tc.total_pulses().to_string(),
+            name.clone(),
+            c.calibration_pulses.to_string(),
+            c.update_pulses.to_string(),
+            c.programming_events.to_string(),
+            c.total_pulses().to_string(),
+            match steps {
+                Some(k) => k.to_string(),
+                None => format!(">{max_steps}"),
+            },
         ]);
     }
     rd.write_table("cor39", &t4)?;

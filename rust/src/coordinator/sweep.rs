@@ -2,8 +2,17 @@
 //! behind Tables 1/2/8 and Fig. 4. Rust-native (device-substrate)
 //! experiments fan out over worker threads; HLO-driven sweeps run on one
 //! PJRT client (the artifacts themselves are multi-threaded by XLA).
+//!
+//! [`pulse_robustness_grid`] is the pulse-level twin of the NN-scale
+//! `training::robustness_grid`: methods are addressed by registry name
+//! and instantiated per cell through `OptimizerSpec::build`.
 
+use crate::analog::optimizer::{self, AnalogOptimizer as _, OptimizerSpec};
+use crate::device::Preset;
+use crate::optim::Quadratic;
+use crate::util::rng::Rng;
 use crate::util::stats;
+use crate::util::table::Table;
 
 /// One cell of a robustness grid: per-seed metric samples.
 #[derive(Clone, Debug, Default)]
@@ -93,9 +102,109 @@ where
     grid
 }
 
+/// Scale parameters of a pulse-level robustness sweep (one quadratic
+/// objective per cell, methods built from the registry).
+pub struct PulseSweep<'a> {
+    pub dim: usize,
+    pub preset: &'a Preset,
+    /// optimizer steps per cell; the metric is the mean loss over the
+    /// final fifth of the run
+    pub steps: usize,
+    /// gradient-noise scale of the stochastic oracle
+    pub sigma: f64,
+    pub threads: usize,
+}
+
+/// Tail-mean loss of one (method, mean, std, seed) cell. The stream id
+/// is derived from the cell coordinates so every cell is deterministic
+/// regardless of thread interleaving.
+fn pulse_cell(spec: &OptimizerSpec, p: &PulseSweep, m: f64, s: f64, seed: u64) -> f64 {
+    let stream = m.to_bits() ^ s.to_bits().rotate_left(17);
+    let mut rng = Rng::new(seed, stream);
+    let obj = Quadratic::new(p.dim, 1.0, 4.0, 0.3, &mut rng);
+    let mut opt = spec.build(p.dim, p.preset, m, s, p.sigma, &mut rng);
+    let tail_n = (p.steps / 5).max(1);
+    let mut tail = 0.0;
+    for k in 0..p.steps {
+        let l = opt.step(&obj, &mut rng);
+        if k + tail_n >= p.steps {
+            tail += l;
+        }
+    }
+    tail / tail_n as f64
+}
+
+/// Sweep prebuilt (label, spec) pairs — the core the name-driven entry
+/// point wraps; use this when specs carry CLI/config hyper overrides.
+pub fn pulse_robustness_grid_specs(
+    specs: &[(String, OptimizerSpec)],
+    means: &[f64],
+    stds: &[f64],
+    seeds: &[u64],
+    p: &PulseSweep,
+) -> Vec<(String, Grid)> {
+    specs
+        .iter()
+        .map(|(name, spec)| {
+            let grid = run_grid(means, stds, seeds, p.threads, |m, s, seed| {
+                pulse_cell(spec, p, m, s, seed)
+            });
+            (name.clone(), grid)
+        })
+        .collect()
+}
+
+/// Name-driven pulse-level robustness sweep: one [`Grid`] per method,
+/// fanned out over worker threads. Unknown names error with the
+/// registry listing.
+pub fn pulse_robustness_grid(
+    methods: &[String],
+    means: &[f64],
+    stds: &[f64],
+    seeds: &[u64],
+    p: &PulseSweep,
+) -> anyhow::Result<Vec<(String, Grid)>> {
+    let specs = methods
+        .iter()
+        .map(|name| {
+            optimizer::spec_or_err(name)
+                .map(|s| (name.clone(), s))
+                .map_err(|e| anyhow::anyhow!(e))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(pulse_robustness_grid_specs(&specs, means, stds, seeds, p))
+}
+
+/// Render per-method grids in the Tables 1–2 layout: one row per
+/// method, one `mean±std` column per (ref_mean, ref_std) cell.
+pub fn render_pulse_grid(title: &str, grids: &[(String, Grid)]) -> Table {
+    let Some((_, g0)) = grids.first() else {
+        return Table::new(title, &["method"]);
+    };
+    let mut headers = vec!["method".to_string()];
+    for &m in &g0.means {
+        for &s in &g0.stds {
+            headers.push(format!("m={m:.2} s={s:.2}"));
+        }
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
+    let mut t = Table::new(title, &hrefs);
+    for (name, g) in grids {
+        let mut row = vec![name.clone()];
+        for mi in 0..g.means.len() {
+            for si in 0..g.stds.len() {
+                row.push(g.cell(mi, si).pm());
+            }
+        }
+        t.row(row);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::presets;
 
     #[test]
     fn grid_runs_all_combinations() {
@@ -122,5 +231,32 @@ mod tests {
         assert!((c.mean() - 92.0).abs() < 1e-12);
         assert!((c.std() - 2.0).abs() < 1e-12);
         assert!(c.pm().starts_with("92.00±"));
+    }
+
+    #[test]
+    fn pulse_grid_is_name_driven_and_full() {
+        let preset = presets::preset("om").unwrap();
+        let p = PulseSweep {
+            dim: 4,
+            preset: &preset,
+            steps: 50,
+            sigma: 0.2,
+            threads: 2,
+        };
+        let methods = vec!["sgd".to_string(), "erider".to_string()];
+        let grids =
+            pulse_robustness_grid(&methods, &[0.0, 0.4], &[0.1], &[1, 2], &p).unwrap();
+        assert_eq!(grids.len(), 2);
+        for (_, g) in &grids {
+            for mi in 0..2 {
+                assert_eq!(g.cell(mi, 0).samples.len(), 2);
+                assert!(g.cell(mi, 0).samples.iter().all(|l| l.is_finite()));
+            }
+        }
+        let t = render_pulse_grid("t", &grids);
+        assert!(t.render().contains("erider"));
+        // unknown names are rejected with the registry listing
+        assert!(pulse_robustness_grid(&["nope".to_string()], &[0.0], &[0.1], &[1], &p)
+            .is_err());
     }
 }

@@ -6,7 +6,8 @@
 //! * L1/L2 (build-time Python): Pallas kernels + JAX models/algorithms,
 //!   AOT-lowered to HLO text artifacts.
 //! * L3 (this crate): pulse-accurate device substrate, the algorithm
-//!   family at pulse level, the PJRT runtime that executes the AOT
+//!   family at pulse level (unified behind `analog::AnalogOptimizer`
+//!   and its name registry), the PJRT runtime that executes the AOT
 //!   artifacts, the training coordinator, and the experiment harness
 //!   that regenerates every figure and table of the paper.
 

@@ -25,6 +25,15 @@ fn ctx_seeds(args: &Args) -> Vec<u64> {
     (1..=n as u64).collect()
 }
 
+/// Registry method list from `--method` / `--methods` (both spellings
+/// accepted — the hand-rolled parser ignores unknown flags, so a typo'd
+/// spelling would otherwise silently fall back to the default set).
+fn method_list(args: &Args, default: &[&str]) -> anyhow::Result<Vec<String>> {
+    let key = if args.get("methods").is_some() { "methods" } else { "method" };
+    analog_rider::analog::optimizer::resolve_names(&args.get_str_list(key, default))
+        .map_err(|e| anyhow::anyhow!(e))
+}
+
 fn dispatch(args: &Args) -> anyhow::Result<()> {
     match args.subcommand.as_str() {
         "" | "help" => {
@@ -39,11 +48,16 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                  \u{20}  rider fig5   [--steps N] [--seeds K]\n\
                  \u{20}  rider table1 | table2 | table8  [--steps N] [--seeds K]\n\
                  \u{20}  rider ablations [--steps N]\n\
-                 \u{20}  rider theory [--seed S]\n\
+                 \u{20}  rider theory [--seed S] [--method[s] erider,residual|all]\n\
                  \n\
-                 generic:\n\
+                 generic (pulse-level methods by registry name:\n\
+                 \u{20}   sgd|ttv1|ttv2|agad|residual|rider|erider):\n\
                  \u{20}  rider train --model fcn --algo erider [--steps N] [--ref-mean M]\n\
                  \u{20}             [--ref-std S] [--preset hfo2|om|precise|ideal]\n\
+                 \u{20}  rider psweep [--method[s] a,b|all] [--means ..] [--stds ..]\n\
+                 \u{20}             [--steps N] [--seeds K] [--dim D] [--preset om]\n\
+                 \u{20}             [--lr-fast A] [--lr-transfer B] [--eta E] [--flip-p P]\n\
+                 \u{20}             [--config file.toml]   ([optimizer] section)\n\
                  \u{20}  rider calibrate --pulses N [--side 128] [--dw-min 1e-3]\n\
                  \u{20}  rider all    (reduced-size full suite; writes runs/)"
             );
@@ -64,9 +78,63 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         "theory" => {
-            for t in theory::run(args.get_u64("seed", 7))? {
+            let methods = method_list(args, theory::DEFAULT_METHODS)?;
+            for t in theory::run(args.get_u64("seed", 7), &methods)? {
                 print!("{}", t.render());
             }
+            Ok(())
+        }
+        "psweep" => {
+            use analog_rider::coordinator::sweep;
+            use analog_rider::device::presets;
+            let methods = method_list(args, &["sgd", "ttv2", "agad", "erider"])?;
+            let means = args.get_f64_list("means", &[0.0, 0.4]);
+            let stds = args.get_f64_list("stds", &[0.05, 0.2]);
+            let seeds: Vec<u64> = (1..=args.get_u64("seeds", 3)).collect();
+            let preset_name = args.get_str("preset", "om");
+            let preset = presets::preset(&preset_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown preset {preset_name}"))?;
+            let threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4);
+            let p = sweep::PulseSweep {
+                dim: args.get_usize("dim", 16),
+                preset: &preset,
+                steps: args.get_usize("steps", 2000),
+                sigma: args.get_f64("sigma", 0.3),
+                threads: args.get_usize("threads", threads),
+            };
+            // registry defaults, overridable via a config file's
+            // [optimizer] section and then per-run --lr-fast etc.
+            let cfg = match args.get("config") {
+                Some(path) => Some(
+                    analog_rider::config::Config::load(path)
+                        .map_err(|e| anyhow::anyhow!(e))?,
+                ),
+                None => None,
+            };
+            let specs: Vec<_> = methods
+                .iter()
+                .map(|name| {
+                    let mut s = analog_rider::analog::optimizer::spec(name)
+                        .expect("resolve_names validated the name");
+                    if let Some(cfg) = &cfg {
+                        s.apply_config(cfg, "optimizer");
+                    }
+                    s.apply_args(args);
+                    (name.clone(), s)
+                })
+                .collect();
+            let grids = sweep::pulse_robustness_grid_specs(&specs, &means, &stds, &seeds, &p);
+            let t = sweep::render_pulse_grid(
+                &format!(
+                    "Pulse-level robustness: tail loss over (ref mean x ref std), \
+                     preset {preset_name}, {} steps",
+                    p.steps
+                ),
+                &grids,
+            );
+            print!("{}", t.render());
             Ok(())
         }
         "calibrate" => {
@@ -191,7 +259,9 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                     };
                     let (a, b) = fig1::run(&p)?;
                     print!("{}{}", a.render(), b.render());
-                    for t in theory::run(7)? {
+                    let methods: Vec<String> =
+                        theory::DEFAULT_METHODS.iter().map(|s| s.to_string()).collect();
+                    for t in theory::run(7, &methods)? {
                         print!("{}", t.render());
                     }
                     print!("{}", theory::fig3(0.1)?.render());

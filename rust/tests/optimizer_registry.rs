@@ -1,0 +1,98 @@
+//! Generic PulseCost accounting across the whole optimizer registry:
+//! every method must build from its spec, accumulate update pulses,
+//! keep its cost counters monotone, and charge programming events only
+//! when the chopper is active. A method added to the registry is
+//! covered here with no further edits.
+
+use analog_rider::analog::optimizer::{self, AnalogOptimizer, OptimizerSpec};
+use analog_rider::device::presets;
+use analog_rider::optim::Quadratic;
+use analog_rider::util::rng::Rng;
+
+const DIM: usize = 8;
+
+fn build(spec: &OptimizerSpec, seed: u64) -> (Box<dyn AnalogOptimizer>, Quadratic, Rng) {
+    let mut rng = Rng::from_seed(seed);
+    let obj = Quadratic::new(DIM, 1.0, 4.0, 0.3, &mut rng);
+    let preset = presets::preset("om").unwrap();
+    let opt = spec.build(DIM, &preset, 0.3, 0.1, 0.2, &mut rng);
+    (opt, obj, rng)
+}
+
+#[test]
+fn every_method_accumulates_update_pulses_monotonically() {
+    for name in optimizer::METHODS {
+        let spec = optimizer::spec(name).expect(name);
+        let (mut opt, obj, mut rng) = build(&spec, 11);
+        assert_eq!(opt.name(), *name, "registry name must round-trip");
+        let mut prev = opt.cost();
+        for chunk in 0..10 {
+            for _ in 0..10 {
+                opt.step(&obj, &mut rng);
+            }
+            let c = opt.cost();
+            assert!(
+                c.update_pulses >= prev.update_pulses
+                    && c.calibration_pulses >= prev.calibration_pulses
+                    && c.programming_events >= prev.programming_events
+                    && c.digital_ops >= prev.digital_ops,
+                "{name}: cost went backwards in chunk {chunk}: {prev:?} -> {c:?}"
+            );
+            assert!(c.total_pulses() >= prev.total_pulses(), "{name}");
+            prev = c;
+        }
+        assert!(
+            prev.update_pulses > 0,
+            "{name}: no update pulses after 100 steps"
+        );
+    }
+}
+
+#[test]
+fn flip_p_zero_implies_zero_programming_events() {
+    for name in optimizer::METHODS {
+        let mut spec = optimizer::spec(name).expect(name);
+        spec.flip_p = 0.0;
+        let (mut opt, obj, mut rng) = build(&spec, 13);
+        for _ in 0..100 {
+            opt.step(&obj, &mut rng);
+        }
+        assert_eq!(
+            opt.cost().programming_events,
+            0,
+            "{name}: programming events without chopper flips"
+        );
+    }
+}
+
+#[test]
+fn calibration_pulses_charged_only_by_two_stage() {
+    for name in optimizer::METHODS {
+        let spec = optimizer::spec(name).expect(name);
+        let (mut opt, obj, mut rng) = build(&spec, 17);
+        for _ in 0..20 {
+            opt.step(&obj, &mut rng);
+        }
+        let c = opt.cost();
+        if *name == "residual" {
+            assert_eq!(
+                c.calibration_pulses,
+                spec.zs_pulses * DIM as u64,
+                "two-stage ZS budget must be reclassified as calibration"
+            );
+        } else {
+            assert_eq!(c.calibration_pulses, 0, "{name}");
+        }
+    }
+}
+
+#[test]
+fn set_reference_round_trips_through_the_trait() {
+    for name in optimizer::METHODS {
+        let spec = optimizer::spec(name).expect(name);
+        let (mut opt, _obj, _rng) = build(&spec, 19);
+        let q = vec![0.25f32; DIM];
+        opt.set_reference(q.clone());
+        assert_eq!(opt.sp_reference(), &q[..], "{name}");
+    }
+}
