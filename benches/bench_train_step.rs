@@ -14,7 +14,10 @@ fn main() {
         return;
     }
     let reg = Registry::load(dir).unwrap();
-    let exec = Executor::cpu().unwrap();
+    let Ok(exec) = Executor::cpu() else {
+        println!("BENCH\tskipped (PJRT/XLA backend unavailable in this build)");
+        return;
+    };
     let ds = Dataset::digits(64, 5);
     let b = Bench {
         warmup: std::time::Duration::from_millis(2000),
@@ -29,7 +32,7 @@ fn main() {
         ("lenet", "erider"),
         ("convnet3", "erider"),
     ] {
-        let mut cfg = TrainConfig::new(model, algo);
+        let mut cfg = TrainConfig::by_name(model, algo).unwrap();
         cfg.steps = 1;
         let mut t = Trainer::new(&exec, &reg, cfg).unwrap();
         let spec = reg.model(model).unwrap();

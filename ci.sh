@@ -5,8 +5,9 @@
 #   ./ci.sh lint    lint only (fmt --check, clippy -D warnings)
 #
 # Tier-1 (ROADMAP.md): cargo build --release && cargo test -q.
-# Lint runs after tier-1 and also fails the script; use `./ci.sh lint`
-# to iterate on fmt/clippy alone.
+# The build covers --all-targets so benches and examples can't silently
+# rot out of the API. Lint runs after tier-1 and also fails the script;
+# use `./ci.sh lint` to iterate on fmt/clippy alone.
 
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -23,8 +24,8 @@ if [[ "${1:-}" == "lint" ]]; then
     exit 0
 fi
 
-echo "== tier-1: cargo build --release =="
-cargo build --release
+echo "== tier-1: cargo build --release --all-targets =="
+cargo build --release --all-targets
 
 echo "== tier-1: cargo test -q =="
 cargo test -q

@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example quickstart [-- <method>]`
 //! (NN stage needs `make artifacts`; <method> is a registry name:
-//! sgd|ttv1|ttv2|agad|residual|rider|erider, default erider).
+//! sgd|ttv1|ttv2|agad|residual|rider|erider|digital, default erider).
 
 use analog_rider::analog::optimizer::{self, AnalogOptimizer as _};
 use analog_rider::analog::zs::{self, ZsVariant};
@@ -50,10 +50,23 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 3. NN-level: train the analog FCN with E-RIDER through the AOT
-    //    artifacts (Python is not involved at this point).
-    let reg = Registry::load(Registry::default_dir())?;
-    let exec = Executor::cpu()?;
-    let mut cfg = TrainConfig::new("fcn", "erider");
+    //    artifacts (Python is not involved at this point). Needs `make
+    //    artifacts` and a real PJRT backend — skip gracefully otherwise.
+    let reg = match Registry::load(Registry::default_dir()) {
+        Ok(r) => r,
+        Err(e) => {
+            println!("NN stage skipped (artifacts not built): {e:#}");
+            return Ok(());
+        }
+    };
+    let exec = match Executor::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("NN stage skipped (no PJRT backend): {e:#}");
+            return Ok(());
+        }
+    };
+    let mut cfg = TrainConfig::by_name("fcn", "erider")?;
     cfg.steps = 200;
     cfg.ref_mean = 0.4; // non-ideal reference: SPs centred at +0.4
     cfg.ref_std = 0.2;

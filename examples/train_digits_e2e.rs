@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let train = Dataset::digits(640, 100);
     let test = Dataset::digits(200, 101);
 
-    let mut cfg = TrainConfig::new("fcn", "erider");
+    let mut cfg = TrainConfig::by_name("fcn", "erider")?;
     cfg.steps = steps;
     cfg.eval_every = 100;
     cfg.ref_mean = 0.4; // strongly non-ideal reference

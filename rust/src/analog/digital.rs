@@ -1,0 +1,109 @@
+//! Digital SGD — the noise-free baseline arm of the registry (the
+//! paper's "Digital" rows in Tables 1/2 and the pre-training stage of
+//! the Table 8 protocol). No device substrate, no pulses: every update
+//! is an exact float write, accounted as `digital_ops` so the Fig. 4
+//! pulse comparisons show it as a zero-pulse floor.
+
+use crate::analog::optimizer::AnalogOptimizer;
+use crate::analog::pulse_counter::PulseCost;
+use crate::optim::Objective;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct DigitalHypers {
+    /// learning rate of the exact SGD update
+    pub lr: f64,
+}
+
+impl Default for DigitalHypers {
+    fn default() -> Self {
+        Self { lr: 0.05 }
+    }
+}
+
+/// Exact SGD on a plain float vector: the upper-bound / floor baseline
+/// the analog family is compared against.
+pub struct DigitalSgd {
+    w: Vec<f32>,
+    hypers: DigitalHypers,
+    /// gradient-noise scale of the stochastic oracle (kept: the noise
+    /// models the data, not the hardware)
+    sigma: f64,
+    /// inspectable reference slot for trait parity; digital needs none
+    q: Vec<f32>,
+    grad_buf: Vec<f32>,
+    digital_ops: u64,
+}
+
+impl DigitalSgd {
+    pub fn new(dim: usize, hypers: DigitalHypers, sigma: f64) -> Self {
+        Self {
+            w: vec![0.0; dim],
+            hypers,
+            sigma,
+            q: vec![0.0; dim],
+            grad_buf: vec![0.0; dim],
+            digital_ops: 0,
+        }
+    }
+}
+
+impl AnalogOptimizer for DigitalSgd {
+    fn step(&mut self, obj: &dyn Objective, rng: &mut Rng) -> f64 {
+        let loss = obj.loss(&self.w);
+        obj.noisy_grad(&self.w, self.sigma, rng, &mut self.grad_buf);
+        for (w, g) in self.w.iter_mut().zip(&self.grad_buf) {
+            *w -= (self.hypers.lr * *g as f64) as f32;
+        }
+        self.digital_ops += self.w.len() as u64;
+        loss
+    }
+
+    fn weights(&mut self) -> &[f32] {
+        &self.w
+    }
+
+    fn set_reference(&mut self, q: Vec<f32>) {
+        assert_eq!(q.len(), self.q.len());
+        self.q = q;
+    }
+
+    fn sp_reference(&self) -> &[f32] {
+        &self.q
+    }
+
+    fn cost(&self) -> PulseCost {
+        PulseCost {
+            digital_ops: self.digital_ops,
+            ..Default::default()
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "digital"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Quadratic;
+    use crate::util::stats;
+
+    #[test]
+    fn converges_and_counts_no_pulses() {
+        let mut rng = Rng::from_seed(4);
+        let obj = Quadratic::new(16, 1.0, 4.0, 0.3, &mut rng);
+        let mut opt = DigitalSgd::new(16, DigitalHypers::default(), 0.01);
+        let mut losses = Vec::new();
+        for _ in 0..2000 {
+            losses.push(opt.step(&obj, &mut rng));
+        }
+        let head = stats::mean(&losses[..50]);
+        let tail = stats::mean(&losses[losses.len() - 50..]);
+        assert!(tail < 0.05 * head, "head {head} tail {tail}");
+        let c = opt.cost();
+        assert_eq!(c.total_pulses(), 0, "digital must be pulse-free");
+        assert!(c.digital_ops > 0);
+    }
+}

@@ -4,6 +4,7 @@
 //! artifacts (python/compile/algorithms.py) and are driven by `train`.
 
 pub mod agad;
+pub mod digital;
 pub mod optimizer;
 pub mod pulse_counter;
 pub mod residual;
@@ -13,6 +14,7 @@ pub mod tiki_taka;
 pub mod zs;
 
 pub use agad::{Agad, AgadHypers};
+pub use digital::{DigitalHypers, DigitalSgd};
 pub use optimizer::{AnalogOptimizer, Method, OptimizerSpec, METHODS};
 pub use pulse_counter::PulseCost;
 pub use residual::{ResidualHypers, TwoStageResidual};

@@ -9,7 +9,7 @@
 //! in `device/presets.rs`:
 //!
 //! ```text
-//! "sgd" | "ttv1" | "ttv2" | "agad" | "residual" | "rider" | "erider"
+//! "sgd" | "ttv1" | "ttv2" | "agad" | "residual" | "rider" | "erider" | "digital"
 //! ```
 //!
 //! [`OptimizerSpec`] is plain data (serde-friendly: flat scalars, no
@@ -18,8 +18,17 @@
 //! concrete struct behind a `Box<dyn AnalogOptimizer>`. Adding a method
 //! is a one-file change: implement the trait, add a [`Method`] arm, and
 //! it appears in every table, sweep, bench, and the registry test.
+//!
+//! The same registry drives the NN-scale (HLO-driven) layer: [`Method`]
+//! carries the artifact-name mapping (`<model>_step_<suffix>`, see
+//! [`Method::nn_step_algo`]) and the per-method ZS-calibration policy
+//! ([`Method::nn_needs_zs`]); `train::Hypers::for_method` resolves the
+//! NN-scale hyperparameter defaults. `train::TrainConfig` holds an
+//! `OptimizerSpec`, so `rider psweep --methods all` and the NN-scale
+//! experiments accept one shared name set.
 
 use crate::analog::agad::{Agad, AgadHypers};
+use crate::analog::digital::{DigitalHypers, DigitalSgd};
 use crate::analog::pulse_counter::PulseCost;
 use crate::analog::residual::{ResidualHypers, TwoStageResidual};
 use crate::analog::rider::{Rider, RiderHypers};
@@ -77,7 +86,8 @@ pub trait AnalogOptimizer {
     }
 }
 
-/// Registry identifier of a pulse-level method.
+/// Registry identifier of a method (both layers address methods through
+/// this one enum).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     Sgd,
@@ -87,10 +97,15 @@ pub enum Method {
     Residual,
     Rider,
     Erider,
+    /// exact-SGD baseline arm (pre-training / upper bound; pulse-free)
+    Digital,
 }
 
-/// Every registry name, in canonical (paper-table) order.
-pub const METHODS: &[&str] = &["sgd", "ttv1", "ttv2", "agad", "residual", "rider", "erider"];
+/// Every registry name, in canonical (paper-table) order; the digital
+/// baseline arm closes the list.
+pub const METHODS: &[&str] = &[
+    "sgd", "ttv1", "ttv2", "agad", "residual", "rider", "erider", "digital",
+];
 
 impl Method {
     pub fn parse(name: &str) -> Option<Method> {
@@ -102,6 +117,7 @@ impl Method {
             "residual" => Some(Method::Residual),
             "rider" => Some(Method::Rider),
             "erider" => Some(Method::Erider),
+            "digital" => Some(Method::Digital),
             _ => None,
         }
     }
@@ -115,7 +131,28 @@ impl Method {
             Method::Residual => "residual",
             Method::Rider => "rider",
             Method::Erider => "erider",
+            Method::Digital => "digital",
         }
+    }
+
+    /// Artifact-name suffix of the method's NN-scale step function
+    /// (`<model>_step_<suffix>`, lowered by `python/compile/aot.py`).
+    /// RIDER and two-stage residual learning reuse the E-RIDER step:
+    /// they are hyperparameter slices of it (chopper off, and frozen
+    /// reference after ZS, respectively — see `Hypers::for_method`).
+    pub fn nn_step_algo(self) -> &'static str {
+        match self {
+            Method::Rider | Method::Erider | Method::Residual => "erider",
+            m => m.name(),
+        }
+    }
+
+    /// Whether the NN-scale pipeline runs ZS calibration before training
+    /// by default: only the two-stage residual pipeline calibrates its
+    /// reference up front (Algorithm 4); every other method either
+    /// tracks it online or ignores it.
+    pub fn nn_needs_zs(self) -> bool {
+        matches!(self, Method::Residual)
     }
 }
 
@@ -189,6 +226,15 @@ impl OptimizerSpec {
             Method::Residual => {
                 s.eta = 0.0;
                 s.flip_p = 0.0;
+            }
+            // exact SGD: no device, no reference, no chopper
+            Method::Digital => {
+                s.lr_fast = DigitalHypers::default().lr;
+                s.lr_transfer = 0.0;
+                s.eta = 0.0;
+                s.gamma = 0.0;
+                s.flip_p = 0.0;
+                s.read_noise = 0.0;
             }
         }
         s
@@ -322,6 +368,11 @@ impl OptimizerSpec {
                 sigma,
                 rng,
             )),
+            Method::Digital => Box::new(DigitalSgd::new(
+                dim,
+                DigitalHypers { lr: self.lr_fast },
+                sigma,
+            )),
         }
     }
 }
@@ -419,6 +470,26 @@ mod tests {
         assert_eq!(s.lr_transfer, 0.5);
         assert_eq!(s.eta, 0.25);
         assert_eq!(s.flip_p, 0.0, "rider stays chopper-free by default");
+    }
+
+    #[test]
+    fn nn_mapping_covers_every_method() {
+        // the NN-scale step suffix must be one of the lowered artifacts
+        // (python/compile/algorithms.py STEPS) for every registry name
+        let lowered = ["sgd", "ttv1", "ttv2", "agad", "erider", "digital"];
+        for name in METHODS {
+            let m = Method::parse(name).unwrap();
+            assert!(
+                lowered.contains(&m.nn_step_algo()),
+                "{name}: step suffix {} has no artifact",
+                m.nn_step_algo()
+            );
+        }
+        // only the two-stage pipeline calibrates by default
+        for name in METHODS {
+            let m = Method::parse(name).unwrap();
+            assert_eq!(m.nn_needs_zs(), *name == "residual", "{name}");
+        }
     }
 
     #[test]

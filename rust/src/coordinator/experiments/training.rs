@@ -4,6 +4,11 @@
 //! grids), Table 8 (fine-tune protocol), Tables 9/10 (eta / gamma
 //! ablations). All reduced in scale by default (flags scale them up);
 //! the *shapes* are the reproduction target (DESIGN.md section 4).
+//!
+//! Methods are addressed by registry name (`analog::optimizer`): every
+//! grid accepts any subset of the shared name set — the same one
+//! `rider psweep` takes — and unknown names error with the registry
+//! listing instead of panicking.
 
 use anyhow::Result;
 
@@ -11,7 +16,7 @@ use crate::coordinator::metrics::RunDir;
 use crate::coordinator::sweep::Cell;
 use crate::data::{synth_cifar, Dataset};
 use crate::runtime::{Executor, Registry};
-use crate::train::{TrainConfig, Trainer, BL};
+use crate::train::{TrainConfig, Trainer};
 use crate::util::table::Table;
 
 pub struct ExpCtx<'a> {
@@ -57,7 +62,7 @@ pub fn fig2(ctx: &ExpCtx) -> Result<Table> {
         let mut cell_l = Vec::new();
         let mut cell_a = Vec::new();
         for &seed in &ctx.seeds {
-            let mut cfg = TrainConfig::new("fcn", "ttv1");
+            let mut cfg = TrainConfig::by_name("fcn", "ttv1")?;
             cfg.ref_mean = 0.4;
             cfg.ref_std = 0.2;
             cfg.zs_pulses = n;
@@ -76,6 +81,8 @@ pub fn fig2(ctx: &ExpCtx) -> Result<Table> {
 }
 
 /// Fig. 4 left: total pulse cost to reach a target loss vs #states.
+/// Pulse totals come straight out of `TrainResult.cost` — the trainer is
+/// the single source of calibration + update accounting.
 pub fn fig4_left(ctx: &ExpCtx, target_loss: f64) -> Result<Table> {
     let rd = RunDir::create("fig4")?;
     let mut t = Table::new(
@@ -89,7 +96,7 @@ pub fn fig4_left(ctx: &ExpCtx, target_loss: f64) -> Result<Table> {
             ("E-RIDER", "erider", 0u64),
             ("ZS(N=4000)+TT-v2", "ttv2", 4000),
         ] {
-            let mut cfg = TrainConfig::new("fcn", algo);
+            let mut cfg = TrainConfig::by_name("fcn", algo)?;
             cfg.ref_mean = 0.4;
             cfg.ref_std = 0.2;
             cfg.dev.dw_min = dwm as f32;
@@ -100,17 +107,13 @@ pub fn fig4_left(ctx: &ExpCtx, target_loss: f64) -> Result<Table> {
             let train = data_for("fcn", 320, 1);
             let mut tr = Trainer::new(ctx.exec, ctx.reg, cfg)?;
             let res = tr.train(&train, None)?;
-            let spec = ctx.reg.model("fcn")?;
-            let calib = zs * spec.n_weights() as u64;
-            let training =
-                crate::analog::PulseCost::training_estimate(res.steps_run as u64,
-                    spec.n_weights() as u64, BL);
+            let cost = res.cost;
             t.row(vec![
                 format!("{states:.0}"),
                 name.into(),
-                calib.to_string(),
-                training.to_string(),
-                (calib + training).to_string(),
+                cost.calibration_pulses.to_string(),
+                cost.update_pulses.to_string(),
+                cost.total_pulses().to_string(),
                 res.reached_target_at.map(|s| format!("yes@{s}")).unwrap_or("no".into()),
             ]);
         }
@@ -120,32 +123,33 @@ pub fn fig4_left(ctx: &ExpCtx, target_loss: f64) -> Result<Table> {
 }
 
 /// Fig. 4 mid/right + Tables 1/2/8-style grids: accuracy per method over
-/// reference mean/std settings.
-pub fn robustness_grid(
+/// reference mean/std settings. `methods` are registry names — both
+/// `&["ttv2", "erider"]` literals and the `Vec<String>` produced by
+/// `optimizer::resolve_names` (i.e. `--methods all`) are accepted.
+pub fn robustness_grid<S: AsRef<str>>(
     ctx: &ExpCtx,
     name: &str,
     model: &str,
-    algos: &[&str],
+    methods: &[S],
     means: &[f64],
     stds: &[f64],
     dev: Option<crate::train::DevParams>,
 ) -> Result<Table> {
     let rd = RunDir::create(name)?;
+    let mut headers = vec!["method".to_string(), "mean\\std".to_string()];
+    headers.extend(stds.iter().map(|s| format!("{s}")));
     let mut t = Table::new(
         &format!("{name}: test accuracy (model {model}, {} steps)", ctx.steps),
-        &[&["method", "mean\\std"][..], &stds
-            .iter()
-            .map(|s| Box::leak(format!("{s}").into_boxed_str()) as &str)
-            .collect::<Vec<_>>()[..]]
-        .concat(),
+        &headers,
     );
-    for &algo in algos {
+    for algo in methods {
+        let algo = algo.as_ref();
         for &m in means {
             let mut row = vec![algo.to_string(), format!("{m}")];
             for &sd in stds {
                 let mut cell = Cell::default();
                 for &seed in &ctx.seeds {
-                    let mut cfg = TrainConfig::new(model, algo);
+                    let mut cfg = TrainConfig::by_name(model, algo)?;
                     cfg.ref_mean = m as f32;
                     cfg.ref_std = sd as f32;
                     if let Some(d) = dev {
@@ -173,7 +177,7 @@ pub fn fig5(ctx: &ExpCtx) -> Result<Table> {
     for &p in &[0.0f32, 0.02, 0.05, 0.1, 0.2, 0.5] {
         let mut cell = Cell::default();
         for &seed in &ctx.seeds {
-            let mut cfg = TrainConfig::new("fcn", "erider");
+            let mut cfg = TrainConfig::by_name("fcn", "erider")?;
             cfg.ref_mean = 0.4;
             cfg.ref_std = 0.2;
             cfg.hypers.flip_p = p;
@@ -193,7 +197,7 @@ pub fn ablations(ctx: &ExpCtx) -> Result<(Table, Table)> {
     for &eta in &[0.0f32, 0.1, 0.3, 0.5, 0.8, 1.0] {
         let mut cell = Cell::default();
         for &seed in &ctx.seeds {
-            let mut cfg = TrainConfig::new("fcn", "erider");
+            let mut cfg = TrainConfig::by_name("fcn", "erider")?;
             cfg.ref_mean = 0.4;
             cfg.ref_std = 0.2;
             cfg.hypers.eta = eta;
@@ -207,7 +211,7 @@ pub fn ablations(ctx: &ExpCtx) -> Result<(Table, Table)> {
     for &g in &[0.1f32, 0.3, 0.5, 1.0, 2.0, 4.0] {
         let mut cell = Cell::default();
         for &seed in &ctx.seeds {
-            let mut cfg = TrainConfig::new("fcn", "erider");
+            let mut cfg = TrainConfig::by_name("fcn", "erider")?;
             cfg.ref_mean = 0.4;
             cfg.ref_std = 0.2;
             cfg.hypers.gamma = g;
@@ -228,8 +232,8 @@ pub fn table8(ctx: &ExpCtx) -> Result<Table> {
     let spec = ctx.reg.model(model)?;
     let train = data_for(model, 320, 0xF00D);
     let test = data_for(model, 200, 0xBEEF);
-    // digital pre-train
-    let mut dcfg = TrainConfig::new(model, "digital");
+    // digital pre-train (the registry's baseline arm)
+    let mut dcfg = TrainConfig::by_name(model, "digital")?;
     dcfg.steps = ctx.steps * 2;
     dcfg.hypers.lr_digital = 0.3;
     dcfg.seed = 1;
@@ -243,7 +247,7 @@ pub fn table8(ctx: &ExpCtx) -> Result<Table> {
                format!("{:.1}", dres.final_eval_acc)]);
     for &m in &[0.05f32, 0.4] {
         for algo in ["agad", "erider"] {
-            let mut cfg = TrainConfig::new(model, algo);
+            let mut cfg = TrainConfig::by_name(model, algo)?;
             cfg.ref_mean = m;
             cfg.ref_std = 0.2;
             cfg.steps = ctx.steps;

@@ -187,8 +187,7 @@ pub fn render_pulse_grid(title: &str, grids: &[(String, Grid)]) -> Table {
             headers.push(format!("m={m:.2} s={s:.2}"));
         }
     }
-    let hrefs: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
-    let mut t = Table::new(title, &hrefs);
+    let mut t = Table::new(title, &headers);
     for (name, g) in grids {
         let mut row = vec![name.clone()];
         for mi in 0..g.means.len() {

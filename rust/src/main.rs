@@ -47,11 +47,13 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                  \u{20}  rider fig4   [--steps N] [--target 0.2]\n\
                  \u{20}  rider fig5   [--steps N] [--seeds K]\n\
                  \u{20}  rider table1 | table2 | table8  [--steps N] [--seeds K]\n\
+                 \u{20}             [--method[s] a,b|all]  (table1/table2 grids)\n\
                  \u{20}  rider ablations [--steps N]\n\
                  \u{20}  rider theory [--seed S] [--method[s] erider,residual|all]\n\
                  \n\
-                 generic (pulse-level methods by registry name:\n\
-                 \u{20}   sgd|ttv1|ttv2|agad|residual|rider|erider):\n\
+                 generic (methods by registry name, shared by BOTH the\n\
+                 \u{20}   pulse level and the NN scale:\n\
+                 \u{20}   sgd|ttv1|ttv2|agad|residual|rider|erider|digital):\n\
                  \u{20}  rider train --model fcn --algo erider [--steps N] [--ref-mean M]\n\
                  \u{20}             [--ref-std S] [--preset hfo2|om|precise|ideal]\n\
                  \u{20}  rider psweep [--method[s] a,b|all] [--means ..] [--stds ..]\n\
@@ -172,12 +174,14 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 "train" => {
                     let model = args.get_str("model", "fcn");
                     let algo = args.get_str("algo", "erider");
-                    let mut cfg = TrainConfig::new(&model, &algo);
+                    let mut cfg = TrainConfig::by_name(&model, &algo)?;
                     cfg.steps = args.get_usize("steps", 500);
                     cfg.ref_mean = args.get_f64("ref-mean", 0.3) as f32;
                     cfg.ref_std = args.get_f64("ref-std", 0.2) as f32;
                     cfg.seed = args.get_u64("seed", 0);
-                    cfg.zs_pulses = args.get_u64("zs-pulses", 0);
+                    // default from the method's registry policy (residual
+                    // calibrates, everything else starts at 0)
+                    cfg.zs_pulses = args.get_u64("zs-pulses", cfg.zs_pulses);
                     cfg.eval_every = args.get_usize("eval-every", 100);
                     cfg.log = true;
                     if let Some(p) = args.get("preset") {
@@ -207,12 +211,13 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                     Ok(())
                 }
                 "fig4" => {
+                    // validate --methods before the expensive fig4_left sweep
+                    let methods = method_list(args, &["ttv2", "agad", "erider"])?;
                     print!("{}", training::fig4_left(&ctx, args.get_f64("target", 1.0))?.render());
                     let means = args.get_f64_list("means", &[0.4]);
                     let stds = args.get_f64_list("stds", &[0.05, 0.4, 1.0]);
                     let t = training::robustness_grid(
-                        &ctx, "fig4_mr", "convnet3",
-                        &["ttv2", "agad", "erider"], &means, &stds, None,
+                        &ctx, "fig4_mr", "convnet3", &methods, &means, &stds, None,
                     )?;
                     print!("{}", t.render());
                     Ok(())
@@ -222,21 +227,21 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                     Ok(())
                 }
                 "table1" => {
+                    let methods = method_list(args, &["ttv2", "agad", "erider"])?;
                     let means = args.get_f64_list("means", &[0.0, 0.4]);
                     let stds = args.get_f64_list("stds", &[0.05, 0.4, 1.0]);
                     let t = training::robustness_grid(
-                        &ctx, "table1", "lenet",
-                        &["ttv2", "agad", "erider"], &means, &stds, None,
+                        &ctx, "table1", "lenet", &methods, &means, &stds, None,
                     )?;
                     print!("{}", t.render());
                     Ok(())
                 }
                 "table2" => {
+                    let methods = method_list(args, &["ttv2", "agad", "erider"])?;
                     let means = args.get_f64_list("means", &[0.0, 0.4]);
                     let stds = args.get_f64_list("stds", &[0.05, 0.4, 1.0]);
                     let t = training::robustness_grid(
-                        &ctx, "table2", "fcn",
-                        &["ttv2", "agad", "erider"], &means, &stds, None,
+                        &ctx, "table2", "fcn", &methods, &means, &stds, None,
                     )?;
                     print!("{}", t.render());
                     Ok(())
@@ -252,6 +257,8 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                     Ok(())
                 }
                 "all" => {
+                    // validate --methods before any of the sweeps run
+                    let grid_methods = method_list(args, &["ttv2", "agad", "erider"])?;
                     let p = fig1::Fig1Params {
                         side: 64,
                         dw_mins: vec![5e-3, 2e-3, 1e-3],
@@ -270,9 +277,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                     let (t9, t10) = training::ablations(&ctx)?;
                     print!("{}{}", t9.render(), t10.render());
                     let t = training::robustness_grid(
-                        &ctx, "table2", "fcn",
-                        &["ttv2", "agad", "erider"], &[0.0, 0.4], &[0.05, 0.4],
-                        None,
+                        &ctx, "table2", "fcn", &grid_methods, &[0.0, 0.4], &[0.05, 0.4], None,
                     )?;
                     print!("{}", t.render());
                     Ok(())

@@ -11,6 +11,9 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::runtime::artifact::{ArtifactSpec, Registry};
 use crate::runtime::literal::{to_literal, HostTensor};
+// the in-crate PJRT/XLA stand-in; see its module docs for swapping in
+// real bindings
+use crate::runtime::xla;
 
 pub struct Executor {
     pub client: xla::PjRtClient,

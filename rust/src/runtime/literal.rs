@@ -3,6 +3,9 @@
 use anyhow::{anyhow, Result};
 
 use crate::runtime::artifact::{Dtype, IoSpec};
+// the in-crate PJRT/XLA stand-in; see its module docs for swapping in
+// real bindings
+use crate::runtime::xla;
 
 /// A host-side tensor matching an IoSpec.
 #[derive(Clone, Debug)]

@@ -4,6 +4,7 @@
 pub mod artifact;
 pub mod executor;
 pub mod literal;
+pub mod xla;
 
 pub use artifact::{ArtifactSpec, Dtype, IoSpec, ModelSpec, Registry, StateLeaf};
 pub use executor::Executor;

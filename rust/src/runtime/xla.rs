@@ -1,0 +1,230 @@
+//! Minimal in-crate stand-in for the `xla` PJRT bindings.
+//!
+//! The crate must stay dependency-free (ROADMAP: `anyhow` only), and the
+//! real `xla_extension` bindings are not installable in every build
+//! environment — so this module mirrors the exact API surface
+//! `runtime::{executor, literal}` consume, and the use sites import it
+//! as `use crate::runtime::xla;`. Swapping in real bindings is a
+//! one-line change at each use site (drop that import so the extern
+//! crate resolves) plus the Cargo dependency.
+//!
+//! Host-side pieces ([`Literal`]) are fully functional: they carry typed
+//! data + dims, so literal packing/reshaping and its unit tests behave
+//! exactly like the real thing. Backend pieces (HLO parsing, PJRT
+//! compile/execute) report [`XlaError`] at *runtime*; the artifact-gated
+//! integration tests, benches and experiments already skip or error
+//! cleanly when no artifact manifest is present, so a missing backend
+//! degrades to "runtime unavailable", never a build failure.
+
+/// Error type of the backend surface; rendered with `{:?}` at use sites.
+#[derive(Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "XLA backend is not linked into this build: {what} unavailable \
+         (see rust/src/runtime/xla.rs for how to swap in real bindings)"
+    ))
+}
+
+// ------------------------------------------------------------ literals
+
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Typed host tensor with dims — the functional half of the stub.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Element types `Literal` can carry (the three the artifacts use).
+pub trait NativeType: Sized {
+    fn wrap(v: &[Self]) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $arm:ident) => {
+        impl NativeType for $t {
+            fn wrap(v: &[Self]) -> Data {
+                Data::$arm(v.to_vec())
+            }
+            fn unwrap(d: &Data) -> Option<Vec<Self>> {
+                match d {
+                    Data::$arm(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(i32, I32);
+native!(u32, U32);
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::wrap(v),
+        }
+    }
+
+    /// Tuple literal from parts (the root shape of every AOT artifact).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            dims: vec![parts.len() as i64],
+            data: Data::Tuple(parts),
+        }
+    }
+
+    fn numel(&self) -> i64 {
+        match &self.data {
+            Data::F32(v) => v.len() as i64,
+            Data::I32(v) => v.len() as i64,
+            Data::U32(v) => v.len() as i64,
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    /// Same data, new dims; errors when the element counts disagree.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let n: i64 = dims.iter().product();
+        if n != self.numel() {
+            return Err(XlaError(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.numel()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Read back the host data (element type must match).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        T::unwrap(&self.data).ok_or_else(|| XlaError("literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        match &self.data {
+            Data::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(XlaError("literal is not a tuple".into())),
+        }
+    }
+}
+
+// ------------------------------------------------------------- backend
+
+/// Parsed HLO module (backend-only; parsing needs the real bindings).
+pub struct HloModuleProto {
+    _p: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+pub struct XlaComputation {
+    _p: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _p: () }
+    }
+}
+
+pub struct PjRtClient {
+    _p: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable("PJRT compilation"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _p: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _p: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<u32>().is_err(), "typed read-back must not cast");
+        assert!(l.to_tuple().is_err());
+    }
+
+    #[test]
+    fn tuple_literals_decompose() {
+        let t = Literal::tuple(vec![
+            Literal::vec1(&[1.0f32]),
+            Literal::vec1(&[7u32, 8]),
+        ]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<u32>().unwrap(), vec![7, 8]);
+        assert!(t.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn backend_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -1,7 +1,12 @@
 //! Hyper-parameter and device-parameter vectors for the AOT step
-//! artifacts, with per-algorithm defaults patterned on the paper's
+//! artifacts, with per-method defaults patterned on the paper's
 //! Tables 4–6 (adapted to this simulator's scale).
+//!
+//! Methods are identified by `analog::optimizer::Method` — the same
+//! registry the pulse-level layer uses — so resolution is total (no
+//! string matching, no panic on unknown names).
 
+use crate::analog::optimizer::Method;
 use crate::device::Preset;
 use crate::runtime::Registry;
 
@@ -18,81 +23,60 @@ pub struct Hypers {
 }
 
 impl Hypers {
-    /// Paper-inspired defaults per algorithm (Tables 4–6 analogues).
-    pub fn for_algo(algo: &str) -> Hypers {
-        match algo {
-            "sgd" => Hypers {
-                lr_fast: 0.5,
+    /// NN-scale per-method defaults (Tables 4–6 analogues). Total over
+    /// the registry: the structural constraints that used to live at
+    /// call sites — RIDER = E-RIDER with the chopper off (Section 4),
+    /// two-stage residual = E-RIDER with a frozen reference after ZS
+    /// (Algorithm 4) — are resolved here, from the [`Method`] alone.
+    pub fn for_method(method: Method) -> Hypers {
+        // E-RIDER (paper Table 4/6 analogues, re-tuned for this
+        // simulator: fast residual array, fast Q filter, per-line
+        // choppers at p = 0.05)
+        let erider = Hypers {
+            lr_fast: 0.5,
+            lr_transfer: 0.3,
+            eta: 0.3,
+            gamma: 1.0,
+            flip_p: 0.05,
+            thresh: 0.1,
+            lr_digital: 0.05,
+            read_noise: 0.01,
+        };
+        match method {
+            Method::Sgd => Hypers {
                 lr_transfer: 0.0,
                 eta: 0.0,
                 gamma: 0.0,
                 flip_p: 0.0,
-                thresh: 0.1,
-                lr_digital: 0.05,
-                read_noise: 0.01,
+                ..erider
             },
-            "ttv1" => Hypers {
-                lr_fast: 0.5,
+            Method::TtV1 | Method::TtV2 => Hypers {
                 lr_transfer: 0.1,
                 eta: 0.0,
-                gamma: 1.0,
                 flip_p: 0.0,
-                thresh: 0.1,
-                lr_digital: 0.05,
-                read_noise: 0.01,
+                ..erider
             },
-            "ttv2" => Hypers {
-                lr_fast: 0.5,
+            Method::Agad => Hypers {
                 lr_transfer: 0.1,
+                ..erider
+            },
+            Method::Erider => erider,
+            Method::Rider => Hypers { flip_p: 0.0, ..erider },
+            Method::Residual => Hypers {
                 eta: 0.0,
-                gamma: 1.0,
                 flip_p: 0.0,
-                thresh: 0.1,
-                lr_digital: 0.05,
-                read_noise: 0.01,
+                ..erider
             },
-            "agad" => Hypers {
-                lr_fast: 0.5,
-                lr_transfer: 0.1,
-                eta: 0.3,
-                gamma: 1.0,
-                flip_p: 0.05,
-                thresh: 0.1,
-                lr_digital: 0.05,
-                read_noise: 0.01,
-            },
-            // E-RIDER (paper Table 4/6 analogues, re-tuned for this
-            // simulator: fast residual array, fast Q filter, per-line
-            // choppers at p = 0.05)
-            "erider" => Hypers {
-                lr_fast: 0.5,
-                lr_transfer: 0.3,
-                eta: 0.3,
-                gamma: 1.0,
-                flip_p: 0.05,
-                thresh: 0.1,
-                lr_digital: 0.05,
-                read_noise: 0.01,
-            },
-            "digital" => Hypers {
+            Method::Digital => Hypers {
                 lr_fast: 0.0,
                 lr_transfer: 0.0,
                 eta: 0.0,
                 gamma: 0.0,
                 flip_p: 0.0,
-                thresh: 0.1,
                 lr_digital: 0.1,
                 read_noise: 0.0,
+                ..erider
             },
-            other => panic!("unknown algorithm '{other}'"),
-        }
-    }
-
-    /// RIDER = E-RIDER with the chopper off (paper Section 4).
-    pub fn rider() -> Hypers {
-        Hypers {
-            flip_p: 0.0,
-            ..Hypers::for_algo("erider")
         }
     }
 
@@ -168,17 +152,26 @@ mod tests {
 
     #[test]
     fn rider_is_erider_without_chopper() {
-        let e = Hypers::for_algo("erider");
-        let r = Hypers::rider();
+        let e = Hypers::for_method(Method::Erider);
+        let r = Hypers::for_method(Method::Rider);
         assert_eq!(r.flip_p, 0.0);
         assert_eq!(r.lr_fast, e.lr_fast);
+        assert_eq!(r.eta, e.eta);
     }
 
     #[test]
-    fn all_algos_have_defaults() {
-        for a in ["sgd", "ttv1", "ttv2", "agad", "erider", "digital"] {
-            let h = Hypers::for_algo(a);
-            assert!(h.lr_digital >= 0.0);
+    fn residual_freezes_the_reference() {
+        let res = Hypers::for_method(Method::Residual);
+        assert_eq!(res.eta, 0.0);
+        assert_eq!(res.flip_p, 0.0);
+    }
+
+    #[test]
+    fn every_registry_method_has_defaults() {
+        for name in crate::analog::optimizer::METHODS {
+            let m = Method::parse(name).expect(name);
+            let h = Hypers::for_method(m);
+            assert!(h.lr_digital >= 0.0, "{name}");
         }
     }
 

@@ -1,15 +1,21 @@
 //! The HLO-driven training loop: Rust owns data, batching, state and
 //! metrics; every step executes one AOT artifact on the PJRT client.
 //! Python is never on this path.
+//!
+//! Methods are selected through the shared `analog::optimizer` registry:
+//! [`TrainConfig`] holds an [`OptimizerSpec`], the artifact name and the
+//! NN-scale hyperparameter defaults are resolved from its [`Method`]
+//! (`Method::nn_step_algo`, `Hypers::for_method`), and unknown names
+//! surface as `Err` from [`TrainConfig::by_name`] — never a panic.
 
 use anyhow::{anyhow, Result};
 
+use crate::analog::optimizer::{self, Method, OptimizerSpec};
 use crate::analog::pulse_counter::PulseCost;
 use crate::data::{Batcher, Dataset};
 use crate::runtime::{Executor, HostTensor, Registry};
 use crate::train::hypers::{DevParams, Hypers};
 use crate::train::state::ModelState;
-use crate::util::rng::Rng;
 
 /// Average pulse train length per weight update event (Fig. 4 caption).
 pub const BL: u64 = 5;
@@ -17,7 +23,12 @@ pub const BL: u64 = 5;
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub model: String,
-    pub algo: String,
+    /// The method, from the shared two-layer registry. Only the method
+    /// identity and `zs_pulses` are read at NN scale — the live NN-scale
+    /// knobs are `hypers` (the spec's numeric fields are pulse-level
+    /// defaults, tuned for the quadratic objectives; editing them here
+    /// does not affect the artifacts).
+    pub spec: OptimizerSpec,
     pub hypers: Hypers,
     pub dev: DevParams,
     pub ref_mean: f32,
@@ -28,17 +39,19 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// stop once train loss (EMA) falls below this (0 disables)
     pub target_loss: f64,
-    /// ZS calibration pulses before training (two-stage pipelines)
+    /// ZS calibration pulses before training (seeded from the method's
+    /// registry policy: the two-stage residual pipeline calibrates by
+    /// default, everything else starts at 0)
     pub zs_pulses: u64,
     pub log: bool,
 }
 
 impl TrainConfig {
-    pub fn new(model: &str, algo: &str) -> TrainConfig {
+    pub fn new(model: &str, spec: OptimizerSpec) -> TrainConfig {
         TrainConfig {
             model: model.to_string(),
-            algo: algo.to_string(),
-            hypers: Hypers::for_algo(if algo == "rider" { "erider" } else { algo }),
+            spec,
+            hypers: Hypers::for_method(spec.method),
             // default: a fine-grained device (experiments override with
             // the paper presets; the harsh presets need epoch-scale runs)
             dev: DevParams {
@@ -53,15 +66,26 @@ impl TrainConfig {
             steps: 500,
             eval_every: 0,
             target_loss: 0.0,
-            zs_pulses: 0,
+            zs_pulses: if spec.method.nn_needs_zs() { spec.zs_pulses } else { 0 },
             log: false,
         }
     }
 
+    /// Name-driven constructor through the registry; unknown names
+    /// report the available set instead of panicking.
+    pub fn by_name(model: &str, method: &str) -> Result<TrainConfig> {
+        let spec = optimizer::spec_or_err(method).map_err(|e| anyhow!(e))?;
+        Ok(TrainConfig::new(model, spec))
+    }
+
+    /// Registry name of the configured method.
+    pub fn algo(&self) -> &'static str {
+        self.spec.method.name()
+    }
+
     /// Artifact name of this config's step function.
     fn step_artifact(&self) -> String {
-        let algo = if self.algo == "rider" { "erider" } else { &self.algo };
-        format!("{}_step_{}", self.model, algo)
+        format!("{}_step_{}", self.model, self.spec.method.nn_step_algo())
     }
 }
 
@@ -72,6 +96,8 @@ pub struct TrainResult {
     pub evals: Vec<(usize, f64, f64)>,
     pub steps_run: usize,
     pub reached_target_at: Option<usize>,
+    /// calibration + update pulses, produced by the trainer (the one
+    /// code path behind Fig. 4-left's totals)
     pub cost: PulseCost,
     pub final_eval_acc: f64,
 }
@@ -92,6 +118,9 @@ pub struct Trainer<'a> {
     pub reg: &'a Registry,
     pub cfg: TrainConfig,
     pub state: ModelState,
+    /// pulse cost of the ZS calibration run in `new` (charged into every
+    /// subsequent `train` result)
+    calib_cost: PulseCost,
     key_counter: u64,
 }
 
@@ -110,7 +139,7 @@ impl<'a> Trainer<'a> {
             ],
         )?;
         let mut state = ModelState::from_outputs(spec, outputs)?;
-        let mut cost = PulseCost::default();
+        let mut calib_cost = PulseCost::default();
         if cfg.zs_pulses > 0 {
             let zs = reg.artifact(&format!("{}_zs", cfg.model))?;
             let mut inputs = state.to_inputs();
@@ -119,17 +148,17 @@ impl<'a> Trainer<'a> {
             inputs.push(HostTensor::F32(cfg.dev.to_vec(reg)));
             let outputs = exec.run(zs, &inputs)?;
             state = ModelState::from_outputs(spec, outputs)?;
-            cost.calibration_pulses = cfg.zs_pulses * spec.n_weights() as u64;
+            calib_cost.calibration_pulses = cfg.zs_pulses * spec.n_weights() as u64;
         }
         let mut t = Trainer {
             exec,
             reg,
             cfg,
             state,
+            calib_cost,
             key_counter: 0x5EED_0000,
         };
         t.key_counter ^= t.cfg.seed.rotate_left(17);
-        let _ = cost; // folded into train() result below
         Ok(t)
     }
 
@@ -145,15 +174,11 @@ impl<'a> Trainer<'a> {
     pub fn step(&mut self, x: &[f32], y: &[i32]) -> Result<f64> {
         let spec = self.reg.model(&self.cfg.model)?;
         let art = self.reg.artifact(&self.cfg.step_artifact())?;
-        let mut hypers = self.cfg.hypers;
-        if self.cfg.algo == "rider" {
-            hypers.flip_p = 0.0;
-        }
         let mut inputs = self.state.to_inputs();
         inputs.push(HostTensor::F32(x.to_vec()));
         inputs.push(HostTensor::I32(y.to_vec()));
         inputs.push(self.next_key());
-        inputs.push(HostTensor::F32(hypers.to_vec(self.reg)));
+        inputs.push(HostTensor::F32(self.cfg.hypers.to_vec(self.reg)));
         inputs.push(HostTensor::F32(self.cfg.dev.to_vec(self.reg)));
         let mut outputs = self.exec.run(art, &inputs)?;
         let loss = outputs
@@ -164,30 +189,75 @@ impl<'a> Trainer<'a> {
         Ok(loss)
     }
 
+    /// One eval-artifact execution on a fixed-shape batch.
+    fn eval_batch_run(&mut self, x: Vec<f32>, y: Vec<i32>) -> Result<Vec<Vec<f32>>> {
+        let art = self.reg.artifact(&format!("{}_eval", self.cfg.model))?;
+        let mut inputs = self.state.to_inputs();
+        inputs.push(HostTensor::F32(x));
+        inputs.push(HostTensor::I32(y));
+        inputs.push(self.next_key());
+        inputs.push(HostTensor::F32(self.cfg.hypers.to_vec(self.reg)));
+        inputs.push(HostTensor::F32(self.cfg.dev.to_vec(self.reg)));
+        self.exec.run(art, &inputs)
+    }
+
     /// Evaluate on a dataset via the eval artifact (analog forward).
+    ///
+    /// The artifact's batch shape is fixed at `eval_batch` and it
+    /// reports batch-aggregated loss/ncorrect, so the final partial
+    /// batch (including `ds.n < eval_batch`) needs care on both metrics:
+    ///
+    /// * accuracy: the tail is zero-padded with an out-of-range label —
+    ///   argmax over `n_classes` logits never matches it, so a padded
+    ///   row can never count as correct and the count stays exact;
+    /// * loss: the artifact's batch *mean* would mix the padded rows'
+    ///   clamped-label nll into the average, so the tail's loss comes
+    ///   from a second execution with the tail's own samples cycled
+    ///   into the padded slots — every row is real, each tail sample
+    ///   weighted by its repeat count (exact when `eb % take == 0`,
+    ///   near-uniform otherwise).
+    ///
+    /// Both averages are weighted by the number of real samples.
     pub fn eval(&mut self, ds: &Dataset) -> Result<(f64, f64)> {
         let spec = self.reg.model(&self.cfg.model)?;
-        let art = self.reg.artifact(&format!("{}_eval", self.cfg.model))?;
         let eb = spec.eval_batch;
-        let n_batches = (ds.n / eb).max(1);
-        let (mut tot_loss, mut tot_correct, mut tot_n) = (0.0, 0.0, 0usize);
-        for b in 0..n_batches {
-            let lo = b * eb;
-            let x = &ds.x[lo * ds.d..(lo + eb) * ds.d];
-            let y = &ds.y[lo..lo + eb];
-            let mut inputs = self.state.to_inputs();
-            inputs.push(HostTensor::F32(x.to_vec()));
-            inputs.push(HostTensor::I32(y.to_vec()));
-            inputs.push(self.next_key());
-            inputs.push(HostTensor::F32(self.cfg.hypers.to_vec(self.reg)));
-            inputs.push(HostTensor::F32(self.cfg.dev.to_vec(self.reg)));
-            let out = self.exec.run(art, &inputs)?;
-            tot_loss += out[0][0] as f64;
+        let n_classes = spec.n_classes;
+        if ds.n == 0 {
+            return Err(anyhow!("eval on an empty dataset"));
+        }
+        let (mut loss_sum, mut tot_correct, mut tot_n) = (0.0, 0.0, 0usize);
+        let mut lo = 0;
+        while lo < ds.n {
+            let take = eb.min(ds.n - lo);
+            // accuracy pass: zero-pad, out-of-range pad label
+            let mut x = vec![0.0f32; eb * ds.d];
+            x[..take * ds.d].copy_from_slice(&ds.x[lo * ds.d..(lo + take) * ds.d]);
+            let mut y = vec![n_classes as i32; eb];
+            y[..take].copy_from_slice(&ds.y[lo..lo + take]);
+            let out = self.eval_batch_run(x, y)?;
             tot_correct += out[1][0] as f64;
-            tot_n += eb;
+            let batch_loss = if take == eb {
+                out[0][0] as f64
+            } else {
+                // loss pass for the ragged tail: cycle the tail's own
+                // samples into the padded slots
+                let mut x2 = vec![0.0f32; eb * ds.d];
+                let mut y2 = vec![0i32; eb];
+                for i in 0..eb {
+                    let src = lo + (i % take);
+                    x2[i * ds.d..(i + 1) * ds.d]
+                        .copy_from_slice(&ds.x[src * ds.d..(src + 1) * ds.d]);
+                    y2[i] = ds.y[src];
+                }
+                let out2 = self.eval_batch_run(x2, y2)?;
+                out2[0][0] as f64
+            };
+            loss_sum += batch_loss * take as f64;
+            tot_n += take;
+            lo += take;
         }
         Ok((
-            tot_loss / n_batches as f64,
+            loss_sum / tot_n as f64,
             100.0 * tot_correct / tot_n as f64,
         ))
     }
@@ -197,15 +267,15 @@ impl<'a> Trainer<'a> {
         let spec = self.reg.model(&self.cfg.model)?;
         let batch = spec.batch;
         let mut batcher = Batcher::new(train_ds.n, batch, self.cfg.seed ^ 0xB00C);
-        let mut res = TrainResult::default();
-        if self.cfg.zs_pulses > 0 {
-            res.cost.calibration_pulses = self.cfg.zs_pulses * spec.n_weights() as u64;
-        }
+        let mut res = TrainResult {
+            // calibration cost is charged where it was paid (Trainer::new),
+            // not re-derived from the config by every consumer
+            cost: self.calib_cost,
+            ..TrainResult::default()
+        };
         let mut x = Vec::new();
         let mut y = Vec::new();
         let mut ema = f64::NAN;
-        let mut rng = Rng::new(self.cfg.seed, 0x7EA1);
-        let _ = &mut rng;
         for k in 0..self.cfg.steps {
             batcher.next_batch(train_ds, &mut x, &mut y);
             let loss = self.step(&x, &y)?;
@@ -232,8 +302,13 @@ impl<'a> Trainer<'a> {
                 break;
             }
         }
-        res.cost.update_pulses =
-            PulseCost::training_estimate(res.steps_run as u64, spec.n_weights() as u64, BL);
+        if self.cfg.spec.method == Method::Digital {
+            // exact SGD touches every weight once per step, pulse-free
+            res.cost.digital_ops += res.steps_run as u64 * spec.n_weights() as u64;
+        } else {
+            res.cost.update_pulses =
+                PulseCost::training_estimate(res.steps_run as u64, spec.n_weights() as u64, BL);
+        }
         if let Some(ds) = test_ds {
             let (el, ea) = self.eval(ds)?;
             res.evals.push((res.steps_run, el, ea));

@@ -9,9 +9,12 @@ pub struct Table {
 }
 
 impl Table {
-    pub fn new(title: &str, headers: &[&str]) -> Self {
+    /// Headers are owned `String`s; both `&["a", "b"]` literals and
+    /// runtime-built `Vec<String>` column sets are accepted (no leaking
+    /// boxed strs to fabricate `&'static str` headers).
+    pub fn new<S: AsRef<str>>(title: &str, headers: &[S]) -> Self {
         Self {
-            headers: headers.iter().map(|s| s.to_string()).collect(),
+            headers: headers.iter().map(|s| s.as_ref().to_string()).collect(),
             rows: Vec::new(),
             title: title.to_string(),
         }
