@@ -1,7 +1,14 @@
-//! L3 hot-path benches: pulse trains and analog MVMs on the device
-//! substrate (the inner loops of every pulse-level experiment).
+//! L3 hot-path benches: pulse trains, aggregated updates and analog MVMs
+//! on the device substrate (the inner loops of every pulse-level
+//! experiment). The aggregated-update cases scale from 128x128 (serial
+//! batched path) to 1024x1024 (row-chunked parallel path), and the
+//! rider/erider step cases measure the end-to-end optimizer hot path at
+//! NN-tile width — the numbers `./ci.sh bench` records in
+//! BENCH_device.json to track speedups across PRs.
 
+use analog_rider::analog::optimizer::{self, AnalogOptimizer as _};
 use analog_rider::device::{presets, DeviceArray, IoChain};
+use analog_rider::optim::Quadratic;
 use analog_rider::util::bench::{consume, Bench};
 use analog_rider::util::rng::Rng;
 
@@ -15,11 +22,37 @@ fn main() {
     });
     println!("{}", r.report_throughput("pulses", (128 * 128) as f64));
 
-    let dw = vec![0.01f32; 128 * 128];
-    let r = b.run("analog_update/128x128", || {
-        arr.analog_update(&dw, &mut rng);
+    // aggregated updates: 128x128 runs the serial batched engine,
+    // 256x256 and 1024x1024 fan out to the row-chunked parallel path
+    for side in [128usize, 256, 1024] {
+        let mut arr = DeviceArray::sample(side, side, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
+        let dw = vec![0.01f32; side * side];
+        let r = b.run(&format!("analog_update/{side}x{side}"), || {
+            arr.analog_update(&dw, &mut rng);
+        });
+        println!("{}", r.report_throughput("cells", (side * side) as f64));
+    }
+
+    // noisy tile read-out through the zero-alloc path
+    let arr = DeviceArray::sample(1024, 1024, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
+    let mut out = vec![0.0f32; arr.len()];
+    let r = b.run("read_into/1024x1024", || {
+        arr.read_into(0.01, &mut rng, &mut out);
+        consume(out[0]);
     });
-    println!("{}", r.report_throughput("cells", (128 * 128) as f64));
+    println!("{}", r.report_throughput("cells", (1024 * 1024) as f64));
+
+    // end-to-end pulse-level optimizer step at NN-tile width: two device
+    // updates + one read + one noisy gradient per step, all batched
+    for name in ["rider", "erider"] {
+        let spec = optimizer::spec(name).expect("registry name");
+        let obj = Quadratic::new(4096, 1.0, 4.0, 0.3, &mut rng);
+        let mut opt = spec.build(4096, &presets::PRECISE, 0.3, 0.1, 0.1, &mut rng);
+        let r = b.run(&format!("{name}_step/d4096"), || {
+            opt.step(&obj, &mut rng);
+        });
+        println!("{}", r.report_throughput("steps", 1.0));
+    }
 
     let io = IoChain::default();
     let x: Vec<f32> = (0..16 * 256).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();

@@ -3,6 +3,11 @@
 #
 #   ./ci.sh         tier-1 gate (build + tests) then lint
 #   ./ci.sh lint    lint only (fmt --check, clippy -D warnings)
+#   ./ci.sh bench   run the device + optimizer bench suites and emit
+#                   machine-readable BENCH_device.json /
+#                   BENCH_optimizers.json at the repo root (parsed from
+#                   the BENCH lines, throughput included) so successive
+#                   PRs can track the speedup trajectory
 #
 # Tier-1 (ROADMAP.md): cargo build --release && cargo test -q.
 # The build covers --all-targets so benches and examples can't silently
@@ -19,10 +24,67 @@ lint() {
     cargo clippy --all-targets -- -D warnings
 }
 
-if [[ "${1:-}" == "lint" ]]; then
-    lint
-    exit 0
-fi
+# bench_json <raw-output> <out.json>: convert `BENCH\t...` report lines
+# into a JSON array. Field layout (util/bench.rs BenchResult::report):
+#   BENCH <name> iters=N mean=T median=T min=T std=T [throughput=X u/s]
+# with T carrying a ns/us/ms/s suffix; all times are normalized to ns.
+bench_json() {
+    awk -F'\t' '
+    function to_ns(s) {
+        if (s ~ /ns$/) return substr(s, 1, length(s) - 2) + 0
+        if (s ~ /us$/) return (substr(s, 1, length(s) - 2) + 0) * 1e3
+        if (s ~ /ms$/) return (substr(s, 1, length(s) - 2) + 0) * 1e6
+        return (substr(s, 1, length(s) - 1) + 0) * 1e9
+    }
+    BEGIN { printf "["; n = 0 }
+    $1 == "BENCH" && NF >= 7 {
+        name = $2
+        iters = substr($3, 7) + 0
+        mean = to_ns(substr($4, 6))
+        median = to_ns(substr($5, 8))
+        min = to_ns(substr($6, 5))
+        std = to_ns(substr($7, 5))
+        has_thr = 0
+        if (NF >= 8 && $8 ~ /^throughput=/) {
+            split(substr($8, 12), a, " ")
+            thr = a[1] + 0
+            unit = a[2]
+            sub(/\/s$/, "", unit)
+            has_thr = 1
+        }
+        if (n++) printf ","
+        printf "\n  {\"name\":\"%s\",\"iters\":%d,\"mean_ns\":%.1f,\"median_ns\":%.1f,\"min_ns\":%.1f,\"std_ns\":%.1f", \
+            name, iters, mean, median, min, std
+        if (has_thr) printf ",\"throughput_per_s\":%.4e,\"throughput_unit\":\"%s\"", thr, unit
+        printf "}"
+    }
+    END { printf "\n]\n" }
+    ' "$1" > "$2"
+    echo "wrote $2 ($(grep -c '"name"' "$2") cases)"
+}
+
+bench() {
+    local tmp
+    tmp="$(mktemp -d)"
+    echo "== cargo bench --bench bench_device =="
+    cargo bench --bench bench_device | tee "$tmp/device.out"
+    echo "== cargo bench --bench bench_optimizers =="
+    cargo bench --bench bench_optimizers | tee "$tmp/optimizers.out"
+    bench_json "$tmp/device.out" BENCH_device.json
+    bench_json "$tmp/optimizers.out" BENCH_optimizers.json
+    rm -rf "$tmp"
+}
+
+case "${1:-}" in
+    lint)
+        lint
+        exit 0
+        ;;
+    bench)
+        bench
+        exit 0
+        ;;
+esac
 
 echo "== tier-1: cargo build --release --all-targets =="
 cargo build --release --all-targets

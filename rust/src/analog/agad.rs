@@ -54,6 +54,7 @@ pub struct Agad {
     grad_buf: Vec<f32>,
     dw_buf: Vec<f32>,
     weff_buf: Vec<f32>,
+    read_buf: Vec<f32>,
 }
 
 impl Agad {
@@ -79,6 +80,7 @@ impl Agad {
             grad_buf: vec![0.0; dim],
             dw_buf: vec![0.0; dim],
             weff_buf: vec![0.0; dim],
+            read_buf: vec![0.0; dim],
         }
     }
 
@@ -123,21 +125,21 @@ impl AnalogOptimizer for Agad {
             *d = -ac * *g;
         }
         self.a.analog_update(&self.dw_buf, rng);
-        let r = self.a.read(h.read_noise, rng);
+        self.a.read_into(h.read_noise, rng, &mut self.read_buf);
         // offset refresh on flips: the de-chopped mean of A drifts to the
         // SP, so the read at a flip boundary estimates it.
         if flipped {
             let eta = h.eta as f32;
-            for i in 0..r.len() {
-                self.q[i] = (1.0 - eta) * self.q[i] + eta * r[i];
+            for i in 0..self.read_buf.len() {
+                self.q[i] = (1.0 - eta) * self.q[i] + eta * self.read_buf[i];
             }
             self.programming_events += self.q.len() as u64;
         }
         // de-chopped, offset-corrected accumulation + thresholded transfer
         let t = self.thresh as f32;
         let cs = self.c as f32;
-        for i in 0..r.len() {
-            self.h[i] += cs * (r[i] - self.q[i]);
+        for i in 0..self.read_buf.len() {
+            self.h[i] += cs * (self.read_buf[i] - self.q[i]);
             let quanta = (self.h[i] / t).trunc();
             self.dw_buf[i] = (h.lr_transfer * (quanta * t) as f64) as f32;
             self.h[i] -= quanta * t;

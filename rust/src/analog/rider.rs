@@ -64,6 +64,7 @@ pub struct Rider {
     wbar_buf: Vec<f32>,
     grad_buf: Vec<f32>,
     dw_buf: Vec<f32>,
+    read_buf: Vec<f32>,
 }
 
 impl Rider {
@@ -88,6 +89,7 @@ impl Rider {
             wbar_buf: vec![0.0; dim],
             grad_buf: vec![0.0; dim],
             dw_buf: vec![0.0; dim],
+            read_buf: vec![0.0; dim],
         }
     }
 
@@ -170,14 +172,16 @@ impl AnalogOptimizer for Rider {
             *d = -ac * *g;
         }
         self.p.analog_update(&self.dw_buf, rng);
-        // 4. read P; Q <- (1-eta) Q + eta r        (Eq. 12, digital)
-        let r = self.p.read(h.read_noise, rng);
+        // 4. read P into the scratch buffer (allocation-free);
+        //    Q <- (1-eta) Q + eta r                 (Eq. 12, digital)
+        self.p.read_into(h.read_noise, rng, &mut self.read_buf);
         let eta = h.eta as f32;
         // 5. W <- AnalogUpdate(W, beta c (r - Q_k)) (Eq. 18b, uses old Q)
         let bc = (h.lr_transfer * self.c) as f32;
-        for i in 0..r.len() {
-            self.dw_buf[i] = bc * (r[i] - self.q[i]);
-            self.q[i] = (1.0 - eta) * self.q[i] + eta * r[i];
+        for i in 0..self.read_buf.len() {
+            let r = self.read_buf[i];
+            self.dw_buf[i] = bc * (r - self.q[i]);
+            self.q[i] = (1.0 - eta) * self.q[i] + eta * r;
         }
         self.w.analog_update(&self.dw_buf, rng);
         loss

@@ -58,6 +58,7 @@ pub struct TikiTaka {
     grad_buf: Vec<f32>,
     dw_buf: Vec<f32>,
     weff_buf: Vec<f32>,
+    read_buf: Vec<f32>,
 }
 
 impl TikiTaka {
@@ -83,6 +84,7 @@ impl TikiTaka {
             grad_buf: vec![0.0; dim],
             dw_buf: vec![0.0; dim],
             weff_buf: vec![0.0; dim],
+            read_buf: vec![0.0; dim],
         }
     }
 
@@ -110,19 +112,19 @@ impl AnalogOptimizer for TikiTaka {
             *d = (-h.lr_fast * *g as f64) as f32;
         }
         self.a.analog_update(&self.dw_buf, rng);
-        // reference-corrected read
-        let r = self.a.read(h.read_noise, rng);
+        // reference-corrected read (into the scratch buffer — no alloc)
+        self.a.read_into(h.read_noise, rng, &mut self.read_buf);
         match h.variant {
             TtVariant::V1 => {
-                for i in 0..r.len() {
-                    self.dw_buf[i] = (h.lr_transfer * (r[i] - self.q[i]) as f64) as f32;
+                for i in 0..self.read_buf.len() {
+                    self.dw_buf[i] = (h.lr_transfer * (self.read_buf[i] - self.q[i]) as f64) as f32;
                 }
                 self.w.analog_update(&self.dw_buf, rng);
             }
             TtVariant::V2 => {
                 let t = self.thresh as f32;
-                for i in 0..r.len() {
-                    self.h[i] += r[i] - self.q[i];
+                for i in 0..self.read_buf.len() {
+                    self.h[i] += self.read_buf[i] - self.q[i];
                     let quanta = (self.h[i] / t).trunc();
                     self.dw_buf[i] = (h.lr_transfer * (quanta * t) as f64) as f32;
                     self.h[i] -= quanta * t;

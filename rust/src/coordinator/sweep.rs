@@ -62,6 +62,13 @@ impl Grid {
 
 /// Run a closure over every (mean, std, seed) combination on `threads`
 /// worker threads; the closure must be Sync and return the metric.
+///
+/// Workers accumulate `(job index, value)` pairs thread-locally and the
+/// results are merged once per worker at exit — the only shared state in
+/// the job loop is the work-stealing counter, so fine-grained grids pay
+/// no lock traffic. Merging by job index also makes the per-cell sample
+/// *order* deterministic (seed order, as enumerated), independent of
+/// thread interleaving.
 pub fn run_grid<F>(
     means: &[f64],
     stds: &[f64],
@@ -80,24 +87,33 @@ where
             }
         }
     }
-    let results = std::sync::Mutex::new(vec![Vec::new(); means.len() * stds.len()]);
     let next = std::sync::atomic::AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..threads.max(1) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= jobs.len() {
-                    break;
-                }
-                let (mi, si, m, s, seed) = jobs[i];
-                let v = f(m, s, seed);
-                results.lock().unwrap()[mi * stds.len() + si].push(v);
-            });
-        }
+    let locals: Vec<Vec<(usize, f64)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads.max(1))
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let (_, _, m, s, seed) = jobs[i];
+                        local.push((i, f(m, s, seed)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
+    let mut flat = vec![0.0f64; jobs.len()];
+    for (i, v) in locals.into_iter().flatten() {
+        flat[i] = v;
+    }
     let mut grid = Grid::new(means, stds);
-    for (i, samples) in results.into_inner().unwrap().into_iter().enumerate() {
-        grid.cells[i].samples = samples;
+    for (&(mi, si, ..), &v) in jobs.iter().zip(&flat) {
+        grid.cells[mi * stds.len() + si].samples.push(v);
     }
     grid
 }
@@ -215,11 +231,10 @@ mod tests {
                 assert_eq!(g.cell(mi, si).samples.len(), 4);
             }
         }
-        // deterministic content regardless of thread interleaving
+        // deterministic content AND order (seed order) regardless of
+        // thread interleaving — the per-worker merge preserves job order
         let c = g.cell(1, 2);
-        let mut sorted = c.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        assert_eq!(sorted, vec![0.8 + 1.0, 0.8 + 2.0, 0.8 + 3.0, 0.8 + 4.0]);
+        assert_eq!(c.samples, vec![0.8 + 1.0, 0.8 + 2.0, 0.8 + 3.0, 0.8 + 4.0]);
     }
 
     #[test]

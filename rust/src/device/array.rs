@@ -2,10 +2,160 @@
 //! pulse-accurate. This is the substrate for the pulse-level experiments
 //! (Fig. 1, Theorems 2.2/C.2) and the Rust-native algorithm family; it
 //! mirrors the JAX device model exactly (parity-tested on shared vectors).
+//!
+//! The stochastic hot paths (`analog_update`, `pulse_all*`, `read_into`)
+//! run a batched engine: noise for a block of cells is pre-filled into
+//! stack slabs by the polar batch sampler, then applied by a
+//! branch-light pass over the SoA slices — the serial kernels never
+//! touch the heap and draw no per-cell trig. Large tiles fan
+//! `analog_update` out to a row-chunked parallel path (which does
+//! allocate per-call chunk bookkeeping and spawns scoped threads — it
+//! trades a few allocations for core-count throughput); its per-chunk
+//! RNG sub-streams are derived from the tile stream, so results depend
+//! on the (fixed) chunk size but never on the machine's thread count.
+//!
+//! `analog_update_det` is the deterministic Python-parity mode and
+//! keeps the original scalar arithmetic bit-for-bit — unconditionally.
+//! `analog_update_ref` retains the scalar stochastic path as the
+//! reference the equivalence tests compare against; note the batched
+//! kernels use reciprocal multiplies where the scalar path divides, so
+//! noise-free batched-vs-ref runs are bit-identical when `tau = 1`
+//! (every shipped preset) and `dw_min` is a power of two (as in the
+//! equivalence tests) and agree to the last ulp otherwise.
 
 use crate::device::presets::Preset;
-use crate::device::response::{Response, SoftBounds};
+use crate::device::response::SoftBounds;
 use crate::util::rng::Rng;
+
+/// Cells per batched inner block: noise for a block is pre-filled into
+/// stack slabs, then applied in a branch-light pass.
+const BLOCK: usize = 256;
+
+/// Rows per chunk of the parallel update path. Fixed (not derived from
+/// the machine's thread count) so chunk sub-streams — and therefore
+/// stochastic results — are reproducible on any machine.
+pub const PAR_CHUNK_ROWS: usize = 64;
+
+/// Minimum number of cells before `analog_update` fans out to the
+/// row-chunked parallel path.
+pub const PAR_MIN_CELLS: usize = 1 << 16;
+
+/// Loop-invariant per-tile constants of the batched kernels
+/// (reciprocals replace the per-cell divisions of the scalar path).
+#[derive(Clone, Copy)]
+struct TileParams {
+    dw_min: f32,
+    inv_dw_min: f32,
+    /// c2c noise scale per aggregated pulse train (dw_min * c2c);
+    /// exactly 0 when c2c is disabled, so the noise term vanishes
+    nc: f32,
+    c2c: f32,
+    c2c_on: bool,
+    inv_tau_max: f32,
+    inv_tau_min: f32,
+    lo: f32,
+    hi: f32,
+}
+
+/// Polarity pattern of a batched pulse cycle.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum PulseDir {
+    Up,
+    Down,
+    Random,
+}
+
+/// Batched aggregated-update kernel (paper Eq. 2) over one span of
+/// cells: pre-fills per-block noise slabs from `rng`, then applies
+/// stochastic rounding + c2c noise in a branch-light pass. Returns the
+/// number of pulses sent.
+fn update_span(
+    w: &mut [f32],
+    ap: &[f32],
+    am: &[f32],
+    dw: &[f32],
+    p: &TileParams,
+    rng: &mut Rng,
+) -> u64 {
+    let mut unif = [0.0f32; BLOCK];
+    let mut nrm = [0.0f32; BLOCK];
+    let mut pulses = 0u64;
+    let mut start = 0;
+    while start < w.len() {
+        let n = (w.len() - start).min(BLOCK);
+        rng.fill_uniform_f32(&mut unif[..n]);
+        if p.c2c_on {
+            rng.fill_normal_f32(&mut nrm[..n]);
+        }
+        for j in 0..n {
+            let i = start + j;
+            let d = dw[i];
+            let wv = w[i];
+            let up = d >= 0.0;
+            let q = if up {
+                (ap[i] * (1.0 - wv * p.inv_tau_max)).max(0.0)
+            } else {
+                (am[i] * (1.0 + wv * p.inv_tau_min)).max(0.0)
+            };
+            let pulses_f = d.abs() * p.inv_dw_min;
+            let n_lo = pulses_f.floor();
+            let np = n_lo + if unif[j] < pulses_f - n_lo { 1.0 } else { 0.0 };
+            if np == 0.0 {
+                continue;
+            }
+            // nc == 0 when c2c is off, so the noise term is exactly 0
+            let delta = (np * p.dw_min + np.sqrt() * p.nc * nrm[j]) * q;
+            let nw = if up { wv + delta } else { wv - delta };
+            w[i] = nw.clamp(p.lo, p.hi);
+            pulses += np as u64;
+        }
+        start += n;
+    }
+    pulses
+}
+
+/// Batched single-pulse cycle over one span of cells (the ZS inner
+/// loop): one ±dw_min pulse per cell with pre-filled polarity / c2c
+/// noise slabs.
+fn pulse_span(
+    w: &mut [f32],
+    ap: &[f32],
+    am: &[f32],
+    dir: PulseDir,
+    p: &TileParams,
+    rng: &mut Rng,
+) {
+    let mut unif = [0.0f32; BLOCK];
+    let mut nrm = [0.0f32; BLOCK];
+    let mut start = 0;
+    while start < w.len() {
+        let n = (w.len() - start).min(BLOCK);
+        if dir == PulseDir::Random {
+            rng.fill_uniform_f32(&mut unif[..n]);
+        }
+        if p.c2c_on {
+            rng.fill_normal_f32(&mut nrm[..n]);
+        }
+        for j in 0..n {
+            let i = start + j;
+            let wv = w[i];
+            let up = match dir {
+                PulseDir::Up => true,
+                PulseDir::Down => false,
+                PulseDir::Random => unif[j] < 0.5,
+            };
+            let q = if up {
+                (ap[i] * (1.0 - wv * p.inv_tau_max)).max(0.0)
+            } else {
+                (am[i] * (1.0 + wv * p.inv_tau_min)).max(0.0)
+            };
+            let step = p.dw_min * q * (1.0 + p.c2c * nrm[j]);
+            let nw = if up { wv + step } else { wv - step };
+            w[i] = nw.clamp(p.lo, p.hi);
+        }
+        start += n;
+    }
+}
 
 /// A crossbar tile: per-cell weights and device parameters, flat
 /// row-major `rows x cols` storage.
@@ -24,6 +174,8 @@ pub struct DeviceArray {
     pub c2c: f32,
     /// pulses applied so far (pulse accounting)
     pub pulse_count: u64,
+    /// reusable scratch for `program` (grown once, then allocation-free)
+    scratch: Vec<f32>,
 }
 
 impl DeviceArray {
@@ -62,6 +214,7 @@ impl DeviceArray {
             dw_min: preset.dw_min as f32,
             c2c: preset.c2c as f32,
             pulse_count: 0,
+            scratch: Vec::new(),
         }
     }
 
@@ -79,6 +232,7 @@ impl DeviceArray {
             dw_min: dw_min as f32,
             c2c: c2c as f32,
             pulse_count: 0,
+            scratch: Vec::new(),
         }
     }
 
@@ -88,6 +242,20 @@ impl DeviceArray {
 
     pub fn is_empty(&self) -> bool {
         self.w.is_empty()
+    }
+
+    fn params(&self) -> TileParams {
+        TileParams {
+            dw_min: self.dw_min,
+            inv_dw_min: 1.0 / self.dw_min,
+            nc: self.dw_min * self.c2c,
+            c2c: self.c2c,
+            c2c_on: self.c2c > 0.0,
+            inv_tau_max: 1.0 / self.tau_max,
+            inv_tau_min: 1.0 / self.tau_min,
+            lo: -self.tau_min,
+            hi: self.tau_max,
+        }
     }
 
     /// Per-cell response model.
@@ -100,11 +268,25 @@ impl DeviceArray {
         )
     }
 
-    /// Ground-truth SP of every cell.
+    /// Ground-truth SP of every cell, written into `out` — the
+    /// soft-bounds closed form inlined (no per-cell `SoftBounds`
+    /// construction), bit-identical to `cell(i).symmetric_point()`.
+    pub fn symmetric_points_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len());
+        let tmax = self.tau_max as f64;
+        let tmin = self.tau_min as f64;
+        for i in 0..self.len() {
+            let ap = self.alpha_p[i] as f64;
+            let am = self.alpha_m[i] as f64;
+            out[i] = ((ap - am) / (ap / tmax + am / tmin)) as f32;
+        }
+    }
+
+    /// Ground-truth SP of every cell (allocating wrapper).
     pub fn symmetric_points(&self) -> Vec<f32> {
-        (0..self.len())
-            .map(|i| self.cell(i).symmetric_point() as f32)
-            .collect()
+        let mut out = vec![0.0; self.len()];
+        self.symmetric_points_into(&mut out);
+        out
     }
 
     #[inline]
@@ -116,7 +298,8 @@ impl DeviceArray {
         }
     }
 
-    /// Apply a single ±dw_min pulse to cell `i` (the hardware primitive).
+    /// Apply a single ±dw_min pulse to cell `i` (the scalar hardware
+    /// primitive; the batched cycles below are its vectorized form).
     #[inline]
     pub fn pulse_cell(&mut self, i: usize, up: bool, rng: &mut Rng) {
         let w = self.w[i];
@@ -132,26 +315,94 @@ impl DeviceArray {
         self.pulse_count += 1;
     }
 
-    /// One ZS cycle: apply the same polarity to every cell.
+    /// One ZS cycle: apply the same polarity to every cell (batched).
     pub fn pulse_all(&mut self, up: bool, rng: &mut Rng) {
-        for i in 0..self.len() {
-            self.pulse_cell(i, up, rng);
-        }
+        let p = self.params();
+        let dir = if up { PulseDir::Up } else { PulseDir::Down };
+        pulse_span(&mut self.w, &self.alpha_p, &self.alpha_m, dir, &p, rng);
+        self.pulse_count += self.w.len() as u64;
     }
 
     /// One stochastic ZS cycle: independent random polarity per cell.
     pub fn pulse_all_random(&mut self, rng: &mut Rng) {
-        for i in 0..self.len() {
-            let up = rng.next_u32() & 1 == 0;
-            self.pulse_cell(i, up, rng);
-        }
+        let p = self.params();
+        pulse_span(&mut self.w, &self.alpha_p, &self.alpha_m, PulseDir::Random, &p, rng);
+        self.pulse_count += self.w.len() as u64;
     }
 
     /// Analog Update (paper Eq. 2): realise the desired per-cell
     /// increment `dw` as a stochastically-rounded pulse train with c2c
     /// noise — the aggregated (single-shot) model shared with the JAX
-    /// kernel. Counts the pulses it would have sent.
+    /// kernel. Counts the pulses it would have sent. Batched; large
+    /// tiles fan out to the row-chunked parallel path.
     pub fn analog_update(&mut self, dw: &[f32], rng: &mut Rng) {
+        debug_assert_eq!(dw.len(), self.len());
+        if self.len() >= PAR_MIN_CELLS && self.rows > PAR_CHUNK_ROWS {
+            self.analog_update_chunked(dw, rng);
+            return;
+        }
+        let p = self.params();
+        let sent = update_span(&mut self.w, &self.alpha_p, &self.alpha_m, dw, &p, rng);
+        self.pulse_count += sent;
+    }
+
+    /// Row-chunked parallel aggregated update for large tiles. Chunks
+    /// are `PAR_CHUNK_ROWS` rows each; chunk `k` draws its noise from an
+    /// independent sub-stream `Rng::new(base, k)` where `base` is a
+    /// single draw from the tile stream — results depend only on the
+    /// chunk size, never on how many worker threads the machine has.
+    fn analog_update_chunked(&mut self, dw: &[f32], rng: &mut Rng) {
+        struct Job<'a> {
+            idx: u64,
+            w: &'a mut [f32],
+            ap: &'a [f32],
+            am: &'a [f32],
+            dw: &'a [f32],
+        }
+        let span = PAR_CHUNK_ROWS * self.cols;
+        let base = rng.next_u64();
+        let p = self.params();
+        let n_chunks = (self.len() + span - 1) / span;
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(n_chunks)
+            .max(1);
+        let mut buckets: Vec<Vec<Job>> = (0..workers).map(|_| Vec::new()).collect();
+        for (k, (((w, ap), am), d)) in self
+            .w
+            .chunks_mut(span)
+            .zip(self.alpha_p.chunks(span))
+            .zip(self.alpha_m.chunks(span))
+            .zip(dw.chunks(span))
+            .enumerate()
+        {
+            buckets[k % workers].push(Job { idx: k as u64, w, ap, am, dw: d });
+        }
+        let sent: u64 = std::thread::scope(|s| {
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .map(|bucket| {
+                    s.spawn(move || {
+                        let mut pulses = 0u64;
+                        for job in bucket {
+                            let mut sub = Rng::new(base, job.idx);
+                            pulses += update_span(job.w, job.ap, job.am, job.dw, &p, &mut sub);
+                        }
+                        pulses
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        self.pulse_count += sent;
+    }
+
+    /// Scalar reference implementation of [`DeviceArray::analog_update`]
+    /// — the pre-batching code path, one cell and one f64 RNG draw at a
+    /// time. Retained for the batched-engine equivalence tests
+    /// (`rust/tests/batched_engine.rs`); not a hot path.
+    pub fn analog_update_ref(&mut self, dw: &[f32], rng: &mut Rng) {
         debug_assert_eq!(dw.len(), self.len());
         let dwm = self.dw_min;
         for i in 0..self.len() {
@@ -182,7 +433,8 @@ impl DeviceArray {
     }
 
     /// Deterministic variant (round-to-nearest, no noise) — the parity
-    /// mode shared with `kernels/ref.py`.
+    /// mode shared with `kernels/ref.py`. Bit-stable: keeps the original
+    /// scalar arithmetic untouched.
     pub fn analog_update_det(&mut self, dw: &[f32]) {
         let dwm = self.dw_min;
         for i in 0..self.len() {
@@ -200,27 +452,50 @@ impl DeviceArray {
         }
     }
 
-    /// Noisy read-out of the full tile.
+    /// Noisy read-out of the full tile into a caller-owned buffer
+    /// (allocation-free; batch-sampled read noise).
+    pub fn read_into(&self, read_noise: f64, rng: &mut Rng, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len());
+        out.copy_from_slice(&self.w);
+        if read_noise > 0.0 {
+            rng.add_normal_f32(out, read_noise as f32);
+        }
+    }
+
+    /// Noisy read-out of the full tile (allocating wrapper).
     pub fn read(&self, read_noise: f64, rng: &mut Rng) -> Vec<f32> {
-        self.w
-            .iter()
-            .map(|&w| w + (read_noise * rng.normal()) as f32)
-            .collect()
+        let mut out = vec![0.0; self.len()];
+        self.read_into(read_noise, rng, &mut out);
+        out
     }
 
     /// Program the tile to target weights (counts programming pulses).
+    /// The increment is staged in an internal scratch buffer, so repeat
+    /// calls are allocation-free.
     pub fn program(&mut self, target: &[f32], rng: &mut Rng) {
         debug_assert_eq!(target.len(), self.len());
-        let dw: Vec<f32> = target.iter().zip(&self.w).map(|(t, w)| t - w).collect();
-        self.analog_update(&dw, rng);
+        let mut buf = std::mem::take(&mut self.scratch);
+        buf.resize(self.len(), 0.0);
+        for ((b, t), w) in buf.iter_mut().zip(target).zip(&self.w) {
+            *b = t - w;
+        }
+        self.analog_update(&buf, rng);
+        self.scratch = buf;
     }
 
     /// Mean asymmetric magnitude ||G(w)||^2 / n over the tile — the
-    /// Theorem 2.2 convergence metric.
+    /// Theorem 2.2 convergence metric. The soft-bounds G is inlined
+    /// (no per-cell `SoftBounds` construction), bit-identical to
+    /// `cell(i).g_asym(w)`.
     pub fn mean_g_sq(&self) -> f64 {
+        let tmax = self.tau_max as f64;
+        let tmin = self.tau_min as f64;
         let mut s = 0.0;
         for i in 0..self.len() {
-            let g = self.cell(i).g_asym(self.w[i] as f64);
+            let w = self.w[i] as f64;
+            let qp = (self.alpha_p[i] as f64 * (1.0 - w / tmax)).max(0.0);
+            let qm = (self.alpha_m[i] as f64 * (1.0 + w / tmin)).max(0.0);
+            let g = 0.5 * (qm - qp);
             s += g * g;
         }
         s / self.len() as f64
@@ -231,6 +506,7 @@ impl DeviceArray {
 mod tests {
     use super::*;
     use crate::device::presets;
+    use crate::device::response::Response;
     use crate::prop_assert;
     use crate::util::prop;
 
@@ -253,6 +529,30 @@ mod tests {
         let sps = arr.symmetric_points();
         let mean = sps.iter().map(|&x| x as f64).sum::<f64>() / sps.len() as f64;
         assert!((mean - 0.4).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn symmetric_points_match_cell_closed_form() {
+        let mut rng = Rng::from_seed(4);
+        let arr = small(&mut rng);
+        let sps = arr.symmetric_points();
+        for i in 0..arr.len() {
+            assert_eq!(sps[i], arr.cell(i).symmetric_point() as f32, "cell {i}");
+        }
+    }
+
+    #[test]
+    fn mean_g_sq_matches_cell_response() {
+        let mut rng = Rng::from_seed(5);
+        let mut arr = small(&mut rng);
+        for _ in 0..20 {
+            arr.pulse_all_random(&mut rng);
+        }
+        let want = (0..arr.len())
+            .map(|i| arr.cell(i).g_asym(arr.w[i] as f64).powi(2))
+            .sum::<f64>()
+            / arr.len() as f64;
+        assert_eq!(arr.mean_g_sq(), want);
     }
 
     #[test]

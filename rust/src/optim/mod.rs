@@ -9,13 +9,12 @@ pub trait Objective: Send + Sync {
     fn dim(&self) -> usize;
     fn loss(&self, w: &[f32]) -> f64;
     fn grad(&self, w: &[f32], out: &mut [f32]);
-    /// Stochastic gradient: exact gradient + noise of scale `sigma`.
+    /// Stochastic gradient: exact gradient + noise of scale `sigma`
+    /// (batch-sampled, allocation-free).
     fn noisy_grad(&self, w: &[f32], sigma: f64, rng: &mut Rng, out: &mut [f32]) {
         self.grad(w, out);
         if sigma > 0.0 {
-            for g in out.iter_mut() {
-                *g += (sigma * rng.normal()) as f32;
-            }
+            rng.add_normal_f32(out, sigma as f32);
         }
     }
     /// The optimum, if known in closed form.

@@ -43,6 +43,23 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Summarize raw per-iteration timings (ns). The std is the sample
+    /// standard deviation (n−1 denominator), computed by
+    /// `util::stats::std` so the two toolboxes cannot drift apart.
+    pub fn from_samples(name: &str, mut samples: Vec<f64>) -> BenchResult {
+        assert!(!samples.is_empty(), "bench case produced no samples");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len() as u32,
+            mean_ns: mean,
+            std_ns: crate::util::stats::std(&samples),
+            median_ns: samples[samples.len() / 2],
+            min_ns: samples[0],
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
             "BENCH\t{}\titers={}\tmean={}\tmedian={}\tmin={}\tstd={}",
@@ -107,19 +124,7 @@ impl Bench {
             f();
             samples.push(t.elapsed().as_nanos() as f64);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
-            / samples.len().max(2) as f64;
-        let median = samples[samples.len() / 2];
-        BenchResult {
-            name: name.to_string(),
-            iters,
-            mean_ns: mean,
-            std_ns: var.sqrt(),
-            median_ns: median,
-            min_ns: samples[0],
-        }
+        BenchResult::from_samples(name, samples)
     }
 
     /// Run and print the default report; returns the result for further use.
@@ -151,6 +156,19 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.mean_ns > 0.0);
         assert!(r.min_ns <= r.median_ns);
+    }
+
+    #[test]
+    fn std_uses_sample_denominator() {
+        // n−1 denominator: var = (4 + 0 + 4) / 2 = 4 → std = 2
+        let r = BenchResult::from_samples("s", vec![94.0, 90.0, 92.0]);
+        assert!((r.std_ns - 2.0).abs() < 1e-12, "{}", r.std_ns);
+        assert!((r.mean_ns - 92.0).abs() < 1e-12);
+        assert_eq!(r.median_ns, 92.0);
+        assert_eq!(r.min_ns, 90.0);
+        assert_eq!(r.iters, 3);
+        // ... and agrees with the stats toolbox by construction
+        assert_eq!(r.std_ns, crate::util::stats::std(&[90.0, 92.0, 94.0]));
     }
 
     #[test]

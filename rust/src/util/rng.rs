@@ -2,8 +2,10 @@
 //!
 //! The offline crate set has no `rand`, so we carry our own: SplitMix64
 //! for seeding/streams and PCG32 (XSH-RR) for the bulk stream, plus
-//! Box–Muller normals with caching. Everything is reproducible from a
-//! `u64` seed, which the experiment configs record.
+//! Box–Muller normals with caching for scalar draws and a Marsaglia
+//! polar batch sampler (no `sin`/`cos`) for the buffer-fill hot paths.
+//! Everything is reproducible from a `u64` seed, which the experiment
+//! configs record.
 
 /// SplitMix64 — tiny, well-distributed; used to expand seeds into streams.
 #[derive(Clone, Debug)]
@@ -137,17 +139,61 @@ impl Rng {
         }
     }
 
-    /// Fill a buffer with standard normals (f32).
-    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
-        for v in out.iter_mut() {
-            *v = self.normal() as f32;
+    /// One accepted Marsaglia polar pair: two independent standard
+    /// normals per ~1.27 (u, v) candidates, with no `sin`/`cos` and all
+    /// arithmetic in f32 — the batch-fill workhorse.
+    #[inline]
+    fn polar_pair_f32(&mut self) -> (f32, f32) {
+        const SCALE: f32 = 2.0 / 4_294_967_296.0;
+        loop {
+            let u = self.next_u32() as f32 * SCALE - 1.0;
+            let v = self.next_u32() as f32 * SCALE - 1.0;
+            let s = u * u + v * v;
+            if s < 1.0 && s > f32::MIN_POSITIVE {
+                let k = (-2.0 * s.ln() / s).sqrt();
+                return (u * k, v * k);
+            }
         }
     }
 
-    /// Fill a buffer with U[0,1) (f32).
+    /// Fill a buffer with standard normals (f32) via the polar method.
+    /// Faster than per-element [`Rng::normal`] (no trig, no f64); the
+    /// stream it consumes differs from the scalar path, so the two are
+    /// equivalent in distribution, not draw-for-draw.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let (z0, z1) = self.polar_pair_f32();
+            out[i] = z0;
+            out[i + 1] = z1;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.polar_pair_f32().0;
+        }
+    }
+
+    /// `out[i] += scale * z_i` with batch-sampled standard normals —
+    /// the allocation-free noisy-gradient / noisy-read primitive.
+    pub fn add_normal_f32(&mut self, out: &mut [f32], scale: f32) {
+        let mut z = [0.0f32; 256];
+        let mut start = 0;
+        while start < out.len() {
+            let n = (out.len() - start).min(z.len());
+            self.fill_normal_f32(&mut z[..n]);
+            for (o, zi) in out[start..start + n].iter_mut().zip(&z[..n]) {
+                *o += scale * *zi;
+            }
+            start += n;
+        }
+    }
+
+    /// Fill a buffer with U[0,1) (f32, 24-bit resolution — exact on the
+    /// f32 lattice, one `next_u32` per element).
     pub fn fill_uniform_f32(&mut self, out: &mut [f32]) {
+        const SCALE: f32 = 1.0 / 16_777_216.0;
         for v in out.iter_mut() {
-            *v = self.uniform() as f32;
+            *v = (self.next_u32() >> 8) as f32 * SCALE;
         }
     }
 }
@@ -204,6 +250,81 @@ mod tests {
         assert!((s / n as f64).abs() < 0.02);
         assert!((s2 / n as f64 - 1.0).abs() < 0.02);
         assert!((s3 / n as f64).abs() < 0.05); // symmetry
+    }
+
+    #[test]
+    fn batch_normal_moments() {
+        let mut r = Rng::from_seed(13);
+        let n = 400_000;
+        let mut buf = vec![0.0f32; n];
+        r.fill_normal_f32(&mut buf);
+        let (mut s, mut s2, mut s3, mut s4) = (0.0f64, 0.0, 0.0, 0.0);
+        for &z in &buf {
+            let z = z as f64;
+            s += z;
+            s2 += z * z;
+            s3 += z * z * z;
+            s4 += z * z * z * z;
+        }
+        let n = n as f64;
+        assert!((s / n).abs() < 0.01, "mean {}", s / n);
+        assert!((s2 / n - 1.0).abs() < 0.02, "var {}", s2 / n);
+        assert!((s3 / n).abs() < 0.05, "skew {}", s3 / n);
+        assert!((s4 / n - 3.0).abs() < 0.1, "kurtosis {}", s4 / n);
+    }
+
+    #[test]
+    fn batch_normal_tail_probabilities() {
+        // P(|Z| > 1) = 0.3173, P(|Z| > 2) = 0.04550, P(|Z| > 3) = 0.00270
+        let mut r = Rng::from_seed(17);
+        let n = 400_000;
+        let mut buf = vec![0.0f32; n];
+        r.fill_normal_f32(&mut buf);
+        let frac = |t: f32| buf.iter().filter(|z| z.abs() > t).count() as f64 / n as f64;
+        assert!((frac(1.0) - 0.3173).abs() < 0.005, "{}", frac(1.0));
+        assert!((frac(2.0) - 0.0455).abs() < 0.002, "{}", frac(2.0));
+        assert!((frac(3.0) - 0.0027).abs() < 0.0006, "{}", frac(3.0));
+        assert!(buf.iter().all(|z| z.is_finite()));
+    }
+
+    #[test]
+    fn batch_fill_handles_every_length() {
+        let mut r = Rng::from_seed(19);
+        for len in [0usize, 1, 2, 3, 7, 255, 256, 257] {
+            let mut buf = vec![f32::NAN; len];
+            r.fill_normal_f32(&mut buf);
+            assert!(buf.iter().all(|z| z.is_finite()), "len {len}");
+            let mut buf = vec![f32::NAN; len];
+            r.fill_uniform_f32(&mut buf);
+            assert!(buf.iter().all(|u| (0.0..1.0).contains(u)), "len {len}");
+        }
+    }
+
+    #[test]
+    fn batch_uniform_moments() {
+        let mut r = Rng::from_seed(23);
+        let mut buf = vec![0.0f32; 200_000];
+        r.fill_uniform_f32(&mut buf);
+        let n = buf.len() as f64;
+        let s: f64 = buf.iter().map(|&u| u as f64).sum();
+        let s2: f64 = buf.iter().map(|&u| (u as f64).powi(2)).sum();
+        let mean = s / n;
+        let var = s2 / n - mean * mean;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "{var}");
+    }
+
+    #[test]
+    fn add_normal_scales_and_accumulates() {
+        let mut r = Rng::from_seed(29);
+        let mut buf = vec![2.0f32; 100_000];
+        r.add_normal_f32(&mut buf, 0.5);
+        let n = buf.len() as f64;
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var: f64 =
+            buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!((mean - 2.0).abs() < 0.02, "{mean}");
+        assert!((var - 0.25).abs() < 0.01, "{var}");
     }
 
     #[test]

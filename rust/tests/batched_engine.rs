@@ -1,0 +1,178 @@
+//! Equivalence tests for the batched pulse-update engine
+//! (device/array.rs): the batched `analog_update` against the retained
+//! scalar reference path (`analog_update_ref`) on shared inputs, the
+//! row-chunked parallel path against the same reference, and the
+//! zero-alloc read path against its allocating wrapper.
+//!
+//! Determinism contract under test (DESIGN.md): with c2c disabled,
+//! increments that are exact pulse multiples, unit tau, and a
+//! power-of-two dw_min, no random draw influences the result and the
+//! reciprocal-multiply arithmetic is exact, so batched / parallel /
+//! scalar paths must agree bit-for-bit; with noise on, the batched
+//! engine consumes a different RNG stream, so the paths are compared in
+//! distribution (mean/variance over >= 10k trials).
+
+use analog_rider::device::{presets, DeviceArray, SoftBounds};
+use analog_rider::util::rng::Rng;
+
+/// A tile with noise disabled and a power-of-two granularity, so pulse
+/// counts are exact and no stochastic-rounding draw is ever consulted.
+fn noise_free_tile(rows: usize, cols: usize, seed: u64) -> DeviceArray {
+    let mut rng = Rng::from_seed(seed);
+    let mut arr = DeviceArray::sample(rows, cols, &presets::OM, 0.3, 0.2, 0.1, &mut rng);
+    arr.c2c = 0.0;
+    arr.dw_min = 0.0078125; // 2^-7: k * dw_min round-trips exactly
+    arr
+}
+
+/// Exact-multiple increment pattern: k in -3..=3 cycling over cells,
+/// shifted by `round` so successive rounds exercise different signs.
+fn exact_dw(arr: &DeviceArray, round: usize) -> Vec<f32> {
+    (0..arr.len())
+        .map(|i| ((i + round) % 7) as f32 - 3.0)
+        .map(|k| k * arr.dw_min)
+        .collect()
+}
+
+#[test]
+fn batched_update_bit_matches_scalar_ref_noise_free() {
+    let mut a = noise_free_tile(16, 16, 1);
+    let mut b = a.clone();
+    let mut rng_a = Rng::from_seed(2);
+    let mut rng_b = Rng::from_seed(3); // different stream: must not matter
+    for round in 0..5 {
+        let dw = exact_dw(&a, round);
+        a.analog_update(&dw, &mut rng_a);
+        b.analog_update_ref(&dw, &mut rng_b);
+    }
+    assert_eq!(a.w, b.w, "noise-free batched update must be bit-exact");
+    assert_eq!(a.pulse_count, b.pulse_count);
+    assert!(a.pulse_count > 0);
+}
+
+#[test]
+fn parallel_path_bit_matches_scalar_ref_and_is_deterministic() {
+    // 256x256 crosses both parallel-dispatch thresholds (cells >= 2^16,
+    // rows > chunk): this runs the row-chunked multi-threaded path.
+    let mut a = noise_free_tile(256, 256, 4);
+    let mut b = a.clone();
+    let mut c = a.clone();
+    let mut rng_a = Rng::from_seed(5);
+    let mut rng_b = Rng::from_seed(6);
+    let mut rng_c = Rng::from_seed(5);
+    for round in 0..3 {
+        let dw = exact_dw(&a, round);
+        a.analog_update(&dw, &mut rng_a);
+        b.analog_update_ref(&dw, &mut rng_b);
+        c.analog_update(&dw, &mut rng_c);
+    }
+    assert_eq!(a.w, b.w, "parallel path must be bit-exact when noise-free");
+    assert_eq!(a.pulse_count, b.pulse_count);
+    // chunk sub-streams make repeat runs identical regardless of
+    // thread scheduling
+    assert_eq!(a.w, c.w, "parallel path must be run-to-run deterministic");
+    assert_eq!(a.pulse_count, c.pulse_count);
+}
+
+#[test]
+fn stochastic_update_matches_ref_in_distribution() {
+    // Sub-granularity increment + c2c noise: the batched engine draws
+    // from a different stream than the scalar reference, so compare the
+    // first two moments of the post-update weight over many trials.
+    let dev = SoftBounds::symmetric();
+    let trials = 20_000;
+    let run = |batched: bool, seed: u64| -> (f64, f64) {
+        let mut rng = Rng::from_seed(seed);
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..trials {
+            let mut arr = DeviceArray::uniform(1, 1, &dev, 0.01, 0.3);
+            if batched {
+                arr.analog_update(&[0.0037], &mut rng);
+            } else {
+                arr.analog_update_ref(&[0.0037], &mut rng);
+            }
+            let w = arr.w[0] as f64;
+            s += w;
+            s2 += w * w;
+        }
+        let mean = s / trials as f64;
+        (mean, s2 / trials as f64 - mean * mean)
+    };
+    let (mean_b, var_b) = run(true, 7);
+    let (mean_r, var_r) = run(false, 8);
+    // E[w] = 0.37 * dw_min = 0.0037 for both; diff SE ~ 5e-5
+    assert!(
+        (mean_b - mean_r).abs() < 2.5e-4,
+        "means diverge: batched {mean_b} vs ref {mean_r}"
+    );
+    assert!(
+        (var_b / var_r - 1.0).abs() < 0.1,
+        "variances diverge: batched {var_b} vs ref {var_r}"
+    );
+}
+
+#[test]
+fn pulse_all_bit_matches_scalar_primitive_noise_free() {
+    let mut a = noise_free_tile(8, 8, 9);
+    let mut b = a.clone();
+    let mut rng = Rng::from_seed(10);
+    for k in 0..50 {
+        let up = k % 2 == 0;
+        a.pulse_all(up, &mut rng);
+        for i in 0..b.len() {
+            b.pulse_cell(i, up, &mut rng);
+        }
+    }
+    assert_eq!(a.w, b.w, "batched pulse cycle must match the scalar primitive");
+    assert_eq!(a.pulse_count, b.pulse_count);
+}
+
+#[test]
+fn read_into_matches_read_and_its_statistics() {
+    let mut rng = Rng::from_seed(11);
+    let mut arr = DeviceArray::sample(64, 64, &presets::OM, 0.2, 0.1, 0.1, &mut rng);
+    for _ in 0..10 {
+        arr.pulse_all_random(&mut rng);
+    }
+    // the allocating wrapper and the zero-alloc path share one stream
+    let mut rng_a = Rng::from_seed(12);
+    let mut rng_b = Rng::from_seed(12);
+    let via_read = arr.read(0.02, &mut rng_a);
+    let mut via_into = vec![0.0f32; arr.len()];
+    arr.read_into(0.02, &mut rng_b, &mut via_into);
+    assert_eq!(via_read, via_into);
+    // noiseless read is the exact weight vector (and consumes no draws)
+    let mut before = rng_b.clone();
+    arr.read_into(0.0, &mut rng_b, &mut via_into);
+    assert_eq!(via_into, arr.w);
+    assert_eq!(rng_b.next_u32(), before.next_u32());
+    // read noise is centred on w with the requested std
+    let n = arr.len() as f64;
+    let err: Vec<f64> = via_read
+        .iter()
+        .zip(&arr.w)
+        .map(|(r, w)| (r - w) as f64)
+        .collect();
+    let mean = err.iter().sum::<f64>() / n;
+    let var = err.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>() / n;
+    assert!(mean.abs() < 2e-3, "{mean}");
+    assert!((var.sqrt() - 0.02).abs() < 2e-3, "{}", var.sqrt());
+}
+
+#[test]
+fn program_stays_exact_on_large_tiles() {
+    // programming goes through the batched (and, here, parallel) update
+    // path; the closed loop must still land on the target
+    let mut rng = Rng::from_seed(13);
+    let dev = SoftBounds::from_gamma_rho(1.0, 0.2);
+    let mut arr = DeviceArray::uniform(256, 256, &dev, 1e-4, 0.0);
+    let target: Vec<f32> = (0..arr.len())
+        .map(|i| 0.4 * (((i % 13) as f32 / 6.0) - 1.0))
+        .collect();
+    for _ in 0..8 {
+        arr.program(&target, &mut rng);
+    }
+    for (w, t) in arr.w.iter().zip(&target) {
+        assert!((w - t).abs() < 0.02, "{w} vs {t}");
+    }
+}

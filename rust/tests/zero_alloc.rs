@@ -1,0 +1,75 @@
+//! Allocation accounting for the optimizer hot path: after construction
+//! and warmup, `AnalogOptimizer::step` (and `weights`/`cost`) must not
+//! touch the heap for ANY registry method — the batched device engine
+//! works in caller-owned and stack scratch buffers only.
+//!
+//! Verified with a counting global allocator. This binary intentionally
+//! holds a single #[test] so no concurrent test can allocate while the
+//! hot loop is being counted.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use analog_rider::analog::optimizer::{self, AnalogOptimizer as _};
+use analog_rider::device::presets;
+use analog_rider::optim::Quadratic;
+use analog_rider::util::rng::Rng;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn no_heap_allocation_per_step_on_any_registry_method() {
+    let preset = presets::preset("om").unwrap();
+    for name in optimizer::METHODS {
+        let mut rng = Rng::from_seed(41);
+        let obj = Quadratic::new(64, 1.0, 4.0, 0.3, &mut rng);
+        // construction (and residual's ZS stage) may allocate freely
+        let mut opt = optimizer::spec(name)
+            .unwrap()
+            .build(64, &preset, 0.3, 0.1, 0.1, &mut rng);
+        for _ in 0..3 {
+            opt.step(&obj, &mut rng);
+            opt.weights();
+        }
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let mut loss_acc = 0.0;
+        for _ in 0..50 {
+            loss_acc += opt.step(&obj, &mut rng);
+            loss_acc += opt.weights()[0] as f64;
+            loss_acc += opt.cost().update_pulses as f64;
+        }
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert!(loss_acc.is_finite());
+        assert_eq!(
+            after - before,
+            0,
+            "{name}: optimizer step path touched the heap"
+        );
+    }
+}
