@@ -1,18 +1,28 @@
 #!/usr/bin/env bash
 # CI gate for the Rust substrate.
 #
-#   ./ci.sh         tier-1 gate (build + tests) then lint
+#   ./ci.sh         tier-1 gate (build + tests), then e2e, then lint
 #   ./ci.sh lint    lint only (fmt --check, clippy -D warnings)
-#   ./ci.sh bench   run the device + optimizer bench suites and emit
+#   ./ci.sh e2e     release-mode end-to-end stage: the artifact-gated
+#                   integration tests (runtime/trainer/interp-golden)
+#                   MUST run on the HLO interpreter (a "skipping:" line
+#                   fails the stage — no silent skips), then
+#                   train_digits_e2e and a reduced `rider table1` grid
+#                   complete against the checked-in artifacts/ fixtures
+#   ./ci.sh bench [--check]
+#                   run the device + optimizer bench suites and emit
 #                   machine-readable BENCH_device.json /
-#                   BENCH_optimizers.json at the repo root (parsed from
-#                   the BENCH lines, throughput included) so successive
-#                   PRs can track the speedup trajectory
+#                   BENCH_optimizers.json at the repo root so successive
+#                   PRs can track the speedup trajectory. With --check,
+#                   compare per-case min_ns against the committed
+#                   BENCH_baseline/*.json and fail on a >25% regression
+#                   (missing baselines are bootstrapped from the fresh
+#                   run and must be committed).
 #
 # Tier-1 (ROADMAP.md): cargo build --release && cargo test -q.
 # The build covers --all-targets so benches and examples can't silently
-# rot out of the API. Lint runs after tier-1 and also fails the script;
-# use `./ci.sh lint` to iterate on fmt/clippy alone.
+# rot out of the API. Lint runs after tier-1 + e2e and also fails the
+# script; use `./ci.sh lint` to iterate on fmt/clippy alone.
 
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -75,13 +85,81 @@ bench() {
     rm -rf "$tmp"
 }
 
+# bench_check: per-case min_ns vs BENCH_baseline/<file>; >25% slower
+# fails. Absent baselines are bootstrapped (first run on a new machine
+# or after a reset) — commit them to arm the gate.
+bench_check() {
+    local fresh base fail=0
+    mkdir -p BENCH_baseline
+    for fresh in BENCH_device.json BENCH_optimizers.json; do
+        base="BENCH_baseline/$fresh"
+        if [ ! -f "$base" ]; then
+            cp "$fresh" "$base"
+            echo "bench --check: no baseline for $fresh; bootstrapped $base — commit it"
+            continue
+        fi
+        if ! awk '
+        function getname(s) { match(s, /"name":"[^"]*"/); return substr(s, RSTART + 8, RLENGTH - 9) }
+        function getmin(s)  { match(s, /"min_ns":[0-9.]+/); return substr(s, RSTART + 9, RLENGTH - 9) + 0 }
+        NR == FNR { if ($0 ~ /"name"/) base[getname($0)] = getmin($0); next }
+        $0 ~ /"name"/ {
+            n = getname($0); m = getmin($0)
+            if (n in base && base[n] > 0) {
+                if (m > base[n] * 1.25) {
+                    printf "  REGRESSION %s: min_ns %.1f vs baseline %.1f (+%.0f%%)\n", n, m, base[n], 100 * (m / base[n] - 1)
+                    bad = 1
+                } else {
+                    printf "  ok %s: min_ns %.1f vs baseline %.1f\n", n, m, base[n]
+                }
+            } else {
+                printf "  new case %s (no baseline)\n", n
+            }
+        }
+        END { exit bad }
+        ' "$base" "$fresh"; then
+            fail=1
+        fi
+    done
+    if [ "$fail" -ne 0 ]; then
+        echo "bench --check FAILED: >25% min_ns regression against BENCH_baseline/"
+        exit 1
+    fi
+    echo "bench --check OK"
+}
+
+e2e() {
+    echo "== e2e: artifact-gated tests on the HLO interpreter (release) =="
+    local out
+    out="$(mktemp)"
+    cargo test --release --test runtime_integration --test trainer_integration \
+        --test interp_golden -- --nocapture 2>&1 | tee "$out"
+    if grep -q "skipping:" "$out"; then
+        rm -f "$out"
+        echo "e2e FAILED: artifact-gated tests skipped — the NN-scale path must run"
+        exit 1
+    fi
+    rm -f "$out"
+    echo "== e2e: train_digits_e2e (reduced budget) =="
+    cargo run --release --example train_digits_e2e 150
+    echo "== e2e: rider table1 (reduced budget) =="
+    cargo run --release -- table1 --steps 20 --seeds 1
+    echo "e2e OK"
+}
+
 case "${1:-}" in
     lint)
         lint
         exit 0
         ;;
+    e2e)
+        e2e
+        exit 0
+        ;;
     bench)
         bench
+        if [ "${2:-}" = "--check" ]; then
+            bench_check
+        fi
         exit 0
         ;;
 esac
@@ -92,5 +170,6 @@ cargo build --release --all-targets
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+e2e
 lint
 echo "CI OK"

@@ -1,0 +1,341 @@
+"""Numpy reference evaluator for the HLO-text subset of
+`rust/src/runtime/interp.rs`.
+
+Mirrors the Rust interpreter's grammar and op semantics so the emitted
+fixtures (`hlo_fixtures.py`) can be validated without a Rust toolchain
+(`validate_fixtures.py`), and so the two implementations can be checked
+against each other through `artifacts/parity.json`. f32 throughout.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+F = np.float32
+
+DTYPES = {"f32": np.float32, "s32": np.int32, "u32": np.uint32, "pred": np.bool_}
+
+
+class HloError(Exception):
+    pass
+
+
+def _split_top(s):
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+            cur.append(ch)
+        elif ch in ")}]":
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def _parse_shape(s):
+    s = s.strip()
+    if s.startswith("("):
+        return ("tuple", [_parse_shape(p) for p in _split_top(s[1:-1])])
+    dt, rest = s.split("[", 1)
+    dims_s, _, _ = rest.partition("]")
+    dims = tuple(int(d) for d in dims_s.split(",") if d.strip())
+    return (dt.strip(), dims)
+
+
+class Instr:
+    __slots__ = ("name", "shape", "op", "operands", "attrs", "root", "const")
+
+    def __init__(self, name, shape, op, operands, attrs, root, const=None):
+        self.name = name
+        self.shape = shape
+        self.op = op
+        self.operands = operands
+        self.attrs = attrs
+        self.root = root
+        self.const = const
+
+
+def _parse_instr(line):
+    line = line.strip()
+    root = line.startswith("ROOT ")
+    if root:
+        line = line[5:]
+    assert line.startswith("%"), line
+    name, _, rest = line[1:].partition(" = ")
+    rest = rest.strip()
+    # shape: up to the op token.  Find the first space at depth 0
+    depth = 0
+    for i, ch in enumerate(rest):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == " " and depth == 0:
+            break
+    shape = _parse_shape(rest[:i])
+    rest = rest[i + 1 :].strip()
+    op, _, rest = rest.partition("(")
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+            if depth == 0:
+                break
+    body = rest[:i]
+    attrs = {}
+    for a in _split_top(rest[i + 1 :].lstrip(", ")):
+        if "=" in a:
+            k, _, v = a.partition("=")
+            attrs[k.strip()] = v.strip()
+    const = None
+    operands = []
+    if op == "constant":
+        const = body
+    elif op not in ("parameter", "iota"):
+        for tok in _split_top(body):
+            operands.append(tok[tok.rfind("%") + 1 :].strip())
+    elif op == "parameter":
+        const = body
+    return Instr(name.strip(), shape, op.strip(), operands, attrs, root, const)
+
+
+class Computation:
+    def __init__(self, name, entry):
+        self.name = name
+        self.entry = entry
+        self.instrs = []
+
+
+def parse(text):
+    comps, cur = {}, None
+    order = []
+    entry = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("HloModule"):
+            continue
+        if cur is None:
+            if not line.endswith("{"):
+                continue
+            name = line[line.find("%") + 1 :].split(" ", 1)[0].split("(", 1)[0]
+            cur = Computation(name, line.startswith("ENTRY"))
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            order.append(cur.name)
+            if cur.entry:
+                entry = cur.name
+            cur = None
+            continue
+        cur.instrs.append(_parse_instr(line))
+    return comps, entry or order[-1]
+
+
+def _dims_attr(v):
+    return tuple(int(x) for x in v.strip("{}").split(",") if x.strip())
+
+
+def _const_value(shape, body):
+    dt, dims = shape
+    toks = body.replace("{", " ").replace("}", " ").replace(",", " ").split()
+    if dt == "pred":
+        vals = [t in ("true", "1") for t in toks]
+    else:
+        vals = [float(t) if dt == "f32" else int(t) for t in toks]
+    return np.array(vals, DTYPES[dt]).reshape(dims)
+
+
+SUPPORTED_SIMPLE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "and", "or", "xor", "shift-left", "shift-right-logical", "not",
+    "negate", "exponential", "log", "sqrt", "rsqrt", "abs", "sign", "floor",
+    "ceil", "round-nearest-even", "tanh", "logistic", "sine", "cosine",
+}
+
+
+def _seq_dot(a, b):
+    # f32 matmul; numpy's pairwise summation differs from the Rust
+    # interpreter's sequential loop only in the last ulp, and every
+    # fixture quantizes or adds noise downstream of a dot, so matmul is
+    # used for speed.  (Parity vectors are generated with the exact
+    # sequential loop — see hlo_fixtures.np_mvm_det.)
+    return np.matmul(a, b, dtype=F)
+
+
+class Evaluator:
+    def __init__(self, comps, entry):
+        self.comps = comps
+        self.entry = entry
+
+    def run(self, args):
+        return self._eval(self.comps[self.entry], list(args))
+
+    def _eval(self, comp, args):
+        env = {}
+        root_val = None
+        for ins in comp.instrs:
+            v = self._eval_instr(comp, ins, env, args)
+            env[ins.name] = v
+            if ins.root:
+                root_val = v
+        return root_val if root_val is not None else env[comp.instrs[-1].name]
+
+    def _eval_instr(self, comp, ins, env, args):
+        op = ins.op
+        A = [env[o] for o in ins.operands]
+        if op == "parameter":
+            return args[int(ins.const)]
+        if op == "constant":
+            return _const_value(ins.shape, ins.const)
+        if op == "iota":
+            dt, dims = ins.shape
+            d = int(ins.attrs["iota_dimension"])  # strict, like the Rust parser
+            rng = np.arange(dims[d], dtype=DTYPES[dt])
+            shape = [1] * len(dims)
+            shape[d] = dims[d]
+            return np.broadcast_to(rng.reshape(shape), dims).copy()
+        if op in SUPPORTED_SIMPLE:
+            return self._simple(op, A)
+        if op == "compare":
+            d = ins.attrs["direction"]
+            a, b = A
+            return {
+                "EQ": a == b, "NE": a != b, "LT": a < b,
+                "LE": a <= b, "GT": a > b, "GE": a >= b,
+            }[d]
+        if op == "select":
+            return np.where(A[0], A[1], A[2])
+        if op == "clamp":
+            return np.clip(A[1], A[0], A[2]).astype(A[1].dtype)
+        if op == "convert":
+            dt, _ = ins.shape
+            if dt in ("s32", "u32"):
+                return np.trunc(np.asarray(A[0], F)).astype(DTYPES[dt])
+            return np.asarray(A[0]).astype(DTYPES[dt])
+        if op == "broadcast":
+            dims = _dims_attr(ins.attrs.get("dimensions", "{}"))
+            _, out_dims = ins.shape
+            src = A[0]
+            shape = [1] * len(out_dims)
+            for pos, od in enumerate(dims):
+                shape[od] = src.shape[pos]
+            return np.broadcast_to(src.reshape(shape), out_dims).copy()
+        if op == "reshape":
+            _, out_dims = ins.shape
+            return A[0].reshape(out_dims)
+        if op == "transpose":
+            return np.transpose(A[0], _dims_attr(ins.attrs["dimensions"])).copy()
+        if op == "slice":
+            spec = ins.attrs["slice"].strip("{}")
+            sl = []
+            for part in _split_top(spec):
+                nums = part.strip("[]").split(":")
+                s, l = int(nums[0]), int(nums[1])
+                st = int(nums[2]) if len(nums) > 2 else 1
+                sl.append(slice(s, l, st))
+            return A[0][tuple(sl)].copy()
+        if op == "concatenate":
+            return np.concatenate(A, axis=_dims_attr(ins.attrs["dimensions"])[0])
+        if op == "pad":
+            cfg = []
+            interior = False
+            for dim in ins.attrs["padding"].split("x"):
+                parts = [int(p) for p in dim.split("_")]
+                cfg.append((parts[0], parts[1]))
+                if len(parts) > 2 and parts[2]:
+                    interior = True
+            if interior:
+                raise HloError("interior padding unsupported")
+            return np.pad(A[0], cfg, constant_values=A[1].item()).astype(A[0].dtype)
+        if op == "dot":
+            lc = _dims_attr(ins.attrs["lhs_contracting_dims"])[0]
+            rc = _dims_attr(ins.attrs["rhs_contracting_dims"])[0]
+            a = A[0] if lc == 1 else A[0].T
+            b = A[1] if rc == 0 else A[1].T
+            return _seq_dot(a, b)
+        if op == "reduce":
+            dims = _dims_attr(ins.attrs["dimensions"])
+            sub = self.comps[ins.attrs["to_apply"].lstrip("%")]
+            rop = sub.instrs[-1].op
+            if rop == "add":
+                return np.add.reduce(A[0], axis=dims, dtype=F).astype(F) + A[1]
+            if rop == "maximum":
+                return np.maximum(np.max(A[0], axis=dims), A[1]).astype(F)
+            raise HloError(f"reduce monoid {rop}")
+        if op == "tuple":
+            return tuple(A)
+        if op == "get-tuple-element":
+            return A[0][int(ins.attrs["index"])]
+        if op == "while":
+            cond = self.comps[ins.attrs["condition"].lstrip("%")]
+            body = self.comps[ins.attrs["body"].lstrip("%")]
+            state = A[0]
+            while bool(np.asarray(self._eval(cond, [state])).ravel()[0]):
+                state = self._eval(body, [state])
+            return state
+        raise HloError(f"unsupported op {op}")
+
+    @staticmethod
+    def _simple(op, A):
+        a = A[0]
+        if op in ("add", "subtract", "multiply", "divide", "maximum", "minimum",
+                  "power", "and", "or", "xor", "shift-left",
+                  "shift-right-logical"):
+            b = A[1]
+            if a.dtype == np.uint32:
+                with np.errstate(over="ignore"):
+                    if op == "add":
+                        return a + b
+                    if op == "subtract":
+                        return a - b
+                    if op == "multiply":
+                        return a * b
+                    if op == "and":
+                        return a & b
+                    if op == "or":
+                        return a | b
+                    if op == "xor":
+                        return a ^ b
+                    if op == "shift-left":
+                        return (a.astype(np.uint64) << b.astype(np.uint64)).astype(
+                            np.uint32
+                        )
+                    if op == "shift-right-logical":
+                        return a >> b
+            if a.dtype == np.bool_:
+                return {"and": a & b, "or": a | b, "xor": a ^ b}[op]
+            f = {
+                "add": np.add, "subtract": np.subtract, "multiply": np.multiply,
+                "divide": np.divide, "maximum": np.maximum, "minimum": np.minimum,
+                "power": np.power, "xor": np.bitwise_xor, "and": np.bitwise_and,
+                "or": np.bitwise_or,
+            }[op]
+            with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+                return f(a, b).astype(a.dtype)
+        un = {
+            "negate": np.negative, "exponential": np.exp, "log": np.log,
+            "sqrt": np.sqrt, "abs": np.abs, "sign": np.sign, "floor": np.floor,
+            "ceil": np.ceil, "round-nearest-even": np.rint, "tanh": np.tanh,
+            "sine": np.sin, "cosine": np.cos,
+            "rsqrt": lambda x: (F(1.0) / np.sqrt(x)).astype(F),
+            "logistic": lambda x: (F(1.0) / (F(1.0) + np.exp(-x))).astype(F),
+            "not": np.logical_not,
+        }[op]
+        with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+            r = un(a)
+        return r.astype(a.dtype) if a.dtype != np.bool_ else r
+
+
+def load(path):
+    comps, entry = parse(open(path).read())
+    return Evaluator(comps, entry)

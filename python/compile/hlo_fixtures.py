@@ -1,0 +1,1279 @@
+"""Hermetic HLO-text fixture emitter (numpy-only, no JAX required).
+
+Emits the same artifact contract as `aot.py` — per model m in
+{fcn, lenet, convnet3}:
+
+  m_init          (key, params[3]) -> state
+  m_step_<algo>   (state.., x, labels, key, hypers[12], dev[8]) -> state.., loss
+  m_eval          (state.., x, labels, key, hypers, dev) -> loss, ncorrect
+  m_eval_digital  (state.., x, labels)                   -> loss, ncorrect
+  m_zs            (state.., n, key, dev) -> state..      (Algorithm 1)
+
+plus op-level kernel artifacts (`kernel_pulse_update_det`,
+`kernel_analog_mvm_det_<b>x<k>x<n>`), `manifest.json` and `parity.json`
+— but as *hand-lowered* HLO text over the op set the pure-Rust
+interpreter (`rust/src/runtime/interp.rs`) supports, so CI needs no
+Python/JAX at all. `aot.py` (JAX) remains the authoritative lowering
+when a JAX toolchain is available; this module is the hermetic
+fallback with the same input/output contract and the same device
+semantics (`kernels/ref.py` formulas, transcribed to HLO and to the
+numpy parity port below).
+
+RNG: artifacts draw randomness from a counter-hash (murmur3 finalizer
+over iota ^ key, unique salt per draw site) — uniform via the top 24
+bits, normals via Box-Muller. Not threefry, but deterministic per
+(key, site) and statistically adequate for the training noise model.
+
+Regenerate with:  python3 -m python.compile.hlo_fixtures --out artifacts
+Verify with:      python3 -m python.compile.validate_fixtures
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from math import prod, sqrt
+
+import numpy as np
+
+BATCH = 16
+EVAL_BATCH = 200
+N_HYPERS = 12
+N_DEV = 8
+
+HYPER_INDEX = {
+    "lr_fast": 0, "lr_transfer": 1, "eta": 2, "gamma": 3,
+    "flip_p": 4, "thresh": 5, "lr_digital": 6, "read_noise": 7,
+}
+DEV_INDEX = {
+    "dw_min": 0, "sigma_c2c": 1, "tau_max": 2, "tau_min": 3,
+    "out_noise": 4, "inp_res": 5, "out_res": 6, "out_bound": 7,
+}
+
+TILE_LEAVES = ("w", "p", "q", "h", "wap", "wam", "pap", "pam", "c")
+STEP_ALGOS = ("sgd", "ttv1", "ttv2", "agad", "erider", "digital")
+
+
+def fmt_f32(v) -> str:
+    f = np.float32(v)
+    if np.isinf(f):
+        return "-inf" if f < 0 else "inf"
+    return repr(f.item()) if f != int(f) or abs(f) > 1e16 else str(int(f))
+
+
+def fmt_ty(dt, shape) -> str:
+    return f"{dt}[{','.join(str(d) for d in shape)}]"
+
+
+class T:
+    """Handle to an emitted HLO value."""
+
+    __slots__ = ("name", "shape", "dt", "tystr")
+
+    def __init__(self, name, shape, dt):
+        self.name = name
+        self.shape = tuple(shape)
+        self.dt = dt
+        self.tystr = None
+
+
+class Comp:
+    """One HLO computation under construction."""
+
+    def __init__(self, mod, cname, entry=False):
+        self.mod = mod
+        self.cname = cname
+        self.entry = entry
+        self.lines = []  # (name, text)
+        self.n = 0
+        self.params = []  # (name, tystr)
+        self.root_name = None
+        self.root_ty = None
+
+    # -- plumbing ------------------------------------------------------
+    def _emit(self, name, text):
+        self.lines.append((name, text))
+
+    def ins(self, shape, dt, expr) -> T:
+        self.n += 1
+        name = f"%v{self.n}"
+        self._emit(name, f"{name} = {fmt_ty(dt, shape)} {expr}")
+        return T(name, shape, dt)
+
+    def param(self, idx, shape, dt) -> T:
+        name = f"%p{idx}"
+        ty = fmt_ty(dt, shape)
+        self._emit(name, f"{name} = {ty} parameter({idx})")
+        self.params.append((name, ty))
+        return T(name, shape, dt)
+
+    def param_tuple(self, idx, tystr) -> T:
+        name = f"%p{idx}"
+        self._emit(name, f"{name} = {tystr} parameter({idx})")
+        self.params.append((name, tystr))
+        t = T(name, (), "tuple")
+        t.tystr = tystr  # type: ignore[attr-defined]
+        return t
+
+    def set_root(self, t: T, tystr=None):
+        self.root_name = t.name
+        self.root_ty = tystr or getattr(t, "tystr", None) or fmt_ty(t.dt, t.shape)
+
+    def render(self) -> str:
+        head = "ENTRY %main" if self.entry else f"%{self.cname}"
+        plist = ", ".join(f"{n.lstrip('%')}: {ty}" for n, ty in self.params)
+        out = [f"{head} ({plist}) -> {self.root_ty} {{"]
+        for name, text in self.lines:
+            pre = "ROOT " if name == self.root_name else ""
+            out.append(f"  {pre}{text}")
+        out.append("}")
+        return "\n".join(out)
+
+    # -- ops -----------------------------------------------------------
+    def const(self, v, dt="f32") -> T:
+        if dt == "f32":
+            lit = fmt_f32(v)
+        elif dt in ("s32", "u32"):
+            lit = str(int(v))
+        else:
+            lit = "true" if v else "false"
+        return self.ins((), dt, f"constant({lit})")
+
+    def constv(self, vals, dt="f32") -> T:
+        if dt == "f32":
+            lit = ", ".join(fmt_f32(v) for v in vals)
+        else:
+            lit = ", ".join(str(int(v)) for v in vals)
+        return self.ins((len(vals),), dt, f"constant({{{lit}}})")
+
+    def bin(self, op, a: T, b: T) -> T:
+        assert a.shape == b.shape and a.dt == b.dt, (op, a.shape, b.shape, a.dt, b.dt)
+        return self.ins(a.shape, a.dt, f"{op}({a.name}, {b.name})")
+
+    def add(self, a, b):
+        return self.bin("add", a, b)
+
+    def sub(self, a, b):
+        return self.bin("subtract", a, b)
+
+    def mul(self, a, b):
+        return self.bin("multiply", a, b)
+
+    def div(self, a, b):
+        return self.bin("divide", a, b)
+
+    def maximum(self, a, b):
+        return self.bin("maximum", a, b)
+
+    def un(self, op, a: T) -> T:
+        return self.ins(a.shape, a.dt, f"{op}({a.name})")
+
+    def neg(self, a):
+        return self.un("negate", a)
+
+    def exp(self, a):
+        return self.un("exponential", a)
+
+    def log(self, a):
+        return self.un("log", a)
+
+    def sqrt(self, a):
+        return self.un("sqrt", a)
+
+    def absu(self, a):
+        return self.un("abs", a)
+
+    def sign(self, a):
+        return self.un("sign", a)
+
+    def floor(self, a):
+        return self.un("floor", a)
+
+    def round(self, a):
+        return self.un("round-nearest-even", a)
+
+    def tanh(self, a):
+        return self.un("tanh", a)
+
+    def logistic(self, a):
+        return self.un("logistic", a)
+
+    def cos(self, a):
+        return self.un("cosine", a)
+
+    def bcast(self, a: T, shape, dims=()) -> T:
+        d = ",".join(str(x) for x in dims)
+        return self.ins(shape, a.dt, f"broadcast({a.name}), dimensions={{{d}}}")
+
+    def bs(self, s: T, shape) -> T:
+        """Broadcast a scalar."""
+        assert s.shape == ()
+        return self.bcast(s, shape, ())
+
+    def bvec(self, v: T, shape, dim) -> T:
+        """Broadcast a rank-1 tensor along output dim `dim`."""
+        assert len(v.shape) == 1 and shape[dim] == v.shape[0]
+        return self.bcast(v, shape, (dim,))
+
+    def full(self, shape, v, dt="f32") -> T:
+        c = self.const(v, dt)
+        return self.bs(c, shape) if shape != () else c
+
+    def fulllike(self, a: T, v) -> T:
+        return self.full(a.shape, v, a.dt)
+
+    def mulc(self, a: T, v) -> T:
+        return self.mul(a, self.fulllike(a, v))
+
+    def addc(self, a: T, v) -> T:
+        return self.add(a, self.fulllike(a, v))
+
+    def reshape(self, a: T, shape) -> T:
+        assert prod(a.shape) == prod(shape), (a.shape, shape)
+        return self.ins(shape, a.dt, f"reshape({a.name})")
+
+    def transpose(self, a: T, perm) -> T:
+        shape = tuple(a.shape[p] for p in perm)
+        d = ",".join(str(p) for p in perm)
+        return self.ins(shape, a.dt, f"transpose({a.name}), dimensions={{{d}}}")
+
+    def slice(self, a: T, starts, limits) -> T:
+        shape = tuple(l - s for s, l in zip(starts, limits))
+        spec = ",".join(f"[{s}:{l}:1]" for s, l in zip(starts, limits))
+        return self.ins(shape, a.dt, f"slice({a.name}), slice={{{spec}}}")
+
+    def concat(self, parts, dim) -> T:
+        shape = list(parts[0].shape)
+        shape[dim] = sum(p.shape[dim] for p in parts)
+        names = ", ".join(p.name for p in parts)
+        return self.ins(
+            tuple(shape), parts[0].dt, f"concatenate({names}), dimensions={{{dim}}}"
+        )
+
+    def pad(self, a: T, v, cfg) -> T:
+        """cfg: [(lo, hi)] per dim; `v` the scalar pad value."""
+        pv = self.const(v, a.dt)
+        shape = tuple(d + lo + hi for d, (lo, hi) in zip(a.shape, cfg))
+        spec = "x".join(f"{lo}_{hi}" for lo, hi in cfg)
+        return self.ins(shape, a.dt, f"pad({a.name}, {pv.name}), padding={spec}")
+
+    def dot(self, a: T, b: T) -> T:
+        assert a.shape[1] == b.shape[0], (a.shape, b.shape)
+        shape = (a.shape[0], b.shape[1])
+        return self.ins(
+            shape,
+            "f32",
+            f"dot({a.name}, {b.name}), lhs_contracting_dims={{1}}, "
+            f"rhs_contracting_dims={{0}}",
+        )
+
+    def cmpd(self, direction, a: T, b: T) -> T:
+        assert a.shape == b.shape
+        return self.ins(
+            a.shape, "pred", f"compare({a.name}, {b.name}), direction={direction}"
+        )
+
+    def sel(self, p: T, a: T, b: T) -> T:
+        return self.ins(a.shape, a.dt, f"select({p.name}, {a.name}, {b.name})")
+
+    def clamps(self, lo: T, x: T, hi: T) -> T:
+        return self.ins(x.shape, x.dt, f"clamp({lo.name}, {x.name}, {hi.name})")
+
+    def clampc(self, lo_v, x: T, hi_v) -> T:
+        return self.clamps(self.const(lo_v), x, self.const(hi_v))
+
+    def convert(self, a: T, dt) -> T:
+        return self.ins(a.shape, dt, f"convert({a.name})")
+
+    def iota(self, shape, dim, dt) -> T:
+        return self.ins(shape, dt, f"iota(), iota_dimension={dim}")
+
+    def reduce(self, a: T, dims, kind="add") -> T:
+        init = {"add": 0.0, "max": float("-inf")}[kind]
+        red = self.mod.reducer(kind)
+        iv = self.const(init)
+        shape = tuple(d for i, d in enumerate(a.shape) if i not in dims)
+        ds = ",".join(str(d) for d in sorted(dims))
+        return self.ins(
+            shape,
+            a.dt,
+            f"reduce({a.name}, {iv.name}), dimensions={{{ds}}}, to_apply=%{red}",
+        )
+
+    def tuple_(self, parts) -> T:
+        names = ", ".join(p.name for p in parts)
+        tystr = (
+            "(" + ", ".join(getattr(p, "tystr", None) or fmt_ty(p.dt, p.shape)
+                            for p in parts) + ")"
+        )
+        t = self.ins((), "tuple", f"tuple({names})")
+        # rewrite the emitted type (ins printed a scalar type)
+        name, text = self.lines[-1]
+        self.lines[-1] = (name, f"{name} = {tystr} tuple({names})")
+        t.tystr = tystr  # type: ignore[attr-defined]
+        return t
+
+    def gte(self, t: T, index, shape, dt) -> T:
+        return self.ins(
+            shape, dt, f"get-tuple-element({t.name}), index={index}"
+        )
+
+    def while_(self, init: T, cond: "Comp", body: "Comp") -> T:
+        tystr = init.tystr  # type: ignore[attr-defined]
+        t = self.ins((), "tuple", "noop()")
+        name, _ = self.lines[-1]
+        self.lines[-1] = (
+            name,
+            f"{name} = {tystr} while({init.name}), condition=%{cond.cname}, "
+            f"body=%{body.cname}",
+        )
+        t.tystr = tystr  # type: ignore[attr-defined]
+        return t
+
+    def scalar_at(self, vec: T, i) -> T:
+        """Extract element i of a rank-1 tensor as a scalar."""
+        return self.reshape(self.slice(vec, (i,), (i + 1,)), ())
+
+
+class Module:
+    def __init__(self, name):
+        self.name = name
+        self.comps = []
+        self.entry = Comp(self, "main", entry=True)
+        self.salt = 0
+        self._red = {}
+
+    def next_salt(self):
+        self.salt += 1
+        return (self.salt * 2654435761) % (1 << 32)
+
+    def subcomp(self, cname) -> Comp:
+        c = Comp(self, cname)
+        self.comps.append(c)
+        return c
+
+    def reducer(self, kind):
+        if kind not in self._red:
+            c = self.subcomp(f"red_{kind}")
+            a = c.param(0, (), "f32")
+            b = c.param(1, (), "f32")
+            c.set_root(c.bin({"add": "add", "max": "maximum"}[kind], a, b))
+            self._red[kind] = c.cname
+        return self._red[kind]
+
+    def render(self) -> str:
+        parts = [f"HloModule {self.name}", ""]
+        for c in self.comps:
+            parts.append(c.render())
+            parts.append("")
+        parts.append(self.entry.render())
+        parts.append("")
+        return "\n".join(parts)
+
+
+# ------------------------------------------------------------------- RNG
+
+
+class RngCtx:
+    """Counter-hash RNG: murmur3 finalizer over (iota ^ k0) with a
+    per-site salt and the key's second word; `extra` (e.g. a loop
+    counter) decorrelates draws across while-loop iterations."""
+
+    def __init__(self, comp: Comp, mod: Module, k0: T, k1: T, extra: T | None = None):
+        self.c = comp
+        self.mod = mod
+        self.k0 = k0
+        self.k1 = k1
+        self.extra = extra
+
+    def u32(self, shape) -> T:
+        c = self.c
+        n = prod(shape)
+        salt = self.mod.next_salt()
+        x = c.iota((n,), 0, "u32")
+        x = c.bin("xor", x, c.bs(self.k0, (n,)))
+        x = c.bin("multiply", x, c.full((n,), 2654435761, "u32"))
+        s = c.bin("xor", self.k1, c.const(salt, "u32"))
+        if self.extra is not None:
+            s = c.bin(
+                "add",
+                s,
+                c.bin("multiply", self.extra, c.const(0x9E3779B9, "u32")),
+            )
+        x = c.bin("add", x, c.bs(s, (n,)))
+        for sh, m in ((16, 0x85EBCA6B), (13, 0xC2B2AE35)):
+            x = c.bin("xor", x, c.bin("shift-right-logical", x, c.full((n,), sh, "u32")))
+            x = c.bin("multiply", x, c.full((n,), m, "u32"))
+        x = c.bin("xor", x, c.bin("shift-right-logical", x, c.full((n,), 16, "u32")))
+        return c.reshape(x, shape) if shape != (n,) else x
+
+    def uniform(self, shape) -> T:
+        """u ~ U[0, 1) from the hash's top 24 bits."""
+        c = self.c
+        h = self.u32(shape)
+        top = c.bin("shift-right-logical", h, c.full(shape, 8, "u32"))
+        return c.mulc(c.convert(top, "f32"), 1.0 / (1 << 24))
+
+    def uniform_open(self, shape) -> T:
+        """u ~ U(0, 1] (safe for log)."""
+        c = self.c
+        h = self.u32(shape)
+        top = c.bin("shift-right-logical", h, c.full(shape, 8, "u32"))
+        top = c.bin("add", top, c.full(shape, 1, "u32"))
+        return c.mulc(c.convert(top, "f32"), 1.0 / (1 << 24))
+
+    def normal(self, shape) -> T:
+        """z ~ N(0, 1) via Box-Muller."""
+        c = self.c
+        u1 = self.uniform_open(shape)
+        u2 = self.uniform(shape)
+        r = c.sqrt(c.mulc(c.log(u1), -2.0))
+        return c.mul(r, c.cos(c.mulc(u2, 2.0 * np.pi)))
+
+
+# --------------------------------------------------------- device kernels
+
+
+def dev_scalars(c: Comp, dev: T) -> dict:
+    return {k: c.scalar_at(dev, i) for k, i in DEV_INDEX.items()}
+
+
+def hyp_scalars(c: Comp, hyp: T) -> dict:
+    return {k: c.scalar_at(hyp, i) for k, i in HYPER_INDEX.items()}
+
+
+def pulse(c: Comp, rng: RngCtx, w: T, dw: T, ap: T, am: T, dev: dict, det=False) -> T:
+    """Analog Update (kernels/ref.py `ref_pulse_update`)."""
+    sh = w.shape
+    one = c.fulllike(w, 1.0)
+    qp = c.mul(ap, c.sub(one, c.div(w, c.bs(dev["tau_max"], sh))))
+    qm = c.mul(am, c.add(one, c.div(w, c.bs(dev["tau_min"], sh))))
+    pos = c.cmpd("GE", dw, c.fulllike(dw, 0.0))
+    q = c.maximum(c.sel(pos, qp, qm), c.fulllike(w, 0.0))
+    mag = c.absu(dw)
+    sgn = c.sign(dw)
+    dwm = c.bs(dev["dw_min"], sh)
+    pf = c.div(mag, dwm)
+    if det:
+        n = c.round(pf)
+        delta = c.mul(c.mul(sgn, c.mul(n, dwm)), q)
+    else:
+        n_lo = c.floor(pf)
+        frac = c.sub(pf, n_lo)
+        u = rng.uniform(sh)
+        n = c.add(n_lo, c.convert(c.cmpd("LT", u, frac), "f32"))
+        z = rng.normal(sh)
+        c2c = c.mul(c.mul(c.sqrt(n), dwm), c.bs(dev["sigma_c2c"], sh))
+        delta = c.mul(c.mul(sgn, c.add(c.mul(n, dwm), c.mul(c2c, z))), q)
+    return c.clamps(c.neg(dev["tau_min"]), c.add(w, delta), dev["tau_max"])
+
+
+def analog_mvm(c: Comp, rng: RngCtx | None, x: T, w: T, dev: dict, det=False) -> T:
+    """Analog IO chain MVM (kernels/ref.py `ref_analog_mvm`)."""
+    b, k = x.shape
+    n = w.shape[1]
+    scale = c.reduce(c.absu(x), (1,), "max")  # [B]
+    gt = c.cmpd("GT", scale, c.full((b,), 0.0))
+    scale = c.sel(gt, scale, c.full((b,), 1.0))
+    xn = c.div(x, c.bvec(scale, (b, k), 0))
+    ir = c.bs(dev["inp_res"], (b, k))
+    xq = c.mul(c.round(c.div(xn, ir)), ir)
+    y = c.dot(xq, w)
+    if not det:
+        y = c.add(y, c.mul(c.bs(dev["out_noise"], (b, n)), rng.normal((b, n))))
+    orr = c.bs(dev["out_res"], (b, n))
+    yq = c.mul(c.round(c.div(y, orr)), orr)
+    yq = c.clamps(c.neg(dev["out_bound"]), yq, dev["out_bound"])
+    return c.mul(yq, c.bvec(scale, (b, n), 0))
+
+
+def read_noisy(c: Comp, rng: RngCtx, arr: T, read_noise: T) -> T:
+    return c.add(arr, c.mul(c.bs(read_noise, arr.shape), rng.normal(arr.shape)))
+
+
+# ----------------------------------------------------------- model specs
+
+
+def model_spec(name):
+    if name == "fcn":
+        layers = [
+            dict(kind="fc", k=784, n=256, act="sigmoid"),
+            dict(kind="fc", k=256, n=128, act="sigmoid"),
+            dict(kind="fc", k=128, n=10, act="none"),
+        ]
+        return dict(name=name, d_in=784, n_classes=10, input=(784,), layers=layers)
+    if name == "lenet":
+        layers = [
+            dict(kind="conv", cin=1, cout=8, ksz=5, pad=0, pool=2, act="tanh",
+                 h=28, w=28),
+            dict(kind="conv", cin=8, cout=16, ksz=5, pad=0, pool=2, act="tanh",
+                 h=12, w=12),
+            dict(kind="fc", k=256, n=128, act="tanh"),
+            dict(kind="fc", k=128, n=10, act="none"),
+        ]
+        return dict(name=name, d_in=784, n_classes=10, input=(1, 28, 28), layers=layers)
+    if name == "convnet3":
+        layers = [
+            dict(kind="conv", cin=3, cout=16, ksz=3, pad=1, pool=2, act="tanh",
+                 h=16, w=16),
+            dict(kind="conv", cin=16, cout=32, ksz=3, pad=1, pool=2, act="tanh",
+                 h=8, w=8),
+            dict(kind="fc", k=512, n=64, act="tanh"),
+            dict(kind="fc", k=64, n=10, act="none"),
+        ]
+        return dict(name=name, d_in=768, n_classes=10, input=(3, 16, 16),
+                    layers=layers)
+    raise ValueError(name)
+
+
+def tile_shape(layer):
+    if layer["kind"] == "fc":
+        return (layer["k"], layer["n"])
+    return (layer["cin"] * layer["ksz"] * layer["ksz"], layer["cout"])
+
+
+def conv_geom(layer):
+    k, p = layer["ksz"], layer["pad"]
+    ho = layer["h"] + 2 * p - k + 1
+    wo = layer["w"] + 2 * p - k + 1
+    return ho, wo
+
+
+def leaf_specs(spec):
+    out = []
+    for i, layer in enumerate(spec["layers"]):
+        kdim, n = tile_shape(layer)
+        for leaf in TILE_LEAVES:
+            shape = (kdim, 1) if leaf == "c" else (kdim, n)
+            out.append((f"t{i}.{leaf}", shape, leaf, i))
+    for i, layer in enumerate(spec["layers"]):
+        _, n = tile_shape(layer)
+        out.append((f"b{i}", (n,), "bias", i))
+    return out
+
+
+def state_params(c: Comp, spec, start=0):
+    """Declare the flat state as parameters; returns (tiles, biases)."""
+    tiles = []
+    idx = start
+    for layer in spec["layers"]:
+        kdim, n = tile_shape(layer)
+        t = {}
+        for leaf in TILE_LEAVES:
+            shape = (kdim, 1) if leaf == "c" else (kdim, n)
+            t[leaf] = c.param(idx, shape, "f32")
+            idx += 1
+        tiles.append(t)
+    biases = []
+    for layer in spec["layers"]:
+        _, n = tile_shape(layer)
+        biases.append(c.param(idx, (n,), "f32"))
+        idx += 1
+    return tiles, biases, idx
+
+
+def act_fwd(c: Comp, kind, y: T) -> T:
+    if kind == "sigmoid":
+        return c.logistic(y)
+    if kind == "tanh":
+        return c.tanh(y)
+    return y
+
+
+def act_bwd(c: Comp, kind, a: T, g: T) -> T:
+    if kind == "sigmoid":
+        return c.mul(g, c.mul(a, c.sub(c.fulllike(a, 1.0), a)))
+    if kind == "tanh":
+        return c.mul(g, c.sub(c.fulllike(a, 1.0), c.mul(a, a)))
+    return g
+
+
+def tile_mvm(c, rng, x2d, tile, mode, gamma_s, dev):
+    """Forward MVM at the tile's effective weight; returns (y, ctx)."""
+    ctx = dict(mode=mode, tile=tile, gamma_s=gamma_s, x2d=x2d)
+    if mode == "digital":
+        return c.dot(x2d, tile["w"]), ctx
+    y = analog_mvm(c, rng, x2d, tile["w"], dev)
+    if mode == "residual":
+        b2, kdim = x2d.shape
+        crow = c.reshape(tile["c"], (kdim,))
+        ctx["crow"] = crow
+        xc = c.mul(x2d, c.bvec(crow, (b2, kdim), 1))
+        yp = analog_mvm(c, rng, xc, tile["p"], dev)
+        yq = c.dot(xc, tile["q"])
+        n = y.shape[1]
+        y = c.add(y, c.mul(c.bs(gamma_s, (b2, n)), c.sub(yp, yq)))
+    return y, ctx
+
+
+def tile_mvm_bwd(c, rng, g, ctx, dev):
+    """dL/dx of `tile_mvm` (the analog custom-VJP semantics)."""
+    tile, mode = ctx["tile"], ctx["mode"]
+    wt = c.transpose(tile["w"], (1, 0))
+    if mode == "digital":
+        return c.dot(g, wt)
+    dx = analog_mvm(c, rng, g, wt, dev)
+    if mode == "residual":
+        gg = c.mul(g, c.bs(ctx["gamma_s"], g.shape))
+        dxc = c.sub(
+            analog_mvm(c, rng, gg, c.transpose(tile["p"], (1, 0)), dev),
+            c.dot(gg, c.transpose(tile["q"], (1, 0))),
+        )
+        b2, kdim = dx.shape
+        dx = c.add(dx, c.mul(dxc, c.bvec(ctx["crow"], (b2, kdim), 1)))
+    return dx
+
+
+def forward(c, rng, spec, tiles, biases, x, dev, mode, gamma_s):
+    """Forward pass; returns (logits, per-layer saved ctx for backward)."""
+    b = x.shape[0]
+    saved = []
+    h = x
+    for li, layer in enumerate(spec["layers"]):
+        if layer["kind"] == "fc":
+            if len(h.shape) > 2:
+                h = c.reshape(h, (b, prod(h.shape[1:])))
+            y, mctx = tile_mvm(c, rng, h, tiles[li], mode, gamma_s, dev)
+            y = c.add(y, c.bvec(biases[li], y.shape, 1))
+            a = act_fwd(c, layer["act"], y)
+            saved.append(dict(kind="fc", x2d=h, a=a, mctx=mctx, act=layer["act"]))
+            h = a
+        else:
+            cin, cout, k, p, pool = (
+                layer["cin"], layer["cout"], layer["ksz"], layer["pad"], layer["pool"],
+            )
+            hh, ww = layer["h"], layer["w"]
+            ho, wo = conv_geom(layer)
+            if len(h.shape) == 2:
+                h = c.reshape(h, (b, cin, hh, ww))
+            hp = h
+            if p > 0:
+                hp = c.pad(h, 0.0, [(0, 0), (0, 0), (p, p), (p, p)])
+            pieces = []
+            for ky in range(k):
+                for kx in range(k):
+                    s = c.slice(
+                        hp, (0, 0, ky, kx), (b, cin, ky + ho, kx + wo)
+                    )
+                    pieces.append(c.reshape(s, (b, cin, 1, ho, wo)))
+            pat5 = c.concat(pieces, 2)  # [B, C, k*k, Ho, Wo]
+            pat = c.reshape(
+                c.transpose(pat5, (0, 3, 4, 1, 2)), (b * ho * wo, cin * k * k)
+            )
+            y2d, mctx = tile_mvm(c, rng, pat, tiles[li], mode, gamma_s, dev)
+            y2d = c.add(y2d, c.bvec(biases[li], y2d.shape, 1))
+            y4 = c.transpose(c.reshape(y2d, (b, ho, wo, cout)), (0, 3, 1, 2))
+            a4 = act_fwd(c, layer["act"], y4)
+            hpool = c.mulc(
+                c.reduce(
+                    c.reshape(a4, (b, cout, ho // pool, pool, wo // pool, pool)),
+                    (3, 5),
+                    "add",
+                ),
+                1.0 / (pool * pool),
+            )
+            saved.append(
+                dict(
+                    kind="conv", pat=pat, a4=a4, mctx=mctx, act=layer["act"],
+                    geom=(b, cin, cout, k, p, pool, hh, ww, ho, wo),
+                )
+            )
+            h = hpool
+    return h, saved
+
+
+def backward(c, rng, spec, saved, g_logits, dev):
+    """Manual backprop; returns (per-tile dW, per-layer dbias)."""
+    n_layers = len(spec["layers"])
+    dws = [None] * n_layers
+    dbs = [None] * n_layers
+    g = g_logits
+    for li in range(n_layers - 1, -1, -1):
+        sv = saved[li]
+        if sv["kind"] == "fc":
+            g_y = act_bwd(c, sv["act"], sv["a"], g)
+            dws[li] = c.dot(c.transpose(sv["x2d"], (1, 0)), g_y)
+            dbs[li] = c.reduce(g_y, (0,), "add")
+            if li > 0:
+                g = tile_mvm_bwd(c, rng, g_y, sv["mctx"], dev)
+                prev = saved[li - 1]
+                if prev["kind"] == "conv":
+                    (b, _, cout_p, _, _, pool_p, _, _, ho_p, wo_p) = prev["geom"]
+                    g = c.reshape(
+                        g, (b, cout_p, ho_p // pool_p, wo_p // pool_p)
+                    )
+        else:
+            (b, cin, cout, k, p, pool, hh, ww, ho, wo) = sv["geom"]
+            gp = c.mulc(g, 1.0 / (pool * pool))
+            g6 = c.bcast(
+                gp,
+                (b, cout, ho // pool, pool, wo // pool, pool),
+                (0, 1, 2, 4),
+            )
+            g4 = c.reshape(g6, (b, cout, ho, wo))
+            g_y4 = act_bwd(c, sv["act"], sv["a4"], g4)
+            g_y2d = c.reshape(
+                c.transpose(g_y4, (0, 2, 3, 1)), (b * ho * wo, cout)
+            )
+            dws[li] = c.dot(c.transpose(sv["pat"], (1, 0)), g_y2d)
+            dbs[li] = c.reduce(g_y2d, (0,), "add")
+            if li > 0:
+                g_pat = tile_mvm_bwd(c, rng, g_y2d, sv["mctx"], dev)
+                g5 = c.transpose(
+                    c.reshape(g_pat, (b, ho, wo, cin, k * k)), (0, 3, 4, 1, 2)
+                )
+                hp2, wp2 = hh + 2 * p, ww + 2 * p
+                acc = c.full((b, cin, hp2, wp2), 0.0)
+                for ky in range(k):
+                    for kx in range(k):
+                        j = ky * k + kx
+                        gs = c.reshape(
+                            c.slice(g5, (0, 0, j, 0, 0), (b, cin, j + 1, ho, wo)),
+                            (b, cin, ho, wo),
+                        )
+                        acc = c.add(
+                            acc,
+                            c.pad(
+                                gs,
+                                0.0,
+                                [(0, 0), (0, 0), (ky, hp2 - ho - ky),
+                                 (kx, wp2 - wo - kx)],
+                            ),
+                        )
+                if p > 0:
+                    acc = c.slice(acc, (0, 0, p, p), (b, cin, p + hh, p + ww))
+                g = acc
+    return dws, dbs
+
+
+def softmax_loss(c, logits, labels):
+    """Returns (nll scalar, g_logits)."""
+    b, ncls = logits.shape
+    rowmax = c.reduce(logits, (1,), "max")
+    shft = c.sub(logits, c.bvec(rowmax, (b, ncls), 0))
+    ex = c.exp(shft)
+    sumex = c.reduce(ex, (1,), "add")
+    logp = c.sub(shft, c.bvec(c.log(sumex), (b, ncls), 0))
+    lab_b = c.bcast(labels, (b, ncls), (0,))
+    oh = c.convert(c.cmpd("EQ", lab_b, c.iota((b, ncls), 1, "s32")), "f32")
+    nll = c.mulc(
+        c.neg(c.reduce(c.mul(oh, logp), (0, 1), "add")), 1.0 / b
+    )
+    softmax = c.div(ex, c.bvec(sumex, (b, ncls), 0))
+    g = c.mulc(c.sub(softmax, oh), 1.0 / b)
+    return nll, g, oh
+
+
+def ncorrect_of(c, logits, oh, labels):
+    """#rows whose label-logit attains the row max. Out-of-range labels
+    (the trainer's zero-pad sentinel, = n_classes) never count: their
+    one-hot row is all-zero, so `pick` would be 0 — mask them out
+    explicitly instead of trusting sign(rowmax)."""
+    b, ncls = logits.shape
+    rowmax = c.reduce(logits, (1,), "max")
+    pick = c.reduce(c.mul(oh, logits), (1,), "add")
+    corr = c.convert(c.cmpd("GE", pick, rowmax), "f32")
+    valid = c.convert(
+        c.cmpd("LT", labels, c.full((b,), ncls, "s32")), "f32"
+    )
+    return c.reduce(c.mul(corr, valid), (0,), "add")
+
+
+def flip_choppers(c, rng, tiles, flip_p_s):
+    """Markov chopper flips; returns (new tiles, per-tile flip fraction)."""
+    out, fracs = [], []
+    for t in tiles:
+        kdim = t["c"].shape[0]
+        u = rng.uniform((kdim, 1))
+        fl = c.cmpd("LT", u, c.bs(flip_p_s, (kdim, 1)))
+        c_new = c.sel(fl, c.neg(t["c"]), t["c"])
+        t2 = dict(t)
+        t2["c"] = c_new
+        out.append(t2)
+        frac = c.mulc(
+            c.reduce(c.convert(fl, "f32"), (0, 1), "add"), 1.0 / kdim
+        )
+        fracs.append(frac)
+    return out, fracs
+
+
+def grad_times_chopper(c, g, crow):
+    """Per-input-line chopper applied to a [K, N] tile gradient/read."""
+    kdim, n = g.shape
+    return c.mul(g, c.bvec(crow, (kdim, n), 0))
+
+
+def trunc(c, x):
+    return c.mul(c.sign(x), c.floor(c.absu(x)))
+
+
+# ------------------------------------------------------------- emitters
+
+
+def io_entry(name, shape, dt):
+    return {"name": name, "shape": list(shape), "dtype": dt}
+
+
+def state_io(spec):
+    return [io_entry(n, sh, "f32") for n, sh, _, _ in leaf_specs(spec)]
+
+
+def step_io(spec, batch):
+    ins = state_io(spec) + [
+        io_entry("x", (batch, spec["d_in"]), "f32"),
+        io_entry("labels", (batch,), "i32"),
+        io_entry("key", (2,), "u32"),
+        io_entry("hypers", (N_HYPERS,), "f32"),
+        io_entry("dev", (N_DEV,), "f32"),
+    ]
+    return ins
+
+
+def step_prologue(mod, spec, batch):
+    c = mod.entry
+    tiles, biases, idx = state_params(c, spec)
+    x = c.param(idx, (batch, spec["d_in"]), "f32")
+    labels = c.param(idx + 1, (batch,), "s32")
+    key = c.param(idx + 2, (2,), "u32")
+    hyp_v = c.param(idx + 3, (N_HYPERS,), "f32")
+    dev_v = c.param(idx + 4, (N_DEV,), "f32")
+    k0, k1 = c.scalar_at(key, 0), c.scalar_at(key, 1)
+    rng = RngCtx(c, mod, k0, k1)
+    return c, tiles, biases, x, labels, rng, hyp_scalars(c, hyp_v), dev_scalars(c, dev_v)
+
+
+def root_state(c, spec, tiles, biases, extra=()):
+    parts = []
+    for t in tiles:
+        for leaf in TILE_LEAVES:
+            parts.append(t[leaf])
+    parts.extend(biases)
+    parts.extend(extra)
+    c.set_root(c.tuple_(parts))
+
+
+def scaled_grad(c, lr_s, g, negate):
+    dw = c.mul(c.bs(lr_s, g.shape), g)
+    return c.neg(dw) if negate else dw
+
+
+def new_biases(c, biases, dbs, lr_s):
+    return [
+        c.sub(b, c.mul(c.bs(lr_s, b.shape), db)) for b, db in zip(biases, dbs)
+    ]
+
+
+def thresholded_transfer(c, rng, t, h2, hyp, dev):
+    """TT-v2 digital buffer -> pulsed W transfer; returns (w2, h3)."""
+    th = c.bs(hyp["thresh"], h2.shape)
+    quanta = trunc(c, c.div(h2, th))
+    dw = c.mul(c.bs(hyp["lr_transfer"], h2.shape), c.mul(quanta, th))
+    w2 = pulse(c, rng, t["w"], dw, t["wap"], t["wam"], dev)
+    return w2, c.sub(h2, c.mul(quanta, th))
+
+
+def emit_step(mod, spec, algo):
+    c, tiles, biases, x, labels, rng, hyp, dev = step_prologue(mod, spec, BATCH)
+    if algo == "digital":
+        logits, saved = forward(c, rng, spec, tiles, biases, x, dev, "digital", None)
+    elif algo == "sgd":
+        logits, saved = forward(c, rng, spec, tiles, biases, x, dev, "plain", None)
+    else:
+        if algo in ("agad", "erider"):
+            tiles, fracs = flip_choppers(c, rng, tiles, hyp["flip_p"])
+        logits, saved = forward(
+            c, rng, spec, tiles, biases, x, dev, "residual", hyp["gamma"]
+        )
+    loss, g_logits, _ = softmax_loss(c, logits, labels)
+    dws, dbs = backward(c, rng, spec, saved, g_logits, dev)
+    one = c.const(1.0)
+    new_tiles = []
+    for ti, (t, g) in enumerate(zip(tiles, dws)):
+        t2 = dict(t)
+        if algo == "digital":
+            step_w = c.mul(c.bs(hyp["lr_digital"], g.shape), g)
+            t2["w"] = c.clampc(-1.0, c.sub(t["w"], step_w), 1.0)
+        elif algo == "sgd":
+            t2["w"] = pulse(
+                c, rng, t["w"], scaled_grad(c, hyp["lr_fast"], g, True),
+                t["wap"], t["wam"], dev,
+            )
+        elif algo in ("ttv1", "ttv2"):
+            p2 = pulse(
+                c, rng, t["p"], scaled_grad(c, hyp["lr_fast"], g, True),
+                t["pap"], t["pam"], dev,
+            )
+            r = c.sub(read_noisy(c, rng, p2, hyp["read_noise"]), t["q"])
+            t2["p"] = p2
+            if algo == "ttv1":
+                t2["w"] = pulse(
+                    c, rng, t["w"], scaled_grad(c, hyp["lr_transfer"], r, False),
+                    t["wap"], t["wam"], dev,
+                )
+            else:
+                h2 = c.add(t["h"], r)
+                t2["w"], t2["h"] = thresholded_transfer(c, rng, t, h2, hyp, dev)
+        elif algo == "agad":
+            kdim = t["c"].shape[0]
+            crow = c.reshape(t["c"], (kdim,))
+            cg = grad_times_chopper(c, g, crow)
+            p2 = pulse(
+                c, rng, t["p"], scaled_grad(c, hyp["lr_fast"], cg, True),
+                t["pap"], t["pam"], dev,
+            )
+            r = read_noisy(c, rng, p2, hyp["read_noise"])
+            h2 = c.add(
+                t["h"], grad_times_chopper(c, c.sub(r, t["q"]), crow)
+            )
+            em = c.mul(hyp["eta"], fracs[ti])
+            q2 = c.add(
+                c.mul(c.bs(c.sub(one, em), t["q"].shape), t["q"]),
+                c.mul(c.bs(em, r.shape), r),
+            )
+            t2["p"], t2["q"] = p2, q2
+            t2["w"], t2["h"] = thresholded_transfer(c, rng, t, h2, hyp, dev)
+        elif algo == "erider":
+            kdim = t["c"].shape[0]
+            crow = c.reshape(t["c"], (kdim,))
+            cg = grad_times_chopper(c, g, crow)
+            p2 = pulse(
+                c, rng, t["p"], scaled_grad(c, hyp["lr_fast"], cg, True),
+                t["pap"], t["pam"], dev,
+            )
+            r = read_noisy(c, rng, p2, hyp["read_noise"])
+            q2 = c.add(
+                c.mul(c.bs(c.sub(one, hyp["eta"]), t["q"].shape), t["q"]),
+                c.mul(c.bs(hyp["eta"], r.shape), r),
+            )
+            dw = grad_times_chopper(c, c.sub(r, t["q"]), crow)
+            t2["w"] = pulse(
+                c, rng, t["w"], scaled_grad(c, hyp["lr_transfer"], dw, False),
+                t["wap"], t["wam"], dev,
+            )
+            t2["p"], t2["q"] = p2, q2
+        new_tiles.append(t2)
+    root_state(c, spec, new_tiles, new_biases(c, biases, dbs, hyp["lr_digital"]),
+               [loss])
+    outs = [io_entry(n, sh, "f32") for n, sh, _, _ in leaf_specs(spec)]
+    outs.append(io_entry("loss", (), "f32"))
+    return step_io(spec, BATCH), outs
+
+
+def emit_eval(mod, spec):
+    c, tiles, biases, x, labels, rng, hyp, dev = step_prologue(mod, spec, EVAL_BATCH)
+    logits, _ = forward(c, rng, spec, tiles, biases, x, dev, "residual",
+                        hyp["gamma"])
+    loss, _, oh = softmax_loss(c, logits, labels)
+    logits2, _ = forward(c, rng, spec, tiles, biases, x, dev, "residual",
+                         hyp["gamma"])
+    nc = ncorrect_of(c, logits2, oh, labels)
+    c.set_root(c.tuple_([loss, nc]))
+    outs = [io_entry("loss", (), "f32"), io_entry("ncorrect", (), "f32")]
+    return step_io(spec, EVAL_BATCH), outs
+
+
+def emit_eval_digital(mod, spec):
+    c = mod.entry
+    tiles, biases, idx = state_params(c, spec)
+    x = c.param(idx, (EVAL_BATCH, spec["d_in"]), "f32")
+    labels = c.param(idx + 1, (EVAL_BATCH,), "s32")
+    logits, _ = forward(c, None, spec, tiles, biases, x, None, "digital", None)
+    loss, _, oh = softmax_loss(c, logits, labels)
+    nc = ncorrect_of(c, logits, oh, labels)
+    c.set_root(c.tuple_([loss, nc]))
+    ins = state_io(spec) + [
+        io_entry("x", (EVAL_BATCH, spec["d_in"]), "f32"),
+        io_entry("labels", (EVAL_BATCH,), "i32"),
+    ]
+    return ins, [io_entry("loss", (), "f32"), io_entry("ncorrect", (), "f32")]
+
+
+def sample_device(c, rng, shape, ref_mean_s, ref_std_s, sigma_g_s):
+    gamma = c.exp(c.mul(c.bs(sigma_g_s, shape), rng.normal(shape)))
+    wsp = c.add(
+        c.bs(ref_mean_s, shape), c.mul(c.bs(ref_std_s, shape), rng.normal(shape))
+    )
+    wsp = c.clampc(-0.85, wsp, 0.85)
+    rho = c.mul(gamma, wsp)
+    floor = c.full(shape, 0.05)
+    ap = c.maximum(c.add(gamma, rho), floor)
+    am = c.maximum(c.sub(gamma, rho), floor)
+    return ap, am
+
+
+def emit_init(mod, spec):
+    c = mod.entry
+    key = c.param(0, (2,), "u32")
+    prm = c.param(1, (3,), "f32")
+    k0, k1 = c.scalar_at(key, 0), c.scalar_at(key, 1)
+    rng = RngCtx(c, mod, k0, k1)
+    ref_mean = c.scalar_at(prm, 0)
+    ref_std = c.scalar_at(prm, 1)
+    sigma_g = c.scalar_at(prm, 2)
+    tiles, biases = [], []
+    for layer in spec["layers"]:
+        kdim, n = tile_shape(layer)
+        lim = sqrt(6.0 / (kdim + n))
+        u = rng.uniform((kdim, n))
+        w = c.addc(c.mulc(u, 2.0 * lim), -lim)
+        wap, wam = sample_device(c, rng, (kdim, n), ref_mean, ref_std, sigma_g)
+        pap, pam = sample_device(c, rng, (kdim, n), ref_mean, ref_std, sigma_g)
+        tiles.append(
+            dict(
+                w=w, p=c.full((kdim, n), 0.0), q=c.full((kdim, n), 0.0),
+                h=c.full((kdim, n), 0.0), wap=wap, wam=wam, pap=pap, pam=pam,
+                c=c.full((kdim, 1), 1.0),
+            )
+        )
+        biases.append(c.full((n,), 0.0))
+    root_state(c, spec, tiles, biases)
+    ins = [io_entry("key", (2,), "u32"), io_entry("params", (3,), "f32")]
+    return ins, state_io(spec)
+
+
+def emit_zs(mod, spec):
+    c = mod.entry
+    tiles, biases, idx = state_params(c, spec)
+    n = c.param(idx, (), "u32")
+    key = c.param(idx + 1, (2,), "u32")
+    dev_v = c.param(idx + 2, (N_DEV,), "f32")
+    k0, k1 = c.scalar_at(key, 0), c.scalar_at(key, 1)
+    new_tiles = []
+    for ti, t in enumerate(tiles):
+        kdim, ncol = t["p"].shape
+        arr_ty = fmt_ty("f32", (kdim, ncol))
+        tystr = (
+            f"(u32[], u32[], u32[], u32[], {arr_ty}, {arr_ty}, {arr_ty}, f32[8])"
+        )
+        cond = mod.subcomp(f"zs_cond_t{ti}")
+        s = cond.param_tuple(0, tystr)
+        j_c = cond.gte(s, 0, (), "u32")
+        n_c = cond.gte(s, 1, (), "u32")
+        cond.set_root(cond.cmpd("LT", j_c, n_c))
+        body = mod.subcomp(f"zs_body_t{ti}")
+        sb = body.param_tuple(0, tystr)
+        j_b = body.gte(sb, 0, (), "u32")
+        n_b = body.gte(sb, 1, (), "u32")
+        k0_b = body.gte(sb, 2, (), "u32")
+        k1_b = body.gte(sb, 3, (), "u32")
+        p_b = body.gte(sb, 4, (kdim, ncol), "f32")
+        pap_b = body.gte(sb, 5, (kdim, ncol), "f32")
+        pam_b = body.gte(sb, 6, (kdim, ncol), "f32")
+        dev_b = body.gte(sb, 7, (N_DEV,), "f32")
+        devs = dev_scalars(body, dev_b)
+        brng = RngCtx(body, mod, k0_b, k1_b, extra=j_b)
+        u = brng.uniform((kdim, ncol))
+        sign = body.sel(
+            body.cmpd("LT", u, body.full((kdim, ncol), 0.5)),
+            body.full((kdim, ncol), 1.0),
+            body.full((kdim, ncol), -1.0),
+        )
+        dw = body.mul(sign, body.bs(devs["dw_min"], (kdim, ncol)))
+        p2 = pulse(body, brng, p_b, dw, pap_b, pam_b, devs)
+        j2 = body.bin("add", j_b, body.const(1, "u32"))
+        body.set_root(body.tuple_([j2, n_b, k0_b, k1_b, p2, pap_b, pam_b, dev_b]))
+        init = c.tuple_(
+            [c.const(0, "u32"), n, k0, k1, t["p"], t["pap"], t["pam"], dev_v]
+        )
+        w = c.while_(init, cond, body)
+        p_out = c.gte(w, 4, (kdim, ncol), "f32")
+        t2 = dict(t)
+        t2["p"], t2["q"] = p_out, p_out
+        new_tiles.append(t2)
+    root_state(c, spec, new_tiles, biases)
+    ins = state_io(spec) + [
+        io_entry("n", (), "u32"),
+        io_entry("key", (2,), "u32"),
+        io_entry("dev", (N_DEV,), "f32"),
+    ]
+    return ins, state_io(spec)
+
+
+def emit_kernel_pulse(mod):
+    c = mod.entry
+    shape = (4, 9)
+    w = c.param(0, shape, "f32")
+    dw = c.param(1, shape, "f32")
+    ap = c.param(2, shape, "f32")
+    am = c.param(3, shape, "f32")
+    dev_v = c.param(4, (N_DEV,), "f32")
+    w2 = pulse(c, None, w, dw, ap, am, dev_scalars(c, dev_v), det=True)
+    c.set_root(c.tuple_([w2]))
+    ins = [
+        io_entry("w", shape, "f32"), io_entry("dw", shape, "f32"),
+        io_entry("alpha_p", shape, "f32"), io_entry("alpha_m", shape, "f32"),
+        io_entry("dev", (N_DEV,), "f32"),
+    ]
+    return ins, [io_entry("w_out", shape, "f32")]
+
+
+def emit_kernel_mvm(mod, b, k, n):
+    c = mod.entry
+    x = c.param(0, (b, k), "f32")
+    w = c.param(1, (k, n), "f32")
+    dev_v = c.param(2, (N_DEV,), "f32")
+    y = analog_mvm(c, None, x, w, dev_scalars(c, dev_v), det=True)
+    c.set_root(c.tuple_([y]))
+    ins = [
+        io_entry("x", (b, k), "f32"), io_entry("w", (k, n), "f32"),
+        io_entry("dev", (N_DEV,), "f32"),
+    ]
+    return ins, [io_entry("y", (b, n), "f32")]
+
+
+# ------------------------------------------------------ parity (numpy)
+
+
+def np_pulse_det(w, dw, ap, am, dw_min):
+    f = np.float32
+    w, dw, ap, am = (np.asarray(a, f) for a in (w, dw, ap, am))
+    qp = (ap * (f(1.0) - w)).astype(f)
+    qm = (am * (f(1.0) + w)).astype(f)
+    q = np.maximum(np.where(dw >= 0, qp, qm), f(0.0)).astype(f)
+    n = np.rint((np.abs(dw) / f(dw_min)).astype(f)).astype(f)
+    delta = ((np.sign(dw) * (n * f(dw_min))).astype(f) * q).astype(f)
+    return np.clip((w + delta).astype(f), f(-1.0), f(1.0)).astype(f)
+
+
+def np_mvm_det(x, w, inp_res=1.0 / 127.0, out_res=1.0 / 511.0, out_bound=12.0):
+    f = np.float32
+    x, w = np.asarray(x, f), np.asarray(w, f)
+    scale = np.max(np.abs(x), axis=-1, keepdims=True).astype(f)
+    scale = np.where(scale > 0, scale, f(1.0)).astype(f)
+    xn = (x / scale).astype(f)
+    xq = (np.rint((xn / f(inp_res)).astype(f)).astype(f) * f(inp_res)).astype(f)
+    # sequential f32 accumulation, matching the interpreter's dot
+    b, k = x.shape
+    n = w.shape[1]
+    y = np.zeros((b, n), f)
+    for bi in range(b):
+        for kk in range(k):
+            y[bi] = (y[bi] + xq[bi, kk] * w[kk]).astype(f)
+    yq = (np.rint((y / f(out_res)).astype(f)).astype(f) * f(out_res)).astype(f)
+    yq = np.clip(yq, f(-out_bound), f(out_bound)).astype(f)
+    return (yq * scale).astype(f)
+
+
+def emit_parity(out_dir):
+    rng = np.random.default_rng(1234)
+    cases = []
+    for dw_min in (0.4622, 0.0949, 1e-3):
+        shape = (4, 9)
+        w = rng.uniform(-0.9, 0.9, shape).astype(np.float32)
+        dw = rng.uniform(-0.3, 0.3, shape).astype(np.float32)
+        gamma = np.exp(0.2 * rng.standard_normal(shape)).astype(np.float32)
+        wsp = rng.uniform(-0.5, 0.5, shape).astype(np.float32)
+        ap = np.maximum(gamma * (1 + wsp), 0.05).astype(np.float32)
+        am = np.maximum(gamma * (1 - wsp), 0.05).astype(np.float32)
+        out = np_pulse_det(w, dw, ap, am, dw_min)
+        cases.append(
+            {
+                "kind": "pulse_update",
+                "dw_min": dw_min,
+                "w": w.ravel().tolist(),
+                "dw": dw.ravel().tolist(),
+                "alpha_p": ap.ravel().tolist(),
+                "alpha_m": am.ravel().tolist(),
+                "rows": shape[0],
+                "cols": shape[1],
+                "expected": out.ravel().tolist(),
+            }
+        )
+    for b, k, n in ((3, 7, 5), (8, 16, 4)):
+        x = rng.uniform(-2, 2, (b, k)).astype(np.float32)
+        w = rng.uniform(-1, 1, (k, n)).astype(np.float32)
+        y = np_mvm_det(x, w)
+        cases.append(
+            {
+                "kind": "analog_mvm",
+                "x": x.ravel().tolist(),
+                "w": w.ravel().tolist(),
+                "b": b, "k": k, "n": n,
+                "expected": y.ravel().tolist(),
+            }
+        )
+    with open(os.path.join(out_dir, "parity.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"  parity.json: {len(cases)} cases")
+
+
+# ---------------------------------------------------------------- driver
+
+
+def write_artifact(out_dir, manifest, name, mod, ins, outs):
+    text = mod.render()
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    manifest["artifacts"][name] = {"file": fname, "inputs": ins, "outputs": outs}
+    print(f"  {name}: {len(text) / 1e3:.0f} kB hlo, {len(ins)} in / {len(outs)} out")
+
+
+def emit_model(out_dir, manifest, mname):
+    spec = model_spec(mname)
+    manifest["models"][mname] = {
+        "batch": BATCH,
+        "eval_batch": EVAL_BATCH,
+        "d_in": spec["d_in"],
+        "n_classes": spec["n_classes"],
+        "state": [
+            {"name": n, "shape": list(sh), "role": role, "tile": ti}
+            for n, sh, role, ti in leaf_specs(spec)
+        ],
+    }
+    mod = Module(f"{mname}_init")
+    ins, outs = emit_init(mod, spec)
+    write_artifact(out_dir, manifest, f"{mname}_init", mod, ins, outs)
+    for algo in STEP_ALGOS:
+        mod = Module(f"{mname}_step_{algo}")
+        ins, outs = emit_step(mod, spec, algo)
+        write_artifact(out_dir, manifest, f"{mname}_step_{algo}", mod, ins, outs)
+    mod = Module(f"{mname}_eval")
+    ins, outs = emit_eval(mod, spec)
+    write_artifact(out_dir, manifest, f"{mname}_eval", mod, ins, outs)
+    mod = Module(f"{mname}_eval_digital")
+    ins, outs = emit_eval_digital(mod, spec)
+    write_artifact(out_dir, manifest, f"{mname}_eval_digital", mod, ins, outs)
+    mod = Module(f"{mname}_zs")
+    ins, outs = emit_zs(mod, spec)
+    write_artifact(out_dir, manifest, f"{mname}_zs", mod, ins, outs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--models", default="fcn,lenet,convnet3")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "models": {},
+        "artifacts": {},
+        "hyper_index": dict(HYPER_INDEX, n_hypers=N_HYPERS),
+        "dev_index": dict(DEV_INDEX, n_dev=N_DEV),
+    }
+    man_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(man_path):
+        old = json.load(open(man_path))
+        manifest["models"].update(old.get("models", {}))
+        manifest["artifacts"].update(old.get("artifacts", {}))
+    for mname in args.models.split(","):
+        print(f"model {mname}:")
+        emit_model(args.out, manifest, mname)
+    mod = Module("kernel_pulse_update_det")
+    ins, outs = emit_kernel_pulse(mod)
+    write_artifact(args.out, manifest, "kernel_pulse_update_det", mod, ins, outs)
+    for b, k, n in ((3, 7, 5), (8, 16, 4)):
+        mod = Module(f"kernel_analog_mvm_det_{b}x{k}x{n}")
+        ins, outs = emit_kernel_mvm(mod, b, k, n)
+        write_artifact(
+            args.out, manifest, f"kernel_analog_mvm_det_{b}x{k}x{n}", mod, ins, outs
+        )
+    emit_parity(args.out)
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

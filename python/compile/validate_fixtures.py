@@ -1,0 +1,260 @@
+"""End-to-end validation of the hermetic HLO fixtures (numpy-only).
+
+Runs the emitted artifacts through the reference evaluator
+(`hlo_eval.py`): grammar check on every artifact, init/step/eval/zs
+round-trips on all three models, a short E-RIDER training run on
+synthetic separable data (loss must drop), ZS calibration convergence,
+and kernel-artifact parity against the numpy ports in
+`hlo_fixtures.py`.  Usage:
+
+    python3 -m python.compile.validate_fixtures [--dir artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from . import hlo_eval
+from .hlo_fixtures import (
+    DEV_INDEX,
+    HYPER_INDEX,
+    N_DEV,
+    N_HYPERS,
+    np_mvm_det,
+    np_pulse_det,
+)
+
+F = np.float32
+
+
+def hyp_vec(**kw):
+    v = np.zeros(N_HYPERS, F)
+    for k, x in kw.items():
+        v[HYPER_INDEX[k]] = x
+    return v
+
+
+def dev_vec(**kw):
+    v = np.zeros(N_DEV, F)
+    for k, x in kw.items():
+        v[DEV_INDEX[k]] = x
+    return v
+
+
+DEFAULT_HYP = dict(
+    lr_fast=0.5, lr_transfer=0.3, eta=0.3, gamma=1.0, flip_p=0.05,
+    thresh=0.1, lr_digital=0.05, read_noise=0.01,
+)
+DEFAULT_DEV = dict(
+    dw_min=0.002, sigma_c2c=0.1, tau_max=1.0, tau_min=1.0, out_noise=0.06,
+    inp_res=1.0 / 127.0, out_res=1.0 / 511.0, out_bound=12.0,
+)
+
+
+def key_of(a, b):
+    return np.array([a, b], np.uint32)
+
+
+def synth_data(n, d_in, n_classes, seed):
+    """Separable synthetic task: class means + noise, zero-mean rows."""
+    r = np.random.default_rng(seed)
+    means = r.normal(0, 1.0, (n_classes, d_in)).astype(F)
+    y = (np.arange(n) % n_classes).astype(np.int32)
+    x = means[y] + 0.3 * r.normal(0, 1, (n, d_in)).astype(F)
+    x -= x.mean(axis=1, keepdims=True)
+    x = np.clip(x, -1, 1)
+    return x.astype(F), y
+
+
+class Runner:
+    def __init__(self, art_dir, manifest):
+        self.dir = art_dir
+        self.man = manifest
+        self.cache = {}
+
+    def evaluator(self, name):
+        if name not in self.cache:
+            path = os.path.join(self.dir, self.man["artifacts"][name]["file"])
+            self.cache[name] = hlo_eval.load(path)
+        return self.cache[name]
+
+    def run(self, name, inputs):
+        spec = self.man["artifacts"][name]
+        assert len(inputs) == len(spec["inputs"]), name
+        for t, s in zip(inputs, spec["inputs"]):
+            assert list(t.shape) == s["shape"], (name, s["name"], t.shape, s["shape"])
+        out = self.evaluator(name).run([np.asarray(t) for t in inputs])
+        assert isinstance(out, tuple), name
+        assert len(out) == len(spec["outputs"]), name
+        return [np.asarray(o) for o in out]
+
+
+def check_model(rn: Runner, mname, steps=0, check_loss_drop=False):
+    m = rn.man["models"][mname]
+    d_in, ncls, batch, eb = m["d_in"], m["n_classes"], m["batch"], m["eval_batch"]
+    nleaves = len(m["state"])
+    hyp = hyp_vec(**DEFAULT_HYP)
+    dev = dev_vec(**DEFAULT_DEV)
+
+    state = rn.run(f"{mname}_init", [key_of(1, 2), np.array([0.3, 0.2, 0.1], F)])
+    assert len(state) == nleaves
+    for leaf, out in zip(m["state"], state):
+        assert list(out.shape) == leaf["shape"], (leaf["name"], out.shape)
+    # device sanity: alphas floored, SP distribution roughly centred
+    wap = state[4]
+    wam = state[5]
+    assert wap.min() >= 0.05 and wam.min() >= 0.05
+    sp = (wap - wam) / (wap + wam)
+    assert abs(sp.mean() - 0.3) < 0.05, sp.mean()
+    assert 0.1 < sp.std() < 0.3, sp.std()
+
+    xtr, ytr = synth_data(256, d_in, ncls, 7)
+    losses = []
+    for algo in ("sgd", "ttv1", "ttv2", "agad", "erider", "digital"):
+        out = rn.run(
+            f"{mname}_step_{algo}",
+            list(state)
+            + [xtr[:batch], ytr[:batch], key_of(0, 9), hyp, dev],
+        )
+        loss = float(out[-1])
+        assert np.isfinite(loss) and loss > 0, (algo, loss)
+        moved = any(
+            not np.allclose(a, b)
+            for a, b, leaf in zip(state, out[:-1], m["state"])
+            if leaf["role"] in ("w", "p")
+        )
+        assert moved, f"{mname}_step_{algo}: state did not move"
+
+    if check_loss_drop and steps:
+        st = [s.copy() for s in state]
+        r = np.random.default_rng(3)
+        first = None
+        for k in range(steps):
+            idx = r.integers(0, len(ytr), batch)
+            out = rn.run(
+                f"{mname}_step_erider",
+                list(st) + [xtr[idx], ytr[idx], key_of(1, 100 + k), hyp, dev],
+            )
+            loss = float(out[-1])
+            losses.append(loss)
+            st = out[:-1]
+            if first is None:
+                first = loss
+        head = np.mean(losses[:5])
+        tail = np.mean(losses[-5:])
+        print(f"    erider loss {head:.3f} -> {tail:.3f} over {steps} steps")
+        assert tail < head, "erider loss did not decrease"
+
+        # eval on the training distribution: accuracy above chance
+        xe, ye = synth_data(eb, d_in, ncls, 7)
+        loss_e, nc = rn.run(
+            f"{mname}_eval", list(st) + [xe, ye, key_of(5, 5), hyp, dev]
+        )
+        acc = 100.0 * float(nc) / eb
+        print(f"    eval loss {float(loss_e):.3f}, acc {acc:.1f}%")
+        assert np.isfinite(float(loss_e)) and 0 <= float(nc) <= eb
+        assert acc > 100.0 / ncls, "post-training accuracy at chance level"
+
+        loss_d, nc_d = rn.run(f"{mname}_eval_digital", list(st) + [xe, ye])
+        assert np.isfinite(float(loss_d)) and 0 <= float(nc_d) <= eb
+
+        # trainer zero-pad contract: rows labelled n_classes (out of
+        # range) must never count as correct, whatever the logits
+        half = eb // 2
+        xp = xe.copy()
+        xp[half:] = 0.0
+        yp = ye.copy()
+        yp[half:] = ncls
+        _, nc_pad = rn.run(
+            f"{mname}_eval", list(st) + [xp, yp, key_of(5, 5), hyp, dev]
+        )
+        assert float(nc_pad) <= half, f"padded rows counted: {float(nc_pad)} > {half}"
+    else:
+        xe, ye = synth_data(eb, d_in, ncls, 8)
+        loss_e, nc = rn.run(
+            f"{mname}_eval", list(state) + [xe, ye, key_of(5, 5), hyp, dev]
+        )
+        assert np.isfinite(float(loss_e)) and 0 <= float(nc) <= eb
+
+    # ZS calibration pushes q toward the P-array SP distribution
+    zdev = dev_vec(**dict(DEFAULT_DEV, dw_min=0.02, sigma_c2c=0.0))
+    zstate = rn.run(
+        f"{mname}_init", [key_of(3, 4), np.array([0.4, 0.1, 0.1], F)]
+    )
+    zout = rn.run(
+        f"{mname}_zs",
+        list(zstate) + [np.array(300, np.uint32), key_of(7, 8), zdev],
+    )
+    roles = [leaf["role"] for leaf in m["state"]]
+    q_mean = np.mean(
+        [zout[i].mean() for i, r_ in enumerate(roles) if r_ == "q"]
+    )
+    p_idx = [i for i, r_ in enumerate(roles) if r_ == "p"]
+    assert all(np.allclose(zout[i], zout[i + 1]) for i in p_idx)  # q == p
+    print(f"    zs q mean {q_mean:.3f} (target SP ~ 0.4)")
+    assert q_mean > 0.25, f"ZS calibration ineffective: q mean {q_mean}"
+    print(f"  {mname}: ok")
+
+
+def check_kernels(rn: Runner, art_dir):
+    parity = json.load(open(os.path.join(art_dir, "parity.json")))
+    n_pulse = n_mvm = 0
+    for case in parity["cases"]:
+        if case["kind"] == "pulse_update":
+            n_pulse += 1
+            sh = (case["rows"], case["cols"])
+            w = np.array(case["w"], F).reshape(sh)
+            dw = np.array(case["dw"], F).reshape(sh)
+            ap = np.array(case["alpha_p"], F).reshape(sh)
+            am = np.array(case["alpha_m"], F).reshape(sh)
+            dev = dev_vec(
+                dw_min=case["dw_min"], tau_max=1.0, tau_min=1.0,
+                inp_res=1.0 / 127.0, out_res=1.0 / 511.0, out_bound=12.0,
+            )
+            (out,) = rn.run("kernel_pulse_update_det", [w, dw, ap, am, dev])
+            want = np.array(case["expected"], F).reshape(sh)
+            np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(
+                np_pulse_det(w, dw, ap, am, case["dw_min"]), want, rtol=1e-6
+            )
+        else:
+            n_mvm += 1
+            b, k, n = case["b"], case["k"], case["n"]
+            x = np.array(case["x"], F).reshape(b, k)
+            w = np.array(case["w"], F).reshape(k, n)
+            dev = dev_vec(**DEFAULT_DEV)
+            (out,) = rn.run(f"kernel_analog_mvm_det_{b}x{k}x{n}", [x, w, dev])
+            want = np.array(case["expected"], F).reshape(b, n)
+            np.testing.assert_allclose(out, want, rtol=1e-5, atol=2e-6)
+            np.testing.assert_allclose(np_mvm_det(x, w), want, rtol=1e-6)
+    assert n_pulse >= 3 and n_mvm >= 2
+    print(f"  kernels: {n_pulse} pulse + {n_mvm} mvm parity cases ok")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+    manifest = json.load(open(os.path.join(args.dir, "manifest.json")))
+    rn = Runner(args.dir, manifest)
+    print("validating artifacts:")
+    # grammar check on everything up front
+    for name in sorted(manifest["artifacts"]):
+        rn.evaluator(name)
+    print(f"  parsed {len(manifest['artifacts'])} artifacts")
+    check_kernels(rn, args.dir)
+    check_model(rn, "fcn", steps=args.steps, check_loss_drop=True)
+    check_model(rn, "lenet")
+    check_model(rn, "convnet3")
+    print("fixtures OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Pytest wrapper around the hermetic-fixture validation (numpy-only —
+unlike the other python tests this needs no JAX). Skips when the
+checked-in artifacts/ directory is absent."""
+
+import os
+
+import pytest
+
+np = pytest.importorskip("numpy")
+
+from python.compile import hlo_eval, validate_fixtures  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _runner():
+    import json
+
+    man_path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts/ not generated")
+    return validate_fixtures.Runner(ART, json.load(open(man_path)))
+
+
+def test_all_artifacts_parse():
+    rn = _runner()
+    for name in rn.man["artifacts"]:
+        assert isinstance(rn.evaluator(name), hlo_eval.Evaluator)
+
+
+def test_kernel_parity():
+    rn = _runner()
+    validate_fixtures.check_kernels(rn, ART)
+
+
+def test_fcn_trains_end_to_end():
+    rn = _runner()
+    validate_fixtures.check_model(rn, "fcn", steps=15, check_loss_drop=True)
+
+
+def test_conv_models_roundtrip():
+    rn = _runner()
+    validate_fixtures.check_model(rn, "lenet")
+    validate_fixtures.check_model(rn, "convnet3")

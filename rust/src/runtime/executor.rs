@@ -70,19 +70,20 @@ impl Executor {
             .zip(inputs)
             .map(|(s, t)| to_literal(s, t))
             .collect::<Result<_>>()?;
+        // owned args + consuming read-back: the state tensors are not
+        // re-copied on the way in or out of the backend
         let result = exe
-            .execute::<xla::Literal>(&lits)
+            .execute_owned(lits)
             .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?;
         let buf = result
-            .first()
-            .and_then(|r| r.first())
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
             .ok_or_else(|| anyhow!("{}: no output buffer", spec.name))?;
-        let root = buf
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        let root = buf.into_literal();
         // aot.py lowers with return_tuple=True: the root is one tuple.
         let parts = root
-            .to_tuple()
+            .into_tuple()
             .map_err(|e| anyhow!("untuple: {e:?}"))?;
         if parts.len() != spec.outputs.len() {
             return Err(anyhow!(

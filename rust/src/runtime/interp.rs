@@ -1,0 +1,1916 @@
+//! Pure-Rust HLO-text parser + reference interpreter.
+//!
+//! This is the default backend behind `runtime::xla`: it executes the
+//! AOT artifacts (HLO *text*, the interchange format chosen in
+//! DESIGN.md) on the host CPU with no external dependency, so the
+//! NN-scale trainer, experiments and CI run in a cargo-only
+//! environment. Real PJRT bindings remain a drop-in swap at the
+//! `runtime::xla` surface.
+//!
+//! Supported op set (what the checked-in FCN/LeNet/convnet3 artifacts
+//! emit — see `python/compile/hlo_fixtures.py`):
+//! parameter/constant/iota/tuple/get-tuple-element, dot,
+//! add/subtract/multiply/divide/maximum/minimum/power,
+//! and/or/xor/not/shift-left/shift-right-logical,
+//! negate/exponential/log/sqrt/rsqrt/abs/sign/floor/ceil/
+//! round-nearest-even/tanh/logistic/sine/cosine,
+//! compare/select/clamp/convert, broadcast/reshape/transpose/slice/
+//! concatenate/pad, reduce (add/max/min/multiply fast paths + generic
+//! sub-computation fallback), and while.
+//!
+//! Numeric contract: element type f32 exactly (no widening to f64 in
+//! elementwise ops); `dot` accumulates in f32 like XLA:CPU;
+//! `round-nearest-even` implements ties-to-even (`jnp.round`).
+//! Unsupported opcodes are *parse-time* errors so a bad artifact fails
+//! at compile, not mid-training.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::xla::{Data, Literal, XlaError};
+
+fn err(msg: impl Into<String>) -> XlaError {
+    XlaError(msg.into())
+}
+
+// ----------------------------------------------------------------- types
+
+/// Element type of an array shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dt {
+    F32,
+    S32,
+    U32,
+    Pred,
+}
+
+impl Dt {
+    fn parse(s: &str) -> Result<Dt, XlaError> {
+        match s {
+            "f32" => Ok(Dt::F32),
+            "s32" => Ok(Dt::S32),
+            "u32" => Ok(Dt::U32),
+            "pred" => Ok(Dt::Pred),
+            other => Err(err(format!("unsupported element type '{other}'"))),
+        }
+    }
+}
+
+/// Parsed HLO shape: an array or a tuple of shapes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Shape {
+    Array { dt: Dt, dims: Vec<usize> },
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    fn numel(&self) -> usize {
+        match self {
+            Shape::Array { dims, .. } => dims.iter().product(),
+            Shape::Tuple(_) => 0,
+        }
+    }
+
+    fn dims(&self) -> Result<&[usize], XlaError> {
+        match self {
+            Shape::Array { dims, .. } => Ok(dims),
+            Shape::Tuple(_) => Err(err("expected array shape, got tuple")),
+        }
+    }
+
+    fn dt(&self) -> Result<Dt, XlaError> {
+        match self {
+            Shape::Array { dt, .. } => Ok(*dt),
+            Shape::Tuple(_) => Err(err("expected array shape, got tuple")),
+        }
+    }
+}
+
+/// Comparison direction of a `compare` op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Elementwise binary opcodes.
+#[derive(Clone, Copy, Debug)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+}
+
+/// Elementwise unary opcodes.
+#[derive(Clone, Copy, Debug)]
+pub enum UnOp {
+    Neg,
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Abs,
+    Sign,
+    Floor,
+    Ceil,
+    RoundTiesEven,
+    Tanh,
+    Logistic,
+    Sin,
+    Cos,
+    Not,
+}
+
+/// One HLO instruction's operation (attributes resolved at parse time).
+#[derive(Clone, Debug)]
+enum Op {
+    Parameter(usize),
+    Constant(Literal),
+    Iota { dim: usize },
+    Bin(BinOp),
+    Un(UnOp),
+    Compare(Cmp),
+    Select,
+    Clamp,
+    Convert,
+    Broadcast { dims: Vec<usize> },
+    Reshape,
+    Transpose { perm: Vec<usize> },
+    Slice { starts: Vec<usize>, limits: Vec<usize>, strides: Vec<usize> },
+    Concat { dim: usize },
+    Pad { low: Vec<i64>, high: Vec<i64>, interior: Vec<usize> },
+    Dot { lc: usize, rc: usize },
+    Reduce { dims: Vec<usize>, comp: usize },
+    Tuple,
+    Gte { index: usize },
+    While { cond: usize, body: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Instr {
+    shape: Shape,
+    op: Op,
+    operands: Vec<usize>,
+}
+
+/// One named computation (the entry or a called sub-computation).
+#[derive(Clone, Debug)]
+pub struct Computation {
+    pub name: String,
+    instrs: Vec<Instr>,
+    /// parameter ordinal -> instruction index
+    params: Vec<usize>,
+    root: usize,
+    /// per instruction: operand values whose last use this is
+    drop_after: Vec<Vec<usize>>,
+}
+
+/// A parsed HLO module: every computation plus the entry index.
+#[derive(Clone, Debug)]
+pub struct HloModule {
+    computations: Vec<Computation>,
+    entry: usize,
+}
+
+impl HloModule {
+    /// Shapes of the entry computation's parameters (validation aid).
+    pub fn entry_param_count(&self) -> usize {
+        self.computations[self.entry].params.len()
+    }
+}
+
+// ---------------------------------------------------------------- parser
+
+struct Cursor<'a> {
+    s: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(s: &'a str) -> Cursor<'a> {
+        Cursor { s: s.as_bytes(), pos: 0 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ') | Some(b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), XlaError> {
+        self.skip_ws();
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(err(format!(
+                "expected '{}' at byte {} of '{}'",
+                c as char,
+                self.pos,
+                String::from_utf8_lossy(self.s)
+            )))
+        }
+    }
+
+    fn ident(&mut self) -> String {
+        self.skip_ws();
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || c == b'_' || c == b'.' || c == b'-' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        String::from_utf8_lossy(&self.s[start..self.pos]).into_owned()
+    }
+
+    /// Content up to the matching close of the `(` just consumed.
+    fn balanced(&mut self) -> Result<String, XlaError> {
+        let start = self.pos;
+        let mut depth = 1usize;
+        while let Some(c) = self.bump() {
+            match c {
+                b'(' | b'{' | b'[' => depth += 1,
+                b')' | b'}' | b']' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(String::from_utf8_lossy(&self.s[start..self.pos - 1])
+                            .into_owned());
+                    }
+                }
+                _ => {}
+            }
+        }
+        Err(err("unbalanced parentheses"))
+    }
+
+    fn rest(&self) -> String {
+        String::from_utf8_lossy(&self.s[self.pos..]).into_owned()
+    }
+}
+
+/// Split at top-level commas (nesting-aware for (), {}, []).
+fn split_top(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' | '{' | '[' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' | '}' | ']' => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur = String::new();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+fn parse_shape(c: &mut Cursor) -> Result<Shape, XlaError> {
+    c.skip_ws();
+    if c.peek() == Some(b'(') {
+        c.bump();
+        let inner = c.balanced()?;
+        let mut parts = Vec::new();
+        for p in split_top(&inner) {
+            let mut pc = Cursor::new(&p);
+            parts.push(parse_shape(&mut pc)?);
+        }
+        return Ok(Shape::Tuple(parts));
+    }
+    let dt = Dt::parse(&c.ident())?;
+    c.eat(b'[')?;
+    let inner = c.balanced()?;
+    let mut dims = Vec::new();
+    for d in split_top(&inner) {
+        dims.push(
+            d.parse::<usize>()
+                .map_err(|_| err(format!("bad dimension '{d}'")))?,
+        );
+    }
+    // optional layout suffix {1,0}
+    c.skip_ws();
+    if c.peek() == Some(b'{') {
+        c.bump();
+        c.balanced()?;
+    }
+    Ok(Shape::Array { dt, dims })
+}
+
+/// `{1,2}` -> vec![1, 2] (also accepts an empty list).
+fn parse_dims_attr(v: &str) -> Result<Vec<usize>, XlaError> {
+    let inner = v
+        .trim()
+        .strip_prefix('{')
+        .and_then(|s| s.strip_suffix('}'))
+        .ok_or_else(|| err(format!("bad dims attribute '{v}'")))?;
+    let mut out = Vec::new();
+    for d in split_top(inner) {
+        out.push(
+            d.parse::<usize>()
+                .map_err(|_| err(format!("bad dims attribute '{v}'")))?,
+        );
+    }
+    Ok(out)
+}
+
+fn parse_const_literal(shape: &Shape, body: &str) -> Result<Literal, XlaError> {
+    let dt = shape.dt()?;
+    let dims: Vec<i64> = shape.dims()?.iter().map(|&d| d as i64).collect();
+    // strip braces: nested dense literals flatten in row-major order
+    let flat: String = body
+        .chars()
+        .map(|c| if c == '{' || c == '}' { ' ' } else { c })
+        .collect();
+    let toks: Vec<&str> = flat
+        .split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .collect();
+    if toks.len() != shape.numel() {
+        return Err(err(format!(
+            "constant: {} values for shape with {} elements",
+            toks.len(),
+            shape.numel()
+        )));
+    }
+    let data = match dt {
+        Dt::F32 => {
+            let mut v = Vec::with_capacity(toks.len());
+            for t in &toks {
+                v.push(
+                    t.parse::<f32>()
+                        .map_err(|_| err(format!("bad f32 constant '{t}'")))?,
+                );
+            }
+            Data::F32(v)
+        }
+        Dt::S32 => {
+            let mut v = Vec::with_capacity(toks.len());
+            for t in &toks {
+                v.push(
+                    t.parse::<i32>()
+                        .map_err(|_| err(format!("bad s32 constant '{t}'")))?,
+                );
+            }
+            Data::I32(v)
+        }
+        Dt::U32 => {
+            let mut v = Vec::with_capacity(toks.len());
+            for t in &toks {
+                v.push(
+                    t.parse::<u32>()
+                        .map_err(|_| err(format!("bad u32 constant '{t}'")))?,
+                );
+            }
+            Data::U32(v)
+        }
+        Dt::Pred => {
+            let mut v = Vec::with_capacity(toks.len());
+            for t in &toks {
+                v.push(match *t {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    other => return Err(err(format!("bad pred constant '{other}'"))),
+                });
+            }
+            Data::Pred(v)
+        }
+    };
+    Ok(Literal { data, dims })
+}
+
+/// `lo_hi` or `lo_hi_interior`, 'x'-separated per dimension.
+#[allow(clippy::type_complexity)]
+fn parse_padding_attr(v: &str) -> Result<(Vec<i64>, Vec<i64>, Vec<usize>), XlaError> {
+    let (mut low, mut high, mut interior) = (Vec::new(), Vec::new(), Vec::new());
+    for dim in v.trim().split('x') {
+        let parts: Vec<&str> = dim.split('_').collect();
+        if parts.len() != 2 && parts.len() != 3 {
+            return Err(err(format!("bad padding attribute '{v}'")));
+        }
+        let p = |s: &str| {
+            s.parse::<i64>()
+                .map_err(|_| err(format!("bad padding attribute '{v}'")))
+        };
+        low.push(p(parts[0])?);
+        high.push(p(parts[1])?);
+        interior.push(if parts.len() == 3 { p(parts[2])? as usize } else { 0 });
+    }
+    Ok((low, high, interior))
+}
+
+/// `{[0:16:1],[0:8]}` -> starts/limits/strides.
+#[allow(clippy::type_complexity)]
+fn parse_slice_attr(v: &str) -> Result<(Vec<usize>, Vec<usize>, Vec<usize>), XlaError> {
+    let inner = v
+        .trim()
+        .strip_prefix('{')
+        .and_then(|s| s.strip_suffix('}'))
+        .ok_or_else(|| err(format!("bad slice attribute '{v}'")))?;
+    let (mut starts, mut limits, mut strides) = (Vec::new(), Vec::new(), Vec::new());
+    for part in split_top(inner) {
+        let p = part
+            .trim()
+            .strip_prefix('[')
+            .and_then(|s| s.strip_suffix(']'))
+            .ok_or_else(|| err(format!("bad slice attribute '{v}'")))?;
+        let nums: Vec<&str> = p.split(':').collect();
+        if nums.len() != 2 && nums.len() != 3 {
+            return Err(err(format!("bad slice attribute '{v}'")));
+        }
+        let q = |s: &str| {
+            s.parse::<usize>()
+                .map_err(|_| err(format!("bad slice attribute '{v}'")))
+        };
+        starts.push(q(nums[0])?);
+        limits.push(q(nums[1])?);
+        strides.push(if nums.len() == 3 { q(nums[2])? } else { 1 });
+    }
+    Ok((starts, limits, strides))
+}
+
+fn operand_name(tok: &str) -> Result<String, XlaError> {
+    match tok.rfind('%') {
+        Some(i) => {
+            let mut c = Cursor::new(&tok[i + 1..]);
+            Ok(c.ident())
+        }
+        None => {
+            // bare names are legal in some printers
+            let t = tok.trim();
+            let last = t.rsplit(' ').next().unwrap_or(t);
+            if last.is_empty() {
+                Err(err(format!("bad operand '{tok}'")))
+            } else {
+                Ok(last.to_string())
+            }
+        }
+    }
+}
+
+fn comp_ref(v: &str, comp_names: &BTreeMap<String, usize>) -> Result<usize, XlaError> {
+    let name = v.trim().trim_start_matches('%');
+    comp_names
+        .get(name)
+        .copied()
+        .ok_or_else(|| err(format!("unknown computation '{name}'")))
+}
+
+fn parse_instruction(
+    line: &str,
+    names: &BTreeMap<String, usize>,
+    comp_names: &BTreeMap<String, usize>,
+) -> Result<(String, bool, Instr), XlaError> {
+    let mut line = line.trim();
+    let is_root = if let Some(rest) = line.strip_prefix("ROOT ") {
+        line = rest;
+        true
+    } else {
+        false
+    };
+    let mut c = Cursor::new(line);
+    c.eat(b'%')?;
+    let name = c.ident();
+    c.skip_ws();
+    c.eat(b'=')?;
+    let shape = parse_shape(&mut c)?;
+    let opcode = c.ident();
+    c.eat(b'(')?;
+    let body = c.balanced()?;
+    // attributes after the operand list
+    let mut attrs: BTreeMap<String, String> = BTreeMap::new();
+    for a in split_top(&c.rest()) {
+        if let Some(eq) = a.find('=') {
+            attrs.insert(a[..eq].trim().to_string(), a[eq + 1..].trim().to_string());
+        }
+    }
+    let resolve = |toks: &str| -> Result<Vec<usize>, XlaError> {
+        let mut out = Vec::new();
+        for t in split_top(toks) {
+            let n = operand_name(&t)?;
+            out.push(
+                *names
+                    .get(&n)
+                    .ok_or_else(|| err(format!("operand '%{n}' not defined before use")))?,
+            );
+        }
+        Ok(out)
+    };
+    let dims_of = |key: &str| -> Result<Vec<usize>, XlaError> {
+        parse_dims_attr(
+            attrs
+                .get(key)
+                .ok_or_else(|| err(format!("{opcode}: missing {key}")))?,
+        )
+    };
+    let (op, operands) = match opcode.as_str() {
+        "parameter" => {
+            let idx = body
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| err(format!("bad parameter index '{body}'")))?;
+            (Op::Parameter(idx), Vec::new())
+        }
+        "constant" => (Op::Constant(parse_const_literal(&shape, &body)?), Vec::new()),
+        "iota" => {
+            let dim = attrs
+                .get("iota_dimension")
+                .and_then(|v| v.parse::<usize>().ok())
+                .ok_or_else(|| err("iota: missing or malformed iota_dimension"))?;
+            (Op::Iota { dim }, Vec::new())
+        }
+        "add" => (Op::Bin(BinOp::Add), resolve(&body)?),
+        "subtract" => (Op::Bin(BinOp::Sub), resolve(&body)?),
+        "multiply" => (Op::Bin(BinOp::Mul), resolve(&body)?),
+        "divide" => (Op::Bin(BinOp::Div), resolve(&body)?),
+        "maximum" => (Op::Bin(BinOp::Max), resolve(&body)?),
+        "minimum" => (Op::Bin(BinOp::Min), resolve(&body)?),
+        "power" => (Op::Bin(BinOp::Pow), resolve(&body)?),
+        "and" => (Op::Bin(BinOp::And), resolve(&body)?),
+        "or" => (Op::Bin(BinOp::Or), resolve(&body)?),
+        "xor" => (Op::Bin(BinOp::Xor), resolve(&body)?),
+        "shift-left" => (Op::Bin(BinOp::Shl), resolve(&body)?),
+        "shift-right-logical" => (Op::Bin(BinOp::Shr), resolve(&body)?),
+        "not" => (Op::Un(UnOp::Not), resolve(&body)?),
+        "negate" => (Op::Un(UnOp::Neg), resolve(&body)?),
+        "exponential" | "exp" => (Op::Un(UnOp::Exp), resolve(&body)?),
+        "log" => (Op::Un(UnOp::Log), resolve(&body)?),
+        "sqrt" => (Op::Un(UnOp::Sqrt), resolve(&body)?),
+        "rsqrt" => (Op::Un(UnOp::Rsqrt), resolve(&body)?),
+        "abs" => (Op::Un(UnOp::Abs), resolve(&body)?),
+        "sign" => (Op::Un(UnOp::Sign), resolve(&body)?),
+        "floor" => (Op::Un(UnOp::Floor), resolve(&body)?),
+        "ceil" => (Op::Un(UnOp::Ceil), resolve(&body)?),
+        "round-nearest-even" => (Op::Un(UnOp::RoundTiesEven), resolve(&body)?),
+        "tanh" => (Op::Un(UnOp::Tanh), resolve(&body)?),
+        "logistic" => (Op::Un(UnOp::Logistic), resolve(&body)?),
+        "sine" => (Op::Un(UnOp::Sin), resolve(&body)?),
+        "cosine" => (Op::Un(UnOp::Cos), resolve(&body)?),
+        "compare" => {
+            let dir = match attrs.get("direction").map(String::as_str) {
+                Some("EQ") => Cmp::Eq,
+                Some("NE") => Cmp::Ne,
+                Some("LT") => Cmp::Lt,
+                Some("LE") => Cmp::Le,
+                Some("GT") => Cmp::Gt,
+                Some("GE") => Cmp::Ge,
+                other => {
+                    return Err(err(format!("compare: bad direction {other:?}")));
+                }
+            };
+            (Op::Compare(dir), resolve(&body)?)
+        }
+        "select" => (Op::Select, resolve(&body)?),
+        "clamp" => (Op::Clamp, resolve(&body)?),
+        "convert" => (Op::Convert, resolve(&body)?),
+        "broadcast" => (Op::Broadcast { dims: dims_of("dimensions")? }, resolve(&body)?),
+        "reshape" => (Op::Reshape, resolve(&body)?),
+        "transpose" => (Op::Transpose { perm: dims_of("dimensions")? }, resolve(&body)?),
+        "slice" => {
+            let (starts, limits, strides) = parse_slice_attr(
+                attrs
+                    .get("slice")
+                    .ok_or_else(|| err("slice: missing slice attribute"))?,
+            )?;
+            (Op::Slice { starts, limits, strides }, resolve(&body)?)
+        }
+        "concatenate" => {
+            let dims = dims_of("dimensions")?;
+            if dims.len() != 1 {
+                return Err(err("concatenate: expected one dimension"));
+            }
+            (Op::Concat { dim: dims[0] }, resolve(&body)?)
+        }
+        "pad" => {
+            let (low, high, interior) = parse_padding_attr(
+                attrs
+                    .get("padding")
+                    .ok_or_else(|| err("pad: missing padding attribute"))?,
+            )?;
+            (Op::Pad { low, high, interior }, resolve(&body)?)
+        }
+        "dot" => {
+            let one_dim = |key: &str| -> Result<usize, XlaError> {
+                let d = parse_dims_attr(attrs.get(key).map(String::as_str).unwrap_or("{}"))?;
+                if d.len() != 1 {
+                    return Err(err(format!("dot: {key} must name exactly one dim")));
+                }
+                Ok(d[0])
+            };
+            for key in ["lhs_batch_dims", "rhs_batch_dims"] {
+                if let Some(v) = attrs.get(key) {
+                    if !parse_dims_attr(v)?.is_empty() {
+                        return Err(err("dot: batch dimensions are not supported"));
+                    }
+                }
+            }
+            (
+                Op::Dot {
+                    lc: one_dim("lhs_contracting_dims")?,
+                    rc: one_dim("rhs_contracting_dims")?,
+                },
+                resolve(&body)?,
+            )
+        }
+        "reduce" => {
+            let comp = comp_ref(
+                attrs
+                    .get("to_apply")
+                    .ok_or_else(|| err("reduce: missing to_apply"))?,
+                comp_names,
+            )?;
+            (Op::Reduce { dims: dims_of("dimensions")?, comp }, resolve(&body)?)
+        }
+        "tuple" => (Op::Tuple, resolve(&body)?),
+        "get-tuple-element" => {
+            let index = attrs
+                .get("index")
+                .and_then(|v| v.parse::<usize>().ok())
+                .ok_or_else(|| err("get-tuple-element: missing index"))?;
+            (Op::Gte { index }, resolve(&body)?)
+        }
+        "while" => {
+            let cond = comp_ref(
+                attrs
+                    .get("condition")
+                    .ok_or_else(|| err("while: missing condition"))?,
+                comp_names,
+            )?;
+            let body_c = comp_ref(
+                attrs.get("body").ok_or_else(|| err("while: missing body"))?,
+                comp_names,
+            )?;
+            (Op::While { cond, body: body_c }, resolve(&body)?)
+        }
+        other => {
+            return Err(err(format!("unsupported HLO op '{other}'")));
+        }
+    };
+    Ok((name, is_root, Instr { shape, op, operands }))
+}
+
+/// Parse a full HLO-text module.
+pub fn parse(text: &str) -> Result<HloModule, XlaError> {
+    // phase 1: split into computation blocks
+    struct Block<'a> {
+        name: String,
+        entry: bool,
+        lines: Vec<&'a str>,
+    }
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut cur: Option<Block> = None;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("HloModule") || line.starts_with("//") {
+            continue;
+        }
+        if cur.is_none() {
+            if !line.ends_with('{') {
+                continue; // stray metadata between computations
+            }
+            let entry = line.starts_with("ENTRY");
+            let at = line
+                .find('%')
+                .ok_or_else(|| err(format!("computation header without name: '{line}'")))?;
+            let mut c = Cursor::new(&line[at + 1..]);
+            let name = c.ident();
+            cur = Some(Block { name, entry, lines: Vec::new() });
+            continue;
+        }
+        if line == "}" {
+            blocks.push(cur.take().unwrap());
+            continue;
+        }
+        if let Some(b) = cur.as_mut() {
+            b.lines.push(line);
+        }
+    }
+    if cur.is_some() {
+        return Err(err("unterminated computation block"));
+    }
+    if blocks.is_empty() {
+        return Err(err("no computations found in HLO text"));
+    }
+    let mut comp_names = BTreeMap::new();
+    for (i, b) in blocks.iter().enumerate() {
+        comp_names.insert(b.name.clone(), i);
+    }
+    let entry = blocks
+        .iter()
+        .position(|b| b.entry)
+        .unwrap_or(blocks.len() - 1);
+
+    // phase 2: parse instructions per block
+    let mut computations = Vec::with_capacity(blocks.len());
+    for b in &blocks {
+        let mut names: BTreeMap<String, usize> = BTreeMap::new();
+        let mut instrs: Vec<Instr> = Vec::new();
+        let mut params: Vec<(usize, usize)> = Vec::new();
+        let mut root = None;
+        for line in &b.lines {
+            let (name, is_root, instr) = parse_instruction(line, &names, &comp_names)
+                .map_err(|e| err(format!("{}: {e:?}", b.name)))?;
+            let idx = instrs.len();
+            if let Op::Parameter(k) = &instr.op {
+                params.push((*k, idx));
+            }
+            if is_root {
+                root = Some(idx);
+            }
+            names.insert(name, idx);
+            instrs.push(instr);
+        }
+        if instrs.is_empty() {
+            return Err(err(format!("computation {} is empty", b.name)));
+        }
+        let root = root.unwrap_or(instrs.len() - 1);
+        params.sort();
+        for (want, (got, _)) in params.iter().enumerate() {
+            if *got != want {
+                return Err(err(format!(
+                    "computation {}: non-contiguous parameter numbers",
+                    b.name
+                )));
+            }
+        }
+        let params: Vec<usize> = params.into_iter().map(|(_, i)| i).collect();
+        // liveness: after an instruction's last consumer runs, drop it
+        let n = instrs.len();
+        let mut last_use = vec![usize::MAX; n];
+        for (i, ins) in instrs.iter().enumerate() {
+            for &o in &ins.operands {
+                last_use[o] = i;
+            }
+        }
+        let mut drop_after = vec![Vec::new(); n];
+        for (j, &lu) in last_use.iter().enumerate() {
+            if lu != usize::MAX && j != root {
+                drop_after[lu].push(j);
+            }
+        }
+        computations.push(Computation {
+            name: b.name.clone(),
+            instrs,
+            params,
+            root,
+            drop_after,
+        });
+    }
+    Ok(HloModule { computations, entry })
+}
+
+// ------------------------------------------------------------- evaluator
+
+fn lit_dims(l: &Literal) -> Vec<usize> {
+    l.dims.iter().map(|&d| d as usize).collect()
+}
+
+fn lit_dt(l: &Literal) -> Option<Dt> {
+    match &l.data {
+        Data::F32(_) => Some(Dt::F32),
+        Data::I32(_) => Some(Dt::S32),
+        Data::U32(_) => Some(Dt::U32),
+        Data::Pred(_) => Some(Dt::Pred),
+        Data::Tuple(_) => None,
+    }
+}
+
+fn f32s(l: &Literal) -> Result<&[f32], XlaError> {
+    match &l.data {
+        Data::F32(v) => Ok(v),
+        _ => Err(err("expected f32 operand")),
+    }
+}
+
+fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for d in (0..dims.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * dims[d + 1];
+    }
+    s
+}
+
+/// Row-major odometer over `dims`; returns false after the last index.
+fn odo_next(idx: &mut [usize], dims: &[usize]) -> bool {
+    for d in (0..dims.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < dims[d] {
+            return true;
+        }
+        idx[d] = 0;
+    }
+    false
+}
+
+fn round_ties_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 && r % 2.0 != 0.0 {
+        r - x.signum()
+    } else {
+        r
+    }
+}
+
+fn bin_f32(op: BinOp, a: &[f32], b: &[f32], out: &mut [f32]) -> Result<(), XlaError> {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = match op {
+            BinOp::Add => x + y,
+            BinOp::Sub => x - y,
+            BinOp::Mul => x * y,
+            BinOp::Div => x / y,
+            BinOp::Max => x.max(y),
+            BinOp::Min => x.min(y),
+            BinOp::Pow => x.powf(y),
+            _ => return Err(err("bitwise op on f32")),
+        };
+    }
+    Ok(())
+}
+
+fn bin_u32(op: BinOp, a: &[u32], b: &[u32], out: &mut [u32]) -> Result<(), XlaError> {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = match op {
+            BinOp::Add => x.wrapping_add(y),
+            BinOp::Sub => x.wrapping_sub(y),
+            BinOp::Mul => x.wrapping_mul(y),
+            BinOp::Div => {
+                if y == 0 {
+                    0
+                } else {
+                    x / y
+                }
+            }
+            BinOp::Max => x.max(y),
+            BinOp::Min => x.min(y),
+            BinOp::And => x & y,
+            BinOp::Or => x | y,
+            BinOp::Xor => x ^ y,
+            BinOp::Shl => {
+                if y >= 32 {
+                    0
+                } else {
+                    x << y
+                }
+            }
+            BinOp::Shr => {
+                if y >= 32 {
+                    0
+                } else {
+                    x >> y
+                }
+            }
+            BinOp::Pow => return Err(err("power on u32 unsupported")),
+        };
+    }
+    Ok(())
+}
+
+fn bin_i32(op: BinOp, a: &[i32], b: &[i32], out: &mut [i32]) -> Result<(), XlaError> {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = match op {
+            BinOp::Add => x.wrapping_add(y),
+            BinOp::Sub => x.wrapping_sub(y),
+            BinOp::Mul => x.wrapping_mul(y),
+            BinOp::Max => x.max(y),
+            BinOp::Min => x.min(y),
+            BinOp::And => x & y,
+            BinOp::Or => x | y,
+            BinOp::Xor => x ^ y,
+            _ => return Err(err("unsupported s32 binary op")),
+        };
+    }
+    Ok(())
+}
+
+fn eval_bin(op: BinOp, a: &Literal, b: &Literal) -> Result<Literal, XlaError> {
+    if a.dims != b.dims {
+        return Err(err(format!(
+            "binary op shape mismatch: {:?} vs {:?}",
+            a.dims, b.dims
+        )));
+    }
+    match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => {
+            let mut out = vec![0.0f32; x.len()];
+            bin_f32(op, x, y, &mut out)?;
+            Ok(Literal { data: Data::F32(out), dims: a.dims.clone() })
+        }
+        (Data::U32(x), Data::U32(y)) => {
+            let mut out = vec![0u32; x.len()];
+            bin_u32(op, x, y, &mut out)?;
+            Ok(Literal { data: Data::U32(out), dims: a.dims.clone() })
+        }
+        (Data::I32(x), Data::I32(y)) => {
+            let mut out = vec![0i32; x.len()];
+            bin_i32(op, x, y, &mut out)?;
+            Ok(Literal { data: Data::I32(out), dims: a.dims.clone() })
+        }
+        (Data::Pred(x), Data::Pred(y)) => {
+            let out: Vec<bool> = x
+                .iter()
+                .zip(y)
+                .map(|(&p, &q)| match op {
+                    BinOp::And | BinOp::Min | BinOp::Mul => p && q,
+                    BinOp::Or | BinOp::Max | BinOp::Add => p || q,
+                    BinOp::Xor => p ^ q,
+                    _ => false,
+                })
+                .collect();
+            Ok(Literal { data: Data::Pred(out), dims: a.dims.clone() })
+        }
+        _ => Err(err("binary op element type mismatch")),
+    }
+}
+
+fn eval_un(op: UnOp, a: &Literal) -> Result<Literal, XlaError> {
+    if matches!((op, &a.data), (UnOp::Not, Data::F32(_))) {
+        return Err(err("not on f32"));
+    }
+    match &a.data {
+        Data::F32(x) => {
+            let out: Vec<f32> = x
+                .iter()
+                .map(|&v| match op {
+                    UnOp::Neg => -v,
+                    UnOp::Exp => v.exp(),
+                    UnOp::Log => v.ln(),
+                    UnOp::Sqrt => v.sqrt(),
+                    UnOp::Rsqrt => 1.0 / v.sqrt(),
+                    UnOp::Abs => v.abs(),
+                    UnOp::Sign => {
+                        if v > 0.0 {
+                            1.0
+                        } else if v < 0.0 {
+                            -1.0
+                        } else {
+                            v * 0.0
+                        }
+                    }
+                    UnOp::Floor => v.floor(),
+                    UnOp::Ceil => v.ceil(),
+                    UnOp::RoundTiesEven => round_ties_even(v),
+                    UnOp::Tanh => v.tanh(),
+                    UnOp::Logistic => 1.0 / (1.0 + (-v).exp()),
+                    UnOp::Sin => v.sin(),
+                    UnOp::Cos => v.cos(),
+                    UnOp::Not => 0.0,
+                })
+                .collect();
+            Ok(Literal { data: Data::F32(out), dims: a.dims.clone() })
+        }
+        Data::Pred(x) => match op {
+            UnOp::Not => Ok(Literal {
+                data: Data::Pred(x.iter().map(|&b| !b).collect()),
+                dims: a.dims.clone(),
+            }),
+            _ => Err(err("unsupported unary op on pred")),
+        },
+        Data::I32(x) => match op {
+            UnOp::Neg => Ok(Literal {
+                data: Data::I32(x.iter().map(|&v| v.wrapping_neg()).collect()),
+                dims: a.dims.clone(),
+            }),
+            UnOp::Abs => Ok(Literal {
+                data: Data::I32(x.iter().map(|&v| v.wrapping_abs()).collect()),
+                dims: a.dims.clone(),
+            }),
+            _ => Err(err("unsupported unary op on s32")),
+        },
+        Data::U32(x) => match op {
+            UnOp::Not => Ok(Literal {
+                data: Data::U32(x.iter().map(|&v| !v).collect()),
+                dims: a.dims.clone(),
+            }),
+            _ => Err(err("unsupported unary op on u32")),
+        },
+        Data::Tuple(_) => Err(err("unary op on tuple")),
+    }
+}
+
+fn eval_compare(dir: Cmp, a: &Literal, b: &Literal) -> Result<Literal, XlaError> {
+    if a.dims != b.dims {
+        return Err(err("compare shape mismatch"));
+    }
+    fn go<T: PartialOrd + PartialEq>(dir: Cmp, x: &[T], y: &[T]) -> Vec<bool> {
+        x.iter()
+            .zip(y)
+            .map(|(a, b)| match dir {
+                Cmp::Eq => a == b,
+                Cmp::Ne => a != b,
+                Cmp::Lt => a < b,
+                Cmp::Le => a <= b,
+                Cmp::Gt => a > b,
+                Cmp::Ge => a >= b,
+            })
+            .collect()
+    }
+    let out = match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => go(dir, x, y),
+        (Data::I32(x), Data::I32(y)) => go(dir, x, y),
+        (Data::U32(x), Data::U32(y)) => go(dir, x, y),
+        _ => return Err(err("compare element type mismatch")),
+    };
+    Ok(Literal { data: Data::Pred(out), dims: a.dims.clone() })
+}
+
+fn eval_convert(a: &Literal, to: Dt) -> Result<Literal, XlaError> {
+    let n = a.dims.iter().product::<i64>() as usize;
+    let as_f32: Vec<f32> = match &a.data {
+        Data::F32(v) => v.clone(),
+        Data::I32(v) => v.iter().map(|&x| x as f32).collect(),
+        Data::U32(v) => v.iter().map(|&x| x as f32).collect(),
+        Data::Pred(v) => v.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect(),
+        Data::Tuple(_) => return Err(err("convert on tuple")),
+    };
+    debug_assert_eq!(as_f32.len(), n);
+    let data = match to {
+        Dt::F32 => Data::F32(as_f32),
+        // XLA convert truncates toward zero
+        Dt::S32 => Data::I32(as_f32.iter().map(|&v| v.trunc() as i32).collect()),
+        Dt::U32 => Data::U32(as_f32.iter().map(|&v| v.trunc().max(0.0) as u32).collect()),
+        Dt::Pred => Data::Pred(as_f32.iter().map(|&v| v != 0.0).collect()),
+    };
+    Ok(Literal { data, dims: a.dims.clone() })
+}
+
+fn scalar_or_same(v: &Literal, n: usize, i: usize) -> Result<f32, XlaError> {
+    let s = f32s(v)?;
+    if s.len() == 1 {
+        Ok(s[0])
+    } else if s.len() == n {
+        Ok(s[i])
+    } else {
+        Err(err("clamp: bound must be scalar or same-shape"))
+    }
+}
+
+fn eval_dot(l: &Literal, r: &Literal, lc: usize, rc: usize) -> Result<Literal, XlaError> {
+    let (ld, rd) = (lit_dims(l), lit_dims(r));
+    if ld.len() != 2 || rd.len() != 2 || lc > 1 || rc > 1 {
+        return Err(err("dot: only rank-2 operands supported"));
+    }
+    let (lv, rv) = (f32s(l)?, f32s(r)?);
+    let (m, k) = (ld[1 - lc], ld[lc]);
+    let (k2, n) = (rd[rc], rd[1 - rc]);
+    if k != k2 {
+        return Err(err(format!("dot: contracting dims {k} vs {k2}")));
+    }
+    let (lms, lks) = if lc == 1 { (ld[1], 1) } else { (1, ld[1]) };
+    let (rks, rns) = if rc == 0 { (rd[1], 1) } else { (1, rd[1]) };
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for kk in 0..k {
+            // no skip-zero fast path: 0 * inf must stay NaN, as on XLA
+            let a = lv[i * lms + kk * lks];
+            let rbase = kk * rks;
+            if rns == 1 {
+                let rrow = &rv[rbase..rbase + n];
+                for (o, &b) in orow.iter_mut().zip(rrow) {
+                    *o += a * b;
+                }
+            } else {
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o += a * rv[rbase + j * rns];
+                }
+            }
+        }
+    }
+    Ok(Literal {
+        data: Data::F32(out),
+        dims: vec![m as i64, n as i64],
+    })
+}
+
+fn eval_broadcast(a: &Literal, bdims: &[usize], out_dims: &[usize]) -> Result<Literal, XlaError> {
+    let sdims = lit_dims(a);
+    if sdims.len() != bdims.len() {
+        return Err(err("broadcast: dimensions length mismatch"));
+    }
+    let sstr = strides_of(&sdims);
+    let mut ostr = vec![0usize; out_dims.len()];
+    for (pos, &od) in bdims.iter().enumerate() {
+        if od >= out_dims.len() || out_dims[od] != sdims[pos] {
+            return Err(err("broadcast: dimension mapping mismatch"));
+        }
+        ostr[od] = sstr[pos];
+    }
+    let n: usize = out_dims.iter().product();
+    let mut idx = vec![0usize; out_dims.len()];
+    macro_rules! bc {
+        ($src:expr, $mk:expr) => {{
+            let src = $src;
+            let mut out = Vec::with_capacity(n);
+            if n > 0 {
+                loop {
+                    let mut off = 0usize;
+                    for d in 0..idx.len() {
+                        off += idx[d] * ostr[d];
+                    }
+                    out.push(src[off]);
+                    if !odo_next(&mut idx, out_dims) {
+                        break;
+                    }
+                }
+            }
+            $mk(out)
+        }};
+    }
+    let data = match &a.data {
+        Data::F32(v) => bc!(v, Data::F32),
+        Data::I32(v) => bc!(v, Data::I32),
+        Data::U32(v) => bc!(v, Data::U32),
+        Data::Pred(v) => bc!(v, Data::Pred),
+        Data::Tuple(_) => return Err(err("broadcast on tuple")),
+    };
+    Ok(Literal {
+        data,
+        dims: out_dims.iter().map(|&d| d as i64).collect(),
+    })
+}
+
+/// Gather `src[f(i)]` for every output index, where `f` maps the output
+/// odometer through per-dim strides/offsets — shared by transpose,
+/// slice and (inverted) pad.
+fn eval_transpose(a: &Literal, perm: &[usize]) -> Result<Literal, XlaError> {
+    let sdims = lit_dims(a);
+    if perm.len() != sdims.len() {
+        return Err(err("transpose: permutation rank mismatch"));
+    }
+    let sstr = strides_of(&sdims);
+    let out_dims: Vec<usize> = perm.iter().map(|&p| sdims[p]).collect();
+    let ostr: Vec<usize> = perm.iter().map(|&p| sstr[p]).collect();
+    let n: usize = out_dims.iter().product();
+    let mut idx = vec![0usize; out_dims.len()];
+    macro_rules! tr {
+        ($src:expr, $mk:expr) => {{
+            let src = $src;
+            let mut out = Vec::with_capacity(n);
+            if n > 0 {
+                loop {
+                    let mut off = 0usize;
+                    for d in 0..idx.len() {
+                        off += idx[d] * ostr[d];
+                    }
+                    out.push(src[off]);
+                    if !odo_next(&mut idx, &out_dims) {
+                        break;
+                    }
+                }
+            }
+            $mk(out)
+        }};
+    }
+    let data = match &a.data {
+        Data::F32(v) => tr!(v, Data::F32),
+        Data::I32(v) => tr!(v, Data::I32),
+        Data::U32(v) => tr!(v, Data::U32),
+        Data::Pred(v) => tr!(v, Data::Pred),
+        Data::Tuple(_) => return Err(err("transpose on tuple")),
+    };
+    Ok(Literal {
+        data,
+        dims: out_dims.iter().map(|&d| d as i64).collect(),
+    })
+}
+
+fn eval_slice(
+    a: &Literal,
+    starts: &[usize],
+    limits: &[usize],
+    strides: &[usize],
+) -> Result<Literal, XlaError> {
+    let sdims = lit_dims(a);
+    if starts.len() != sdims.len() {
+        return Err(err("slice: rank mismatch"));
+    }
+    let sstr = strides_of(&sdims);
+    let mut out_dims = Vec::with_capacity(sdims.len());
+    for d in 0..sdims.len() {
+        if limits[d] > sdims[d] || starts[d] > limits[d] || strides[d] == 0 {
+            return Err(err("slice: bounds out of range"));
+        }
+        out_dims.push((limits[d] - starts[d]).div_ceil(strides[d]));
+    }
+    let n: usize = out_dims.iter().product();
+    let mut idx = vec![0usize; out_dims.len()];
+    macro_rules! sl {
+        ($src:expr, $mk:expr) => {{
+            let src = $src;
+            let mut out = Vec::with_capacity(n);
+            if n > 0 {
+                loop {
+                    let mut off = 0usize;
+                    for d in 0..idx.len() {
+                        off += (starts[d] + idx[d] * strides[d]) * sstr[d];
+                    }
+                    out.push(src[off]);
+                    if !odo_next(&mut idx, &out_dims) {
+                        break;
+                    }
+                }
+            }
+            $mk(out)
+        }};
+    }
+    let data = match &a.data {
+        Data::F32(v) => sl!(v, Data::F32),
+        Data::I32(v) => sl!(v, Data::I32),
+        Data::U32(v) => sl!(v, Data::U32),
+        Data::Pred(v) => sl!(v, Data::Pred),
+        Data::Tuple(_) => return Err(err("slice on tuple")),
+    };
+    Ok(Literal {
+        data,
+        dims: out_dims.iter().map(|&d| d as i64).collect(),
+    })
+}
+
+fn eval_concat(parts: &[&Literal], dim: usize) -> Result<Literal, XlaError> {
+    let first = lit_dims(parts[0]);
+    if dim >= first.len() {
+        return Err(err("concatenate: dimension out of range"));
+    }
+    let mut out_dims = first.clone();
+    out_dims[dim] = 0;
+    for p in parts {
+        let d = lit_dims(p);
+        if d.len() != first.len() {
+            return Err(err("concatenate: rank mismatch"));
+        }
+        for (dd, (&a, &b)) in d.iter().zip(&first).enumerate() {
+            if dd != dim && a != b {
+                return Err(err(format!(
+                    "concatenate: dim {dd} mismatch ({a} vs {b})"
+                )));
+            }
+        }
+        out_dims[dim] += d[dim];
+    }
+    let outer: usize = first[..dim].iter().product();
+    macro_rules! cc {
+        ($arm:ident, $t:ty) => {{
+            let mut out: Vec<$t> = Vec::with_capacity(out_dims.iter().product());
+            for o in 0..outer {
+                for p in parts {
+                    let d = lit_dims(p);
+                    let inner: usize = d[dim..].iter().product();
+                    let v = match &p.data {
+                        Data::$arm(v) => v,
+                        _ => return Err(err("concatenate element type mismatch")),
+                    };
+                    out.extend_from_slice(&v[o * inner..(o + 1) * inner]);
+                }
+            }
+            Data::$arm(out)
+        }};
+    }
+    let data = match &parts[0].data {
+        Data::F32(_) => cc!(F32, f32),
+        Data::I32(_) => cc!(I32, i32),
+        Data::U32(_) => cc!(U32, u32),
+        Data::Pred(_) => cc!(Pred, bool),
+        Data::Tuple(_) => return Err(err("concatenate on tuple")),
+    };
+    Ok(Literal {
+        data,
+        dims: out_dims.iter().map(|&d| d as i64).collect(),
+    })
+}
+
+fn eval_pad(
+    a: &Literal,
+    padv: &Literal,
+    low: &[i64],
+    high: &[i64],
+    interior: &[usize],
+) -> Result<Literal, XlaError> {
+    let sdims = lit_dims(a);
+    if low.len() != sdims.len() {
+        return Err(err("pad: rank mismatch"));
+    }
+    let mut out_dims = Vec::with_capacity(sdims.len());
+    for d in 0..sdims.len() {
+        let span = sdims[d] as i64 + (sdims[d].saturating_sub(1) * interior[d]) as i64;
+        let od = span + low[d] + high[d];
+        if od < 0 {
+            return Err(err("pad: negative output dimension"));
+        }
+        out_dims.push(od as usize);
+    }
+    let ostr = strides_of(&out_dims);
+    let n: usize = out_dims.iter().product();
+    let mut idx = vec![0usize; sdims.len()];
+    macro_rules! pd {
+        ($src:expr, $pv:expr, $mk:expr) => {{
+            let src = $src;
+            let mut out = vec![$pv; n];
+            let mut soff = 0usize;
+            if !src.is_empty() {
+                loop {
+                    let mut off = 0i64;
+                    let mut ok = true;
+                    for d in 0..idx.len() {
+                        let o = low[d] + (idx[d] * (interior[d] + 1)) as i64;
+                        if o < 0 || o as usize >= out_dims[d] {
+                            ok = false;
+                            break;
+                        }
+                        off += o * ostr[d] as i64;
+                    }
+                    if ok {
+                        out[off as usize] = src[soff];
+                    }
+                    soff += 1;
+                    if !odo_next(&mut idx, &sdims) {
+                        break;
+                    }
+                }
+            }
+            $mk(out)
+        }};
+    }
+    let data = match (&a.data, &padv.data) {
+        (Data::F32(v), Data::F32(p)) => pd!(v, p[0], Data::F32),
+        (Data::I32(v), Data::I32(p)) => pd!(v, p[0], Data::I32),
+        (Data::U32(v), Data::U32(p)) => pd!(v, p[0], Data::U32),
+        _ => return Err(err("pad element type mismatch")),
+    };
+    Ok(Literal {
+        data,
+        dims: out_dims.iter().map(|&d| d as i64).collect(),
+    })
+}
+
+/// Which monoid a reduce sub-computation implements, if recognizable.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Monoid {
+    Add,
+    Max,
+    Min,
+    Mul,
+    Generic,
+}
+
+fn reduce_monoid(comp: &Computation) -> Monoid {
+    // fast path: root is a single binary op over the two parameters
+    let root = &comp.instrs[comp.root];
+    if comp.params.len() == 2 && root.operands.len() == 2 {
+        let ops: Vec<usize> = root.operands.clone();
+        let is_params = (ops[0] == comp.params[0] && ops[1] == comp.params[1])
+            || (ops[0] == comp.params[1] && ops[1] == comp.params[0]);
+        if is_params {
+            if let Op::Bin(b) = &root.op {
+                return match *b {
+                    BinOp::Add => Monoid::Add,
+                    BinOp::Max => Monoid::Max,
+                    BinOp::Min => Monoid::Min,
+                    BinOp::Mul => Monoid::Mul,
+                    _ => Monoid::Generic,
+                };
+            }
+        }
+    }
+    Monoid::Generic
+}
+
+fn scalar_literal_f32(v: f32) -> Literal {
+    Literal { data: Data::F32(vec![v]), dims: vec![] }
+}
+
+fn getv(env: &[Option<Literal>], o: usize) -> Result<&Literal, XlaError> {
+    env[o]
+        .as_ref()
+        .ok_or_else(|| err("internal: operand value dropped before use"))
+}
+
+impl HloModule {
+    fn eval_reduce(
+        &self,
+        a: &Literal,
+        init: &Literal,
+        rdims: &[usize],
+        comp_idx: usize,
+    ) -> Result<Literal, XlaError> {
+        let sdims = lit_dims(a);
+        let keep: Vec<usize> = (0..sdims.len()).filter(|d| !rdims.contains(d)).collect();
+        let out_dims: Vec<usize> = keep.iter().map(|&d| sdims[d]).collect();
+        let n_out: usize = out_dims.iter().product();
+        let ostr = strides_of(&out_dims);
+        let monoid = reduce_monoid(&self.computations[comp_idx]);
+        match (&a.data, &init.data) {
+            (Data::F32(v), Data::F32(iv)) => {
+                let mut out = vec![iv[0]; n_out];
+                if v.is_empty() {
+                    return Ok(Literal {
+                        data: Data::F32(out),
+                        dims: out_dims.iter().map(|&d| d as i64).collect(),
+                    });
+                }
+                let mut idx = vec![0usize; sdims.len()];
+                let mut flat = 0usize;
+                loop {
+                    let mut off = 0usize;
+                    for (pos, &d) in keep.iter().enumerate() {
+                        off += idx[d] * ostr[pos];
+                    }
+                    let x = v[flat];
+                    out[off] = match monoid {
+                        Monoid::Add => out[off] + x,
+                        Monoid::Max => out[off].max(x),
+                        Monoid::Min => out[off].min(x),
+                        Monoid::Mul => out[off] * x,
+                        Monoid::Generic => {
+                            let r = self.eval_comp(
+                                comp_idx,
+                                vec![
+                                    Some(scalar_literal_f32(out[off])),
+                                    Some(scalar_literal_f32(x)),
+                                ],
+                            )?;
+                            f32s(&r)?[0]
+                        }
+                    };
+                    flat += 1;
+                    if !odo_next(&mut idx, &sdims) {
+                        break;
+                    }
+                }
+                Ok(Literal {
+                    data: Data::F32(out),
+                    dims: out_dims.iter().map(|&d| d as i64).collect(),
+                })
+            }
+            _ => Err(err("reduce: only f32 operands supported")),
+        }
+    }
+
+    fn eval_comp(&self, ci: usize, mut args: Vec<Option<Literal>>) -> Result<Literal, XlaError> {
+        let comp = &self.computations[ci];
+        if args.len() != comp.params.len() {
+            return Err(err(format!(
+                "{}: expected {} arguments, got {}",
+                comp.name,
+                comp.params.len(),
+                args.len()
+            )));
+        }
+        let mut env: Vec<Option<Literal>> = vec![None; comp.instrs.len()];
+        for i in 0..comp.instrs.len() {
+            let instr = &comp.instrs[i];
+            let value: Literal = match &instr.op {
+                Op::Parameter(k) => args[*k]
+                    .take()
+                    .ok_or_else(|| err("parameter consumed twice"))?,
+                Op::Constant(l) => l.clone(),
+                Op::Iota { dim } => {
+                    let dims = instr.shape.dims()?.to_vec();
+                    let n: usize = dims.iter().product();
+                    let mut idx = vec![0usize; dims.len()];
+                    let mut vals: Vec<usize> = Vec::with_capacity(n);
+                    if n > 0 {
+                        loop {
+                            vals.push(idx[*dim]);
+                            if !odo_next(&mut idx, &dims) {
+                                break;
+                            }
+                        }
+                    }
+                    let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    match instr.shape.dt()? {
+                        Dt::U32 => Literal {
+                            data: Data::U32(vals.iter().map(|&v| v as u32).collect()),
+                            dims: dims_i,
+                        },
+                        Dt::S32 => Literal {
+                            data: Data::I32(vals.iter().map(|&v| v as i32).collect()),
+                            dims: dims_i,
+                        },
+                        Dt::F32 => Literal {
+                            data: Data::F32(vals.iter().map(|&v| v as f32).collect()),
+                            dims: dims_i,
+                        },
+                        Dt::Pred => return Err(err("iota on pred")),
+                    }
+                }
+                Op::Bin(b) => {
+                    let x = getv(&env, instr.operands[0])?;
+                    let y = getv(&env, instr.operands[1])?;
+                    eval_bin(*b, x, y)?
+                }
+                Op::Un(u) => eval_un(*u, getv(&env, instr.operands[0])?)?,
+                Op::Compare(d) => {
+                    let x = getv(&env, instr.operands[0])?;
+                    let y = getv(&env, instr.operands[1])?;
+                    eval_compare(*d, x, y)?
+                }
+                Op::Select => {
+                    let p = getv(&env, instr.operands[0])?;
+                    let t = getv(&env, instr.operands[1])?;
+                    let f = getv(&env, instr.operands[2])?;
+                    let pv = match &p.data {
+                        Data::Pred(v) => v,
+                        _ => return Err(err("select: predicate must be pred")),
+                    };
+                    if t.dims != f.dims {
+                        return Err(err("select: branch shape mismatch"));
+                    }
+                    match (&t.data, &f.data) {
+                        (Data::F32(a), Data::F32(b)) => {
+                            let out: Vec<f32> = (0..a.len())
+                                .map(|j| {
+                                    let c = if pv.len() == 1 { pv[0] } else { pv[j] };
+                                    if c {
+                                        a[j]
+                                    } else {
+                                        b[j]
+                                    }
+                                })
+                                .collect();
+                            Literal { data: Data::F32(out), dims: t.dims.clone() }
+                        }
+                        (Data::U32(a), Data::U32(b)) => {
+                            let out: Vec<u32> = (0..a.len())
+                                .map(|j| {
+                                    let c = if pv.len() == 1 { pv[0] } else { pv[j] };
+                                    if c {
+                                        a[j]
+                                    } else {
+                                        b[j]
+                                    }
+                                })
+                                .collect();
+                            Literal { data: Data::U32(out), dims: t.dims.clone() }
+                        }
+                        _ => return Err(err("select: unsupported element types")),
+                    }
+                }
+                Op::Clamp => {
+                    let lo = getv(&env, instr.operands[0])?;
+                    let x = getv(&env, instr.operands[1])?;
+                    let hi = getv(&env, instr.operands[2])?;
+                    let xv = f32s(x)?;
+                    let mut out = vec![0.0f32; xv.len()];
+                    for (j, o) in out.iter_mut().enumerate() {
+                        let l = scalar_or_same(lo, xv.len(), j)?;
+                        let h = scalar_or_same(hi, xv.len(), j)?;
+                        *o = xv[j].clamp(l, h);
+                    }
+                    Literal { data: Data::F32(out), dims: x.dims.clone() }
+                }
+                Op::Convert => eval_convert(getv(&env, instr.operands[0])?, instr.shape.dt()?)?,
+                Op::Broadcast { dims } => {
+                    eval_broadcast(getv(&env, instr.operands[0])?, dims, instr.shape.dims()?)?
+                }
+                Op::Reshape => {
+                    let a = getv(&env, instr.operands[0])?;
+                    let out_dims = instr.shape.dims()?;
+                    let n: usize = out_dims.iter().product();
+                    if n != a.dims.iter().product::<i64>() as usize {
+                        return Err(err("reshape: element count mismatch"));
+                    }
+                    Literal {
+                        data: a.data.clone(),
+                        dims: out_dims.iter().map(|&d| d as i64).collect(),
+                    }
+                }
+                Op::Transpose { perm } => eval_transpose(getv(&env, instr.operands[0])?, perm)?,
+                Op::Slice { starts, limits, strides } => {
+                    eval_slice(getv(&env, instr.operands[0])?, starts, limits, strides)?
+                }
+                Op::Concat { dim } => {
+                    let parts: Vec<&Literal> = instr
+                        .operands
+                        .iter()
+                        .map(|o| getv(&env, *o))
+                        .collect::<Result<_, _>>()?;
+                    eval_concat(&parts, *dim)?
+                }
+                Op::Pad { low, high, interior } => eval_pad(
+                    getv(&env, instr.operands[0])?,
+                    getv(&env, instr.operands[1])?,
+                    low,
+                    high,
+                    interior,
+                )?,
+                Op::Dot { lc, rc } => {
+                    let x = getv(&env, instr.operands[0])?;
+                    let y = getv(&env, instr.operands[1])?;
+                    eval_dot(x, y, *lc, *rc)?
+                }
+                Op::Reduce { dims, comp } => self.eval_reduce(
+                    getv(&env, instr.operands[0])?,
+                    getv(&env, instr.operands[1])?,
+                    dims,
+                    *comp,
+                )?,
+                Op::Tuple => {
+                    let parts: Vec<Literal> = instr
+                        .operands
+                        .iter()
+                        .map(|o| getv(&env, *o).cloned())
+                        .collect::<Result<_, _>>()?;
+                    let n = parts.len() as i64;
+                    Literal { data: Data::Tuple(parts), dims: vec![n] }
+                }
+                Op::Gte { index } => {
+                    let t = getv(&env, instr.operands[0])?;
+                    match &t.data {
+                        Data::Tuple(parts) => parts
+                            .get(*index)
+                            .cloned()
+                            .ok_or_else(|| err("get-tuple-element: index out of range"))?,
+                        _ => return Err(err("get-tuple-element on non-tuple")),
+                    }
+                }
+                Op::While { cond, body } => {
+                    let mut state = getv(&env, instr.operands[0])?.clone();
+                    let mut fuel = 100_000_000u64;
+                    loop {
+                        let c = self.eval_comp(*cond, vec![Some(state.clone())])?;
+                        let go = match &c.data {
+                            Data::Pred(v) => v.first().copied().unwrap_or(false),
+                            _ => return Err(err("while: condition must return pred")),
+                        };
+                        if !go {
+                            break;
+                        }
+                        state = self.eval_comp(*body, vec![Some(state)])?;
+                        fuel = fuel
+                            .checked_sub(1)
+                            .ok_or_else(|| err("while: iteration limit exceeded"))?;
+                    }
+                    state
+                }
+            };
+            env[i] = Some(value);
+            for &j in &comp.drop_after[i] {
+                if j != i {
+                    env[j] = None;
+                }
+            }
+        }
+        env[comp.root]
+            .take()
+            .ok_or_else(|| err("root value missing"))
+    }
+}
+
+/// Validate `args` against the entry parameters and run the module.
+pub fn execute(m: &HloModule, args: Vec<Literal>) -> Result<Literal, XlaError> {
+    let comp = &m.computations[m.entry];
+    if args.len() != comp.params.len() {
+        return Err(err(format!(
+            "entry expects {} arguments, got {}",
+            comp.params.len(),
+            args.len()
+        )));
+    }
+    for (k, a) in args.iter().enumerate() {
+        let pshape = &comp.instrs[comp.params[k]].shape;
+        let pdims = pshape.dims()?;
+        let adims = lit_dims(a);
+        if adims != pdims {
+            return Err(err(format!(
+                "argument {k}: shape {adims:?} does not match parameter {pdims:?}"
+            )));
+        }
+        let want = pshape.dt()?;
+        let got = lit_dt(a).ok_or_else(|| err("tuple arguments unsupported"))?;
+        if want != got {
+            return Err(err(format!(
+                "argument {k}: element type {got:?} does not match parameter {want:?}"
+            )));
+        }
+    }
+    m.eval_comp(m.entry, args.into_iter().map(Some).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run1(text: &str, args: Vec<Literal>) -> Literal {
+        let m = parse(text).expect("parse");
+        execute(&m, args).expect("execute")
+    }
+
+    fn f32v(l: &Literal) -> Vec<f32> {
+        l.to_vec::<f32>().unwrap()
+    }
+
+    #[test]
+    fn parses_and_adds() {
+        let out = run1(
+            "HloModule t\n\nENTRY %main (p0: f32[3], p1: f32[3]) -> f32[3] {\n  \
+             %p0 = f32[3] parameter(0)\n  %p1 = f32[3] parameter(1)\n  \
+             ROOT %v1 = f32[3] add(%p0, %p1)\n}\n",
+            vec![
+                Literal::vec1(&[1.0f32, 2.0, 3.0]),
+                Literal::vec1(&[0.5f32, 0.5, 0.5]),
+            ],
+        );
+        assert_eq!(f32v(&out), vec![1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn dot_matches_hand_computed() {
+        let a = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0])
+            .reshape(&[2, 3])
+            .unwrap();
+        let b = Literal::vec1(&[1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0])
+            .reshape(&[3, 2])
+            .unwrap();
+        let out = run1(
+            "ENTRY %main (p0: f32[2,3], p1: f32[3,2]) -> f32[2,2] {\n  \
+             %p0 = f32[2,3] parameter(0)\n  %p1 = f32[3,2] parameter(1)\n  \
+             ROOT %v1 = f32[2,2] dot(%p0, %p1), lhs_contracting_dims={1}, \
+             rhs_contracting_dims={0}\n}\n",
+            vec![a, b],
+        );
+        assert_eq!(f32v(&out), vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn reduce_broadcast_iota_roundtrip() {
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0])
+            .reshape(&[2, 3])
+            .unwrap();
+        let out = run1(
+            "%r_add (a: f32[], b: f32[]) -> f32[] {\n  %a = f32[] parameter(0)\n  \
+             %b = f32[] parameter(1)\n  ROOT %v1 = f32[] add(%a, %b)\n}\n\n\
+             ENTRY %main (p0: f32[2,3]) -> f32[2,3] {\n  \
+             %p0 = f32[2,3] parameter(0)\n  %c0 = f32[] constant(0)\n  \
+             %s = f32[2] reduce(%p0, %c0), dimensions={1}, to_apply=%r_add\n  \
+             %b = f32[2,3] broadcast(%s), dimensions={0}\n  \
+             %i = f32[2,3] iota(), iota_dimension=1\n  \
+             ROOT %v9 = f32[2,3] add(%b, %i)\n}\n",
+            vec![x],
+        );
+        assert_eq!(f32v(&out), vec![6.0, 7.0, 8.0, 15.0, 16.0, 17.0]);
+    }
+
+    #[test]
+    fn transpose_slice_concat_pad() {
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let out = run1(
+            "ENTRY %main (p0: f32[2,2]) -> f32[3,2] {\n  \
+             %p0 = f32[2,2] parameter(0)\n  \
+             %t = f32[2,2] transpose(%p0), dimensions={1,0}\n  \
+             %s = f32[1,2] slice(%t), slice={[0:1:1],[0:2:1]}\n  \
+             ROOT %c = f32[3,2] concatenate(%t, %s), dimensions={0}\n}\n",
+            vec![x.clone()],
+        );
+        assert_eq!(f32v(&out), vec![1.0, 3.0, 2.0, 4.0, 1.0, 3.0]);
+        let out = run1(
+            "ENTRY %main (p0: f32[2,2]) -> f32[4,2] {\n  \
+             %p0 = f32[2,2] parameter(0)\n  %z = f32[] constant(9)\n  \
+             ROOT %p = f32[4,2] pad(%p0, %z), padding=1_1x0_0\n}\n",
+            vec![x],
+        );
+        assert_eq!(f32v(&out), vec![9.0, 9.0, 1.0, 2.0, 3.0, 4.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn compare_select_convert_clamp() {
+        let x = Literal::vec1(&[-2.0f32, 0.5, 3.0]);
+        let out = run1(
+            "ENTRY %main (p0: f32[3]) -> f32[3] {\n  \
+             %p0 = f32[3] parameter(0)\n  %z = f32[] constant(0)\n  \
+             %zb = f32[3] broadcast(%z), dimensions={}\n  \
+             %m = pred[3] compare(%p0, %zb), direction=GT\n  \
+             %one = f32[] constant(1)\n  \
+             %ob = f32[3] broadcast(%one), dimensions={}\n  \
+             %sel = f32[3] select(%m, %p0, %ob)\n  \
+             %lo = f32[] constant(-1)\n  %hi = f32[] constant(2)\n  \
+             ROOT %c = f32[3] clamp(%lo, %sel, %hi)\n}\n",
+            vec![x],
+        );
+        assert_eq!(f32v(&out), vec![1.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn u32_hash_ops_work() {
+        let k = Literal::vec1(&[7u32, 11]);
+        let out = run1(
+            "ENTRY %main (p0: u32[2]) -> u32[2] {\n  \
+             %p0 = u32[2] parameter(0)\n  %c = u32[] constant(2654435761)\n  \
+             %cb = u32[2] broadcast(%c), dimensions={}\n  \
+             %m = u32[2] multiply(%p0, %cb)\n  %s = u32[] constant(16)\n  \
+             %sb = u32[2] broadcast(%s), dimensions={}\n  \
+             %h = u32[2] shift-right-logical(%m, %sb)\n  \
+             ROOT %x = u32[2] xor(%m, %h)\n}\n",
+            vec![k],
+        );
+        let v = out.to_vec::<u32>().unwrap();
+        let f = |x: u32| {
+            let m = x.wrapping_mul(2654435761);
+            m ^ (m >> 16)
+        };
+        assert_eq!(v, vec![f(7), f(11)]);
+    }
+
+    #[test]
+    fn round_ties_even_matches_jnp_round() {
+        let x = Literal::vec1(&[0.5f32, 1.5, 2.5, -0.5, -1.5, 2.3, -2.7]);
+        let out = run1(
+            "ENTRY %main (p0: f32[7]) -> f32[7] {\n  \
+             %p0 = f32[7] parameter(0)\n  \
+             ROOT %r = f32[7] round-nearest-even(%p0)\n}\n",
+            vec![x],
+        );
+        assert_eq!(f32v(&out), vec![0.0, 2.0, 2.0, -0.0, -2.0, 2.0, -3.0]);
+    }
+
+    #[test]
+    fn while_loop_counts() {
+        let text = "%cond (s: (u32[], u32[])) -> pred[] {\n  \
+                    %s = (u32[], u32[]) parameter(0)\n  \
+                    %j = u32[] get-tuple-element(%s), index=0\n  \
+                    %n = u32[] get-tuple-element(%s), index=1\n  \
+                    ROOT %lt = pred[] compare(%j, %n), direction=LT\n}\n\n\
+                    %body (s: (u32[], u32[])) -> (u32[], u32[]) {\n  \
+                    %s = (u32[], u32[]) parameter(0)\n  \
+                    %j = u32[] get-tuple-element(%s), index=0\n  \
+                    %n = u32[] get-tuple-element(%s), index=1\n  \
+                    %one = u32[] constant(1)\n  %j2 = u32[] add(%j, %one)\n  \
+                    ROOT %t = (u32[], u32[]) tuple(%j2, %n)\n}\n\n\
+                    ENTRY %main (p0: u32[]) -> u32[] {\n  \
+                    %p0 = u32[] parameter(0)\n  %z = u32[] constant(0)\n  \
+                    %init = (u32[], u32[]) tuple(%z, %p0)\n  \
+                    %w = (u32[], u32[]) while(%init), condition=%cond, body=%body\n  \
+                    ROOT %j = u32[] get-tuple-element(%w), index=0\n}\n";
+        let out = run1(text, vec![Literal::vec1(&[5u32]).reshape(&[]).unwrap()]);
+        assert_eq!(out.to_vec::<u32>().unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn unsupported_op_is_a_parse_error() {
+        let e = parse(
+            "ENTRY %main (p0: f32[2]) -> f32[2] {\n  %p0 = f32[2] parameter(0)\n  \
+             ROOT %f = f32[2] fft(%p0)\n}\n",
+        );
+        assert!(e.is_err());
+        assert!(format!("{:?}", e.err().unwrap()).contains("unsupported HLO op"));
+    }
+
+    #[test]
+    fn argument_mismatches_error_cleanly() {
+        let m = parse(
+            "ENTRY %main (p0: f32[2]) -> f32[2] {\n  %p0 = f32[2] parameter(0)\n  \
+             ROOT %n = f32[2] negate(%p0)\n}\n",
+        )
+        .unwrap();
+        // wrong arity
+        assert!(execute(&m, vec![]).is_err());
+        // wrong shape
+        assert!(execute(&m, vec![Literal::vec1(&[1.0f32, 2.0, 3.0])]).is_err());
+        // wrong dtype
+        assert!(execute(&m, vec![Literal::vec1(&[1u32, 2])]).is_err());
+    }
+
+    #[test]
+    fn operands_must_be_defined_before_use() {
+        let e = parse(
+            "ENTRY %main (p0: f32[2]) -> f32[2] {\n  \
+             %a = f32[2] add(%p0, %zz)\n  %p0 = f32[2] parameter(0)\n}\n",
+        );
+        assert!(e.is_err());
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod artifact;
 pub mod executor;
+pub mod interp;
 pub mod literal;
 pub mod xla;
 

@@ -1,20 +1,25 @@
-//! Minimal in-crate stand-in for the `xla` PJRT bindings.
+//! In-crate stand-in for the `xla` PJRT bindings, now backed by the
+//! pure-Rust HLO interpreter (`runtime::interp`).
 //!
 //! The crate must stay dependency-free (ROADMAP: `anyhow` only), and the
 //! real `xla_extension` bindings are not installable in every build
 //! environment — so this module mirrors the exact API surface
 //! `runtime::{executor, literal}` consume, and the use sites import it
-//! as `use crate::runtime::xla;`. Swapping in real bindings is a
-//! one-line change at each use site (drop that import so the extern
-//! crate resolves) plus the Cargo dependency.
+//! as `use crate::runtime::xla;`. Unlike the original stub, the backend
+//! half is *functional*: `HloModuleProto::from_text_file` parses HLO
+//! text, `PjRtClient::compile` wraps the parsed module, and
+//! `PjRtLoadedExecutable::execute` runs it on the interpreter — so the
+//! NN-scale trainer and every artifact-gated test run end-to-end with
+//! `cargo` alone.
 //!
-//! Host-side pieces ([`Literal`]) are fully functional: they carry typed
-//! data + dims, so literal packing/reshaping and its unit tests behave
-//! exactly like the real thing. Backend pieces (HLO parsing, PJRT
-//! compile/execute) report [`XlaError`] at *runtime*; the artifact-gated
-//! integration tests, benches and experiments already skip or error
-//! cleanly when no artifact manifest is present, so a missing backend
-//! degrades to "runtime unavailable", never a build failure.
+//! Swapping in real PJRT bindings stays a drop-in change: add the
+//! `xla` crate to Cargo.toml and drop the `use crate::runtime::xla;`
+//! import at each use site (executor.rs, literal.rs) so the extern
+//! crate resolves; nothing else in the runtime knows which backend it
+//! is talking to. See DESIGN.md "HLO interpreter fallback" for the
+//! numeric-tolerance contract between the two.
+
+use crate::runtime::interp;
 
 /// Error type of the backend surface; rendered with `{:?}` at use sites.
 #[derive(Clone)]
@@ -34,31 +39,28 @@ impl std::fmt::Display for XlaError {
 
 impl std::error::Error for XlaError {}
 
-fn unavailable(what: &str) -> XlaError {
-    XlaError(format!(
-        "XLA backend is not linked into this build: {what} unavailable \
-         (see rust/src/runtime/xla.rs for how to swap in real bindings)"
-    ))
-}
-
 // ------------------------------------------------------------ literals
 
 #[derive(Clone, Debug)]
-enum Data {
+pub(crate) enum Data {
     F32(Vec<f32>),
     I32(Vec<i32>),
     U32(Vec<u32>),
+    Pred(Vec<bool>),
     Tuple(Vec<Literal>),
 }
 
-/// Typed host tensor with dims — the functional half of the stub.
+/// Typed host tensor with dims — shared by the host-side helpers and
+/// the interpreter (`pred` is interpreter-internal: artifacts never
+/// return it).
 #[derive(Clone, Debug)]
 pub struct Literal {
-    data: Data,
-    dims: Vec<i64>,
+    pub(crate) data: Data,
+    pub(crate) dims: Vec<i64>,
 }
 
-/// Element types `Literal` can carry (the three the artifacts use).
+/// Element types `Literal` can carry across the API (the three the
+/// artifacts use).
 pub trait NativeType: Sized {
     fn wrap(v: &[Self]) -> Data;
     fn unwrap(d: &Data) -> Option<Vec<Self>>;
@@ -101,11 +103,17 @@ impl Literal {
         }
     }
 
+    /// Dimensions of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
     fn numel(&self) -> i64 {
         match &self.data {
             Data::F32(v) => v.len() as i64,
             Data::I32(v) => v.len() as i64,
             Data::U32(v) => v.len() as i64,
+            Data::Pred(v) => v.len() as i64,
             Data::Tuple(_) => 0,
         }
     }
@@ -137,28 +145,49 @@ impl Literal {
             _ => Err(XlaError("literal is not a tuple".into())),
         }
     }
+
+    /// Consuming variant of [`Literal::to_tuple`] (no copy of the
+    /// parts — the executor's per-step hot path).
+    pub fn into_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        match self.data {
+            Data::Tuple(parts) => Ok(parts),
+            _ => Err(XlaError("literal is not a tuple".into())),
+        }
+    }
 }
 
 // ------------------------------------------------------------- backend
 
-/// Parsed HLO module (backend-only; parsing needs the real bindings).
+/// Parsed HLO module (interpreter-backed).
 pub struct HloModuleProto {
-    _p: (),
+    module: std::rc::Rc<interp::HloModule>,
 }
 
 impl HloModuleProto {
-    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
-        Err(unavailable("HLO text parsing"))
+    /// Parse an HLO-text artifact from disk.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("reading {path}: {e}")))?;
+        Self::from_text(&src)
+    }
+
+    /// Parse HLO text from memory (tests and tools).
+    pub fn from_text(src: &str) -> Result<HloModuleProto, XlaError> {
+        Ok(HloModuleProto {
+            module: std::rc::Rc::new(interp::parse(src)?),
+        })
     }
 }
 
 pub struct XlaComputation {
-    _p: (),
+    module: std::rc::Rc<interp::HloModule>,
 }
 
 impl XlaComputation {
-    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
-        XlaComputation { _p: () }
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            module: proto.module.clone(),
+        }
     }
 }
 
@@ -167,32 +196,52 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
+    /// The interpreter "device" is always available.
     pub fn cpu() -> Result<PjRtClient, XlaError> {
-        Err(unavailable("PJRT CPU client"))
+        Ok(PjRtClient { _p: () })
     }
 
-    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
-        Err(unavailable("PJRT compilation"))
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Ok(PjRtLoadedExecutable {
+            module: comp.module.clone(),
+        })
     }
 }
 
 pub struct PjRtLoadedExecutable {
-    _p: (),
+    module: std::rc::Rc<interp::HloModule>,
 }
 
 impl PjRtLoadedExecutable {
-    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
-        Err(unavailable("PJRT execution"))
+    /// Run the module on the interpreter. Mirrors the PJRT shape:
+    /// one replica, one output buffer holding the root (tuple) literal.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        self.execute_owned(args.iter().map(|a| a.borrow().clone()).collect())
+    }
+
+    /// Owned-argument variant (the executor hot path: avoids
+    /// re-copying every state tensor on every training step).
+    pub fn execute_owned(&self, args: Vec<Literal>) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        let root = interp::execute(&self.module, args)?;
+        Ok(vec![vec![PjRtBuffer { literal: root }]])
     }
 }
 
 pub struct PjRtBuffer {
-    _p: (),
+    literal: Literal,
 }
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
-        Err(unavailable("device-to-host transfer"))
+        Ok(self.literal.clone())
+    }
+
+    /// Consuming read-back (no copy).
+    pub fn into_literal(self) -> Literal {
+        self.literal
     }
 }
 
@@ -223,8 +272,26 @@ mod tests {
     }
 
     #[test]
-    fn backend_reports_unavailable() {
-        assert!(PjRtClient::cpu().is_err());
-        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    fn backend_compiles_and_executes_hlo_text() {
+        let proto = HloModuleProto::from_text(
+            "HloModule t\n\nENTRY %main (p0: f32[2]) -> (f32[2]) {\n  \
+             %p0 = f32[2] parameter(0)\n  %n = f32[2] negate(%p0)\n  \
+             ROOT %t = (f32[2]) tuple(%n)\n}\n",
+        )
+        .expect("parse");
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::cpu().expect("client");
+        let exe = client.compile(&comp).expect("compile");
+        let out = exe
+            .execute::<Literal>(&[Literal::vec1(&[1.0f32, -2.0])])
+            .expect("execute");
+        let root = out[0][0].to_literal_sync().unwrap();
+        let parts = root.to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![-1.0, 2.0]);
+    }
+
+    #[test]
+    fn missing_artifact_file_errors() {
+        assert!(HloModuleProto::from_text_file("does_not_exist.hlo.txt").is_err());
     }
 }

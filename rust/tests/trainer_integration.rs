@@ -21,13 +21,24 @@ fn setup() -> Option<(Executor, Registry)> {
     Some((exec, Registry::load(dir).expect("manifest")))
 }
 
+/// The HLO interpreter is ~an order of magnitude slower unoptimized, so
+/// debug runs (tier-1 `cargo test -q`) use a reduced budget; release
+/// runs (`./ci.sh e2e`) keep the full one.
+fn budget(debug: usize, release: usize) -> usize {
+    if cfg!(debug_assertions) {
+        debug
+    } else {
+        release
+    }
+}
+
 #[test]
 fn erider_reduces_loss_on_digits() {
     let Some((exec, reg)) = setup() else { return };
-    let train = Dataset::digits(320, 11);
+    let train = Dataset::digits(budget(64, 320), 11);
     let test = Dataset::digits(200, 12);
     let mut cfg = TrainConfig::by_name("fcn", "erider").expect("registry name");
-    cfg.steps = 80;
+    cfg.steps = budget(20, 80);
     cfg.ref_mean = 0.3;
     cfg.ref_std = 0.2;
     cfg.seed = 5;
@@ -50,7 +61,7 @@ fn zs_calibration_sets_reference() {
     cfg.steps = 1;
     cfg.ref_mean = 0.4;
     cfg.ref_std = 0.1;
-    cfg.zs_pulses = 400;
+    cfg.zs_pulses = budget(150, 400) as u64;
     cfg.dev.dw_min = 0.02;
     cfg.dev.sigma_c2c = 0.0;
     let mut t = Trainer::new(&exec, &reg, cfg).expect("trainer");
@@ -71,10 +82,11 @@ fn zs_calibration_sets_reference() {
 
     // the calibration cost paid in Trainer::new must surface in the
     // train result (it used to be computed and thrown away)
+    let zs = t.cfg.zs_pulses;
     let train = Dataset::digits(64, 13);
     let res = t.train(&train, None).expect("train");
     let nw = spec.n_weights() as u64;
-    assert_eq!(res.cost.calibration_pulses, 400 * nw);
+    assert_eq!(res.cost.calibration_pulses, zs * nw);
     assert!(res.cost.update_pulses > 0);
 }
 
@@ -104,9 +116,9 @@ fn digital_pretrain_then_deploy() {
     // Table 8 protocol mechanics: digital pre-training reduces loss, and
     // deploying its weights into an analog state transfers them.
     let Some((exec, reg)) = setup() else { return };
-    let train = Dataset::digits(320, 21);
+    let train = Dataset::digits(budget(64, 320), 21);
     let mut cfg = TrainConfig::by_name("fcn", "digital").expect("registry name");
-    cfg.steps = 200;
+    cfg.steps = budget(60, 200);
     cfg.seed = 9;
     cfg.hypers.lr_digital = 0.3;
     let mut t = Trainer::new(&exec, &reg, cfg).expect("trainer");
