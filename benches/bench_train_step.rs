@@ -1,11 +1,25 @@
 //! End-to-end HLO step cost per (model, algorithm): the request-path
-//! latency of the coordinator (Tables 1/2, Figs 2/4/5 regeneration cost).
-//! Skips silently when artifacts are absent.
+//! latency of the coordinator (Tables 1/2, Figs 2/4/5 regeneration
+//! cost). The `step/*` cases run the planned execution engine (the
+//! production path); the `stepref/*` cases run the same artifacts on
+//! the scalar reference walker, so one bench run quantifies the
+//! planned-engine speedup. Recorded by `./ci.sh bench` into
+//! BENCH_optimizers.json and gated against BENCH_baseline/ with
+//! `--check`. Skips silently when artifacts are absent.
 
 use analog_rider::data::Dataset;
-use analog_rider::runtime::{Executor, Registry};
+use analog_rider::runtime::{Executor, HostTensor, Registry};
 use analog_rider::train::{TrainConfig, Trainer};
 use analog_rider::util::bench::Bench;
+
+fn batch_xy(ds: &Dataset, d_in: usize, batch: usize) -> (Vec<f32>, Vec<i32>) {
+    let d = d_in.min(ds.d);
+    let mut x = vec![0.0f32; batch * d_in];
+    for (i, v) in ds.x[..batch * d].iter().enumerate() {
+        x[i] = *v;
+    }
+    (x, ds.y[..batch].to_vec())
+}
 
 fn main() {
     let dir = Registry::default_dir();
@@ -29,21 +43,45 @@ fn main() {
         ("fcn", "ttv2"),
         ("fcn", "agad"),
         ("fcn", "erider"),
+        ("lenet", "sgd"),
         ("lenet", "erider"),
+        ("convnet3", "sgd"),
         ("convnet3", "erider"),
     ] {
         let mut cfg = TrainConfig::by_name(model, algo).unwrap();
         cfg.steps = 1;
         let mut t = Trainer::new(&exec, &reg, cfg).unwrap();
         let spec = reg.model(model).unwrap();
-        let d = spec.d_in.min(ds.d);
-        let mut x = vec![0.0f32; spec.batch * spec.d_in];
-        for (i, v) in ds.x[..spec.batch * d].iter().enumerate() {
-            x[i] = *v;
-        }
-        let y: Vec<i32> = ds.y[..spec.batch].to_vec();
+        let (x, y) = batch_xy(&ds, spec.d_in, spec.batch);
         let r = b.run(&format!("step/{model}/{algo}"), || {
             t.step(&x, &y).unwrap();
+        });
+        println!("{}", r.report_throughput("steps", 1.0));
+    }
+
+    // scalar-walker baselines for the speedup record: same artifacts,
+    // same inputs, reference path (Executor::run_ref)
+    let bref = Bench {
+        warmup: std::time::Duration::from_millis(500),
+        measure: std::time::Duration::from_secs(4),
+        ..Bench::default()
+    };
+    for (model, algo) in [("fcn", "sgd"), ("lenet", "erider")] {
+        let cfg = TrainConfig::by_name(model, algo).unwrap();
+        let t = Trainer::new(&exec, &reg, cfg.clone()).unwrap();
+        let spec = reg.model(model).unwrap();
+        let (x, y) = batch_xy(&ds, spec.d_in, spec.batch);
+        let art = reg
+            .artifact(&format!("{model}_step_{}", cfg.spec.method.nn_step_algo()))
+            .unwrap();
+        let mut inputs = t.state.to_inputs();
+        inputs.push(HostTensor::F32(x));
+        inputs.push(HostTensor::I32(y));
+        inputs.push(HostTensor::U32(vec![7, 9]));
+        inputs.push(HostTensor::F32(cfg.hypers.to_vec(&reg)));
+        inputs.push(HostTensor::F32(cfg.dev.to_vec(&reg)));
+        let r = bref.run(&format!("stepref/{model}/{algo}"), || {
+            exec.run_ref(art, &inputs).unwrap();
         });
         println!("{}", r.report_throughput("steps", 1.0));
     }

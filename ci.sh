@@ -1,20 +1,27 @@
 #!/usr/bin/env bash
 # CI gate for the Rust substrate.
 #
-#   ./ci.sh         tier-1 gate (build + tests), then e2e, then lint
+#   ./ci.sh         tier-1 gate (build + tests), then e2e, then doc+lint
 #   ./ci.sh lint    lint only (fmt --check, clippy -D warnings)
+#   ./ci.sh doc     rustdoc gate only (cargo doc --no-deps with
+#                   RUSTDOCFLAGS="-D warnings": broken links and
+#                   missing docs on the gated modules fail)
 #   ./ci.sh e2e     release-mode end-to-end stage: the artifact-gated
-#                   integration tests (runtime/trainer/interp-golden)
-#                   MUST run on the HLO interpreter (a "skipping:" line
-#                   fails the stage — no silent skips), then
-#                   train_digits_e2e and a reduced `rider table1` grid
-#                   complete against the checked-in artifacts/ fixtures
+#                   integration tests (runtime/trainer/interp-golden/
+#                   plan-equivalence) MUST run on the HLO interpreter
+#                   (a "skipping:" line fails the stage — no silent
+#                   skips), then train_digits_e2e and a reduced `rider
+#                   table1` grid complete against the checked-in
+#                   artifacts/ fixtures
 #   ./ci.sh bench [--check]
-#                   run the device + optimizer bench suites and emit
-#                   machine-readable BENCH_device.json /
-#                   BENCH_optimizers.json at the repo root so successive
-#                   PRs can track the speedup trajectory. With --check,
-#                   compare per-case min_ns against the committed
+#                   run the device + optimizer + train-step bench
+#                   suites and emit machine-readable BENCH_device.json /
+#                   BENCH_optimizers.json at the repo root (the
+#                   train-step cases — planned `step/*` and
+#                   scalar-walker `stepref/*` — land in
+#                   BENCH_optimizers.json) so successive PRs can track
+#                   the speedup trajectory. With --check, compare
+#                   per-case min_ns against the committed
 #                   BENCH_baseline/*.json and fail on a >25% regression
 #                   (missing baselines are bootstrapped from the fresh
 #                   run and must be committed).
@@ -32,6 +39,11 @@ lint() {
     cargo fmt --check
     echo "== cargo clippy (all targets, -D warnings) =="
     cargo clippy --all-targets -- -D warnings
+}
+
+doc() {
+    echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 }
 
 # bench_json <raw-output> <out.json>: convert `BENCH\t...` report lines
@@ -80,8 +92,11 @@ bench() {
     cargo bench --bench bench_device | tee "$tmp/device.out"
     echo "== cargo bench --bench bench_optimizers =="
     cargo bench --bench bench_optimizers | tee "$tmp/optimizers.out"
+    echo "== cargo bench --bench bench_train_step =="
+    cargo bench --bench bench_train_step | tee "$tmp/train_step.out"
     bench_json "$tmp/device.out" BENCH_device.json
-    bench_json "$tmp/optimizers.out" BENCH_optimizers.json
+    cat "$tmp/optimizers.out" "$tmp/train_step.out" > "$tmp/optimizers_all.out"
+    bench_json "$tmp/optimizers_all.out" BENCH_optimizers.json
     rm -rf "$tmp"
 }
 
@@ -132,7 +147,7 @@ e2e() {
     local out
     out="$(mktemp)"
     cargo test --release --test runtime_integration --test trainer_integration \
-        --test interp_golden -- --nocapture 2>&1 | tee "$out"
+        --test interp_golden --test plan_equivalence -- --nocapture 2>&1 | tee "$out"
     if grep -q "skipping:" "$out"; then
         rm -f "$out"
         echo "e2e FAILED: artifact-gated tests skipped — the NN-scale path must run"
@@ -149,6 +164,10 @@ e2e() {
 case "${1:-}" in
     lint)
         lint
+        exit 0
+        ;;
+    doc)
+        doc
         exit 0
         ;;
     e2e)
@@ -171,5 +190,6 @@ echo "== tier-1: cargo test -q =="
 cargo test -q
 
 e2e
+doc
 lint
 echo "CI OK"

@@ -26,6 +26,29 @@
 //! NN-scale hyperparameter defaults. `train::TrainConfig` holds an
 //! `OptimizerSpec`, so `rider psweep --methods all` and the NN-scale
 //! experiments accept one shared name set.
+//!
+//! # Example: build and step a method by name
+//!
+//! ```
+//! use analog_rider::analog::optimizer::{spec, METHODS};
+//! use analog_rider::device::presets;
+//! use analog_rider::optim::Quadratic;
+//! use analog_rider::util::rng::Rng;
+//!
+//! let preset = presets::preset("om").unwrap();
+//! let mut rng = Rng::from_seed(7);
+//! let obj = Quadratic::new(4, 1.0, 2.0, 0.3, &mut rng);
+//! // every registry name builds the same way; "erider" is the paper's
+//! // chopped dynamic SP-tracking method
+//! assert!(METHODS.contains(&"erider"));
+//! let mut opt = spec("erider").unwrap().build(4, &preset, 0.3, 0.1, 0.1, &mut rng);
+//! let loss = opt.step(&obj, &mut rng);
+//! assert!(loss.is_finite());
+//! assert_eq!(opt.name(), "erider");
+//! assert_eq!(opt.weights().len(), 4);
+//! ```
+
+#![warn(missing_docs)]
 
 use crate::analog::agad::{Agad, AgadHypers};
 use crate::analog::digital::{DigitalHypers, DigitalSgd};
@@ -90,12 +113,20 @@ pub trait AnalogOptimizer {
 /// this one enum).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
+    /// Analog SGD: direct pulsed updates on one array.
     Sgd,
+    /// Tiki-Taka v1: fast array + transfer array.
     TtV1,
+    /// Tiki-Taka v2: v1 with a digital accumulator before transfer.
     TtV2,
+    /// AGAD: chopped gradient accumulation with flip-time reference
+    /// refresh.
     Agad,
+    /// Two-stage residual learning: ZS-calibrated frozen reference.
     Residual,
+    /// RIDER: dynamic symmetric-point tracking (no chopper).
     Rider,
+    /// E-RIDER: RIDER with the chopper enabled (Eq. 17).
     Erider,
     /// exact-SGD baseline arm (pre-training / upper bound; pulse-free)
     Digital,
@@ -108,6 +139,8 @@ pub const METHODS: &[&str] = &[
 ];
 
 impl Method {
+    /// Parse a registry name (`None` for unknown names — callers decide
+    /// how to report; see [`spec_or_err`]).
     pub fn parse(name: &str) -> Option<Method> {
         match name {
             "sgd" => Some(Method::Sgd),
@@ -122,6 +155,7 @@ impl Method {
         }
     }
 
+    /// The method's canonical registry name.
     pub fn name(self) -> &'static str {
         match self {
             Method::Sgd => "sgd",
@@ -162,6 +196,7 @@ impl Method {
 /// are per-method (see [`OptimizerSpec::new`]).
 #[derive(Clone, Copy, Debug)]
 pub struct OptimizerSpec {
+    /// Which registry method this spec instantiates.
     pub method: Method,
     /// α — fast-array (or plain SGD) learning rate
     pub lr_fast: f64,

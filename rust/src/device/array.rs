@@ -182,6 +182,12 @@ impl DeviceArray {
     /// Sample a tile from a preset with a controlled SP distribution:
     /// per-cell SP ~ N(ref_mean, ref_std) (clipped inside the window),
     /// slope magnitude gamma ~ exp(sigma_gamma * N(0,1)).
+    ///
+    /// Normals come from the batched polar sampler
+    /// (`Rng::fill_normal_f32`) rather than per-cell scalar draws —
+    /// distribution-stable with the pre-batching construction, not
+    /// draw-for-draw identical (the per-cell response math is
+    /// unchanged f64).
     pub fn sample(
         rows: usize,
         cols: usize,
@@ -192,12 +198,16 @@ impl DeviceArray {
         rng: &mut Rng,
     ) -> Self {
         let n = rows * cols;
+        let mut z_gamma = vec![0.0f32; n];
+        let mut z_sp = vec![0.0f32; n];
+        rng.fill_normal_f32(&mut z_gamma);
+        rng.fill_normal_f32(&mut z_sp);
         let mut ap = Vec::with_capacity(n);
         let mut am = Vec::with_capacity(n);
         let floor = 0.05f64;
-        for _ in 0..n {
-            let gamma = (sigma_gamma * rng.normal()).exp();
-            let sp = (ref_mean + ref_std * rng.normal())
+        for (&zg, &zs) in z_gamma.iter().zip(&z_sp) {
+            let gamma = (sigma_gamma * zg as f64).exp();
+            let sp = (ref_mean + ref_std * zs as f64)
                 .clamp(-0.85 * preset.tau_min, 0.85 * preset.tau_max);
             let rho = gamma * sp / preset.tau_max;
             ap.push(((gamma + rho).max(floor)) as f32);

@@ -2,6 +2,8 @@
 //! `python/compile/aot.py` and exposes typed descriptions of every AOT
 //! artifact (inputs/outputs, shapes, dtypes) and model state layout.
 
+#![warn(missing_docs)]
+
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -9,10 +11,14 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// Element type of an artifact input or output tensor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
+    /// 32-bit unsigned integer.
     U32,
 }
 
@@ -27,14 +33,19 @@ impl Dtype {
     }
 }
 
+/// One input or output tensor of an artifact, as named in the manifest.
 #[derive(Clone, Debug)]
 pub struct IoSpec {
+    /// Manifest name of the tensor (e.g. `t0.w`, `key`, `hypers`).
     pub name: String,
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: Dtype,
 }
 
 impl IoSpec {
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -60,37 +71,53 @@ impl IoSpec {
     }
 }
 
+/// One AOT artifact: the HLO-text file plus its typed I/O contract.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Registry name (e.g. `fcn_step_erider`).
     pub name: String,
+    /// Path of the HLO-text file.
     pub file: PathBuf,
+    /// Input tensors, in call order.
     pub inputs: Vec<IoSpec>,
+    /// Output tensors, in root-tuple order.
     pub outputs: Vec<IoSpec>,
 }
 
 /// One leaf of a model's flat training state.
 #[derive(Clone, Debug)]
 pub struct StateLeaf {
+    /// Leaf name (e.g. `t0.w`).
     pub name: String,
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
     /// role: w | p | q | h | wap | wam | pap | pam | c | bias
     pub role: String,
+    /// Analog tile index the leaf belongs to.
     pub tile: usize,
 }
 
 impl StateLeaf {
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// One trainable model as described by the manifest.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
+    /// Model name (`fcn | lenet | convnet3`).
     pub name: String,
+    /// Training batch size the step artifacts were lowered with.
     pub batch: usize,
+    /// Evaluation batch size the eval artifacts were lowered with.
     pub eval_batch: usize,
+    /// Flattened input dimension.
     pub d_in: usize,
+    /// Number of output classes.
     pub n_classes: usize,
+    /// Flat training-state layout, in artifact I/O order.
     pub state: Vec<StateLeaf>,
 }
 
@@ -105,20 +132,28 @@ impl ModelSpec {
     }
 }
 
+/// The parsed artifact manifest: models, artifacts and the
+/// hyper/device parameter-vector layouts.
 #[derive(Debug)]
 pub struct Registry {
+    /// Directory the manifest (and artifact files) live in.
     pub dir: PathBuf,
+    /// Models by name.
     pub models: BTreeMap<String, ModelSpec>,
+    /// Artifacts by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
     /// index of each hyperparameter in the hypers input vector
     pub hyper_index: BTreeMap<String, usize>,
+    /// Length of the hypers input vector.
     pub n_hypers: usize,
     /// index of each device parameter in the dev input vector
     pub dev_index: BTreeMap<String, usize>,
+    /// Length of the dev input vector.
     pub n_dev: usize,
 }
 
 impl Registry {
+    /// Parse `<dir>/manifest.json` into a registry.
     pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
         let dir = dir.as_ref().to_path_buf();
         let man_path = dir.join("manifest.json");
@@ -237,12 +272,14 @@ impl Registry {
         })
     }
 
+    /// Look up a model by name.
     pub fn model(&self, name: &str) -> Result<&ModelSpec> {
         self.models
             .get(name)
             .ok_or_else(|| anyhow!("unknown model '{name}'"))
     }
 
+    /// Look up an artifact by name.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)

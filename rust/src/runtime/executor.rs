@@ -1,8 +1,11 @@
-//! PJRT executor: loads HLO-text artifacts, compiles them once (cached),
+//! PJRT executor: loads HLO-text artifacts, compiles them once (cached,
+//! which also caches the planned engine's output buffers across steps),
 //! and executes them with host tensors. HLO *text* is the interchange
 //! format (see DESIGN.md / /opt/xla-example/README.md): jax >= 0.5 emits
 //! serialized protos with 64-bit ids that xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids.
+
+#![warn(missing_docs)]
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -15,7 +18,11 @@ use crate::runtime::literal::{to_literal, HostTensor};
 // real bindings
 use crate::runtime::xla;
 
+/// Artifact executor: a PJRT-shaped client plus a per-artifact compile
+/// cache. Compiling an artifact builds its execution plan once; the
+/// plan's buffers then persist across every `run` of that artifact.
 pub struct Executor {
+    /// The backend client (interpreter-backed by default).
     pub client: xla::PjRtClient,
     cache: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
 }
@@ -55,6 +62,22 @@ impl Executor {
     /// Execute an artifact with host inputs; returns host f32 outputs in
     /// manifest order. Inputs are validated against the manifest spec.
     pub fn run(&self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        self.run_with(spec, inputs, false)
+    }
+
+    /// [`Executor::run`] on the scalar reference walker instead of the
+    /// planned engine — bit-identical output by contract; used by the
+    /// plan-equivalence tests and the `stepref/*` bench cases.
+    pub fn run_ref(&self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        self.run_with(spec, inputs, true)
+    }
+
+    fn run_with(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[HostTensor],
+        reference: bool,
+    ) -> Result<Vec<Vec<f32>>> {
         if inputs.len() != spec.inputs.len() {
             return Err(anyhow!(
                 "{}: expected {} inputs, got {}",
@@ -72,9 +95,12 @@ impl Executor {
             .collect::<Result<_>>()?;
         // owned args + consuming read-back: the state tensors are not
         // re-copied on the way in or out of the backend
-        let result = exe
-            .execute_owned(lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?;
+        let result = if reference {
+            exe.execute_ref_owned(lits)
+        } else {
+            exe.execute_owned(lits)
+        }
+        .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?;
         let buf = result
             .into_iter()
             .next()
@@ -94,8 +120,8 @@ impl Executor {
             ));
         }
         parts
-            .iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("output to f32: {e:?}")))
+            .into_iter()
+            .map(|l| l.into_vec::<f32>().map_err(|e| anyhow!("output to f32: {e:?}")))
             .collect()
     }
 
@@ -111,6 +137,7 @@ impl Executor {
             .with_context(|| format!("running artifact {name}"))
     }
 
+    /// Number of artifacts compiled into the cache so far.
     pub fn cached_count(&self) -> usize {
         self.cache.borrow().len()
     }

@@ -1,11 +1,15 @@
 //! Pure-Rust HLO-text parser + reference interpreter.
 //!
-//! This is the default backend behind `runtime::xla`: it executes the
-//! AOT artifacts (HLO *text*, the interchange format chosen in
-//! DESIGN.md) on the host CPU with no external dependency, so the
-//! NN-scale trainer, experiments and CI run in a cargo-only
-//! environment. Real PJRT bindings remain a drop-in swap at the
-//! `runtime::xla` surface.
+//! This module owns the HLO *text* parser and the scalar reference
+//! evaluator [`execute_ref`] — the walk-the-instruction-list
+//! interpreter that defines the semantics of every supported op. The
+//! production path is the planned execution engine in
+//! [`crate::runtime::plan`], which compiles a parsed [`HloModule`] into
+//! a flat instruction program (fused elementwise chains, threaded
+//! `dot`, liveness-planned cached buffers) and must stay *bit-for-bit*
+//! equal to `execute_ref` (pinned by `rust/tests/plan_equivalence.rs`).
+//! Both back the `runtime::xla` surface; real PJRT bindings remain a
+//! drop-in swap there.
 //!
 //! Supported op set (what the checked-in FCN/LeNet/convnet3 artifacts
 //! emit — see `python/compile/hlo_fixtures.py`):
@@ -20,15 +24,19 @@
 //!
 //! Numeric contract: element type f32 exactly (no widening to f64 in
 //! elementwise ops); `dot` accumulates in f32 like XLA:CPU;
-//! `round-nearest-even` implements ties-to-even (`jnp.round`).
-//! Unsupported opcodes are *parse-time* errors so a bad artifact fails
-//! at compile, not mid-training.
+//! `round-nearest-even` implements ties-to-even (`jnp.round`). The
+//! per-element arithmetic lives in the `*_s` scalar helpers shared with
+//! the planned engine, so the two paths cannot drift. Unsupported
+//! opcodes are *parse-time* errors so a bad artifact fails at compile,
+//! not mid-training.
+
+#![warn(missing_docs)]
 
 use std::collections::BTreeMap;
 
 use crate::runtime::xla::{Data, Literal, XlaError};
 
-fn err(msg: impl Into<String>) -> XlaError {
+pub(crate) fn err(msg: impl Into<String>) -> XlaError {
     XlaError(msg.into())
 }
 
@@ -37,9 +45,13 @@ fn err(msg: impl Into<String>) -> XlaError {
 /// Element type of an array shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dt {
+    /// 32-bit IEEE float (`f32[...]`).
     F32,
+    /// 32-bit signed integer (`s32[...]`).
     S32,
+    /// 32-bit unsigned integer (`u32[...]`).
     U32,
+    /// Boolean predicate (`pred[...]`).
     Pred,
 }
 
@@ -57,27 +69,27 @@ impl Dt {
 
 /// Parsed HLO shape: an array or a tuple of shapes.
 #[derive(Clone, Debug, PartialEq)]
-pub enum Shape {
+pub(crate) enum Shape {
     Array { dt: Dt, dims: Vec<usize> },
     Tuple(Vec<Shape>),
 }
 
 impl Shape {
-    fn numel(&self) -> usize {
+    pub(crate) fn numel(&self) -> usize {
         match self {
             Shape::Array { dims, .. } => dims.iter().product(),
             Shape::Tuple(_) => 0,
         }
     }
 
-    fn dims(&self) -> Result<&[usize], XlaError> {
+    pub(crate) fn dims(&self) -> Result<&[usize], XlaError> {
         match self {
             Shape::Array { dims, .. } => Ok(dims),
             Shape::Tuple(_) => Err(err("expected array shape, got tuple")),
         }
     }
 
-    fn dt(&self) -> Result<Dt, XlaError> {
+    pub(crate) fn dt(&self) -> Result<Dt, XlaError> {
         match self {
             Shape::Array { dt, .. } => Ok(*dt),
             Shape::Tuple(_) => Err(err("expected array shape, got tuple")),
@@ -87,7 +99,7 @@ impl Shape {
 
 /// Comparison direction of a `compare` op.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Cmp {
+pub(crate) enum Cmp {
     Eq,
     Ne,
     Lt,
@@ -97,8 +109,8 @@ pub enum Cmp {
 }
 
 /// Elementwise binary opcodes.
-#[derive(Clone, Copy, Debug)]
-pub enum BinOp {
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum BinOp {
     Add,
     Sub,
     Mul,
@@ -114,8 +126,8 @@ pub enum BinOp {
 }
 
 /// Elementwise unary opcodes.
-#[derive(Clone, Copy, Debug)]
-pub enum UnOp {
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum UnOp {
     Neg,
     Exp,
     Log,
@@ -135,7 +147,7 @@ pub enum UnOp {
 
 /// One HLO instruction's operation (attributes resolved at parse time).
 #[derive(Clone, Debug)]
-enum Op {
+pub(crate) enum Op {
     Parameter(usize),
     Constant(Literal),
     Iota { dim: usize },
@@ -159,33 +171,37 @@ enum Op {
 }
 
 #[derive(Clone, Debug)]
-struct Instr {
-    shape: Shape,
-    op: Op,
-    operands: Vec<usize>,
+pub(crate) struct Instr {
+    pub(crate) shape: Shape,
+    pub(crate) op: Op,
+    pub(crate) operands: Vec<usize>,
 }
 
 /// One named computation (the entry or a called sub-computation).
 #[derive(Clone, Debug)]
-pub struct Computation {
-    pub name: String,
-    instrs: Vec<Instr>,
+pub(crate) struct Computation {
+    pub(crate) name: String,
+    pub(crate) instrs: Vec<Instr>,
     /// parameter ordinal -> instruction index
-    params: Vec<usize>,
-    root: usize,
+    pub(crate) params: Vec<usize>,
+    pub(crate) root: usize,
     /// per instruction: operand values whose last use this is
-    drop_after: Vec<Vec<usize>>,
+    pub(crate) drop_after: Vec<Vec<usize>>,
 }
 
 /// A parsed HLO module: every computation plus the entry index.
+///
+/// Produced by [`parse`]; executed either by the scalar reference
+/// walker [`execute_ref`] or by compiling it into a
+/// [`crate::runtime::plan::Plan`].
 #[derive(Clone, Debug)]
 pub struct HloModule {
-    computations: Vec<Computation>,
-    entry: usize,
+    pub(crate) computations: Vec<Computation>,
+    pub(crate) entry: usize,
 }
 
 impl HloModule {
-    /// Shapes of the entry computation's parameters (validation aid).
+    /// Number of parameters of the entry computation (validation aid).
     pub fn entry_param_count(&self) -> usize {
         self.computations[self.entry].params.len()
     }
@@ -797,11 +813,11 @@ pub fn parse(text: &str) -> Result<HloModule, XlaError> {
 
 // ------------------------------------------------------------- evaluator
 
-fn lit_dims(l: &Literal) -> Vec<usize> {
+pub(crate) fn lit_dims(l: &Literal) -> Vec<usize> {
     l.dims.iter().map(|&d| d as usize).collect()
 }
 
-fn lit_dt(l: &Literal) -> Option<Dt> {
+pub(crate) fn lit_dt(l: &Literal) -> Option<Dt> {
     match &l.data {
         Data::F32(_) => Some(Dt::F32),
         Data::I32(_) => Some(Dt::S32),
@@ -811,14 +827,14 @@ fn lit_dt(l: &Literal) -> Option<Dt> {
     }
 }
 
-fn f32s(l: &Literal) -> Result<&[f32], XlaError> {
+pub(crate) fn f32s(l: &Literal) -> Result<&[f32], XlaError> {
     match &l.data {
         Data::F32(v) => Ok(v),
         _ => Err(err("expected f32 operand")),
     }
 }
 
-fn strides_of(dims: &[usize]) -> Vec<usize> {
+pub(crate) fn strides_of(dims: &[usize]) -> Vec<usize> {
     let mut s = vec![1usize; dims.len()];
     for d in (0..dims.len().saturating_sub(1)).rev() {
         s[d] = s[d + 1] * dims[d + 1];
@@ -827,7 +843,7 @@ fn strides_of(dims: &[usize]) -> Vec<usize> {
 }
 
 /// Row-major odometer over `dims`; returns false after the last index.
-fn odo_next(idx: &mut [usize], dims: &[usize]) -> bool {
+pub(crate) fn odo_next(idx: &mut [usize], dims: &[usize]) -> bool {
     for d in (0..dims.len()).rev() {
         idx[d] += 1;
         if idx[d] < dims[d] {
@@ -847,73 +863,187 @@ fn round_ties_even(x: f32) -> f32 {
     }
 }
 
+// Per-element arithmetic, shared verbatim by this reference walker and
+// the planned engine (`runtime::plan`) so the two paths stay
+// bit-identical. Callers gate op/dtype validity; helpers assume it.
+
+/// f32 arithmetic arm of a binary op (bitwise ops are gated out by
+/// callers and unreachable here).
+#[inline]
+pub(crate) fn bin_f32_s(op: BinOp, x: f32, y: f32) -> f32 {
+    match op {
+        BinOp::Add => x + y,
+        BinOp::Sub => x - y,
+        BinOp::Mul => x * y,
+        BinOp::Div => x / y,
+        BinOp::Max => x.max(y),
+        BinOp::Min => x.min(y),
+        BinOp::Pow => x.powf(y),
+        _ => unreachable!("bitwise op on f32 is gated by callers"),
+    }
+}
+
+/// u32 arm of a binary op: wrapping arithmetic, `x / 0 == 0`, shifts by
+/// >= 32 produce 0 (`Pow` is gated out by callers).
+#[inline]
+pub(crate) fn bin_u32_s(op: BinOp, x: u32, y: u32) -> u32 {
+    match op {
+        BinOp::Add => x.wrapping_add(y),
+        BinOp::Sub => x.wrapping_sub(y),
+        BinOp::Mul => x.wrapping_mul(y),
+        BinOp::Div => {
+            if y == 0 {
+                0
+            } else {
+                x / y
+            }
+        }
+        BinOp::Max => x.max(y),
+        BinOp::Min => x.min(y),
+        BinOp::And => x & y,
+        BinOp::Or => x | y,
+        BinOp::Xor => x ^ y,
+        BinOp::Shl => {
+            if y >= 32 {
+                0
+            } else {
+                x << y
+            }
+        }
+        BinOp::Shr => {
+            if y >= 32 {
+                0
+            } else {
+                x >> y
+            }
+        }
+        BinOp::Pow => unreachable!("power on u32 is gated by callers"),
+    }
+}
+
+/// s32 arm of a binary op: wrapping arithmetic plus min/max and the
+/// bitwise trio (everything else is gated out by callers).
+#[inline]
+pub(crate) fn bin_i32_s(op: BinOp, x: i32, y: i32) -> i32 {
+    match op {
+        BinOp::Add => x.wrapping_add(y),
+        BinOp::Sub => x.wrapping_sub(y),
+        BinOp::Mul => x.wrapping_mul(y),
+        BinOp::Max => x.max(y),
+        BinOp::Min => x.min(y),
+        BinOp::And => x & y,
+        BinOp::Or => x | y,
+        BinOp::Xor => x ^ y,
+        _ => unreachable!("unsupported s32 binary op is gated by callers"),
+    }
+}
+
+/// pred arm of a binary op (total: unknown ops map to `false`, matching
+/// the historical evaluator).
+#[inline]
+pub(crate) fn bin_pred_s(op: BinOp, p: bool, q: bool) -> bool {
+    match op {
+        BinOp::And | BinOp::Min | BinOp::Mul => p && q,
+        BinOp::Or | BinOp::Max | BinOp::Add => p || q,
+        BinOp::Xor => p ^ q,
+        _ => false,
+    }
+}
+
+/// f32 arm of a unary op (`Not` is gated out by callers).
+#[inline]
+pub(crate) fn un_f32_s(op: UnOp, v: f32) -> f32 {
+    match op {
+        UnOp::Neg => -v,
+        UnOp::Exp => v.exp(),
+        UnOp::Log => v.ln(),
+        UnOp::Sqrt => v.sqrt(),
+        UnOp::Rsqrt => 1.0 / v.sqrt(),
+        UnOp::Abs => v.abs(),
+        UnOp::Sign => {
+            if v > 0.0 {
+                1.0
+            } else if v < 0.0 {
+                -1.0
+            } else {
+                v * 0.0
+            }
+        }
+        UnOp::Floor => v.floor(),
+        UnOp::Ceil => v.ceil(),
+        UnOp::RoundTiesEven => round_ties_even(v),
+        UnOp::Tanh => v.tanh(),
+        UnOp::Logistic => 1.0 / (1.0 + (-v).exp()),
+        UnOp::Sin => v.sin(),
+        UnOp::Cos => v.cos(),
+        UnOp::Not => unreachable!("not on f32 is gated by callers"),
+    }
+}
+
+/// One comparison (shared by f32/s32/u32 compares).
+#[inline]
+pub(crate) fn cmp_s<T: PartialOrd + PartialEq>(dir: Cmp, a: &T, b: &T) -> bool {
+    match dir {
+        Cmp::Eq => a == b,
+        Cmp::Ne => a != b,
+        Cmp::Lt => a < b,
+        Cmp::Le => a <= b,
+        Cmp::Gt => a > b,
+        Cmp::Ge => a >= b,
+    }
+}
+
+/// XLA `convert` to s32: truncate toward zero.
+#[inline]
+pub(crate) fn f32_to_i32_xla(v: f32) -> i32 {
+    v.trunc() as i32
+}
+
+/// XLA `convert` to u32: truncate toward zero, clamp negatives to 0.
+#[inline]
+pub(crate) fn f32_to_u32_xla(v: f32) -> u32 {
+    v.trunc().max(0.0) as u32
+}
+
 fn bin_f32(op: BinOp, a: &[f32], b: &[f32], out: &mut [f32]) -> Result<(), XlaError> {
+    if !matches!(
+        op,
+        BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Max | BinOp::Min | BinOp::Pow
+    ) {
+        return Err(err("bitwise op on f32"));
+    }
     for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
-        *o = match op {
-            BinOp::Add => x + y,
-            BinOp::Sub => x - y,
-            BinOp::Mul => x * y,
-            BinOp::Div => x / y,
-            BinOp::Max => x.max(y),
-            BinOp::Min => x.min(y),
-            BinOp::Pow => x.powf(y),
-            _ => return Err(err("bitwise op on f32")),
-        };
+        *o = bin_f32_s(op, x, y);
     }
     Ok(())
 }
 
 fn bin_u32(op: BinOp, a: &[u32], b: &[u32], out: &mut [u32]) -> Result<(), XlaError> {
+    if matches!(op, BinOp::Pow) {
+        return Err(err("power on u32 unsupported"));
+    }
     for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
-        *o = match op {
-            BinOp::Add => x.wrapping_add(y),
-            BinOp::Sub => x.wrapping_sub(y),
-            BinOp::Mul => x.wrapping_mul(y),
-            BinOp::Div => {
-                if y == 0 {
-                    0
-                } else {
-                    x / y
-                }
-            }
-            BinOp::Max => x.max(y),
-            BinOp::Min => x.min(y),
-            BinOp::And => x & y,
-            BinOp::Or => x | y,
-            BinOp::Xor => x ^ y,
-            BinOp::Shl => {
-                if y >= 32 {
-                    0
-                } else {
-                    x << y
-                }
-            }
-            BinOp::Shr => {
-                if y >= 32 {
-                    0
-                } else {
-                    x >> y
-                }
-            }
-            BinOp::Pow => return Err(err("power on u32 unsupported")),
-        };
+        *o = bin_u32_s(op, x, y);
     }
     Ok(())
 }
 
 fn bin_i32(op: BinOp, a: &[i32], b: &[i32], out: &mut [i32]) -> Result<(), XlaError> {
+    if !matches!(
+        op,
+        BinOp::Add
+            | BinOp::Sub
+            | BinOp::Mul
+            | BinOp::Max
+            | BinOp::Min
+            | BinOp::And
+            | BinOp::Or
+            | BinOp::Xor
+    ) {
+        return Err(err("unsupported s32 binary op"));
+    }
     for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
-        *o = match op {
-            BinOp::Add => x.wrapping_add(y),
-            BinOp::Sub => x.wrapping_sub(y),
-            BinOp::Mul => x.wrapping_mul(y),
-            BinOp::Max => x.max(y),
-            BinOp::Min => x.min(y),
-            BinOp::And => x & y,
-            BinOp::Or => x | y,
-            BinOp::Xor => x ^ y,
-            _ => return Err(err("unsupported s32 binary op")),
-        };
+        *o = bin_i32_s(op, x, y);
     }
     Ok(())
 }
@@ -942,16 +1072,7 @@ fn eval_bin(op: BinOp, a: &Literal, b: &Literal) -> Result<Literal, XlaError> {
             Ok(Literal { data: Data::I32(out), dims: a.dims.clone() })
         }
         (Data::Pred(x), Data::Pred(y)) => {
-            let out: Vec<bool> = x
-                .iter()
-                .zip(y)
-                .map(|(&p, &q)| match op {
-                    BinOp::And | BinOp::Min | BinOp::Mul => p && q,
-                    BinOp::Or | BinOp::Max | BinOp::Add => p || q,
-                    BinOp::Xor => p ^ q,
-                    _ => false,
-                })
-                .collect();
+            let out: Vec<bool> = x.iter().zip(y).map(|(&p, &q)| bin_pred_s(op, p, q)).collect();
             Ok(Literal { data: Data::Pred(out), dims: a.dims.clone() })
         }
         _ => Err(err("binary op element type mismatch")),
@@ -964,34 +1085,7 @@ fn eval_un(op: UnOp, a: &Literal) -> Result<Literal, XlaError> {
     }
     match &a.data {
         Data::F32(x) => {
-            let out: Vec<f32> = x
-                .iter()
-                .map(|&v| match op {
-                    UnOp::Neg => -v,
-                    UnOp::Exp => v.exp(),
-                    UnOp::Log => v.ln(),
-                    UnOp::Sqrt => v.sqrt(),
-                    UnOp::Rsqrt => 1.0 / v.sqrt(),
-                    UnOp::Abs => v.abs(),
-                    UnOp::Sign => {
-                        if v > 0.0 {
-                            1.0
-                        } else if v < 0.0 {
-                            -1.0
-                        } else {
-                            v * 0.0
-                        }
-                    }
-                    UnOp::Floor => v.floor(),
-                    UnOp::Ceil => v.ceil(),
-                    UnOp::RoundTiesEven => round_ties_even(v),
-                    UnOp::Tanh => v.tanh(),
-                    UnOp::Logistic => 1.0 / (1.0 + (-v).exp()),
-                    UnOp::Sin => v.sin(),
-                    UnOp::Cos => v.cos(),
-                    UnOp::Not => 0.0,
-                })
-                .collect();
+            let out: Vec<f32> = x.iter().map(|&v| un_f32_s(op, v)).collect();
             Ok(Literal { data: Data::F32(out), dims: a.dims.clone() })
         }
         Data::Pred(x) => match op {
@@ -1028,17 +1122,7 @@ fn eval_compare(dir: Cmp, a: &Literal, b: &Literal) -> Result<Literal, XlaError>
         return Err(err("compare shape mismatch"));
     }
     fn go<T: PartialOrd + PartialEq>(dir: Cmp, x: &[T], y: &[T]) -> Vec<bool> {
-        x.iter()
-            .zip(y)
-            .map(|(a, b)| match dir {
-                Cmp::Eq => a == b,
-                Cmp::Ne => a != b,
-                Cmp::Lt => a < b,
-                Cmp::Le => a <= b,
-                Cmp::Gt => a > b,
-                Cmp::Ge => a >= b,
-            })
-            .collect()
+        x.iter().zip(y).map(|(a, b)| cmp_s(dir, a, b)).collect()
     }
     let out = match (&a.data, &b.data) {
         (Data::F32(x), Data::F32(y)) => go(dir, x, y),
@@ -1062,8 +1146,8 @@ fn eval_convert(a: &Literal, to: Dt) -> Result<Literal, XlaError> {
     let data = match to {
         Dt::F32 => Data::F32(as_f32),
         // XLA convert truncates toward zero
-        Dt::S32 => Data::I32(as_f32.iter().map(|&v| v.trunc() as i32).collect()),
-        Dt::U32 => Data::U32(as_f32.iter().map(|&v| v.trunc().max(0.0) as u32).collect()),
+        Dt::S32 => Data::I32(as_f32.iter().map(|&v| f32_to_i32_xla(v)).collect()),
+        Dt::U32 => Data::U32(as_f32.iter().map(|&v| f32_to_u32_xla(v)).collect()),
         Dt::Pred => Data::Pred(as_f32.iter().map(|&v| v != 0.0).collect()),
     };
     Ok(Literal { data, dims: a.dims.clone() })
@@ -1080,12 +1164,28 @@ fn scalar_or_same(v: &Literal, n: usize, i: usize) -> Result<f32, XlaError> {
     }
 }
 
-fn eval_dot(l: &Literal, r: &Literal, lc: usize, rc: usize) -> Result<Literal, XlaError> {
-    let (ld, rd) = (lit_dims(l), lit_dims(r));
+/// Resolved geometry of a rank-2 `dot`: output `m x n`, contracting
+/// length `k`, and the per-operand strides the inner loops walk.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct DotDims {
+    pub(crate) m: usize,
+    pub(crate) k: usize,
+    pub(crate) n: usize,
+    pub(crate) lms: usize,
+    pub(crate) lks: usize,
+    pub(crate) rks: usize,
+    pub(crate) rns: usize,
+}
+
+pub(crate) fn dot_dims(
+    ld: &[usize],
+    rd: &[usize],
+    lc: usize,
+    rc: usize,
+) -> Result<DotDims, XlaError> {
     if ld.len() != 2 || rd.len() != 2 || lc > 1 || rc > 1 {
         return Err(err("dot: only rank-2 operands supported"));
     }
-    let (lv, rv) = (f32s(l)?, f32s(r)?);
     let (m, k) = (ld[1 - lc], ld[lc]);
     let (k2, n) = (rd[rc], rd[1 - rc]);
     if k != k2 {
@@ -1093,28 +1193,47 @@ fn eval_dot(l: &Literal, r: &Literal, lc: usize, rc: usize) -> Result<Literal, X
     }
     let (lms, lks) = if lc == 1 { (ld[1], 1) } else { (1, ld[1]) };
     let (rks, rns) = if rc == 0 { (rd[1], 1) } else { (1, rd[1]) };
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let orow = &mut out[i * n..(i + 1) * n];
-        for kk in 0..k {
+    Ok(DotDims { m, k, n, lms, lks, rks, rns })
+}
+
+/// Accumulate output rows `row0 .. row0 + out.len() / n` of a rank-2
+/// `dot` into `out` (which is zeroed here first). Each output element
+/// accumulates over the contracting dim in ascending order, so
+/// computing disjoint row ranges on different threads is bit-identical
+/// to one serial pass — the planned engine's threaded path relies on
+/// this.
+pub(crate) fn dot_rows(lv: &[f32], rv: &[f32], d: &DotDims, row0: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    let rows = if d.n == 0 { 0 } else { out.len() / d.n };
+    for i in 0..rows {
+        let orow = &mut out[i * d.n..(i + 1) * d.n];
+        for kk in 0..d.k {
             // no skip-zero fast path: 0 * inf must stay NaN, as on XLA
-            let a = lv[i * lms + kk * lks];
-            let rbase = kk * rks;
-            if rns == 1 {
-                let rrow = &rv[rbase..rbase + n];
+            let a = lv[(row0 + i) * d.lms + kk * d.lks];
+            let rbase = kk * d.rks;
+            if d.rns == 1 {
+                let rrow = &rv[rbase..rbase + d.n];
                 for (o, &b) in orow.iter_mut().zip(rrow) {
                     *o += a * b;
                 }
             } else {
                 for (j, o) in orow.iter_mut().enumerate() {
-                    *o += a * rv[rbase + j * rns];
+                    *o += a * rv[rbase + j * d.rns];
                 }
             }
         }
     }
+}
+
+fn eval_dot(l: &Literal, r: &Literal, lc: usize, rc: usize) -> Result<Literal, XlaError> {
+    let (ld, rd) = (lit_dims(l), lit_dims(r));
+    let d = dot_dims(&ld, &rd, lc, rc)?;
+    let (lv, rv) = (f32s(l)?, f32s(r)?);
+    let mut out = vec![0.0f32; d.m * d.n];
+    dot_rows(lv, rv, &d, 0, &mut out);
     Ok(Literal {
         data: Data::F32(out),
-        dims: vec![m as i64, n as i64],
+        dims: vec![d.m as i64, d.n as i64],
     })
 }
 
@@ -1379,8 +1498,8 @@ fn eval_pad(
 }
 
 /// Which monoid a reduce sub-computation implements, if recognizable.
-#[derive(Clone, Copy, PartialEq, Eq)]
-enum Monoid {
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Monoid {
     Add,
     Max,
     Min,
@@ -1388,7 +1507,7 @@ enum Monoid {
     Generic,
 }
 
-fn reduce_monoid(comp: &Computation) -> Monoid {
+pub(crate) fn reduce_monoid(comp: &Computation) -> Monoid {
     // fast path: root is a single binary op over the two parameters
     let root = &comp.instrs[comp.root];
     if comp.params.len() == 2 && root.operands.len() == 2 {
@@ -1410,7 +1529,7 @@ fn reduce_monoid(comp: &Computation) -> Monoid {
     Monoid::Generic
 }
 
-fn scalar_literal_f32(v: f32) -> Literal {
+pub(crate) fn scalar_literal_f32(v: f32) -> Literal {
     Literal { data: Data::F32(vec![v]), dims: vec![] }
 }
 
@@ -1418,6 +1537,70 @@ fn getv(env: &[Option<Literal>], o: usize) -> Result<&Literal, XlaError> {
     env[o]
         .as_ref()
         .ok_or_else(|| err("internal: operand value dropped before use"))
+}
+
+/// Row-major f32 `iota` values along `dim` (shared by the reference
+/// walker and the planned engine's plan-time iota folding).
+pub(crate) fn iota_values(dims: &[usize], dim: usize) -> Vec<usize> {
+    let n: usize = dims.iter().product();
+    let mut idx = vec![0usize; dims.len()];
+    let mut vals: Vec<usize> = Vec::with_capacity(n);
+    if n > 0 {
+        loop {
+            vals.push(idx[dim]);
+            if !odo_next(&mut idx, dims) {
+                break;
+            }
+        }
+    }
+    vals
+}
+
+/// The one f32 `reduce` implementation shared by both execution paths:
+/// accumulates the flat row-major traversal of `v` into the kept-dims
+/// output (seeded with `init`), using `monoid` fast paths or the
+/// `generic` two-argument combiner. Writes into `out` (cleared first)
+/// and returns the output dims — bit-identical accumulation order on
+/// every path.
+pub(crate) fn reduce_f32(
+    v: &[f32],
+    init: f32,
+    sdims: &[usize],
+    rdims: &[usize],
+    monoid: Monoid,
+    out: &mut Vec<f32>,
+    mut generic: impl FnMut(f32, f32) -> Result<f32, XlaError>,
+) -> Result<Vec<usize>, XlaError> {
+    let keep: Vec<usize> = (0..sdims.len()).filter(|d| !rdims.contains(d)).collect();
+    let out_dims: Vec<usize> = keep.iter().map(|&d| sdims[d]).collect();
+    let n_out: usize = out_dims.iter().product();
+    let ostr = strides_of(&out_dims);
+    out.clear();
+    out.resize(n_out, init);
+    if v.is_empty() {
+        return Ok(out_dims);
+    }
+    let mut idx = vec![0usize; sdims.len()];
+    let mut flat = 0usize;
+    loop {
+        let mut off = 0usize;
+        for (pos, &d) in keep.iter().enumerate() {
+            off += idx[d] * ostr[pos];
+        }
+        let x = v[flat];
+        out[off] = match monoid {
+            Monoid::Add => out[off] + x,
+            Monoid::Max => out[off].max(x),
+            Monoid::Min => out[off].min(x),
+            Monoid::Mul => out[off] * x,
+            Monoid::Generic => generic(out[off], x)?,
+        };
+        flat += 1;
+        if !odo_next(&mut idx, sdims) {
+            break;
+        }
+    }
+    Ok(out_dims)
 }
 
 impl HloModule {
@@ -1429,49 +1612,18 @@ impl HloModule {
         comp_idx: usize,
     ) -> Result<Literal, XlaError> {
         let sdims = lit_dims(a);
-        let keep: Vec<usize> = (0..sdims.len()).filter(|d| !rdims.contains(d)).collect();
-        let out_dims: Vec<usize> = keep.iter().map(|&d| sdims[d]).collect();
-        let n_out: usize = out_dims.iter().product();
-        let ostr = strides_of(&out_dims);
         let monoid = reduce_monoid(&self.computations[comp_idx]);
         match (&a.data, &init.data) {
             (Data::F32(v), Data::F32(iv)) => {
-                let mut out = vec![iv[0]; n_out];
-                if v.is_empty() {
-                    return Ok(Literal {
-                        data: Data::F32(out),
-                        dims: out_dims.iter().map(|&d| d as i64).collect(),
-                    });
-                }
-                let mut idx = vec![0usize; sdims.len()];
-                let mut flat = 0usize;
-                loop {
-                    let mut off = 0usize;
-                    for (pos, &d) in keep.iter().enumerate() {
-                        off += idx[d] * ostr[pos];
-                    }
-                    let x = v[flat];
-                    out[off] = match monoid {
-                        Monoid::Add => out[off] + x,
-                        Monoid::Max => out[off].max(x),
-                        Monoid::Min => out[off].min(x),
-                        Monoid::Mul => out[off] * x,
-                        Monoid::Generic => {
-                            let r = self.eval_comp(
-                                comp_idx,
-                                vec![
-                                    Some(scalar_literal_f32(out[off])),
-                                    Some(scalar_literal_f32(x)),
-                                ],
-                            )?;
-                            f32s(&r)?[0]
-                        }
-                    };
-                    flat += 1;
-                    if !odo_next(&mut idx, &sdims) {
-                        break;
-                    }
-                }
+                let mut out = Vec::new();
+                let out_dims =
+                    reduce_f32(v, iv[0], &sdims, rdims, monoid, &mut out, |acc, x| {
+                        let r = self.eval_comp(
+                            comp_idx,
+                            vec![Some(scalar_literal_f32(acc)), Some(scalar_literal_f32(x))],
+                        )?;
+                        Ok(f32s(&r)?[0])
+                    })?;
                 Ok(Literal {
                     data: Data::F32(out),
                     dims: out_dims.iter().map(|&d| d as i64).collect(),
@@ -1501,17 +1653,7 @@ impl HloModule {
                 Op::Constant(l) => l.clone(),
                 Op::Iota { dim } => {
                     let dims = instr.shape.dims()?.to_vec();
-                    let n: usize = dims.iter().product();
-                    let mut idx = vec![0usize; dims.len()];
-                    let mut vals: Vec<usize> = Vec::with_capacity(n);
-                    if n > 0 {
-                        loop {
-                            vals.push(idx[*dim]);
-                            if !odo_next(&mut idx, &dims) {
-                                break;
-                            }
-                        }
-                    }
+                    let vals = iota_values(&dims, *dim);
                     let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
                     match instr.shape.dt()? {
                         Dt::U32 => Literal {
@@ -1692,9 +1834,9 @@ impl HloModule {
     }
 }
 
-/// Validate `args` against the entry parameters and run the module.
-pub fn execute(m: &HloModule, args: Vec<Literal>) -> Result<Literal, XlaError> {
-    let comp = &m.computations[m.entry];
+/// Validate `args` against a computation's parameters (shape and
+/// element type) — shared by [`execute_ref`] and the planned engine.
+pub(crate) fn validate_args(comp: &Computation, args: &[Literal]) -> Result<(), XlaError> {
     if args.len() != comp.params.len() {
         return Err(err(format!(
             "entry expects {} arguments, got {}",
@@ -1719,6 +1861,19 @@ pub fn execute(m: &HloModule, args: Vec<Literal>) -> Result<Literal, XlaError> {
             )));
         }
     }
+    Ok(())
+}
+
+/// Validate `args` against the entry parameters and run the module on
+/// the scalar reference walker.
+///
+/// This path defines the op semantics; the planned engine
+/// ([`crate::runtime::plan::Plan`]) must match it bit-for-bit. Use it
+/// for golden tests and as the equivalence oracle — the production hot
+/// path is the plan.
+pub fn execute_ref(m: &HloModule, args: Vec<Literal>) -> Result<Literal, XlaError> {
+    let comp = &m.computations[m.entry];
+    validate_args(comp, &args)?;
     m.eval_comp(m.entry, args.into_iter().map(Some).collect())
 }
 
@@ -1728,7 +1883,7 @@ mod tests {
 
     fn run1(text: &str, args: Vec<Literal>) -> Literal {
         let m = parse(text).expect("parse");
-        execute(&m, args).expect("execute")
+        execute_ref(&m, args).expect("execute")
     }
 
     fn f32v(l: &Literal) -> Vec<f32> {
@@ -1898,11 +2053,11 @@ mod tests {
         )
         .unwrap();
         // wrong arity
-        assert!(execute(&m, vec![]).is_err());
+        assert!(execute_ref(&m, vec![]).is_err());
         // wrong shape
-        assert!(execute(&m, vec![Literal::vec1(&[1.0f32, 2.0, 3.0])]).is_err());
+        assert!(execute_ref(&m, vec![Literal::vec1(&[1.0f32, 2.0, 3.0])]).is_err());
         // wrong dtype
-        assert!(execute(&m, vec![Literal::vec1(&[1u32, 2])]).is_err());
+        assert!(execute_ref(&m, vec![Literal::vec1(&[1u32, 2])]).is_err());
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Host array <-> xla::Literal conversion helpers.
 
+#![warn(missing_docs)]
+
 use anyhow::{anyhow, Result};
 
 use crate::runtime::artifact::{Dtype, IoSpec};
@@ -10,12 +12,16 @@ use crate::runtime::xla;
 /// A host-side tensor matching an IoSpec.
 #[derive(Clone, Debug)]
 pub enum HostTensor {
+    /// 32-bit float data.
     F32(Vec<f32>),
+    /// 32-bit signed integer data (labels).
     I32(Vec<i32>),
+    /// 32-bit unsigned integer data (PRNG keys, counters).
     U32(Vec<u32>),
 }
 
 impl HostTensor {
+    /// Number of elements.
     pub fn len(&self) -> usize {
         match self {
             HostTensor::F32(v) => v.len(),
@@ -24,10 +30,12 @@ impl HostTensor {
         }
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Borrow the data as f32 (errors on other element types).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostTensor::F32(v) => Ok(v),

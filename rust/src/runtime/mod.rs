@@ -1,10 +1,20 @@
 //! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
 //! and executes them from the Rust hot path (Python is never invoked).
+//!
+//! Layering: [`artifact`] parses the manifest, [`interp`] parses HLO
+//! text and defines the reference op semantics, [`plan`] compiles a
+//! parsed module into the planned execution engine (the hot path),
+//! [`xla`] mirrors the PJRT API surface over both, and [`executor`]
+//! caches compiled executables and moves host tensors across the
+//! boundary.
+
+#![warn(missing_docs)]
 
 pub mod artifact;
 pub mod executor;
 pub mod interp;
 pub mod literal;
+pub mod plan;
 pub mod xla;
 
 pub use artifact::{ArtifactSpec, Dtype, IoSpec, ModelSpec, Registry, StateLeaf};

@@ -1,0 +1,2559 @@
+//! Planned execution engine for parsed HLO modules.
+//!
+//! [`Plan::new`] compiles an [`HloModule`] once into a flat instruction
+//! program per computation: operand indices and data sources are
+//! resolved at plan time (reshape and `get-tuple-element` become
+//! zero-cost aliases, `iota` folds to a constant), chains of
+//! elementwise ops are fused into single blocked loops over f32 / u32 /
+//! pred slabs, the rank-2 `dot` fans out to a row-chunked
+//! `std::thread::scope` path, and every instruction's output buffer is
+//! assigned by a liveness-based plan so buffers are reused within a
+//! call *and cached across `execute` calls* — the trainer executes the
+//! same step computation thousands of times.
+//!
+//! The engine is required to be **bit-for-bit identical** to the scalar
+//! reference walker [`interp::execute_ref`]: every per-element formula
+//! is the shared `*_s` scalar helper from `runtime::interp`, fused
+//! loops evaluate elements independently, the threaded `dot`
+//! accumulates each output element in the same contracting-dim order
+//! regardless of thread count, and `reduce` runs the one shared
+//! [`interp::reduce_f32`] accumulation. `rust/tests/plan_equivalence.rs`
+//! pins this across every checked-in artifact; DESIGN.md "planned
+//! interpreter execution" documents the layout and the rules for
+//! adding ops.
+
+#![warn(missing_docs)]
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::runtime::interp::{
+    self, bin_f32_s, bin_i32_s, bin_pred_s, bin_u32_s, cmp_s, dot_dims, dot_rows, err,
+    f32_to_i32_xla, f32_to_u32_xla, iota_values, odo_next, reduce_f32, reduce_monoid,
+    scalar_literal_f32, strides_of, un_f32_s, validate_args, BinOp, Cmp, Computation, Dt,
+    HloModule, Op, Shape, UnOp,
+};
+use crate::runtime::xla::{Data, Literal, XlaError};
+
+/// Elements per fused-loop block: one slab row per fused member.
+const BLOCK: usize = 256;
+
+/// `m * k * n` threshold below which `dot` stays serial (thread spawn
+/// costs more than the multiply).
+const DOT_PAR_MIN_FLOPS: usize = 1 << 17;
+
+/// Upper bound on `dot` worker threads: mirrors the fixed row-chunk
+/// scheme of `device/array.rs` (`PAR_CHUNK_ROWS`) — the chunking is a
+/// function of the shape, never of the machine, so results are
+/// identical for every thread count.
+const DOT_MAX_WORKERS: usize = 8;
+
+/// Maximum array rank the strided-gather kernels handle (the artifacts
+/// use rank <= 4).
+const MAX_RANK: usize = 16;
+
+// ------------------------------------------------------------ plan types
+
+/// Where a slot's value lives at run time (resolved at plan time).
+#[derive(Clone, Copy, Debug)]
+enum ValSrc {
+    /// Pooled buffer in the computation's cached state.
+    Buf(usize),
+    /// Plan-owned literal (constants and folded iotas).
+    Const(usize),
+    /// Caller argument `k` (borrowed, never copied).
+    Param(usize),
+    /// Element `j` of tuple argument `k`.
+    ParamPart(usize, usize),
+    /// Per-run owned literal (a `while` result).
+    Lit(usize),
+    /// Element `j` of per-run literal `li`.
+    LitPart(usize, usize),
+    /// Tuple assembled on demand from the instruction's operands.
+    Tuple,
+    /// Dead code or a fused non-root member: never materialized.
+    Dead,
+}
+
+/// Canonical data source of a slot with aliases (reshape /
+/// gte-of-tuple) resolved away.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CSrc {
+    /// Produced by instruction `s` (a real producer, never an alias).
+    Slot(usize),
+    Param(usize),
+    ParamPart(usize, usize),
+    /// Element `j` of the `while` at slot `w`.
+    WhilePart(usize, usize),
+}
+
+/// Slab element type of a fused member.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SDt {
+    F32,
+    U32,
+    Pred,
+}
+
+fn to_sdt(dt: Dt) -> Option<SDt> {
+    match dt {
+        Dt::F32 => Some(SDt::F32),
+        Dt::U32 => Some(SDt::U32),
+        Dt::Pred => Some(SDt::Pred),
+        Dt::S32 => None,
+    }
+}
+
+/// A fused operand: an earlier member's slab or an external input.
+#[derive(Clone, Copy, Debug)]
+enum FRef {
+    Slab(usize),
+    Ext(usize),
+}
+
+/// External input of a fused group.
+#[derive(Clone, Copy, Debug)]
+struct ExtIn {
+    src: ValSrc,
+    /// numel == 1: read once and splat.
+    scalar: bool,
+}
+
+/// One fused member's operation over a block.
+#[derive(Clone, Copy, Debug)]
+enum FOp {
+    Bin(BinOp, FRef, FRef),
+    Un(UnOp, FRef),
+    Cmp(Cmp, SDt, FRef, FRef),
+    Sel(FRef, FRef, FRef),
+    Clamp(FRef, FRef, FRef),
+    Cvt(Dt, FRef),
+    Splat(FRef),
+}
+
+#[derive(Clone, Debug)]
+struct FMember {
+    op: FOp,
+    sdt: SDt,
+}
+
+/// A fused elementwise group: executed as one blocked loop at the
+/// program position of its root (the single member with external
+/// consumers).
+#[derive(Clone, Debug)]
+struct Group {
+    root: usize,
+    numel: usize,
+    /// Ascending instruction order (operands precede consumers); the
+    /// root is the last member.
+    members: Vec<FMember>,
+    ext: Vec<ExtIn>,
+}
+
+/// One executable step of a computation's program.
+#[derive(Clone, Copy, Debug)]
+enum Step {
+    /// Run instruction `i` into its planned buffer (or run its `while`).
+    Prim(usize),
+    /// Run fused group `g`.
+    Fused(usize),
+}
+
+/// Compiled program of one computation.
+struct CompPlan {
+    steps: Vec<Step>,
+    src: Vec<ValSrc>,
+    consts: Vec<Literal>,
+    groups: Vec<Group>,
+    buf_dt: Vec<Dt>,
+    buf_cap: Vec<usize>,
+    n_lits: usize,
+    n_params: usize,
+    root: usize,
+    max_members: usize,
+}
+
+// --------------------------------------------------------- runtime state
+
+/// Typed pooled storage for one planned buffer.
+enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Pred(Vec<bool>),
+}
+
+impl Default for Buf {
+    fn default() -> Self {
+        Buf::F32(Vec::new())
+    }
+}
+
+impl Buf {
+    fn with_capacity(dt: Dt, cap: usize) -> Buf {
+        match dt {
+            Dt::F32 => Buf::F32(Vec::with_capacity(cap)),
+            Dt::S32 => Buf::I32(Vec::with_capacity(cap)),
+            Dt::U32 => Buf::U32(Vec::with_capacity(cap)),
+            Dt::Pred => Buf::Pred(Vec::with_capacity(cap)),
+        }
+    }
+
+    fn f32_mut(&mut self) -> Result<&mut Vec<f32>, XlaError> {
+        match self {
+            Buf::F32(v) => Ok(v),
+            _ => Err(err("internal: buffer dtype mismatch (f32)")),
+        }
+    }
+
+    fn i32_mut(&mut self) -> Result<&mut Vec<i32>, XlaError> {
+        match self {
+            Buf::I32(v) => Ok(v),
+            _ => Err(err("internal: buffer dtype mismatch (i32)")),
+        }
+    }
+
+    fn u32_mut(&mut self) -> Result<&mut Vec<u32>, XlaError> {
+        match self {
+            Buf::U32(v) => Ok(v),
+            _ => Err(err("internal: buffer dtype mismatch (u32)")),
+        }
+    }
+
+    fn pred_mut(&mut self) -> Result<&mut Vec<bool>, XlaError> {
+        match self {
+            Buf::Pred(v) => Ok(v),
+            _ => Err(err("internal: buffer dtype mismatch (pred)")),
+        }
+    }
+
+    fn view(&self) -> Ref<'_> {
+        match self {
+            Buf::F32(v) => Ref::F32(v),
+            Buf::I32(v) => Ref::I32(v),
+            Buf::U32(v) => Ref::U32(v),
+            Buf::Pred(v) => Ref::Pred(v),
+        }
+    }
+}
+
+/// Cached per-computation run state: the pooled buffers plus the fused
+/// slabs, reused across `execute` calls.
+struct CompState {
+    bufs: Vec<Buf>,
+    fslab: Vec<f32>,
+    uslab: Vec<u32>,
+    pslab: Vec<bool>,
+}
+
+impl CompState {
+    fn new(cp: &CompPlan) -> CompState {
+        CompState {
+            bufs: cp
+                .buf_dt
+                .iter()
+                .zip(&cp.buf_cap)
+                .map(|(&dt, &cap)| Buf::with_capacity(dt, cap))
+                .collect(),
+            fslab: vec![0.0; cp.max_members * BLOCK],
+            uslab: vec![0; cp.max_members * BLOCK],
+            pslab: vec![false; cp.max_members * BLOCK],
+        }
+    }
+}
+
+/// Borrowed typed view of a resolved value.
+#[derive(Clone, Copy)]
+enum Ref<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    U32(&'a [u32]),
+    Pred(&'a [bool]),
+}
+
+impl<'a> Ref<'a> {
+    fn f32(self) -> Result<&'a [f32], XlaError> {
+        match self {
+            Ref::F32(s) => Ok(s),
+            _ => Err(err("expected f32 operand")),
+        }
+    }
+
+    fn pred(self) -> Result<&'a [bool], XlaError> {
+        match self {
+            Ref::Pred(s) => Ok(s),
+            _ => Err(err("expected pred operand")),
+        }
+    }
+}
+
+fn data_ref(d: &Data) -> Result<Ref<'_>, XlaError> {
+    match d {
+        Data::F32(v) => Ok(Ref::F32(v)),
+        Data::I32(v) => Ok(Ref::I32(v)),
+        Data::U32(v) => Ok(Ref::U32(v)),
+        Data::Pred(v) => Ok(Ref::Pred(v)),
+        Data::Tuple(_) => Err(err("expected array value, got tuple")),
+    }
+}
+
+fn resolve_src<'a>(
+    cp: &'a CompPlan,
+    st: &'a CompState,
+    lits: &'a [Option<Literal>],
+    args: &[&'a Literal],
+    src: ValSrc,
+) -> Result<Ref<'a>, XlaError> {
+    match src {
+        ValSrc::Buf(b) => Ok(st.bufs[b].view()),
+        ValSrc::Const(c) => data_ref(&cp.consts[c].data),
+        ValSrc::Param(k) => data_ref(&args[k].data),
+        ValSrc::ParamPart(k, j) => match &args[k].data {
+            Data::Tuple(parts) => data_ref(&parts[j].data),
+            _ => Err(err("internal: tuple argument expected")),
+        },
+        ValSrc::Lit(li) => match &lits[li] {
+            Some(l) => data_ref(&l.data),
+            None => Err(err("internal: while result not yet computed")),
+        },
+        ValSrc::LitPart(li, j) => match &lits[li] {
+            Some(l) => match &l.data {
+                Data::Tuple(parts) => data_ref(&parts[j].data),
+                _ => Err(err("internal: tuple while result expected")),
+            },
+            None => Err(err("internal: while result not yet computed")),
+        },
+        ValSrc::Tuple => Err(err("internal: tuple value read as array")),
+        ValSrc::Dead => Err(err("internal: dead slot read")),
+    }
+}
+
+fn resolve<'a>(
+    cp: &'a CompPlan,
+    st: &'a CompState,
+    lits: &'a [Option<Literal>],
+    args: &[&'a Literal],
+    slot: usize,
+) -> Result<Ref<'a>, XlaError> {
+    resolve_src(cp, st, lits, args, cp.src[slot])
+}
+
+// ------------------------------------------------------------- the plan
+
+/// A compiled, reusable execution plan for an [`HloModule`].
+///
+/// Build once with [`Plan::new`] (the `compile` step of the
+/// `runtime::xla` backend), then call [`Plan::execute`] per step — the
+/// instruction program, fusion groups and buffer assignment are
+/// computed once, and the output buffers persist across calls.
+///
+/// Not `Sync`: a `Plan` is confined to one thread (the `dot` kernel
+/// spawns scoped workers internally).
+pub struct Plan {
+    module: Rc<HloModule>,
+    comps: Vec<CompPlan>,
+    states: Vec<RefCell<CompState>>,
+    threads: Cell<usize>,
+}
+
+impl Plan {
+    /// Compile a parsed module into a plan. Shape or dtype
+    /// inconsistencies that the reference walker would only hit at run
+    /// time surface here, at compile time.
+    pub fn new(module: Rc<HloModule>) -> Result<Plan, XlaError> {
+        let mut comps = Vec::with_capacity(module.computations.len());
+        for ci in 0..module.computations.len() {
+            comps.push(
+                plan_comp(&module, ci)
+                    .map_err(|e| err(format!("{}: {e:?}", module.computations[ci].name)))?,
+            );
+        }
+        let states = comps.iter().map(|cp| RefCell::new(CompState::new(cp))).collect();
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Ok(Plan {
+            module,
+            comps,
+            states,
+            threads: Cell::new(threads),
+        })
+    }
+
+    /// Override the `dot` worker-thread budget (default: the machine's
+    /// available parallelism). `1` forces the serial path; results are
+    /// bit-identical for every setting.
+    pub fn set_threads(&self, n: usize) {
+        self.threads.set(n.max(1));
+    }
+
+    /// Validate `args` against the entry parameters and run the planned
+    /// program. Bit-identical to [`interp::execute_ref`] on the same
+    /// module and arguments.
+    pub fn execute(&self, args: Vec<Literal>) -> Result<Literal, XlaError> {
+        let entry = self.module.entry;
+        validate_args(&self.module.computations[entry], &args)?;
+        let refs: Vec<&Literal> = args.iter().collect();
+        self.run(entry, &refs)
+    }
+
+    /// Run computation `ci` with borrowed arguments.
+    fn run(&self, ci: usize, args: &[&Literal]) -> Result<Literal, XlaError> {
+        let cp = &self.comps[ci];
+        let comp = &self.module.computations[ci];
+        if args.len() != cp.n_params {
+            return Err(err(format!(
+                "{}: expected {} arguments, got {}",
+                comp.name,
+                cp.n_params,
+                args.len()
+            )));
+        }
+        let mut st = self.states[ci]
+            .try_borrow_mut()
+            .map_err(|_| err(format!("internal: computation {} re-entered", comp.name)))?;
+        let mut lits: Vec<Option<Literal>> = (0..cp.n_lits).map(|_| None).collect();
+        for step in &cp.steps {
+            match *step {
+                Step::Prim(i) => self.exec_prim(ci, cp, comp, &mut st, &mut lits, args, i)?,
+                Step::Fused(g) => exec_fused(cp, &mut st, &lits, args, &cp.groups[g])?,
+            }
+        }
+        materialize(cp, comp, &st, &lits, args, cp.root)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_prim(
+        &self,
+        ci: usize,
+        cp: &CompPlan,
+        comp: &Computation,
+        st: &mut CompState,
+        lits: &mut [Option<Literal>],
+        args: &[&Literal],
+        i: usize,
+    ) -> Result<(), XlaError> {
+        if let Op::While { cond, body } = &comp.instrs[i].op {
+            let li = match cp.src[i] {
+                ValSrc::Lit(li) => li,
+                _ => return Err(err("internal: while step without literal slot")),
+            };
+            let mut state = materialize(cp, comp, st, lits, args, comp.instrs[i].operands[0])?;
+            let mut fuel = 100_000_000u64;
+            loop {
+                let c = self.run(*cond, &[&state])?;
+                let go = match &c.data {
+                    Data::Pred(v) => v.first().copied().unwrap_or(false),
+                    _ => return Err(err("while: condition must return pred")),
+                };
+                if !go {
+                    break;
+                }
+                state = self.run(*body, &[&state])?;
+                fuel = fuel
+                    .checked_sub(1)
+                    .ok_or_else(|| err("while: iteration limit exceeded"))?;
+            }
+            lits[li] = Some(state);
+            return Ok(());
+        }
+        let b = match cp.src[i] {
+            ValSrc::Buf(b) => b,
+            _ => return Err(err("internal: prim step without buffer")),
+        };
+        let mut out = std::mem::take(&mut st.bufs[b]);
+        let r = self.prim_into(ci, cp, comp, st, lits, args, i, &mut out);
+        st.bufs[b] = out;
+        r
+    }
+
+    /// Execute one primitive instruction into `out`. `st` is only read
+    /// here — `out` is the (taken) output buffer.
+    #[allow(clippy::too_many_arguments)]
+    fn prim_into(
+        &self,
+        _ci: usize,
+        cp: &CompPlan,
+        comp: &Computation,
+        st: &CompState,
+        lits: &[Option<Literal>],
+        args: &[&Literal],
+        i: usize,
+        out: &mut Buf,
+    ) -> Result<(), XlaError> {
+        let instr = &comp.instrs[i];
+        let ops = &instr.operands;
+        let sh = |o: usize| -> &Shape { &comp.instrs[o].shape };
+        let val = |o: usize| resolve(cp, st, lits, args, o);
+        match &instr.op {
+            Op::Bin(bop) => {
+                let (a, b) = (val(ops[0])?, val(ops[1])?);
+                match (a, b) {
+                    (Ref::F32(x), Ref::F32(y)) => {
+                        let o = out.f32_mut()?;
+                        o.clear();
+                        o.extend(x.iter().zip(y).map(|(&p, &q)| bin_f32_s(*bop, p, q)));
+                    }
+                    (Ref::U32(x), Ref::U32(y)) => {
+                        let o = out.u32_mut()?;
+                        o.clear();
+                        o.extend(x.iter().zip(y).map(|(&p, &q)| bin_u32_s(*bop, p, q)));
+                    }
+                    (Ref::I32(x), Ref::I32(y)) => {
+                        let o = out.i32_mut()?;
+                        o.clear();
+                        o.extend(x.iter().zip(y).map(|(&p, &q)| bin_i32_s(*bop, p, q)));
+                    }
+                    (Ref::Pred(x), Ref::Pred(y)) => {
+                        let o = out.pred_mut()?;
+                        o.clear();
+                        o.extend(x.iter().zip(y).map(|(&p, &q)| bin_pred_s(*bop, p, q)));
+                    }
+                    _ => return Err(err("binary op element type mismatch")),
+                }
+            }
+            Op::Un(uop) => match val(ops[0])? {
+                Ref::F32(x) => {
+                    let o = out.f32_mut()?;
+                    o.clear();
+                    o.extend(x.iter().map(|&v| un_f32_s(*uop, v)));
+                }
+                Ref::Pred(x) => {
+                    let o = out.pred_mut()?;
+                    o.clear();
+                    o.extend(x.iter().map(|&b| !b));
+                }
+                Ref::U32(x) => {
+                    let o = out.u32_mut()?;
+                    o.clear();
+                    o.extend(x.iter().map(|&v| !v));
+                }
+                Ref::I32(x) => {
+                    let o = out.i32_mut()?;
+                    o.clear();
+                    match uop {
+                        UnOp::Neg => o.extend(x.iter().map(|&v| v.wrapping_neg())),
+                        UnOp::Abs => o.extend(x.iter().map(|&v| v.wrapping_abs())),
+                        _ => return Err(err("unsupported unary op on s32")),
+                    }
+                }
+            },
+            Op::Compare(dir) => {
+                let (a, b) = (val(ops[0])?, val(ops[1])?);
+                let o = out.pred_mut()?;
+                o.clear();
+                match (a, b) {
+                    (Ref::F32(x), Ref::F32(y)) => {
+                        o.extend(x.iter().zip(y).map(|(p, q)| cmp_s(*dir, p, q)));
+                    }
+                    (Ref::I32(x), Ref::I32(y)) => {
+                        o.extend(x.iter().zip(y).map(|(p, q)| cmp_s(*dir, p, q)));
+                    }
+                    (Ref::U32(x), Ref::U32(y)) => {
+                        o.extend(x.iter().zip(y).map(|(p, q)| cmp_s(*dir, p, q)));
+                    }
+                    _ => return Err(err("compare element type mismatch")),
+                }
+            }
+            Op::Select => {
+                let p = val(ops[0])?.pred()?;
+                let (t, f) = (val(ops[1])?, val(ops[2])?);
+                let pick = |j: usize| if p.len() == 1 { p[0] } else { p[j] };
+                match (t, f) {
+                    (Ref::F32(a), Ref::F32(b)) => {
+                        let o = out.f32_mut()?;
+                        o.clear();
+                        o.extend((0..a.len()).map(|j| if pick(j) { a[j] } else { b[j] }));
+                    }
+                    (Ref::U32(a), Ref::U32(b)) => {
+                        let o = out.u32_mut()?;
+                        o.clear();
+                        o.extend((0..a.len()).map(|j| if pick(j) { a[j] } else { b[j] }));
+                    }
+                    _ => return Err(err("select: unsupported element types")),
+                }
+            }
+            Op::Clamp => {
+                let lo = val(ops[0])?.f32()?;
+                let x = val(ops[1])?.f32()?;
+                let hi = val(ops[2])?.f32()?;
+                let o = out.f32_mut()?;
+                o.clear();
+                o.extend((0..x.len()).map(|j| {
+                    let l = if lo.len() == 1 { lo[0] } else { lo[j] };
+                    let h = if hi.len() == 1 { hi[0] } else { hi[j] };
+                    x[j].clamp(l, h)
+                }));
+            }
+            Op::Convert => {
+                let a = val(ops[0])?;
+                macro_rules! cvt {
+                    ($dst:expr, $map:expr) => {{
+                        let d = $dst;
+                        d.clear();
+                        match a {
+                            Ref::F32(s) => d.extend(s.iter().map(|&v| $map(v))),
+                            Ref::I32(s) => d.extend(s.iter().map(|&v| $map(v as f32))),
+                            Ref::U32(s) => d.extend(s.iter().map(|&v| $map(v as f32))),
+                            Ref::Pred(s) => {
+                                d.extend(s.iter().map(|&b| $map(if b { 1.0f32 } else { 0.0 })))
+                            }
+                        }
+                    }};
+                }
+                match instr.shape.dt()? {
+                    Dt::F32 => cvt!(out.f32_mut()?, |v: f32| v),
+                    Dt::S32 => cvt!(out.i32_mut()?, f32_to_i32_xla),
+                    Dt::U32 => cvt!(out.u32_mut()?, f32_to_u32_xla),
+                    Dt::Pred => cvt!(out.pred_mut()?, |v: f32| v != 0.0),
+                }
+            }
+            Op::Broadcast { dims } => {
+                let sdims = sh(ops[0]).dims()?;
+                let out_dims = instr.shape.dims()?;
+                let sstr = strides_of(sdims);
+                let mut steps = [0usize; MAX_RANK];
+                for (pos, &od) in dims.iter().enumerate() {
+                    steps[od] = sstr[pos];
+                }
+                gather_any(val(ops[0])?, out, out_dims, 0, &steps[..out_dims.len()])?;
+            }
+            Op::Transpose { perm } => {
+                let sdims = sh(ops[0]).dims()?;
+                let sstr = strides_of(sdims);
+                let out_dims = instr.shape.dims()?;
+                let mut steps = [0usize; MAX_RANK];
+                for (d, &p) in perm.iter().enumerate() {
+                    steps[d] = sstr[p];
+                }
+                gather_any(val(ops[0])?, out, out_dims, 0, &steps[..out_dims.len()])?;
+            }
+            Op::Slice { starts, strides, .. } => {
+                let sdims = sh(ops[0]).dims()?;
+                let sstr = strides_of(sdims);
+                let out_dims = instr.shape.dims()?;
+                let mut base = 0usize;
+                let mut steps = [0usize; MAX_RANK];
+                for (d, &ss) in sstr.iter().enumerate() {
+                    base += starts[d] * ss;
+                    steps[d] = strides[d] * ss;
+                }
+                gather_any(val(ops[0])?, out, out_dims, base, &steps[..out_dims.len()])?;
+            }
+            Op::Concat { dim } => {
+                let parts: Vec<Ref> = ops.iter().map(|&o| val(o)).collect::<Result<_, _>>()?;
+                let inners: Vec<usize> = ops
+                    .iter()
+                    .map(|&o| Ok(sh(o).dims()?[*dim..].iter().product()))
+                    .collect::<Result<_, XlaError>>()?;
+                let outer: usize = sh(ops[0]).dims()?[..*dim].iter().product();
+                macro_rules! cc {
+                    ($arm:ident, $get:expr) => {{
+                        let slices: Vec<_> = parts
+                            .iter()
+                            .map($get)
+                            .collect::<Result<Vec<_>, XlaError>>()?;
+                        let o = $arm;
+                        o.clear();
+                        for ou in 0..outer {
+                            for (s, &inner) in slices.iter().zip(&inners) {
+                                o.extend_from_slice(&s[ou * inner..(ou + 1) * inner]);
+                            }
+                        }
+                    }};
+                }
+                match parts[0] {
+                    Ref::F32(_) => cc!(out.f32_mut()?, |r| match r {
+                        Ref::F32(s) => Ok(*s),
+                        _ => Err(err("concatenate element type mismatch")),
+                    }),
+                    Ref::I32(_) => cc!(out.i32_mut()?, |r| match r {
+                        Ref::I32(s) => Ok(*s),
+                        _ => Err(err("concatenate element type mismatch")),
+                    }),
+                    Ref::U32(_) => cc!(out.u32_mut()?, |r| match r {
+                        Ref::U32(s) => Ok(*s),
+                        _ => Err(err("concatenate element type mismatch")),
+                    }),
+                    Ref::Pred(_) => cc!(out.pred_mut()?, |r| match r {
+                        Ref::Pred(s) => Ok(*s),
+                        _ => Err(err("concatenate element type mismatch")),
+                    }),
+                }
+            }
+            Op::Pad { low, interior, .. } => {
+                let sdims = sh(ops[0]).dims()?;
+                let out_dims = instr.shape.dims()?;
+                match (val(ops[0])?, val(ops[1])?) {
+                    (Ref::F32(s), Ref::F32(p)) => {
+                        pad_into(s, p[0], sdims, out_dims, low, interior, out.f32_mut()?)?;
+                    }
+                    (Ref::I32(s), Ref::I32(p)) => {
+                        pad_into(s, p[0], sdims, out_dims, low, interior, out.i32_mut()?)?;
+                    }
+                    (Ref::U32(s), Ref::U32(p)) => {
+                        pad_into(s, p[0], sdims, out_dims, low, interior, out.u32_mut()?)?;
+                    }
+                    _ => return Err(err("pad element type mismatch")),
+                }
+            }
+            Op::Dot { lc, rc } => {
+                let d = dot_dims(sh(ops[0]).dims()?, sh(ops[1]).dims()?, *lc, *rc)?;
+                let lv = val(ops[0])?.f32()?;
+                let rv = val(ops[1])?.f32()?;
+                let o = out.f32_mut()?;
+                o.clear();
+                o.resize(d.m * d.n, 0.0);
+                let work = d.m * d.k * d.n;
+                let w = if work >= DOT_PAR_MIN_FLOPS && d.n > 0 {
+                    self.threads
+                        .get()
+                        .min(DOT_MAX_WORKERS)
+                        .min(d.m)
+                        .min((work / DOT_PAR_MIN_FLOPS).max(1))
+                } else {
+                    1
+                };
+                if w <= 1 {
+                    dot_rows(lv, rv, &d, 0, o);
+                } else {
+                    let rows_per = d.m.div_ceil(w);
+                    let chunk = rows_per * d.n;
+                    std::thread::scope(|s| {
+                        for (c, och) in o.chunks_mut(chunk).enumerate() {
+                            let dd = d;
+                            s.spawn(move || dot_rows(lv, rv, &dd, c * rows_per, och));
+                        }
+                    });
+                }
+            }
+            Op::Reduce { dims, comp: rcomp } => {
+                let a = val(ops[0])?.f32()?;
+                let iv = val(ops[1])?.f32()?;
+                let sdims = sh(ops[0]).dims()?;
+                let monoid = reduce_monoid(&self.module.computations[*rcomp]);
+                let o = out.f32_mut()?;
+                reduce_f32(a, iv[0], sdims, dims, monoid, o, |acc, x| {
+                    let r = self.run(*rcomp, &[&scalar_literal_f32(acc), &scalar_literal_f32(x)])?;
+                    Ok(interp::f32s(&r)?[0])
+                })?;
+            }
+            Op::Iota { .. }
+            | Op::Parameter(_)
+            | Op::Constant(_)
+            | Op::Reshape
+            | Op::Gte { .. }
+            | Op::Tuple
+            | Op::While { .. } => {
+                return Err(err("internal: non-primitive op reached prim_into"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Materialize a slot into an owned [`Literal`] (the root of a run and
+/// `while` loop states).
+fn materialize(
+    cp: &CompPlan,
+    comp: &Computation,
+    st: &CompState,
+    lits: &[Option<Literal>],
+    args: &[&Literal],
+    slot: usize,
+) -> Result<Literal, XlaError> {
+    match cp.src[slot] {
+        ValSrc::Tuple => {
+            let parts: Vec<Literal> = comp.instrs[slot]
+                .operands
+                .iter()
+                .map(|&o| materialize(cp, comp, st, lits, args, o))
+                .collect::<Result<_, _>>()?;
+            Ok(Literal {
+                dims: vec![parts.len() as i64],
+                data: Data::Tuple(parts),
+            })
+        }
+        ValSrc::Lit(li) => lits[li]
+            .clone()
+            .ok_or_else(|| err("internal: while result not yet computed")),
+        ValSrc::Param(k) if matches!(args[k].data, Data::Tuple(_)) => Ok((*args[k]).clone()),
+        ValSrc::Dead => Err(err("internal: dead slot materialized")),
+        src => {
+            let dims: Vec<i64> = comp.instrs[slot]
+                .shape
+                .dims()?
+                .iter()
+                .map(|&d| d as i64)
+                .collect();
+            let data = match resolve_src(cp, st, lits, args, src)? {
+                Ref::F32(s) => Data::F32(s.to_vec()),
+                Ref::I32(s) => Data::I32(s.to_vec()),
+                Ref::U32(s) => Data::U32(s.to_vec()),
+                Ref::Pred(s) => Data::Pred(s.to_vec()),
+            };
+            Ok(Literal { data, dims })
+        }
+    }
+}
+
+// ------------------------------------------------------ gather / pad kernels
+
+/// Row-major strided gather: `out[idx] = src[base + sum(idx[d] *
+/// steps[d])]` over `out_dims`, with contiguous (`step == 1`) and
+/// splat (`step == 0`) fast paths on the innermost dim. Pure data
+/// movement — bit-identical to the reference odometer by construction.
+fn gather<T: Copy>(
+    src: &[T],
+    out: &mut Vec<T>,
+    out_dims: &[usize],
+    base: usize,
+    steps: &[usize],
+) -> Result<(), XlaError> {
+    if out_dims.len() > MAX_RANK {
+        return Err(err("gather: rank too large"));
+    }
+    let n: usize = out_dims.iter().product();
+    out.clear();
+    out.reserve(n);
+    if n == 0 {
+        return Ok(());
+    }
+    if out_dims.is_empty() {
+        out.push(src[base]);
+        return Ok(());
+    }
+    let last = out_dims.len() - 1;
+    let ld = out_dims[last];
+    let ls = steps[last];
+    let outer: usize = out_dims[..last].iter().product();
+    let mut idx = [0usize; MAX_RANK];
+    for _ in 0..outer {
+        let mut off = base;
+        for d in 0..last {
+            off += idx[d] * steps[d];
+        }
+        if ls == 1 {
+            out.extend_from_slice(&src[off..off + ld]);
+        } else if ls == 0 {
+            let v = src[off];
+            out.extend(std::iter::repeat_n(v, ld));
+        } else {
+            let mut o = off;
+            for _ in 0..ld {
+                out.push(src[o]);
+                o += ls;
+            }
+        }
+        odo_next(&mut idx[..last], &out_dims[..last]);
+    }
+    Ok(())
+}
+
+fn gather_any(
+    src: Ref<'_>,
+    out: &mut Buf,
+    out_dims: &[usize],
+    base: usize,
+    steps: &[usize],
+) -> Result<(), XlaError> {
+    match src {
+        Ref::F32(s) => gather(s, out.f32_mut()?, out_dims, base, steps),
+        Ref::I32(s) => gather(s, out.i32_mut()?, out_dims, base, steps),
+        Ref::U32(s) => gather(s, out.u32_mut()?, out_dims, base, steps),
+        Ref::Pred(s) => gather(s, out.pred_mut()?, out_dims, base, steps),
+    }
+}
+
+/// Scatter `src` into a pad-value-filled output, mapping source index
+/// `idx[d]` to output coordinate `low[d] + idx[d] * (interior[d] + 1)`
+/// and skipping out-of-bounds coordinates — the same mapping as the
+/// reference `eval_pad`, with a contiguous row fast path.
+fn pad_into<T: Copy>(
+    src: &[T],
+    padv: T,
+    sdims: &[usize],
+    out_dims: &[usize],
+    low: &[i64],
+    interior: &[usize],
+    out: &mut Vec<T>,
+) -> Result<(), XlaError> {
+    if sdims.len() > MAX_RANK {
+        return Err(err("pad: rank too large"));
+    }
+    let n: usize = out_dims.iter().product();
+    out.clear();
+    out.resize(n, padv);
+    if src.is_empty() {
+        return Ok(());
+    }
+    if sdims.is_empty() {
+        out[0] = src[0];
+        return Ok(());
+    }
+    let ostr = strides_of(out_dims);
+    let last = sdims.len() - 1;
+    let sd_last = sdims[last];
+    let il = interior[last];
+    let outer: usize = sdims[..last].iter().product();
+    let row_contig = il == 0
+        && low[last] >= 0
+        && sd_last > 0
+        && low[last] as usize + sd_last <= out_dims[last];
+    let mut idx = [0usize; MAX_RANK];
+    for row in 0..outer {
+        let mut off: i64 = 0;
+        let mut ok = true;
+        for d in 0..last {
+            let o = low[d] + (idx[d] * (interior[d] + 1)) as i64;
+            if o < 0 || o as usize >= out_dims[d] {
+                ok = false;
+                break;
+            }
+            off += o * ostr[d] as i64;
+        }
+        if ok {
+            let srow = &src[row * sd_last..(row + 1) * sd_last];
+            if row_contig {
+                let s = off as usize + low[last] as usize;
+                out[s..s + sd_last].copy_from_slice(srow);
+            } else {
+                for (j, &v) in srow.iter().enumerate() {
+                    let o = low[last] + (j * (il + 1)) as i64;
+                    if o >= 0 && (o as usize) < out_dims[last] {
+                        out[(off + o) as usize] = v;
+                    }
+                }
+            }
+        }
+        odo_next(&mut idx[..last], &sdims[..last]);
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ fused loops
+
+/// Per-block accessor for one fused f32 input.
+#[derive(Clone, Copy)]
+enum In<'a, T: Copy> {
+    S(&'a [T]),
+    K(T),
+}
+
+impl<'a, T: Copy> In<'a, T> {
+    #[inline]
+    fn at(self, t: usize) -> T {
+        match self {
+            In::S(s) => s[t],
+            In::K(v) => v,
+        }
+    }
+}
+
+struct FusedCtx<'a> {
+    exts: &'a [Ref<'a>],
+    ext_meta: &'a [ExtIn],
+    start: usize,
+    len: usize,
+}
+
+impl<'a> FusedCtx<'a> {
+    fn in_f32<'b>(&'b self, pre: &'b [f32], r: FRef) -> Result<In<'b, f32>, XlaError>
+    where
+        'a: 'b,
+    {
+        match r {
+            FRef::Slab(j) => Ok(In::S(&pre[j * BLOCK..j * BLOCK + self.len])),
+            FRef::Ext(e) => match (self.exts[e], self.ext_meta[e].scalar) {
+                (Ref::F32(s), true) => Ok(In::K(s[0])),
+                (Ref::F32(s), false) => Ok(In::S(&s[self.start..self.start + self.len])),
+                _ => Err(err("internal: fused f32 input type mismatch")),
+            },
+        }
+    }
+
+    fn in_u32<'b>(&'b self, pre: &'b [u32], r: FRef) -> Result<In<'b, u32>, XlaError>
+    where
+        'a: 'b,
+    {
+        match r {
+            FRef::Slab(j) => Ok(In::S(&pre[j * BLOCK..j * BLOCK + self.len])),
+            FRef::Ext(e) => match (self.exts[e], self.ext_meta[e].scalar) {
+                (Ref::U32(s), true) => Ok(In::K(s[0])),
+                (Ref::U32(s), false) => Ok(In::S(&s[self.start..self.start + self.len])),
+                _ => Err(err("internal: fused u32 input type mismatch")),
+            },
+        }
+    }
+
+    fn in_i32<'b>(&'b self, r: FRef) -> Result<In<'b, i32>, XlaError>
+    where
+        'a: 'b,
+    {
+        match r {
+            FRef::Slab(_) => Err(err("internal: fused i32 slab input")),
+            FRef::Ext(e) => match (self.exts[e], self.ext_meta[e].scalar) {
+                (Ref::I32(s), true) => Ok(In::K(s[0])),
+                (Ref::I32(s), false) => Ok(In::S(&s[self.start..self.start + self.len])),
+                _ => Err(err("internal: fused i32 input type mismatch")),
+            },
+        }
+    }
+
+    fn in_pred<'b>(&'b self, pre: &'b [bool], r: FRef) -> Result<In<'b, bool>, XlaError>
+    where
+        'a: 'b,
+    {
+        match r {
+            FRef::Slab(j) => Ok(In::S(&pre[j * BLOCK..j * BLOCK + self.len])),
+            FRef::Ext(e) => match (self.exts[e], self.ext_meta[e].scalar) {
+                (Ref::Pred(s), true) => Ok(In::K(s[0])),
+                (Ref::Pred(s), false) => Ok(In::S(&s[self.start..self.start + self.len])),
+                _ => Err(err("internal: fused pred input type mismatch")),
+            },
+        }
+    }
+}
+
+fn exec_fused(
+    cp: &CompPlan,
+    st: &mut CompState,
+    lits: &[Option<Literal>],
+    args: &[&Literal],
+    g: &Group,
+) -> Result<(), XlaError> {
+    let b = match cp.src[g.root] {
+        ValSrc::Buf(b) => b,
+        _ => return Err(err("internal: fused root without buffer")),
+    };
+    let mut out = std::mem::take(&mut st.bufs[b]);
+    let mut fsl = std::mem::take(&mut st.fslab);
+    let mut usl = std::mem::take(&mut st.uslab);
+    let mut psl = std::mem::take(&mut st.pslab);
+    let r = fused_body(cp, st, lits, args, g, &mut out, &mut fsl, &mut usl, &mut psl);
+    st.fslab = fsl;
+    st.uslab = usl;
+    st.pslab = psl;
+    st.bufs[b] = out;
+    r
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fused_body(
+    cp: &CompPlan,
+    st: &CompState,
+    lits: &[Option<Literal>],
+    args: &[&Literal],
+    g: &Group,
+    out: &mut Buf,
+    fsl: &mut [f32],
+    usl: &mut [u32],
+    psl: &mut [bool],
+) -> Result<(), XlaError> {
+    let n = g.numel;
+    let nm = g.members.len();
+    let exts: Vec<Ref> = g
+        .ext
+        .iter()
+        .map(|e| resolve_src(cp, st, lits, args, e.src))
+        .collect::<Result<_, _>>()?;
+    let root_sdt = g.members[nm - 1].sdt;
+    match root_sdt {
+        SDt::F32 => {
+            let o = out.f32_mut()?;
+            o.clear();
+            o.reserve(n);
+        }
+        SDt::U32 => {
+            let o = out.u32_mut()?;
+            o.clear();
+            o.reserve(n);
+        }
+        SDt::Pred => {
+            let o = out.pred_mut()?;
+            o.clear();
+            o.reserve(n);
+        }
+    }
+    let mut start = 0usize;
+    while start < n {
+        let len = (n - start).min(BLOCK);
+        let ctx = FusedCtx { exts: &exts, ext_meta: &g.ext, start, len };
+        for (mi, m) in g.members.iter().enumerate() {
+            match m.sdt {
+                SDt::F32 => {
+                    let (pre, cur) = fsl.split_at_mut(mi * BLOCK);
+                    let dst = &mut cur[..len];
+                    eval_member_f32(&ctx, m, dst, pre, usl, psl)?;
+                }
+                SDt::U32 => {
+                    let (pre, cur) = usl.split_at_mut(mi * BLOCK);
+                    let dst = &mut cur[..len];
+                    eval_member_u32(&ctx, m, dst, pre, fsl, psl)?;
+                }
+                SDt::Pred => {
+                    let (pre, cur) = psl.split_at_mut(mi * BLOCK);
+                    let dst = &mut cur[..len];
+                    eval_member_pred(&ctx, m, dst, pre, fsl, usl)?;
+                }
+            }
+        }
+        let rbase = (nm - 1) * BLOCK;
+        match root_sdt {
+            SDt::F32 => out.f32_mut()?.extend_from_slice(&fsl[rbase..rbase + len]),
+            SDt::U32 => out.u32_mut()?.extend_from_slice(&usl[rbase..rbase + len]),
+            SDt::Pred => out.pred_mut()?.extend_from_slice(&psl[rbase..rbase + len]),
+        }
+        start += len;
+    }
+    Ok(())
+}
+
+/// Evaluate one f32-valued member over a block. `pre` holds the f32
+/// slabs of earlier members (fused operands always precede their
+/// consumers), `usl`/`psl` are the full u32/pred slabs for cross-type
+/// inputs (convert, select).
+fn eval_member_f32(
+    ctx: &FusedCtx<'_>,
+    m: &FMember,
+    dst: &mut [f32],
+    pre: &[f32],
+    usl: &[u32],
+    psl: &[bool],
+) -> Result<(), XlaError> {
+    let len = ctx.len;
+    match m.op {
+        FOp::Bin(bop, a, b) => {
+            let av = ctx.in_f32(pre, a)?;
+            let bv = ctx.in_f32(pre, b)?;
+            macro_rules! arm {
+                ($($v:ident),*) => {
+                    match bop {
+                        $(BinOp::$v => {
+                            for t in 0..len {
+                                dst[t] = bin_f32_s(BinOp::$v, av.at(t), bv.at(t));
+                            }
+                        })*
+                        _ => return Err(err("internal: fused f32 bin op")),
+                    }
+                };
+            }
+            arm!(Add, Sub, Mul, Div, Max, Min, Pow);
+        }
+        FOp::Un(uop, a) => {
+            let av = ctx.in_f32(pre, a)?;
+            macro_rules! arm {
+                ($($v:ident),*) => {
+                    match uop {
+                        $(UnOp::$v => {
+                            for t in 0..len {
+                                dst[t] = un_f32_s(UnOp::$v, av.at(t));
+                            }
+                        })*
+                        UnOp::Not => return Err(err("internal: fused not on f32")),
+                    }
+                };
+            }
+            arm!(
+                Neg, Exp, Log, Sqrt, Rsqrt, Abs, Sign, Floor, Ceil, RoundTiesEven, Tanh,
+                Logistic, Sin, Cos
+            );
+        }
+        FOp::Sel(p, a, b) => {
+            let pv = ctx.in_pred(psl, p)?;
+            let av = ctx.in_f32(pre, a)?;
+            let bv = ctx.in_f32(pre, b)?;
+            for t in 0..len {
+                dst[t] = if pv.at(t) { av.at(t) } else { bv.at(t) };
+            }
+        }
+        FOp::Clamp(lo, x, hi) => {
+            let lv = ctx.in_f32(pre, lo)?;
+            let xv = ctx.in_f32(pre, x)?;
+            let hv = ctx.in_f32(pre, hi)?;
+            for t in 0..len {
+                dst[t] = xv.at(t).clamp(lv.at(t), hv.at(t));
+            }
+        }
+        FOp::Cvt(src_dt, a) => match src_dt {
+            Dt::F32 => {
+                let av = ctx.in_f32(pre, a)?;
+                for t in 0..len {
+                    dst[t] = av.at(t);
+                }
+            }
+            Dt::I32 => {
+                let av = ctx.in_i32(a)?;
+                for t in 0..len {
+                    dst[t] = av.at(t) as f32;
+                }
+            }
+            Dt::U32 => {
+                let av = ctx.in_u32(usl, a)?;
+                for t in 0..len {
+                    dst[t] = av.at(t) as f32;
+                }
+            }
+            Dt::Pred => {
+                let av = ctx.in_pred(psl, a)?;
+                for t in 0..len {
+                    dst[t] = if av.at(t) { 1.0 } else { 0.0 };
+                }
+            }
+        },
+        FOp::Splat(a) => {
+            let v = ctx.in_f32(pre, a)?.at(0);
+            dst.fill(v);
+        }
+        FOp::Cmp(..) => return Err(err("internal: compare is pred-valued")),
+    }
+    Ok(())
+}
+
+/// Evaluate one u32-valued member over a block (see
+/// [`eval_member_f32`]).
+fn eval_member_u32(
+    ctx: &FusedCtx<'_>,
+    m: &FMember,
+    dst: &mut [u32],
+    pre: &[u32],
+    fsl: &[f32],
+    psl: &[bool],
+) -> Result<(), XlaError> {
+    let len = ctx.len;
+    match m.op {
+        FOp::Bin(bop, a, b) => {
+            let av = ctx.in_u32(pre, a)?;
+            let bv = ctx.in_u32(pre, b)?;
+            macro_rules! arm {
+                ($($v:ident),*) => {
+                    match bop {
+                        $(BinOp::$v => {
+                            for t in 0..len {
+                                dst[t] = bin_u32_s(BinOp::$v, av.at(t), bv.at(t));
+                            }
+                        })*
+                        BinOp::Pow => return Err(err("internal: fused pow on u32")),
+                    }
+                };
+            }
+            arm!(Add, Sub, Mul, Div, Max, Min, And, Or, Xor, Shl, Shr);
+        }
+        FOp::Un(uop, a) => {
+            if uop != UnOp::Not {
+                return Err(err("internal: fused unary on u32"));
+            }
+            let av = ctx.in_u32(pre, a)?;
+            for t in 0..len {
+                dst[t] = !av.at(t);
+            }
+        }
+        FOp::Sel(p, a, b) => {
+            let pv = ctx.in_pred(psl, p)?;
+            let av = ctx.in_u32(pre, a)?;
+            let bv = ctx.in_u32(pre, b)?;
+            for t in 0..len {
+                dst[t] = if pv.at(t) { av.at(t) } else { bv.at(t) };
+            }
+        }
+        FOp::Cvt(src_dt, a) => match src_dt {
+            Dt::F32 => {
+                let av = ctx.in_f32(fsl, a)?;
+                for t in 0..len {
+                    dst[t] = f32_to_u32_xla(av.at(t));
+                }
+            }
+            Dt::I32 => {
+                let av = ctx.in_i32(a)?;
+                for t in 0..len {
+                    dst[t] = f32_to_u32_xla(av.at(t) as f32);
+                }
+            }
+            Dt::U32 => {
+                let av = ctx.in_u32(pre, a)?;
+                for t in 0..len {
+                    dst[t] = f32_to_u32_xla(av.at(t) as f32);
+                }
+            }
+            Dt::Pred => {
+                let av = ctx.in_pred(psl, a)?;
+                for t in 0..len {
+                    dst[t] = f32_to_u32_xla(if av.at(t) { 1.0 } else { 0.0 });
+                }
+            }
+        },
+        FOp::Splat(a) => {
+            let v = ctx.in_u32(pre, a)?.at(0);
+            dst.fill(v);
+        }
+        FOp::Clamp(..) | FOp::Cmp(..) => {
+            return Err(err("internal: fused op not u32-valued"));
+        }
+    }
+    Ok(())
+}
+
+/// Evaluate one pred-valued member over a block (see
+/// [`eval_member_f32`]).
+fn eval_member_pred(
+    ctx: &FusedCtx<'_>,
+    m: &FMember,
+    dst: &mut [bool],
+    pre: &[bool],
+    fsl: &[f32],
+    usl: &[u32],
+) -> Result<(), XlaError> {
+    let len = ctx.len;
+    match m.op {
+        FOp::Cmp(dir, sdt, a, b) => match sdt {
+            SDt::F32 => {
+                let av = ctx.in_f32(fsl, a)?;
+                let bv = ctx.in_f32(fsl, b)?;
+                for t in 0..len {
+                    dst[t] = cmp_s(dir, &av.at(t), &bv.at(t));
+                }
+            }
+            SDt::U32 => {
+                let av = ctx.in_u32(usl, a)?;
+                let bv = ctx.in_u32(usl, b)?;
+                for t in 0..len {
+                    dst[t] = cmp_s(dir, &av.at(t), &bv.at(t));
+                }
+            }
+            SDt::Pred => return Err(err("internal: fused compare on pred")),
+        },
+        FOp::Bin(bop, a, b) => {
+            let av = ctx.in_pred(pre, a)?;
+            let bv = ctx.in_pred(pre, b)?;
+            for t in 0..len {
+                dst[t] = bin_pred_s(bop, av.at(t), bv.at(t));
+            }
+        }
+        FOp::Un(uop, a) => {
+            if uop != UnOp::Not {
+                return Err(err("internal: fused unary on pred"));
+            }
+            let av = ctx.in_pred(pre, a)?;
+            for t in 0..len {
+                dst[t] = !av.at(t);
+            }
+        }
+        FOp::Cvt(src_dt, a) => match src_dt {
+            Dt::F32 => {
+                let av = ctx.in_f32(fsl, a)?;
+                for t in 0..len {
+                    dst[t] = av.at(t) != 0.0;
+                }
+            }
+            Dt::I32 => {
+                let av = ctx.in_i32(a)?;
+                for t in 0..len {
+                    dst[t] = av.at(t) as f32 != 0.0;
+                }
+            }
+            Dt::U32 => {
+                let av = ctx.in_u32(usl, a)?;
+                for t in 0..len {
+                    dst[t] = av.at(t) as f32 != 0.0;
+                }
+            }
+            Dt::Pred => {
+                let av = ctx.in_pred(pre, a)?;
+                for t in 0..len {
+                    let v = if av.at(t) { 1.0f32 } else { 0.0 };
+                    dst[t] = v != 0.0;
+                }
+            }
+        },
+        FOp::Splat(a) => {
+            let v = ctx.in_pred(pre, a)?.at(0);
+            dst.fill(v);
+        }
+        FOp::Sel(..) | FOp::Clamp(..) => {
+            return Err(err("internal: fused op not pred-valued"));
+        }
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- planner
+
+/// Consumer index used for the virtual "materialize the root" step.
+const VIRT: usize = usize::MAX;
+
+/// Shape of a canonical data source.
+fn csrc_shape<'a>(comp: &'a Computation, c: CSrc) -> Result<&'a Shape, XlaError> {
+    match c {
+        CSrc::Slot(s) => Ok(&comp.instrs[s].shape),
+        CSrc::Param(k) => Ok(&comp.instrs[comp.params[k]].shape),
+        CSrc::ParamPart(k, j) => match &comp.instrs[comp.params[k]].shape {
+            Shape::Tuple(parts) => parts
+                .get(j)
+                .ok_or_else(|| err("get-tuple-element: index out of range")),
+            _ => Err(err("get-tuple-element on non-tuple parameter")),
+        },
+        CSrc::WhilePart(w, j) => match &comp.instrs[w].shape {
+            Shape::Tuple(parts) => parts
+                .get(j)
+                .ok_or_else(|| err("get-tuple-element: index out of range")),
+            _ => Err(err("get-tuple-element on non-tuple while")),
+        },
+    }
+}
+
+/// The canonical sources an instruction reads at run time (tuple
+/// operands of `while` expand recursively to their element sources).
+fn read_csrcs(comp: &Computation, canon: &[CSrc], i: usize) -> Vec<CSrc> {
+    let mut out = Vec::new();
+    match &comp.instrs[i].op {
+        Op::Parameter(_)
+        | Op::Constant(_)
+        | Op::Iota { .. }
+        | Op::Reshape
+        | Op::Gte { .. }
+        | Op::Tuple => {}
+        Op::While { .. } => expand_parts(comp, canon, comp.instrs[i].operands[0], &mut out),
+        _ => {
+            for &o in &comp.instrs[i].operands {
+                out.push(canon[o]);
+            }
+        }
+    }
+    out
+}
+
+/// Expand a (possibly tuple-typed) slot into the canonical sources its
+/// materialization reads.
+fn expand_parts(comp: &Computation, canon: &[CSrc], o: usize, out: &mut Vec<CSrc>) {
+    match canon[o] {
+        CSrc::Slot(s) if matches!(comp.instrs[s].op, Op::Tuple) => {
+            for &e in &comp.instrs[s].operands {
+                expand_parts(comp, canon, e, out);
+            }
+        }
+        c => out.push(c),
+    }
+}
+
+/// Whether instruction `i` may join a fused group, and its slab dtype.
+fn fusible(comp: &Computation, i: usize) -> Option<SDt> {
+    let instr = &comp.instrs[i];
+    let dt = instr.shape.dt().ok()?;
+    let sdt = to_sdt(dt)?;
+    let op_dims = |k: usize| comp.instrs[instr.operands[k]].shape.numel();
+    let n = instr.shape.numel();
+    match &instr.op {
+        Op::Bin(b) => {
+            let ok = match sdt {
+                SDt::F32 => matches!(
+                    b,
+                    BinOp::Add
+                        | BinOp::Sub
+                        | BinOp::Mul
+                        | BinOp::Div
+                        | BinOp::Max
+                        | BinOp::Min
+                        | BinOp::Pow
+                ),
+                SDt::U32 => !matches!(b, BinOp::Pow),
+                SDt::Pred => true,
+            };
+            ok.then_some(sdt)
+        }
+        Op::Un(u) => {
+            let ok = match sdt {
+                SDt::F32 => *u != UnOp::Not,
+                SDt::U32 | SDt::Pred => *u == UnOp::Not,
+            };
+            ok.then_some(sdt)
+        }
+        Op::Compare(_) => {
+            let odt = comp.instrs[instr.operands[0]].shape.dt().ok()?;
+            matches!(odt, Dt::F32 | Dt::U32).then_some(SDt::Pred)
+        }
+        Op::Select => {
+            let pn = op_dims(0);
+            (matches!(sdt, SDt::F32 | SDt::U32) && (pn == 1 || pn == n)).then_some(sdt)
+        }
+        Op::Clamp => {
+            let (l, h) = (op_dims(0), op_dims(2));
+            (sdt == SDt::F32 && (l == 1 || l == n) && (h == 1 || h == n)).then_some(sdt)
+        }
+        Op::Convert => {
+            let odt = comp.instrs[instr.operands[0]].shape.dt().ok()?;
+            matches!(odt, Dt::F32 | Dt::S32 | Dt::U32 | Dt::Pred).then_some(sdt)
+        }
+        Op::Broadcast { .. } => (op_dims(0) == 1).then_some(sdt),
+        _ => None,
+    }
+}
+
+/// Validate one live instruction at plan time, mirroring every check
+/// the reference walker performs at run time (plus static-shape
+/// consistency the walker derives on the fly).
+fn validate_instr(module: &HloModule, comp: &Computation, i: usize) -> Result<(), XlaError> {
+    let instr = &comp.instrs[i];
+    let ops = &instr.operands;
+    let osh = |k: usize| -> &Shape { &comp.instrs[ops[k]].shape };
+    let adims = |k: usize| -> Result<&[usize], XlaError> { osh(k).dims() };
+    // the gather/pad kernels use fixed-size index registers: bound the
+    // rank at compile time instead of panicking at run time
+    let rank_ok = |sh: &Shape| match sh {
+        Shape::Array { dims, .. } => dims.len() <= MAX_RANK,
+        Shape::Tuple(_) => true,
+    };
+    if !rank_ok(&instr.shape) || !ops.iter().all(|&o| rank_ok(&comp.instrs[o].shape)) {
+        return Err(err(format!(
+            "rank > {MAX_RANK} unsupported by the planned engine"
+        )));
+    }
+    match &instr.op {
+        Op::Bin(b) => {
+            if adims(0)? != adims(1)? {
+                return Err(err(format!(
+                    "binary op shape mismatch: {:?} vs {:?}",
+                    adims(0)?,
+                    adims(1)?
+                )));
+            }
+            let dt = osh(0).dt()?;
+            if osh(1).dt()? != dt {
+                return Err(err("binary op element type mismatch"));
+            }
+            if instr.shape.dims()? != adims(0)? || instr.shape.dt()? != dt {
+                return Err(err("binary op: declared shape mismatch"));
+            }
+            match dt {
+                Dt::F32 => {
+                    if !matches!(
+                        b,
+                        BinOp::Add
+                            | BinOp::Sub
+                            | BinOp::Mul
+                            | BinOp::Div
+                            | BinOp::Max
+                            | BinOp::Min
+                            | BinOp::Pow
+                    ) {
+                        return Err(err("bitwise op on f32"));
+                    }
+                }
+                Dt::U32 => {
+                    if matches!(b, BinOp::Pow) {
+                        return Err(err("power on u32 unsupported"));
+                    }
+                }
+                Dt::S32 => {
+                    if !matches!(
+                        b,
+                        BinOp::Add
+                            | BinOp::Sub
+                            | BinOp::Mul
+                            | BinOp::Max
+                            | BinOp::Min
+                            | BinOp::And
+                            | BinOp::Or
+                            | BinOp::Xor
+                    ) {
+                        return Err(err("unsupported s32 binary op"));
+                    }
+                }
+                Dt::Pred => {}
+            }
+        }
+        Op::Un(u) => {
+            let dt = osh(0).dt()?;
+            let ok = match dt {
+                Dt::F32 => *u != UnOp::Not,
+                Dt::Pred => *u == UnOp::Not,
+                Dt::U32 => *u == UnOp::Not,
+                Dt::S32 => matches!(u, UnOp::Neg | UnOp::Abs),
+            };
+            if !ok {
+                return Err(err(format!("unsupported unary op on {dt:?}")));
+            }
+            if instr.shape.dims()? != adims(0)? || instr.shape.dt()? != dt {
+                return Err(err("unary op: declared shape mismatch"));
+            }
+        }
+        Op::Compare(_) => {
+            if adims(0)? != adims(1)? {
+                return Err(err("compare shape mismatch"));
+            }
+            let dt = osh(0).dt()?;
+            if osh(1).dt()? != dt || dt == Dt::Pred {
+                return Err(err("compare element type mismatch"));
+            }
+            if instr.shape.dims()? != adims(0)? || instr.shape.dt()? != Dt::Pred {
+                return Err(err("compare: declared shape mismatch"));
+            }
+        }
+        Op::Select => {
+            if osh(0).dt()? != Dt::Pred {
+                return Err(err("select: predicate must be pred"));
+            }
+            if adims(1)? != adims(2)? {
+                return Err(err("select: branch shape mismatch"));
+            }
+            let n = osh(1).numel();
+            let pn = osh(0).numel();
+            if pn != 1 && pn != n {
+                return Err(err("select: predicate must be scalar or same-shape"));
+            }
+            if !matches!(osh(1).dt()?, Dt::F32 | Dt::U32) || osh(2).dt()? != osh(1).dt()? {
+                return Err(err("select: unsupported element types"));
+            }
+            if instr.shape.dims()? != adims(1)? || instr.shape.dt()? != osh(1).dt()? {
+                return Err(err("select: declared shape mismatch"));
+            }
+        }
+        Op::Clamp => {
+            for k in [0, 1, 2] {
+                if osh(k).dt()? != Dt::F32 {
+                    return Err(err("clamp: operands must be f32"));
+                }
+            }
+            let n = osh(1).numel();
+            for k in [0, 2] {
+                let b = osh(k).numel();
+                if b != 1 && b != n {
+                    return Err(err("clamp: bound must be scalar or same-shape"));
+                }
+            }
+            if instr.shape.dims()? != adims(1)? {
+                return Err(err("clamp: declared shape mismatch"));
+            }
+        }
+        Op::Convert => {
+            osh(0).dt()?;
+            instr.shape.dt()?;
+            if instr.shape.dims()? != adims(0)? {
+                return Err(err("convert: declared shape mismatch"));
+            }
+        }
+        Op::Broadcast { dims } => {
+            let sdims = adims(0)?;
+            let out_dims = instr.shape.dims()?;
+            if sdims.len() != dims.len() {
+                return Err(err("broadcast: dimensions length mismatch"));
+            }
+            for (pos, &od) in dims.iter().enumerate() {
+                if od >= out_dims.len() || out_dims[od] != sdims[pos] {
+                    return Err(err("broadcast: dimension mapping mismatch"));
+                }
+            }
+            if osh(0).dt()? != instr.shape.dt()? {
+                return Err(err("broadcast: element type mismatch"));
+            }
+        }
+        Op::Reshape => {
+            if osh(0).numel() != instr.shape.numel() {
+                return Err(err("reshape: element count mismatch"));
+            }
+        }
+        Op::Transpose { perm } => {
+            let sdims = adims(0)?;
+            if perm.len() != sdims.len() {
+                return Err(err("transpose: permutation rank mismatch"));
+            }
+            let derived: Vec<usize> = perm.iter().map(|&p| sdims[p]).collect();
+            if derived != instr.shape.dims()? {
+                return Err(err("transpose: declared shape mismatch"));
+            }
+        }
+        Op::Slice { starts, limits, strides } => {
+            let sdims = adims(0)?;
+            if starts.len() != sdims.len() {
+                return Err(err("slice: rank mismatch"));
+            }
+            let mut derived = Vec::with_capacity(sdims.len());
+            for (d, &sd) in sdims.iter().enumerate() {
+                if limits[d] > sd || starts[d] > limits[d] || strides[d] == 0 {
+                    return Err(err("slice: bounds out of range"));
+                }
+                derived.push((limits[d] - starts[d]).div_ceil(strides[d]));
+            }
+            if derived != instr.shape.dims()? {
+                return Err(err("slice: declared shape mismatch"));
+            }
+        }
+        Op::Concat { dim } => {
+            let first = adims(0)?;
+            if *dim >= first.len() {
+                return Err(err("concatenate: dimension out of range"));
+            }
+            let dt = osh(0).dt()?;
+            let mut total = 0usize;
+            for k in 0..ops.len() {
+                let d = adims(k)?;
+                if d.len() != first.len() {
+                    return Err(err("concatenate: rank mismatch"));
+                }
+                for (dd, (&a, &b)) in d.iter().zip(first).enumerate() {
+                    if dd != *dim && a != b {
+                        return Err(err(format!("concatenate: dim {dd} mismatch ({a} vs {b})")));
+                    }
+                }
+                if osh(k).dt()? != dt {
+                    return Err(err("concatenate element type mismatch"));
+                }
+                total += d[*dim];
+            }
+            let mut derived = first.to_vec();
+            derived[*dim] = total;
+            if derived != instr.shape.dims()? {
+                return Err(err("concatenate: declared shape mismatch"));
+            }
+        }
+        Op::Pad { low, high, interior } => {
+            let sdims = adims(0)?;
+            if low.len() != sdims.len() {
+                return Err(err("pad: rank mismatch"));
+            }
+            if osh(0).dt()? == Dt::Pred {
+                return Err(err("pad element type mismatch"));
+            }
+            if osh(1).dt()? != osh(0).dt()? || osh(1).numel() == 0 {
+                return Err(err("pad element type mismatch"));
+            }
+            let mut derived = Vec::with_capacity(sdims.len());
+            for (d, &sd) in sdims.iter().enumerate() {
+                let span = sd as i64 + (sd.saturating_sub(1) * interior[d]) as i64;
+                let od = span + low[d] + high[d];
+                if od < 0 {
+                    return Err(err("pad: negative output dimension"));
+                }
+                derived.push(od as usize);
+            }
+            if derived != instr.shape.dims()? {
+                return Err(err("pad: declared shape mismatch"));
+            }
+        }
+        Op::Dot { lc, rc } => {
+            let d = dot_dims(adims(0)?, adims(1)?, *lc, *rc)?;
+            if osh(0).dt()? != Dt::F32 || osh(1).dt()? != Dt::F32 {
+                return Err(err("dot: operands must be f32"));
+            }
+            if instr.shape.dims()? != [d.m, d.n] {
+                return Err(err("dot: declared shape mismatch"));
+            }
+        }
+        Op::Reduce { dims, comp: rc } => {
+            if osh(0).dt()? != Dt::F32 || osh(1).dt()? != Dt::F32 {
+                return Err(err("reduce: only f32 operands supported"));
+            }
+            if osh(1).numel() != 1 {
+                return Err(err("reduce: init value must be scalar"));
+            }
+            if module.computations[*rc].params.len() != 2 {
+                return Err(err("reduce: combiner must take two parameters"));
+            }
+            let sdims = adims(0)?;
+            let derived: Vec<usize> = (0..sdims.len())
+                .filter(|d| !dims.contains(d))
+                .map(|d| sdims[d])
+                .collect();
+            if derived != instr.shape.dims()? {
+                return Err(err("reduce: declared shape mismatch"));
+            }
+        }
+        Op::While { cond, body } => {
+            if module.computations[*cond].params.len() != 1
+                || module.computations[*body].params.len() != 1
+            {
+                return Err(err("while: condition and body must take one parameter"));
+            }
+        }
+        Op::Iota { .. } => {
+            if instr.shape.dt()? == Dt::Pred {
+                return Err(err("iota on pred"));
+            }
+        }
+        Op::Parameter(_) | Op::Constant(_) | Op::Gte { .. } | Op::Tuple => {}
+    }
+    Ok(())
+}
+
+/// Compile one computation into its instruction program: canonical
+/// sources, transitive liveness, fusion groups, plan-time constants
+/// (including folded iotas), and the liveness-based static buffer
+/// assignment.
+fn plan_comp(module: &HloModule, ci: usize) -> Result<CompPlan, XlaError> {
+    let comp = &module.computations[ci];
+    let instrs = &comp.instrs;
+    let n = instrs.len();
+
+    // pass A: canonical data sources (reshape / gte-of-tuple aliases)
+    let mut canon: Vec<CSrc> = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = match &instrs[i].op {
+            Op::Parameter(k) => CSrc::Param(*k),
+            Op::Reshape => canon[instrs[i].operands[0]],
+            Op::Gte { index } => {
+                let o = instrs[i].operands[0];
+                // bounds-check against the operand's tuple shape
+                csrc_shape(comp, canon[o]).and_then(|sh| match sh {
+                    Shape::Tuple(parts) if *index < parts.len() => Ok(()),
+                    Shape::Tuple(_) => Err(err("get-tuple-element: index out of range")),
+                    _ => Err(err("get-tuple-element on non-tuple")),
+                })?;
+                match canon[o] {
+                    CSrc::Slot(s) => match &instrs[s].op {
+                        Op::Tuple => canon[instrs[s].operands[*index]],
+                        Op::While { .. } => CSrc::WhilePart(s, *index),
+                        _ => return Err(err("get-tuple-element on non-tuple")),
+                    },
+                    CSrc::Param(k) => CSrc::ParamPart(k, *index),
+                    _ => {
+                        return Err(err("get-tuple-element: nested tuple parts unsupported"));
+                    }
+                }
+            }
+            _ => CSrc::Slot(i),
+        };
+        canon.push(c);
+    }
+
+    // pass B: transitive liveness from the root
+    let mut root_reads = Vec::new();
+    expand_parts(comp, &canon, comp.root, &mut root_reads);
+    let mut live = vec![false; n];
+    let mut stack: Vec<usize> = Vec::new();
+    let seed = |c: CSrc, stack: &mut Vec<usize>| match c {
+        CSrc::Slot(s) | CSrc::WhilePart(s, _) => stack.push(s),
+        _ => {}
+    };
+    for &c in &root_reads {
+        seed(c, &mut stack);
+    }
+    seed(canon[comp.root], &mut stack);
+    while let Some(s) = stack.pop() {
+        if live[s] {
+            continue;
+        }
+        live[s] = true;
+        for c in read_csrcs(comp, &canon, s) {
+            seed(c, &mut stack);
+        }
+    }
+
+    // pass C: uses per producing slot, from *live* consumers only
+    // (consumer instr indices + VIRT for the root materialization) —
+    // dead consumers must neither block fusion nor pin buffers
+    let mut uses: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mark = |c: CSrc, at: usize, uses: &mut Vec<Vec<usize>>| match c {
+        CSrc::Slot(s) | CSrc::WhilePart(s, _) => uses[s].push(at),
+        _ => {}
+    };
+    for i in 0..n {
+        if !live[i] {
+            continue;
+        }
+        for c in read_csrcs(comp, &canon, i) {
+            mark(c, i, &mut uses);
+        }
+    }
+    for &c in &root_reads {
+        mark(c, VIRT, &mut uses);
+    }
+
+    // pass D: fused elementwise groups (greedy, largest root first)
+    let mut member_of: Vec<Option<usize>> = vec![None; n];
+    let mut group_slots: Vec<Vec<usize>> = Vec::new();
+    for i in (0..n).rev() {
+        if !live[i] || member_of[i].is_some() || !matches!(canon[i], CSrc::Slot(s) if s == i) {
+            continue;
+        }
+        if fusible(comp, i).is_none() {
+            continue;
+        }
+        let numel = instrs[i].shape.numel();
+        let gid = group_slots.len();
+        member_of[i] = Some(gid);
+        let mut members = vec![i];
+        let mut work = vec![i];
+        while let Some(m) = work.pop() {
+            for &o in &instrs[m].operands {
+                let CSrc::Slot(s) = canon[o] else { continue };
+                if member_of[s].is_some() || !live[s] {
+                    continue;
+                }
+                if fusible(comp, s).is_none() || instrs[s].shape.numel() != numel {
+                    continue;
+                }
+                if !uses[s]
+                    .iter()
+                    .all(|&c| c != VIRT && member_of[c] == Some(gid))
+                {
+                    continue;
+                }
+                member_of[s] = Some(gid);
+                members.push(s);
+                work.push(s);
+            }
+        }
+        if members.len() < 2 {
+            member_of[i] = None;
+            continue;
+        }
+        members.sort_unstable();
+        group_slots.push(members);
+    }
+    let group_root: Vec<usize> = group_slots.iter().map(|m| *m.last().unwrap()).collect();
+
+    // last use per producing slot, in *step* positions (a use inside a
+    // fused group pins the value until the group's root executes)
+    let step_of = |c: usize| -> usize {
+        if c == VIRT {
+            VIRT
+        } else {
+            member_of[c].map(|g| group_root[g]).unwrap_or(c)
+        }
+    };
+    let mut free_at: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for s in 0..n {
+        if !live[s] || uses[s].is_empty() {
+            continue;
+        }
+        let last = uses[s].iter().map(|&c| step_of(c)).max().unwrap();
+        if last != VIRT {
+            free_at[last].push(s);
+        }
+    }
+
+    // pass E: steps, constants, buffer assignment
+    let mut src = vec![ValSrc::Dead; n];
+    let mut consts: Vec<Literal> = Vec::new();
+    let mut steps: Vec<Step> = Vec::new();
+    let mut buf_dt: Vec<Dt> = Vec::new();
+    let mut buf_cap: Vec<usize> = Vec::new();
+    let mut free: BTreeMap<u8, Vec<usize>> = BTreeMap::new();
+    let mut lit_of: BTreeMap<usize, usize> = BTreeMap::new();
+    let dt_key = |dt: Dt| -> u8 {
+        match dt {
+            Dt::F32 => 0,
+            Dt::S32 => 1,
+            Dt::U32 => 2,
+            Dt::Pred => 3,
+        }
+    };
+    let csrc_to_valsrc = |c: CSrc, src: &[ValSrc], lit_of: &BTreeMap<usize, usize>| match c {
+        CSrc::Slot(s) => src[s],
+        CSrc::Param(k) => ValSrc::Param(k),
+        CSrc::ParamPart(k, j) => ValSrc::ParamPart(k, j),
+        CSrc::WhilePart(w, j) => lit_of
+            .get(&w)
+            .map(|&li| ValSrc::LitPart(li, j))
+            .unwrap_or(ValSrc::Dead),
+    };
+    let mut groups: Vec<Group> = Vec::new();
+    let mut group_built: Vec<bool> = vec![false; group_slots.len()];
+    for i in 0..n {
+        match &instrs[i].op {
+            Op::Parameter(k) => {
+                src[i] = ValSrc::Param(*k);
+                continue;
+            }
+            Op::Constant(l) => {
+                // dead constants stay in the Rc'd module only — don't
+                // duplicate their data into the plan
+                if live[i] {
+                    src[i] = ValSrc::Const(consts.len());
+                    consts.push(l.clone());
+                }
+                continue;
+            }
+            Op::Reshape | Op::Gte { .. } => {
+                validate_instr(module, comp, i)?;
+                src[i] = csrc_to_valsrc(canon[i], &src, &lit_of);
+                continue;
+            }
+            Op::Tuple => {
+                src[i] = ValSrc::Tuple;
+                continue;
+            }
+            _ => {}
+        }
+        // validate dead instructions too: the reference walker evaluates
+        // every instruction, so a plan must reject at least what the
+        // walker rejects ("stricter than the walker", DESIGN.md)
+        validate_instr(module, comp, i)?;
+        if !live[i] {
+            continue;
+        }
+        match &instrs[i].op {
+            Op::Iota { dim } => {
+                let dims = instrs[i].shape.dims()?.to_vec();
+                let vals = iota_values(&dims, *dim);
+                let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                let lit = match instrs[i].shape.dt()? {
+                    Dt::U32 => Literal {
+                        data: Data::U32(vals.iter().map(|&v| v as u32).collect()),
+                        dims: dims_i,
+                    },
+                    Dt::S32 => Literal {
+                        data: Data::I32(vals.iter().map(|&v| v as i32).collect()),
+                        dims: dims_i,
+                    },
+                    Dt::F32 => Literal {
+                        data: Data::F32(vals.iter().map(|&v| v as f32).collect()),
+                        dims: dims_i,
+                    },
+                    Dt::Pred => return Err(err("iota on pred")),
+                };
+                src[i] = ValSrc::Const(consts.len());
+                consts.push(lit);
+                continue;
+            }
+            Op::While { .. } => {
+                let li = lit_of.len();
+                lit_of.insert(i, li);
+                src[i] = ValSrc::Lit(li);
+                steps.push(Step::Prim(i));
+            }
+            _ => {
+                let is_member = member_of[i].is_some();
+                let is_root = is_member && group_root[member_of[i].unwrap()] == i;
+                if is_member && !is_root {
+                    // slab-only member: no buffer, no step
+                    continue;
+                }
+                let dt = instrs[i].shape.dt()?;
+                let numel = instrs[i].shape.numel();
+                let b = match free.entry(dt_key(dt)).or_default().pop() {
+                    Some(b) => {
+                        buf_cap[b] = buf_cap[b].max(numel);
+                        b
+                    }
+                    None => {
+                        buf_dt.push(dt);
+                        buf_cap.push(numel);
+                        buf_dt.len() - 1
+                    }
+                };
+                src[i] = ValSrc::Buf(b);
+                if is_root {
+                    let gid = member_of[i].unwrap();
+                    group_built[gid] = true;
+                    groups.push(build_group(
+                        comp,
+                        &canon,
+                        &member_of,
+                        gid,
+                        &group_slots[gid],
+                        &src,
+                        &lit_of,
+                    )?);
+                    steps.push(Step::Fused(groups.len() - 1));
+                } else {
+                    steps.push(Step::Prim(i));
+                }
+            }
+        }
+        // release buffers whose last (step-level) use is this step
+        for &s in &free_at[i] {
+            if let ValSrc::Buf(b) = src[s] {
+                free.entry(dt_key(comp.instrs[s].shape.dt()?)).or_default().push(b);
+            }
+        }
+    }
+    debug_assert!(group_built.iter().all(|&b| b));
+
+    let max_members = groups.iter().map(|g| g.members.len()).max().unwrap_or(0);
+    Ok(CompPlan {
+        steps,
+        src,
+        consts,
+        groups,
+        buf_dt,
+        buf_cap,
+        n_lits: lit_of.len(),
+        n_params: comp.params.len(),
+        root: comp.root,
+        max_members,
+    })
+}
+
+/// Assemble the runtime form of one fused group: members in ascending
+/// (topological) instruction order with operand references resolved to
+/// earlier slabs or interned external inputs.
+fn build_group(
+    comp: &Computation,
+    canon: &[CSrc],
+    member_of: &[Option<usize>],
+    gid: usize,
+    slots: &[usize],
+    src: &[ValSrc],
+    lit_of: &BTreeMap<usize, usize>,
+) -> Result<Group, XlaError> {
+    let root = *slots.last().unwrap();
+    let numel = comp.instrs[root].shape.numel();
+    let midx: BTreeMap<usize, usize> = slots.iter().enumerate().map(|(k, &s)| (s, k)).collect();
+    let mut pool = ExtPool {
+        comp,
+        src,
+        lit_of,
+        ext: Vec::new(),
+        ext_src: Vec::new(),
+    };
+    let mut members = Vec::with_capacity(slots.len());
+    for &m in slots {
+        let instr = &comp.instrs[m];
+        let fref = |k: usize, pool: &mut ExtPool<'_>| -> Result<FRef, XlaError> {
+            let c = canon[instr.operands[k]];
+            if let CSrc::Slot(s) = c {
+                if member_of[s] == Some(gid) {
+                    return Ok(FRef::Slab(midx[&s]));
+                }
+            }
+            Ok(FRef::Ext(pool.intern(c)?))
+        };
+        let sdt = fusible(comp, m).ok_or_else(|| err("internal: non-fusible member"))?;
+        let op = match &instr.op {
+            Op::Bin(b) => FOp::Bin(*b, fref(0, &mut pool)?, fref(1, &mut pool)?),
+            Op::Un(u) => FOp::Un(*u, fref(0, &mut pool)?),
+            Op::Compare(d) => {
+                let odt = comp.instrs[instr.operands[0]].shape.dt()?;
+                let osdt = to_sdt(odt).ok_or_else(|| err("internal: compare operand dt"))?;
+                FOp::Cmp(*d, osdt, fref(0, &mut pool)?, fref(1, &mut pool)?)
+            }
+            Op::Select => {
+                FOp::Sel(fref(0, &mut pool)?, fref(1, &mut pool)?, fref(2, &mut pool)?)
+            }
+            Op::Clamp => {
+                FOp::Clamp(fref(0, &mut pool)?, fref(1, &mut pool)?, fref(2, &mut pool)?)
+            }
+            Op::Convert => {
+                let odt = comp.instrs[instr.operands[0]].shape.dt()?;
+                FOp::Cvt(odt, fref(0, &mut pool)?)
+            }
+            Op::Broadcast { .. } => FOp::Splat(fref(0, &mut pool)?),
+            _ => return Err(err("internal: non-fusible member op")),
+        };
+        members.push(FMember { op, sdt });
+    }
+    Ok(Group {
+        root,
+        numel,
+        members,
+        ext: pool.ext,
+    })
+}
+
+/// External-input interner of one group under construction.
+struct ExtPool<'p> {
+    comp: &'p Computation,
+    src: &'p [ValSrc],
+    lit_of: &'p BTreeMap<usize, usize>,
+    ext: Vec<ExtIn>,
+    ext_src: Vec<CSrc>,
+}
+
+impl ExtPool<'_> {
+    fn intern(&mut self, c: CSrc) -> Result<usize, XlaError> {
+        if let Some(p) = self.ext_src.iter().position(|&e| e == c) {
+            return Ok(p);
+        }
+        let sh = csrc_shape(self.comp, c)?;
+        let vs = match c {
+            CSrc::Slot(s) => self.src[s],
+            CSrc::Param(k) => ValSrc::Param(k),
+            CSrc::ParamPart(k, j) => ValSrc::ParamPart(k, j),
+            CSrc::WhilePart(w, j) => {
+                let li = self
+                    .lit_of
+                    .get(&w)
+                    .ok_or_else(|| err("internal: while literal missing"))?;
+                ValSrc::LitPart(*li, j)
+            }
+        };
+        self.ext_src.push(c);
+        self.ext.push(ExtIn { src: vs, scalar: sh.numel() == 1 });
+        Ok(self.ext.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::interp::{execute_ref, parse};
+
+    /// Bit-exact literal comparison (NaN bit patterns included).
+    fn assert_bit_eq(a: &Literal, b: &Literal, path: &str) {
+        assert_eq!(a.dims, b.dims, "{path}: dims");
+        match (&a.data, &b.data) {
+            (Data::F32(x), Data::F32(y)) => {
+                assert_eq!(x.len(), y.len(), "{path}: len");
+                for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                    assert_eq!(p.to_bits(), q.to_bits(), "{path}[{i}]: {p} vs {q}");
+                }
+            }
+            (Data::I32(x), Data::I32(y)) => assert_eq!(x, y, "{path}"),
+            (Data::U32(x), Data::U32(y)) => assert_eq!(x, y, "{path}"),
+            (Data::Pred(x), Data::Pred(y)) => assert_eq!(x, y, "{path}"),
+            (Data::Tuple(x), Data::Tuple(y)) => {
+                assert_eq!(x.len(), y.len(), "{path}: tuple len");
+                for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                    assert_bit_eq(p, q, &format!("{path}.{i}"));
+                }
+            }
+            _ => panic!("{path}: element type mismatch"),
+        }
+    }
+
+    /// Run a module on both paths and require bit equality.
+    fn run_both(text: &str, args: Vec<Literal>) -> Literal {
+        let m = parse(text).expect("parse");
+        let want = execute_ref(&m, args.clone()).expect("execute_ref");
+        let plan = Plan::new(Rc::new(m)).expect("plan");
+        let got = plan.execute(args.clone()).expect("plan execute");
+        assert_bit_eq(&got, &want, "root");
+        // second run through the cached buffers must be identical
+        let again = plan.execute(args).expect("plan re-execute");
+        assert_bit_eq(&again, &want, "root (cached rerun)");
+        got
+    }
+
+    fn f32v(n: usize, seed: u32) -> Vec<f32> {
+        // deterministic, sign-mixed, includes exact halves for rounding
+        (0..n)
+            .map(|i| {
+                let k = (i as u32).wrapping_mul(2654435761).wrapping_add(seed);
+                ((k >> 8) as f32 / 16_777_216.0 - 0.5) * 8.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_f32_chain_matches_reference() {
+        // splat const -> mul -> neg -> exp -> add chain, single consumers
+        let text = "ENTRY %main (p0: f32[300]) -> f32[300] {\n  \
+            %p0 = f32[300] parameter(0)\n  \
+            %c = f32[] constant(0.25)\n  \
+            %cb = f32[300] broadcast(%c), dimensions={}\n  \
+            %m = f32[300] multiply(%p0, %cb)\n  \
+            %n = f32[300] negate(%m)\n  \
+            %e = f32[300] exponential(%n)\n  \
+            ROOT %a = f32[300] add(%e, %p0)\n}\n";
+        let m = parse(text).unwrap();
+        let plan = Plan::new(Rc::new(m)).unwrap();
+        // the chain must actually have fused into one group
+        assert_eq!(plan.comps[plan.module.entry].groups.len(), 1);
+        assert!(plan.comps[plan.module.entry].groups[0].members.len() >= 4);
+        run_both(text, vec![Literal::vec1(&f32v(300, 3))]);
+    }
+
+    #[test]
+    fn fused_chain_with_external_consumer_stays_correct() {
+        // %m is consumed by the chain AND by the root tuple: it must be
+        // materialized (group output or unfused) and stay bit-exact
+        let text = "ENTRY %main (p0: f32[64]) -> (f32[64], f32[64]) {\n  \
+            %p0 = f32[64] parameter(0)\n  \
+            %m = f32[64] multiply(%p0, %p0)\n  \
+            %s = f32[64] sqrt(%m)\n  \
+            %t = f32[64] tanh(%s)\n  \
+            ROOT %r = (f32[64], f32[64]) tuple(%t, %m)\n}\n";
+        run_both(text, vec![Literal::vec1(&f32v(64, 9))]);
+    }
+
+    #[test]
+    fn fused_u32_hash_and_convert_matches_reference() {
+        // counter-hash RNG shape: iota ^ key -> mul -> shr -> xor ->
+        // convert to f32 -> scale -> sine (crosses u32 -> f32 slabs)
+        let text = "ENTRY %main (p0: u32[500]) -> f32[500] {\n  \
+            %p0 = u32[500] parameter(0)\n  \
+            %i = u32[500] iota(), iota_dimension=0\n  \
+            %x = u32[500] xor(%p0, %i)\n  \
+            %c = u32[] constant(2654435761)\n  \
+            %cb = u32[500] broadcast(%c), dimensions={}\n  \
+            %m = u32[500] multiply(%x, %cb)\n  \
+            %s = u32[] constant(16)\n  \
+            %sb = u32[500] broadcast(%s), dimensions={}\n  \
+            %h = u32[500] shift-right-logical(%m, %sb)\n  \
+            %x2 = u32[500] xor(%m, %h)\n  \
+            %f = f32[500] convert(%x2)\n  \
+            %k = f32[] constant(2.3283064e-10)\n  \
+            %kb = f32[500] broadcast(%k), dimensions={}\n  \
+            %u = f32[500] multiply(%f, %kb)\n  \
+            ROOT %sn = f32[500] sine(%u)\n}\n";
+        let keys: Vec<u32> = (0..500u32).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
+        run_both(text, vec![Literal::vec1(&keys)]);
+    }
+
+    #[test]
+    fn fused_compare_select_clamp_matches_reference() {
+        let text = "ENTRY %main (p0: f32[200], p1: f32[200]) -> f32[200] {\n  \
+            %p0 = f32[200] parameter(0)\n  \
+            %p1 = f32[200] parameter(1)\n  \
+            %z = f32[] constant(0)\n  \
+            %zb = f32[200] broadcast(%z), dimensions={}\n  \
+            %g = pred[200] compare(%p0, %zb), direction=GT\n  \
+            %s = f32[200] select(%g, %p0, %p1)\n  \
+            %lo = f32[] constant(-1)\n  \
+            %hi = f32[] constant(1.5)\n  \
+            ROOT %c = f32[200] clamp(%lo, %s, %hi)\n}\n";
+        run_both(
+            text,
+            vec![
+                Literal::vec1(&f32v(200, 1)),
+                Literal::vec1(&f32v(200, 2)),
+            ],
+        );
+    }
+
+    #[test]
+    fn fused_nan_semantics_match_reference() {
+        // log of negatives -> NaN; NaN through max/min/select must keep
+        // the reference's exact bit patterns
+        let text = "ENTRY %main (p0: f32[100]) -> f32[100] {\n  \
+            %p0 = f32[100] parameter(0)\n  \
+            %l = f32[100] log(%p0)\n  \
+            %z = f32[] constant(0)\n  \
+            %zb = f32[100] broadcast(%z), dimensions={}\n  \
+            %mx = f32[100] maximum(%l, %zb)\n  \
+            ROOT %mn = f32[100] minimum(%mx, %p0)\n}\n";
+        run_both(text, vec![Literal::vec1(&f32v(100, 7))]);
+    }
+
+    #[test]
+    fn dot_is_threaded_and_bit_identical_across_thread_counts() {
+        // 64x96 . 96x80 = 491520 flops > DOT_PAR_MIN_FLOPS
+        let a = Literal::vec1(&f32v(64 * 96, 11)).reshape(&[64, 96]).unwrap();
+        let b = Literal::vec1(&f32v(96 * 80, 12)).reshape(&[96, 80]).unwrap();
+        let text = "ENTRY %main (p0: f32[64,96], p1: f32[96,80]) -> f32[64,80] {\n  \
+            %p0 = f32[64,96] parameter(0)\n  \
+            %p1 = f32[96,80] parameter(1)\n  \
+            ROOT %d = f32[64,80] dot(%p0, %p1), lhs_contracting_dims={1}, \
+            rhs_contracting_dims={0}\n}\n";
+        let m = parse(text).unwrap();
+        let want = execute_ref(&m, vec![a.clone(), b.clone()]).unwrap();
+        let plan = Plan::new(Rc::new(m)).unwrap();
+        for threads in [1usize, 2, 3, 8, 64] {
+            plan.set_threads(threads);
+            let got = plan.execute(vec![a.clone(), b.clone()]).unwrap();
+            assert_bit_eq(&got, &want, &format!("threads={threads}"));
+        }
+    }
+
+    #[test]
+    fn dot_transposed_contractions_match_reference() {
+        // lhs_contracting_dims={0} exercises the strided operand path
+        let a = Literal::vec1(&f32v(12 * 5, 21)).reshape(&[12, 5]).unwrap();
+        let b = Literal::vec1(&f32v(7 * 12, 22)).reshape(&[7, 12]).unwrap();
+        let text = "ENTRY %main (p0: f32[12,5], p1: f32[7,12]) -> f32[5,7] {\n  \
+            %p0 = f32[12,5] parameter(0)\n  \
+            %p1 = f32[7,12] parameter(1)\n  \
+            ROOT %d = f32[5,7] dot(%p0, %p1), lhs_contracting_dims={0}, \
+            rhs_contracting_dims={1}\n}\n";
+        run_both(text, vec![a, b]);
+    }
+
+    #[test]
+    fn gather_ops_match_reference() {
+        let x = Literal::vec1(&f32v(6 * 8, 5)).reshape(&[6, 8]).unwrap();
+        let text = "ENTRY %main (p0: f32[6,8]) -> (f32[8,6], f32[3,3], f32[12,8], f32[9,10]) {\n  \
+            %p0 = f32[6,8] parameter(0)\n  \
+            %t = f32[8,6] transpose(%p0), dimensions={1,0}\n  \
+            %s = f32[3,3] slice(%p0), slice={[1:6:2],[0:8:3]}\n  \
+            %c = f32[12,8] concatenate(%p0, %p0), dimensions={0}\n  \
+            %z = f32[] constant(7)\n  \
+            %pd = f32[9,10] pad(%p0, %z), padding=2_1x1_1\n  \
+            ROOT %r = (f32[8,6], f32[3,3], f32[12,8], f32[9,10]) \
+            tuple(%t, %s, %c, %pd)\n}\n";
+        run_both(text, vec![x]);
+    }
+
+    #[test]
+    fn pad_negative_and_interior_matches_reference() {
+        let x = Literal::vec1(&f32v(4 * 5, 31)).reshape(&[4, 5]).unwrap();
+        let text = "ENTRY %main (p0: f32[4,5]) -> (f32[2,9], f32[7,5]) {\n  \
+            %p0 = f32[4,5] parameter(0)\n  \
+            %z = f32[] constant(-3)\n  \
+            %a = f32[2,9] pad(%p0, %z), padding=-1_-1x0_0_1\n  \
+            %b = f32[7,5] pad(%p0, %z), padding=0_0_1x0_0\n  \
+            ROOT %r = (f32[2,9], f32[7,5]) tuple(%a, %b)\n}\n";
+        run_both(text, vec![x]);
+    }
+
+    #[test]
+    fn broadcast_row_and_col_match_reference() {
+        let v = Literal::vec1(&f32v(6, 41));
+        let text = "ENTRY %main (p0: f32[6]) -> (f32[4,6], f32[6,3]) {\n  \
+            %p0 = f32[6] parameter(0)\n  \
+            %r = f32[4,6] broadcast(%p0), dimensions={1}\n  \
+            %c = f32[6,3] broadcast(%p0), dimensions={0}\n  \
+            ROOT %t = (f32[4,6], f32[6,3]) tuple(%r, %c)\n}\n";
+        run_both(text, vec![v]);
+    }
+
+    #[test]
+    fn reduce_monoids_and_generic_match_reference() {
+        let x = Literal::vec1(&f32v(5 * 7, 51)).reshape(&[5, 7]).unwrap();
+        let text = "%r_add (a: f32[], b: f32[]) -> f32[] {\n  \
+            %a = f32[] parameter(0)\n  %b = f32[] parameter(1)\n  \
+            ROOT %v = f32[] add(%a, %b)\n}\n\n\
+            %r_max (a: f32[], b: f32[]) -> f32[] {\n  \
+            %a = f32[] parameter(0)\n  %b = f32[] parameter(1)\n  \
+            ROOT %v = f32[] maximum(%a, %b)\n}\n\n\
+            %r_sub (a: f32[], b: f32[]) -> f32[] {\n  \
+            %a = f32[] parameter(0)\n  %b = f32[] parameter(1)\n  \
+            ROOT %v = f32[] subtract(%a, %b)\n}\n\n\
+            ENTRY %main (p0: f32[5,7]) -> (f32[5], f32[7], f32[5]) {\n  \
+            %p0 = f32[5,7] parameter(0)\n  \
+            %z = f32[] constant(0)\n  \
+            %lo = f32[] constant(-1e30)\n  \
+            %a = f32[5] reduce(%p0, %z), dimensions={1}, to_apply=%r_add\n  \
+            %m = f32[7] reduce(%p0, %lo), dimensions={0}, to_apply=%r_max\n  \
+            %g = f32[5] reduce(%p0, %z), dimensions={1}, to_apply=%r_sub\n  \
+            ROOT %r = (f32[5], f32[7], f32[5]) tuple(%a, %m, %g)\n}\n";
+        run_both(text, vec![x]);
+    }
+
+    #[test]
+    fn while_loop_and_gte_match_reference() {
+        // state: (counter, bound, accumulating array)
+        let text = "%cond (s: (u32[], u32[], f32[8])) -> pred[] {\n  \
+            %s = (u32[], u32[], f32[8]) parameter(0)\n  \
+            %j = u32[] get-tuple-element(%s), index=0\n  \
+            %n = u32[] get-tuple-element(%s), index=1\n  \
+            ROOT %lt = pred[] compare(%j, %n), direction=LT\n}\n\n\
+            %body (s: (u32[], u32[], f32[8])) -> (u32[], u32[], f32[8]) {\n  \
+            %s = (u32[], u32[], f32[8]) parameter(0)\n  \
+            %j = u32[] get-tuple-element(%s), index=0\n  \
+            %n = u32[] get-tuple-element(%s), index=1\n  \
+            %w = f32[8] get-tuple-element(%s), index=2\n  \
+            %one = u32[] constant(1)\n  \
+            %j2 = u32[] add(%j, %one)\n  \
+            %h = f32[] constant(1.5)\n  \
+            %hb = f32[8] broadcast(%h), dimensions={}\n  \
+            %w2 = f32[8] multiply(%w, %hb)\n  \
+            %w3 = f32[8] add(%w2, %hb)\n  \
+            ROOT %t = (u32[], u32[], f32[8]) tuple(%j2, %n, %w3)\n}\n\n\
+            ENTRY %main (p0: u32[], p1: f32[8]) -> f32[8] {\n  \
+            %p0 = u32[] parameter(0)\n  \
+            %p1 = f32[8] parameter(1)\n  \
+            %z = u32[] constant(0)\n  \
+            %init = (u32[], u32[], f32[8]) tuple(%z, %p0, %p1)\n  \
+            %w = (u32[], u32[], f32[8]) while(%init), condition=%cond, body=%body\n  \
+            ROOT %out = f32[8] get-tuple-element(%w), index=2\n}\n";
+        let n = Literal::vec1(&[5u32]).reshape(&[]).unwrap();
+        run_both(text, vec![n, Literal::vec1(&f32v(8, 61))]);
+        // zero-trip while
+        let text2 = text;
+        let n0 = Literal::vec1(&[0u32]).reshape(&[]).unwrap();
+        run_both(text2, vec![n0, Literal::vec1(&f32v(8, 62))]);
+    }
+
+    #[test]
+    fn reshape_aliases_fuse_through_and_match_reference() {
+        // reshape sits inside an elementwise chain and on a slice result
+        let x = Literal::vec1(&f32v(24, 71)).reshape(&[4, 6]).unwrap();
+        let text = "ENTRY %main (p0: f32[4,6]) -> f32[24] {\n  \
+            %p0 = f32[4,6] parameter(0)\n  \
+            %f = f32[24] reshape(%p0)\n  \
+            %n = f32[24] negate(%f)\n  \
+            %r = f32[4,6] reshape(%n)\n  \
+            %s = f32[4,6] multiply(%r, %p0)\n  \
+            ROOT %o = f32[24] reshape(%s)\n}\n";
+        run_both(text, vec![x]);
+    }
+
+    #[test]
+    fn gte_of_tuple_aliases_match_reference() {
+        let a = Literal::vec1(&f32v(10, 81));
+        let text = "ENTRY %main (p0: f32[10]) -> f32[10] {\n  \
+            %p0 = f32[10] parameter(0)\n  \
+            %n = f32[10] negate(%p0)\n  \
+            %t = (f32[10], f32[10]) tuple(%p0, %n)\n  \
+            %g = f32[10] get-tuple-element(%t), index=1\n  \
+            ROOT %a = f32[10] add(%g, %p0)\n}\n";
+        run_both(text, vec![a]);
+    }
+
+    #[test]
+    fn scalar_and_empty_shapes_match_reference() {
+        let s = Literal::vec1(&[2.5f32]).reshape(&[]).unwrap();
+        let text = "ENTRY %main (p0: f32[]) -> f32[] {\n  \
+            %p0 = f32[] parameter(0)\n  \
+            %c = f32[] constant(4)\n  \
+            %m = f32[] multiply(%p0, %c)\n  \
+            ROOT %s = f32[] sqrt(%m)\n}\n";
+        run_both(text, vec![s]);
+        let e = Literal::vec1(&[] as &[f32]);
+        let text2 = "ENTRY %main (p0: f32[0]) -> f32[0] {\n  \
+            %p0 = f32[0] parameter(0)\n  \
+            ROOT %n = f32[0] negate(%p0)\n}\n";
+        run_both(text2, vec![e]);
+    }
+
+    #[test]
+    fn iota_folds_to_constant_and_matches_reference() {
+        let text = "ENTRY %main (p0: f32[3,4]) -> (f32[3,4], f32[3,4]) {\n  \
+            %p0 = f32[3,4] parameter(0)\n  \
+            %i0 = f32[3,4] iota(), iota_dimension=0\n  \
+            %i1 = f32[3,4] iota(), iota_dimension=1\n  \
+            %a = f32[3,4] add(%i0, %p0)\n  \
+            %b = f32[3,4] multiply(%i1, %p0)\n  \
+            ROOT %t = (f32[3,4], f32[3,4]) tuple(%a, %b)\n}\n";
+        run_both(
+            text,
+            vec![Literal::vec1(&f32v(12, 91)).reshape(&[3, 4]).unwrap()],
+        );
+    }
+
+    #[test]
+    fn round_convert_sign_paths_match_reference() {
+        // stochastic-rounding shape: round/floor/sign/abs + converts
+        let text = "ENTRY %main (p0: f32[64]) -> (f32[64], s32[64], u32[64], f32[64]) {\n  \
+            %p0 = f32[64] parameter(0)\n  \
+            %r = f32[64] round-nearest-even(%p0)\n  \
+            %i = s32[64] convert(%p0)\n  \
+            %u = u32[64] convert(%p0)\n  \
+            %sg = f32[64] sign(%p0)\n  \
+            %ab = f32[64] abs(%p0)\n  \
+            %m = f32[64] multiply(%sg, %ab)\n  \
+            ROOT %t = (f32[64], s32[64], u32[64], f32[64]) tuple(%r, %i, %u, %m)\n}\n";
+        let mut v = f32v(64, 13);
+        // exact halves exercise ties-to-even on both paths
+        v[0] = 0.5;
+        v[1] = 1.5;
+        v[2] = -2.5;
+        v[3] = -0.5;
+        run_both(text, vec![Literal::vec1(&v)]);
+    }
+
+    #[test]
+    fn invalid_modules_fail_at_plan_time() {
+        // dot on u32 operands
+        let bad = parse(
+            "ENTRY %main (p0: u32[2,2]) -> u32[2,2] {\n  \
+             %p0 = u32[2,2] parameter(0)\n  \
+             ROOT %d = u32[2,2] dot(%p0, %p0), lhs_contracting_dims={1}, \
+             rhs_contracting_dims={0}\n}\n",
+        )
+        .unwrap();
+        assert!(Plan::new(Rc::new(bad)).is_err());
+        // declared shape inconsistent with operands
+        let bad2 = parse(
+            "ENTRY %main (p0: f32[4]) -> f32[5] {\n  \
+             %p0 = f32[4] parameter(0)\n  \
+             ROOT %n = f32[5] negate(%p0)\n}\n",
+        )
+        .unwrap();
+        assert!(Plan::new(Rc::new(bad2)).is_err());
+    }
+
+    #[test]
+    fn argument_validation_matches_reference_behavior() {
+        let m = parse(
+            "ENTRY %main (p0: f32[2]) -> f32[2] {\n  %p0 = f32[2] parameter(0)\n  \
+             ROOT %n = f32[2] negate(%p0)\n}\n",
+        )
+        .unwrap();
+        let plan = Plan::new(Rc::new(m)).unwrap();
+        assert!(plan.execute(vec![]).is_err());
+        assert!(plan.execute(vec![Literal::vec1(&[1.0f32, 2.0, 3.0])]).is_err());
+        assert!(plan.execute(vec![Literal::vec1(&[1u32, 2])]).is_err());
+        assert!(plan.execute(vec![Literal::vec1(&[1.0f32, -2.0])]).is_ok());
+    }
+}
+

@@ -1,29 +1,36 @@
-//! In-crate stand-in for the `xla` PJRT bindings, now backed by the
-//! pure-Rust HLO interpreter (`runtime::interp`).
+//! In-crate stand-in for the `xla` PJRT bindings, backed by the
+//! pure-Rust HLO interpreter (`runtime::interp`) and its planned
+//! execution engine (`runtime::plan`).
 //!
 //! The crate must stay dependency-free (ROADMAP: `anyhow` only), and the
 //! real `xla_extension` bindings are not installable in every build
 //! environment — so this module mirrors the exact API surface
 //! `runtime::{executor, literal}` consume, and the use sites import it
-//! as `use crate::runtime::xla;`. Unlike the original stub, the backend
-//! half is *functional*: `HloModuleProto::from_text_file` parses HLO
-//! text, `PjRtClient::compile` wraps the parsed module, and
-//! `PjRtLoadedExecutable::execute` runs it on the interpreter — so the
-//! NN-scale trainer and every artifact-gated test run end-to-end with
-//! `cargo` alone.
+//! as `use crate::runtime::xla;`. The backend half is *functional*:
+//! `HloModuleProto::from_text_file` parses HLO text,
+//! `PjRtClient::compile` builds the planned execution engine once
+//! (fused elementwise chains, threaded `dot`, cached buffers), and
+//! `PjRtLoadedExecutable::execute` runs it — so the NN-scale trainer
+//! and every artifact-gated test run end-to-end with `cargo` alone.
+//! The scalar reference walker stays reachable through
+//! [`PjRtLoadedExecutable::execute_ref_owned`] for golden and
+//! equivalence tests.
 //!
 //! Swapping in real PJRT bindings stays a drop-in change: add the
 //! `xla` crate to Cargo.toml and drop the `use crate::runtime::xla;`
 //! import at each use site (executor.rs, literal.rs) so the extern
 //! crate resolves; nothing else in the runtime knows which backend it
-//! is talking to. See DESIGN.md "HLO interpreter fallback" for the
-//! numeric-tolerance contract between the two.
+//! is talking to. See DESIGN.md "HLO interpreter fallback" and
+//! "planned interpreter execution" for the numeric contracts.
+
+#![warn(missing_docs)]
 
 use crate::runtime::interp;
+use crate::runtime::plan::Plan;
 
 /// Error type of the backend surface; rendered with `{:?}` at use sites.
 #[derive(Clone)]
-pub struct XlaError(pub String);
+pub struct XlaError(#[doc = "Backend error message."] pub String);
 
 impl std::fmt::Debug for XlaError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -62,8 +69,12 @@ pub struct Literal {
 /// Element types `Literal` can carry across the API (the three the
 /// artifacts use).
 pub trait NativeType: Sized {
+    /// Wrap a host slice into the matching [`Literal`] storage arm.
     fn wrap(v: &[Self]) -> Data;
+    /// Copy the data out if the storage arm matches this type.
     fn unwrap(d: &Data) -> Option<Vec<Self>>;
+    /// Move the data out if the storage arm matches this type.
+    fn unwrap_owned(d: Data) -> Option<Vec<Self>>;
 }
 
 macro_rules! native {
@@ -75,6 +86,12 @@ macro_rules! native {
             fn unwrap(d: &Data) -> Option<Vec<Self>> {
                 match d {
                     Data::$arm(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+            fn unwrap_owned(d: Data) -> Option<Vec<Self>> {
+                match d {
+                    Data::$arm(v) => Some(v),
                     _ => None,
                 }
             }
@@ -138,6 +155,13 @@ impl Literal {
         T::unwrap(&self.data).ok_or_else(|| XlaError("literal element type mismatch".into()))
     }
 
+    /// Consuming read-back: moves the host data out without a copy (the
+    /// executor's per-step output path).
+    pub fn into_vec<T: NativeType>(self) -> Result<Vec<T>, XlaError> {
+        T::unwrap_owned(self.data)
+            .ok_or_else(|| XlaError("literal element type mismatch".into()))
+    }
+
     /// Decompose a tuple literal into its parts.
     pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
         match &self.data {
@@ -179,11 +203,14 @@ impl HloModuleProto {
     }
 }
 
+/// Computation handle passed from `from_proto` to `compile` (mirrors
+/// the PJRT API shape).
 pub struct XlaComputation {
     module: std::rc::Rc<interp::HloModule>,
 }
 
 impl XlaComputation {
+    /// Wrap a parsed module as a compilable computation.
     pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
         XlaComputation {
             module: proto.module.clone(),
@@ -191,6 +218,7 @@ impl XlaComputation {
     }
 }
 
+/// The interpreter-backed "device" client.
 pub struct PjRtClient {
     _p: (),
 }
@@ -201,19 +229,28 @@ impl PjRtClient {
         Ok(PjRtClient { _p: () })
     }
 
+    /// Compile a computation: builds the planned execution engine once
+    /// (instruction program, fusion groups, buffer plan). Shape or
+    /// dtype inconsistencies in the module surface here rather than at
+    /// execute time.
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        let plan = Plan::new(comp.module.clone())?;
         Ok(PjRtLoadedExecutable {
             module: comp.module.clone(),
+            plan,
         })
     }
 }
 
+/// A compiled executable: the parsed module plus its execution plan
+/// (whose output buffers are cached across `execute` calls).
 pub struct PjRtLoadedExecutable {
     module: std::rc::Rc<interp::HloModule>,
+    plan: Plan,
 }
 
 impl PjRtLoadedExecutable {
-    /// Run the module on the interpreter. Mirrors the PJRT shape:
+    /// Run the module on the planned engine. Mirrors the PJRT shape:
     /// one replica, one output buffer holding the root (tuple) literal.
     pub fn execute<T: std::borrow::Borrow<Literal>>(
         &self,
@@ -225,16 +262,33 @@ impl PjRtLoadedExecutable {
     /// Owned-argument variant (the executor hot path: avoids
     /// re-copying every state tensor on every training step).
     pub fn execute_owned(&self, args: Vec<Literal>) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
-        let root = interp::execute(&self.module, args)?;
+        let root = self.plan.execute(args)?;
         Ok(vec![vec![PjRtBuffer { literal: root }]])
+    }
+
+    /// Run on the scalar reference walker instead of the plan — the
+    /// equivalence oracle (`rust/tests/plan_equivalence.rs`) and the
+    /// `stepref/*` bench cases. Bit-identical to [`Self::execute_owned`]
+    /// by contract, just slower.
+    pub fn execute_ref_owned(&self, args: Vec<Literal>) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        let root = interp::execute_ref(&self.module, args)?;
+        Ok(vec![vec![PjRtBuffer { literal: root }]])
+    }
+
+    /// Override the plan's `dot` worker-thread budget (testing hook;
+    /// results are bit-identical for every setting).
+    pub fn set_threads(&self, n: usize) {
+        self.plan.set_threads(n);
     }
 }
 
+/// One device output buffer (host-resident here).
 pub struct PjRtBuffer {
     literal: Literal,
 }
 
 impl PjRtBuffer {
+    /// Copy the buffer out as a literal.
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
         Ok(self.literal.clone())
     }

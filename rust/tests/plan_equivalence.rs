@@ -1,0 +1,189 @@
+//! Planned-engine equivalence gate: the plan (`Executor::run`) must be
+//! **bit-for-bit** identical to the scalar reference walker
+//! (`Executor::run_ref`) on every checked-in step and ZS artifact, and
+//! the threaded `dot` path must be independent of the worker-thread
+//! count. This is the contract that lets the fused/threaded/cached
+//! engine replace the walker as the production hot path (DESIGN.md
+//! "planned interpreter execution").
+
+use analog_rider::runtime::{Executor, HostTensor, Registry};
+
+fn registry() -> Option<Registry> {
+    let dir = Registry::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Registry::load(dir).expect("manifest loads"))
+}
+
+/// Deterministic value noise: scaled 24-bit hash, different per
+/// (artifact, input, element).
+fn hash01(seed: u32, i: u32) -> f32 {
+    let mut k = seed.wrapping_mul(0x9E37_79B9).wrapping_add(i).wrapping_mul(2654435761);
+    k ^= k >> 16;
+    (k >> 8) as f32 / 16_777_216.0
+}
+
+/// Build deterministic, name-aware inputs for an artifact: small `n`
+/// for ZS while-loops, in-range labels, plausible device parameters,
+/// hash noise everywhere else.
+fn inputs_for(reg: &Registry, name: &str, seed: u32) -> Vec<HostTensor> {
+    let model = name.split('_').next().unwrap_or("fcn");
+    let n_classes = reg
+        .models
+        .get(model)
+        .map(|m| m.n_classes)
+        .unwrap_or(10) as i32;
+    let spec = reg.artifact(name).expect("artifact in manifest");
+    spec.inputs
+        .iter()
+        .enumerate()
+        .map(|(k, io)| {
+            let n = io.numel();
+            match io.dtype {
+                analog_rider::runtime::Dtype::U32 => {
+                    if io.name == "key" {
+                        HostTensor::U32(vec![7 + seed, 0x5EED])
+                    } else {
+                        // ZS pulse budget: keep the while-loop short
+                        HostTensor::U32(vec![3; n.max(1)])
+                    }
+                }
+                analog_rider::runtime::Dtype::I32 => HostTensor::I32(
+                    (0..n).map(|i| (i as i32 + seed as i32) % n_classes).collect(),
+                ),
+                analog_rider::runtime::Dtype::F32 => {
+                    if io.name == "dev" {
+                        // dw_min, sigma_c2c, tau_max, tau_min, out_noise,
+                        // inp_res, out_res, out_bound
+                        HostTensor::F32(vec![
+                            0.01,
+                            0.05,
+                            1.0,
+                            1.0,
+                            0.06,
+                            1.0 / 127.0,
+                            1.0 / 511.0,
+                            12.0,
+                        ])
+                    } else {
+                        let centered = io.name.contains('.') || io.name.starts_with('b');
+                        HostTensor::F32(
+                            (0..n)
+                                .map(|i| {
+                                    let v = hash01(seed.wrapping_add(k as u32), i as u32);
+                                    if centered {
+                                        v - 0.5
+                                    } else {
+                                        v
+                                    }
+                                })
+                                .collect(),
+                        )
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+fn assert_bits_eq(a: &[Vec<f32>], b: &[Vec<f32>], name: &str) {
+    assert_eq!(a.len(), b.len(), "{name}: output count");
+    for (oi, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.len(), y.len(), "{name}: output {oi} length");
+        for (i, (p, q)) in x.iter().zip(y).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "{name}: output {oi}[{i}]: planned {p} vs reference {q}"
+            );
+        }
+    }
+}
+
+/// Every step and ZS module: planned path == scalar walker, bit for
+/// bit, twice in a row (the second run goes through warmed buffer
+/// caches). Debug builds cover the fcn artifacts only — the scalar
+/// walker is too slow unoptimized; `./ci.sh e2e` runs the full set in
+/// release.
+#[test]
+fn planned_path_matches_execute_ref_on_all_step_and_zs_artifacts() {
+    let Some(reg) = registry() else { return };
+    let exec = Executor::cpu().expect("interpreter backend available");
+    let mut covered = 0;
+    // debug builds: the scalar walker is too slow unoptimized — cover a
+    // representative fcn subset and let `./ci.sh e2e` (release) run all
+    let debug_set = ["fcn_step_sgd", "fcn_step_digital", "fcn_zs"];
+    let names: Vec<String> = reg
+        .artifacts
+        .keys()
+        .filter(|n| n.contains("_step_") || n.ends_with("_zs"))
+        .filter(|n| !cfg!(debug_assertions) || debug_set.contains(&n.as_str()))
+        .cloned()
+        .collect();
+    for name in &names {
+        let spec = reg.artifact(name).unwrap();
+        let inputs = inputs_for(&reg, name, 1);
+        let want = exec.run_ref(spec, &inputs).expect("reference path runs");
+        let got = exec.run(spec, &inputs).expect("planned path runs");
+        assert_bits_eq(&got, &want, name);
+        // warmed-cache rerun with different inputs
+        let inputs2 = inputs_for(&reg, name, 2);
+        let want2 = exec.run_ref(spec, &inputs2).expect("reference rerun");
+        let got2 = exec.run(spec, &inputs2).expect("planned rerun");
+        assert_bits_eq(&got2, &want2, &format!("{name} (rerun)"));
+        covered += 1;
+    }
+    let floor = if cfg!(debug_assertions) { 3 } else { 20 };
+    assert!(
+        covered >= floor,
+        "only {covered} step/zs artifacts covered — artifacts/ incomplete?"
+    );
+}
+
+/// Init artifacts exercise the biggest fused u32 hash chains; pin them
+/// on both paths too (fcn only in debug).
+#[test]
+fn planned_path_matches_execute_ref_on_init_artifacts() {
+    let Some(reg) = registry() else { return };
+    let exec = Executor::cpu().unwrap();
+    let names: Vec<String> = reg
+        .artifacts
+        .keys()
+        .filter(|n| n.ends_with("_init"))
+        .filter(|n| !cfg!(debug_assertions) || n.starts_with("fcn"))
+        .cloned()
+        .collect();
+    assert!(!names.is_empty());
+    for name in &names {
+        let spec = reg.artifact(name).unwrap();
+        let inputs = vec![
+            HostTensor::U32(vec![11, 22]),
+            HostTensor::F32(vec![0.4, 0.2, 0.1]),
+        ];
+        let want = exec.run_ref(spec, &inputs).expect("reference init");
+        let got = exec.run(spec, &inputs).expect("planned init");
+        assert_bits_eq(&got, &want, name);
+    }
+}
+
+/// Threaded `dot` determinism: the planned output must not depend on
+/// the worker-thread budget (the row-chunking is a function of the
+/// shape, never of the machine).
+#[test]
+fn threaded_dot_is_independent_of_thread_count() {
+    let Some(reg) = registry() else { return };
+    let exec = Executor::cpu().unwrap();
+    let name = "fcn_step_sgd";
+    let spec = reg.artifact(name).unwrap();
+    let exe = exec.compile(spec).expect("compiles");
+    let inputs = inputs_for(&reg, name, 5);
+    exe.set_threads(1);
+    let serial = exec.run(spec, &inputs).expect("serial run");
+    for threads in [2usize, 3, 8, 64] {
+        exe.set_threads(threads);
+        let par = exec.run(spec, &inputs).expect("parallel run");
+        assert_bits_eq(&par, &serial, &format!("{name} threads={threads}"));
+    }
+}
