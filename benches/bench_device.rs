@@ -7,7 +7,7 @@
 //! BENCH_device.json to track speedups across PRs.
 
 use analog_rider::analog::optimizer::{self, AnalogOptimizer as _};
-use analog_rider::device::{presets, DeviceArray, IoChain};
+use analog_rider::device::{presets, DeviceArray, IoChain, TileGeometry, TiledArray};
 use analog_rider::optim::Quadratic;
 use analog_rider::util::bench::{consume, Bench};
 use analog_rider::util::rng::Rng;
@@ -32,6 +32,23 @@ fn main() {
         });
         println!("{}", r.report_throughput("cells", (side * side) as f64));
     }
+
+    // tiled substrate: the same 1024x1024 aggregated update as a 4x4
+    // grid of 256^2 tiles, serial vs per-tile scoped-thread fan-out
+    let geom = TileGeometry::new(256, 256).expect("valid geometry");
+    let mut tiled =
+        TiledArray::sample(1024, 1024, geom, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
+    let dw = vec![0.01f32; 1024 * 1024];
+    tiled.set_parallel(false);
+    let r = b.run("tiled_update_serial/1024x1024t256", || {
+        tiled.analog_update(&dw, &mut rng);
+    });
+    println!("{}", r.report_throughput("cells", (1024 * 1024) as f64));
+    tiled.set_parallel(true);
+    let r = b.run("tiled_update_parallel/1024x1024t256", || {
+        tiled.analog_update(&dw, &mut rng);
+    });
+    println!("{}", r.report_throughput("cells", (1024 * 1024) as f64));
 
     // noisy tile read-out through the zero-alloc path
     let arr = DeviceArray::sample(1024, 1024, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);

@@ -5,6 +5,7 @@
 
 pub mod agad;
 pub mod digital;
+pub mod mtres;
 pub mod optimizer;
 pub mod pulse_counter;
 pub mod residual;
@@ -15,6 +16,7 @@ pub mod zs;
 
 pub use agad::{Agad, AgadHypers};
 pub use digital::{DigitalHypers, DigitalSgd};
+pub use mtres::{Mtres, MtresHypers};
 pub use optimizer::{AnalogOptimizer, Method, OptimizerSpec, METHODS};
 pub use pulse_counter::PulseCost;
 pub use residual::{ResidualHypers, TwoStageResidual};

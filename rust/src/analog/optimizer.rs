@@ -9,7 +9,7 @@
 //! in `device/presets.rs`:
 //!
 //! ```text
-//! "sgd" | "ttv1" | "ttv2" | "agad" | "residual" | "rider" | "erider" | "digital"
+//! "sgd" | "ttv1" | "ttv2" | "agad" | "residual" | "rider" | "erider" | "mtres" | "digital"
 //! ```
 //!
 //! [`OptimizerSpec`] is plain data (serde-friendly: flat scalars, no
@@ -52,6 +52,7 @@
 
 use crate::analog::agad::{Agad, AgadHypers};
 use crate::analog::digital::{DigitalHypers, DigitalSgd};
+use crate::analog::mtres::{Mtres, MtresHypers};
 use crate::analog::pulse_counter::PulseCost;
 use crate::analog::residual::{ResidualHypers, TwoStageResidual};
 use crate::analog::rider::{Rider, RiderHypers};
@@ -128,6 +129,9 @@ pub enum Method {
     Rider,
     /// E-RIDER: RIDER with the chopper enabled (Eq. 17).
     Erider,
+    /// Multi-tile residual learning: a stack of tiles trained on
+    /// successive residuals, summed at read-out (arXiv:2510.02516).
+    Mtres,
     /// exact-SGD baseline arm (pre-training / upper bound; pulse-free)
     Digital,
 }
@@ -135,10 +139,26 @@ pub enum Method {
 /// Every registry name, in canonical (paper-table) order; the digital
 /// baseline arm closes the list.
 pub const METHODS: &[&str] = &[
-    "sgd", "ttv1", "ttv2", "agad", "residual", "rider", "erider", "digital",
+    "sgd", "ttv1", "ttv2", "agad", "residual", "rider", "erider", "mtres", "digital",
 ];
 
 impl Method {
+    /// Every registry method, in the same canonical order as
+    /// [`METHODS`]. Tables, sweeps, and the registry tests iterate this
+    /// const, so a [`Method`] arm missing from any name mapping fails
+    /// the build (exhaustive matches) or the tests (order pinning).
+    pub const ALL: &'static [Method] = &[
+        Method::Sgd,
+        Method::TtV1,
+        Method::TtV2,
+        Method::Agad,
+        Method::Residual,
+        Method::Rider,
+        Method::Erider,
+        Method::Mtres,
+        Method::Digital,
+    ];
+
     /// Parse a registry name (`None` for unknown names — callers decide
     /// how to report; see [`spec_or_err`]).
     pub fn parse(name: &str) -> Option<Method> {
@@ -150,6 +170,7 @@ impl Method {
             "residual" => Some(Method::Residual),
             "rider" => Some(Method::Rider),
             "erider" => Some(Method::Erider),
+            "mtres" => Some(Method::Mtres),
             "digital" => Some(Method::Digital),
             _ => None,
         }
@@ -165,6 +186,7 @@ impl Method {
             Method::Residual => "residual",
             Method::Rider => "rider",
             Method::Erider => "erider",
+            Method::Mtres => "mtres",
             Method::Digital => "digital",
         }
     }
@@ -174,9 +196,14 @@ impl Method {
     /// RIDER and two-stage residual learning reuse the E-RIDER step:
     /// they are hyperparameter slices of it (chopper off, and frozen
     /// reference after ZS, respectively — see `Hypers::for_method`).
+    /// Multi-tile residual learning has no dedicated lowered step yet
+    /// either; at NN scale it runs the E-RIDER step as its
+    /// single-tile-stack stand-in (chopper off, see
+    /// `Hypers::for_method`), while the true tile stack lives at the
+    /// pulse level (`analog/mtres.rs`).
     pub fn nn_step_algo(self) -> &'static str {
         match self {
-            Method::Rider | Method::Erider | Method::Residual => "erider",
+            Method::Rider | Method::Erider | Method::Residual | Method::Mtres => "erider",
             m => m.name(),
         }
     }
@@ -213,12 +240,18 @@ pub struct OptimizerSpec {
     pub read_noise: f64,
     /// ZS calibration budget of the two-stage pipeline (`residual` only)
     pub zs_pulses: u64,
+    /// number of stacked residual tiles (`mtres` only)
+    pub tiles: usize,
+    /// optimizer steps per residual stage before the next tile
+    /// activates (`mtres` only)
+    pub stage_steps: u64,
 }
 
 impl OptimizerSpec {
     /// The method's paper-default hyperparameters.
     pub fn new(method: Method) -> OptimizerSpec {
         let r = RiderHypers::default();
+        let m = MtresHypers::default();
         let mut s = OptimizerSpec {
             method,
             lr_fast: r.lr_fast,
@@ -228,6 +261,8 @@ impl OptimizerSpec {
             flip_p: r.flip_p,
             read_noise: r.read_noise,
             zs_pulses: 2000,
+            tiles: m.tiles,
+            stage_steps: m.stage_steps,
         };
         match method {
             Method::Sgd => {
@@ -262,6 +297,15 @@ impl OptimizerSpec {
                 s.eta = 0.0;
                 s.flip_p = 0.0;
             }
+            // residual *stack*: γ is reused as the per-tile read-out
+            // gain ratio s; no reference filter, no chopper
+            Method::Mtres => {
+                s.lr_fast = m.lr;
+                s.gamma = m.tile_gain;
+                s.lr_transfer = 0.0;
+                s.eta = 0.0;
+                s.flip_p = 0.0;
+            }
             // exact SGD: no device, no reference, no chopper
             Method::Digital => {
                 s.lr_fast = DigitalHypers::default().lr;
@@ -277,7 +321,8 @@ impl OptimizerSpec {
 
     /// Override hyperparameters from CLI flags (`--lr-fast`,
     /// `--lr-transfer`, `--eta`, `--gamma`, `--flip-p`, `--read-noise`,
-    /// `--zs-pulses`); absent flags keep the spec's value.
+    /// `--zs-pulses`, `--tiles`, `--stage-steps`); absent flags keep
+    /// the spec's value.
     pub fn apply_args(&mut self, args: &Args) {
         self.lr_fast = args.get_f64("lr-fast", self.lr_fast);
         self.lr_transfer = args.get_f64("lr-transfer", self.lr_transfer);
@@ -286,6 +331,8 @@ impl OptimizerSpec {
         self.flip_p = args.get_f64("flip-p", self.flip_p);
         self.read_noise = args.get_f64("read-noise", self.read_noise);
         self.zs_pulses = args.get_u64("zs-pulses", self.zs_pulses);
+        self.tiles = args.get_usize("tiles", self.tiles);
+        self.stage_steps = args.get_u64("stage-steps", self.stage_steps);
     }
 
     /// Override hyperparameters from a config-file section (underscore
@@ -298,6 +345,8 @@ impl OptimizerSpec {
         self.flip_p = cfg.f64(section, "flip_p", self.flip_p);
         self.read_noise = cfg.f64(section, "read_noise", self.read_noise);
         self.zs_pulses = cfg.f64(section, "zs_pulses", self.zs_pulses as f64) as u64;
+        self.tiles = cfg.f64(section, "tiles", self.tiles as f64) as usize;
+        self.stage_steps = cfg.f64(section, "stage_steps", self.stage_steps as f64) as u64;
     }
 
     fn rider_hypers(&self) -> RiderHypers {
@@ -403,6 +452,20 @@ impl OptimizerSpec {
                 sigma,
                 rng,
             )),
+            Method::Mtres => Box::new(Mtres::new(
+                dim,
+                preset,
+                ref_mean,
+                ref_std,
+                MtresHypers {
+                    lr: self.lr_fast,
+                    tile_gain: self.gamma,
+                    stage_steps: self.stage_steps,
+                    tiles: self.tiles,
+                },
+                sigma,
+                rng,
+            )),
             Method::Digital => Box::new(DigitalSgd::new(
                 dim,
                 DigitalHypers { lr: self.lr_fast },
@@ -462,6 +525,17 @@ mod tests {
             assert_eq!(s.method.name(), *name);
         }
         assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn all_const_mirrors_the_name_registry() {
+        // Method::ALL and METHODS must stay in lock-step: same length,
+        // same canonical order, round-tripping through parse/name
+        assert_eq!(Method::ALL.len(), METHODS.len());
+        for (m, name) in Method::ALL.iter().zip(METHODS) {
+            assert_eq!(m.name(), *name);
+            assert_eq!(Method::parse(name), Some(*m));
+        }
     }
 
     #[test]

@@ -161,12 +161,19 @@ fn pulse_span(
 /// row-major `rows x cols` storage.
 #[derive(Clone, Debug)]
 pub struct DeviceArray {
+    /// Tile rows.
     pub rows: usize,
+    /// Tile columns.
     pub cols: usize,
+    /// Per-cell weights (conductances), row-major.
     pub w: Vec<f32>,
+    /// Per-cell potentiation slopes α₊.
     pub alpha_p: Vec<f32>,
+    /// Per-cell depression slopes α₋.
     pub alpha_m: Vec<f32>,
+    /// Upper weight bound τ_max (shared by all cells).
     pub tau_max: f32,
+    /// Lower weight bound magnitude τ_min (window is [-τ_min, τ_max]).
     pub tau_min: f32,
     /// response granularity (weight change per pulse at q = 1)
     pub dw_min: f32,
@@ -246,10 +253,12 @@ impl DeviceArray {
         }
     }
 
+    /// Number of cells in the tile.
     pub fn len(&self) -> usize {
         self.w.len()
     }
 
+    /// Whether the tile holds no cells.
     pub fn is_empty(&self) -> bool {
         self.w.is_empty()
     }

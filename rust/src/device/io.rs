@@ -5,11 +5,17 @@
 
 use crate::util::rng::Rng;
 
+/// Peripheral circuit parameters of one crossbar MVM: DAC input
+/// resolution, ADC output resolution/bound, and ADC read noise.
 #[derive(Clone, Debug)]
 pub struct IoChain {
+    /// DAC input quantization step (1/127 ≙ 7-bit).
     pub inp_res: f32,
+    /// ADC output quantization step (1/511 ≙ 9-bit).
     pub out_res: f32,
+    /// ADC output clipping bound (pre-rescale units).
     pub out_bound: f32,
+    /// ADC read-noise std (pre-rescale units).
     pub out_noise: f32,
 }
 
@@ -25,6 +31,8 @@ impl Default for IoChain {
 }
 
 impl IoChain {
+    /// A noiseless, effectively-unquantized chain (digital-parity
+    /// sanity checks).
     pub fn ideal() -> Self {
         Self {
             inp_res: 1e-9,
@@ -73,15 +81,15 @@ impl IoChain {
                     *o += xv * wv;
                 }
             }
-            // ADC: noise, quantization, bound, undo scaling
+            // ADC: batch-sampled read noise (distribution-stable with
+            // the old per-element scalar draw), then quantization,
+            // bound, undo scaling
+            if !deterministic && self.out_noise > 0.0 {
+                rng.add_normal_f32(orow, self.out_noise);
+            }
             for o in orow.iter_mut() {
-                let mut y = *o;
-                if !deterministic && self.out_noise > 0.0 {
-                    y += self.out_noise * rng.normal() as f32;
-                }
-                y = (y / self.out_res).round() * self.out_res;
-                y = y.clamp(-self.out_bound, self.out_bound);
-                *o = y * scale;
+                let y = (*o / self.out_res).round() * self.out_res;
+                *o = y.clamp(-self.out_bound, self.out_bound) * scale;
             }
         }
         out
@@ -118,6 +126,35 @@ mod tests {
         let mut rng = Rng::from_seed(1);
         let y = io.mvm(&[0.0; 8], &[1.0; 8], 1, 8, 1, &mut rng, true);
         assert_eq!(y[0], 0.0);
+    }
+
+    #[test]
+    fn adc_noise_mean_and_variance_pinned() {
+        // the batched ADC noise must stay N(0, out_noise²) in
+        // pre-rescale units: the empirical mean matches the
+        // deterministic output and the variance is (out_noise·scale)²
+        // (quantization at 1/511 contributes negligibly)
+        let io = IoChain::default();
+        let mut rng = Rng::from_seed(33);
+        let k = 8;
+        let x = vec![0.5f32; k]; // ABS_MAX scale = 0.5
+        let w: Vec<f32> = (0..k).map(|i| 0.05 * (i as f32 + 1.0)).collect();
+        let det = io.mvm(&x, &w, 1, k, 1, &mut rng, true)[0] as f64;
+        let trials = 4000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..trials {
+            let y = io.mvm(&x, &w, 1, k, 1, &mut rng, false)[0] as f64;
+            s += y;
+            s2 += y * y;
+        }
+        let mean = s / trials as f64;
+        let var = s2 / trials as f64 - mean * mean;
+        let want_var = (io.out_noise as f64 * 0.5).powi(2);
+        assert!((mean - det).abs() < 0.005, "mean {mean} vs det {det}");
+        assert!(
+            (var - want_var).abs() < 0.15 * want_var,
+            "var {var} vs {want_var}"
+        );
     }
 
     #[test]

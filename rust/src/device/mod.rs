@@ -1,12 +1,16 @@
 //! Pulse-accurate analog crossbar substrate (mirrors the JAX device model
 //! in `python/compile/devices.py`; parity-tested via artifacts/parity.json).
 
+#![warn(missing_docs)]
+
 pub mod array;
 pub mod io;
 pub mod presets;
 pub mod response;
+pub mod tile;
 
 pub use array::DeviceArray;
 pub use io::IoChain;
 pub use presets::{preset, Preset, HFO2, IDEAL, OM, PRECISE};
 pub use response::{ExpDevice, LinearMonotone, Response, SoftBounds};
+pub use tile::{TileGeometry, TiledArray};

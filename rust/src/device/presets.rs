@@ -5,8 +5,11 @@
 /// construction; see `DeviceArray::sample`).
 #[derive(Clone, Debug)]
 pub struct Preset {
+    /// Registry name of the preset.
     pub name: &'static str,
+    /// Upper weight bound τ_max.
     pub tau_max: f64,
+    /// Lower weight bound magnitude τ_min.
     pub tau_min: f64,
     /// response granularity Δw_min
     pub dw_min: f64,
@@ -64,6 +67,8 @@ pub const IDEAL: Preset = Preset {
     c2c: 0.0,
 };
 
+/// Registry lookup by preset name (`"hfo2"`, `"om"`, `"precise"`,
+/// `"ideal"`); `None` for unknown names.
 pub fn preset(name: &str) -> Option<Preset> {
     match name {
         "hfo2" => Some(HFO2),

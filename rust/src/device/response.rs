@@ -57,13 +57,18 @@ pub trait Response: Clone + Send + Sync {
 ///   q_minus(w) = alpha_m (1 + w/tau_min)
 #[derive(Clone, Debug, PartialEq)]
 pub struct SoftBounds {
+    /// Potentiation slope α₊.
     pub alpha_p: f64,
+    /// Depression slope α₋.
     pub alpha_m: f64,
+    /// Upper weight bound τ_max.
     pub tau_max: f64,
+    /// Lower weight bound magnitude τ_min.
     pub tau_min: f64,
 }
 
 impl SoftBounds {
+    /// Construct from slopes and bounds; all four must be positive.
     pub fn new(alpha_p: f64, alpha_m: f64, tau_max: f64, tau_min: f64) -> Self {
         assert!(alpha_p > 0.0 && alpha_m > 0.0 && tau_max > 0.0 && tau_min > 0.0);
         Self { alpha_p, alpha_m, tau_max, tau_min }
@@ -112,9 +117,13 @@ impl Response for SoftBounds {
 /// Linear-monotone device (Definition C.1): q± = a ∓ b w, SP at 0-crossing.
 #[derive(Clone, Debug)]
 pub struct LinearMonotone {
+    /// Base response magnitude.
     pub a: f64,
+    /// Response slope vs. weight.
     pub b: f64,
+    /// SP location (the response's 0-crossing shift).
     pub shift: f64,
+    /// Symmetric weight window half-width.
     pub window: f64,
 }
 
@@ -139,9 +148,13 @@ impl Response for LinearMonotone {
 /// Exponential device: q±(w) = a exp(∓ k (w - shift)); strongly monotone G.
 #[derive(Clone, Debug)]
 pub struct ExpDevice {
+    /// Response magnitude at the SP.
     pub a: f64,
+    /// Exponential rate.
     pub k: f64,
+    /// SP location.
     pub shift: f64,
+    /// Symmetric weight window half-width.
     pub window: f64,
 }
 

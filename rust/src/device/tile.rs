@@ -1,0 +1,736 @@
+//! Tiled crossbar substrate: a grid of fixed-size [`DeviceArray`] tiles
+//! behind the single-slab surface.
+//!
+//! Real AIMC chips are grids of fixed-size physical tiles with per-tile
+//! periphery, not one unbounded array. [`TiledArray`] composes the
+//! existing `DeviceArray` kernels into such a grid: each tile owns its
+//! own SP map (sampled from its own RNG sub-stream), its own pulse
+//! counter, and its own [`IoChain`] periphery. Geometry is described by
+//! a params-validated [`TileGeometry`] (default 256×256); edge tiles
+//! are ragged when the logical shape does not divide evenly.
+//!
+//! Determinism contract (pinned by `rust/tests/tiled_equivalence.rs`):
+//!
+//! * a single-tile `TiledArray` (grid 1×1) passes the caller's RNG
+//!   straight through to the underlying `DeviceArray`, so it is
+//!   **bit-identical** to a bare `DeviceArray` on every path —
+//!   sampling, stochastic and deterministic updates, pulse cycles,
+//!   reads and MVMs;
+//! * a multi-tile update draws one `base = rng.next_u64()` from the
+//!   caller's stream and gives tile `k` the sub-stream
+//!   `Rng::new(base, k)` — the same derivation as the row-chunked
+//!   parallel path in `device/array.rs` — so results depend only on
+//!   the tile geometry, never on the worker-thread count, and the
+//!   serial and scoped-thread fan-out paths are bit-identical.
+//!
+//! The multi-tile residual method (`analog/mtres.rs`) builds on this
+//! substrate: one logical weight vector realised as a stack of 1×dim
+//! tiles trained on successive residuals and summed at read-out.
+
+use crate::device::array::DeviceArray;
+use crate::device::io::IoChain;
+use crate::device::presets::Preset;
+use crate::device::response::SoftBounds;
+use crate::util::rng::Rng;
+
+/// Tile-grid geometry: the fixed physical tile shape the logical array
+/// is partitioned into. Validated at construction (the sram22-style
+/// params-validated component idiom): both dimensions must be nonzero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGeometry {
+    /// Rows per physical tile.
+    pub tile_rows: usize,
+    /// Columns per physical tile.
+    pub tile_cols: usize,
+}
+
+impl Default for TileGeometry {
+    /// The default 256×256 physical tile.
+    fn default() -> Self {
+        Self { tile_rows: 256, tile_cols: 256 }
+    }
+}
+
+impl TileGeometry {
+    /// Validated constructor: rejects zero-sized tiles with a
+    /// descriptive error instead of panicking downstream.
+    pub fn new(tile_rows: usize, tile_cols: usize) -> Result<Self, String> {
+        if tile_rows == 0 || tile_cols == 0 {
+            return Err(format!(
+                "tile geometry must be nonzero, got {tile_rows}x{tile_cols}"
+            ));
+        }
+        Ok(Self { tile_rows, tile_cols })
+    }
+
+    /// Grid shape (tile-rows, tile-cols) needed to cover a logical
+    /// `rows x cols` array; edge tiles are ragged. An empty logical
+    /// array still gets one (empty) tile so the single-tile fast path
+    /// applies.
+    pub fn grid(&self, rows: usize, cols: usize) -> (usize, usize) {
+        let up = |n: usize, t: usize| ((n + t - 1) / t).max(1);
+        (up(rows, self.tile_rows), up(cols, self.tile_cols))
+    }
+}
+
+/// A logical crossbar array realised as a grid of [`DeviceArray`]
+/// tiles, exposing the single-slab `DeviceArray` surface. See the
+/// module docs for the determinism contract.
+#[derive(Clone, Debug)]
+pub struct TiledArray {
+    /// Logical rows of the composed array.
+    pub rows: usize,
+    /// Logical columns of the composed array.
+    pub cols: usize,
+    geom: TileGeometry,
+    grid_rows: usize,
+    grid_cols: usize,
+    /// Row-major grid of physical tiles.
+    tiles: Vec<DeviceArray>,
+    /// Per-tile IO periphery (one chain per tile, like real hardware).
+    io: Vec<IoChain>,
+    /// Per-tile gather/scatter staging buffers (sized at construction,
+    /// so steady-state updates never grow them).
+    scratch: Vec<Vec<f32>>,
+    /// Worker-thread cap for the fan-out; 0 means use the machine's
+    /// available parallelism. Never affects results.
+    workers: usize,
+    /// Whether updates/reads fan out to scoped threads at all.
+    parallel: bool,
+}
+
+impl TiledArray {
+    /// Per-tile dimensions of tile `k` under `geom` for a logical
+    /// `rows x cols` array.
+    fn tile_dims(
+        geom: &TileGeometry,
+        grid_cols: usize,
+        rows: usize,
+        cols: usize,
+        k: usize,
+    ) -> (usize, usize) {
+        let r0 = (k / grid_cols) * geom.tile_rows;
+        let c0 = (k % grid_cols) * geom.tile_cols;
+        (
+            geom.tile_rows.min(rows - r0.min(rows)),
+            geom.tile_cols.min(cols - c0.min(cols)),
+        )
+    }
+
+    fn assemble(
+        rows: usize,
+        cols: usize,
+        geom: TileGeometry,
+        tiles: Vec<DeviceArray>,
+    ) -> Self {
+        let (grid_rows, grid_cols) = geom.grid(rows, cols);
+        debug_assert_eq!(tiles.len(), grid_rows * grid_cols);
+        let scratch = tiles.iter().map(|t| vec![0.0f32; t.len()]).collect();
+        let io = vec![IoChain::default(); tiles.len()];
+        Self {
+            rows,
+            cols,
+            geom,
+            grid_rows,
+            grid_cols,
+            tiles,
+            io,
+            scratch,
+            workers: 0,
+            parallel: true,
+        }
+    }
+
+    /// Sample a tiled array from a preset with a controlled SP
+    /// distribution (the [`DeviceArray::sample`] semantics per tile).
+    ///
+    /// Single-tile grids pass `rng` straight through (bit-identical to
+    /// `DeviceArray::sample`); multi-tile grids draw one base value and
+    /// give tile `k` the sub-stream `Rng::new(base, k)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample(
+        rows: usize,
+        cols: usize,
+        geom: TileGeometry,
+        preset: &Preset,
+        ref_mean: f64,
+        ref_std: f64,
+        sigma_gamma: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let (grid_rows, grid_cols) = geom.grid(rows, cols);
+        let n_tiles = grid_rows * grid_cols;
+        let mut tiles = Vec::with_capacity(n_tiles);
+        if n_tiles == 1 {
+            tiles.push(DeviceArray::sample(
+                rows, cols, preset, ref_mean, ref_std, sigma_gamma, rng,
+            ));
+        } else {
+            let base = rng.next_u64();
+            for k in 0..n_tiles {
+                let (tr, tc) = Self::tile_dims(&geom, grid_cols, rows, cols, k);
+                let mut sub = Rng::new(base, k as u64);
+                tiles.push(DeviceArray::sample(
+                    tr, tc, preset, ref_mean, ref_std, sigma_gamma, &mut sub,
+                ));
+            }
+        }
+        Self::assemble(rows, cols, geom, tiles)
+    }
+
+    /// A tiled array where every cell shares one response model (the
+    /// [`DeviceArray::uniform`] semantics per tile). Deterministic, so
+    /// no sub-stream derivation is involved.
+    pub fn uniform(
+        rows: usize,
+        cols: usize,
+        geom: TileGeometry,
+        dev: &SoftBounds,
+        dw_min: f64,
+        c2c: f64,
+    ) -> Self {
+        let (grid_rows, grid_cols) = geom.grid(rows, cols);
+        let tiles = (0..grid_rows * grid_cols)
+            .map(|k| {
+                let (tr, tc) = Self::tile_dims(&geom, grid_cols, rows, cols, k);
+                DeviceArray::uniform(tr, tc, dev, dw_min, c2c)
+            })
+            .collect();
+        Self::assemble(rows, cols, geom, tiles)
+    }
+
+    /// Total number of logical cells.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Whether the array holds no cells.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The tile geometry this array was built with.
+    pub fn geometry(&self) -> TileGeometry {
+        self.geom
+    }
+
+    /// Grid shape as (tile-rows, tile-cols).
+    pub fn grid_shape(&self) -> (usize, usize) {
+        (self.grid_rows, self.grid_cols)
+    }
+
+    /// Number of physical tiles in the grid.
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Borrow tile `k` (row-major grid order).
+    pub fn tile(&self, k: usize) -> &DeviceArray {
+        &self.tiles[k]
+    }
+
+    /// Mutably borrow tile `k` (row-major grid order) — the seam the
+    /// multi-tile residual optimizer trains individual tiles through.
+    pub fn tile_mut(&mut self, k: usize) -> &mut DeviceArray {
+        &mut self.tiles[k]
+    }
+
+    /// Borrow tile `k`'s IO chain.
+    pub fn io(&self, k: usize) -> &IoChain {
+        &self.io[k]
+    }
+
+    /// Install the same IO chain on every tile.
+    pub fn set_io(&mut self, io: IoChain) {
+        for c in self.io.iter_mut() {
+            *c = io.clone();
+        }
+    }
+
+    /// Total pulses applied across all tiles (pulse accounting).
+    pub fn pulse_count(&self) -> u64 {
+        self.tiles.iter().map(|t| t.pulse_count).sum()
+    }
+
+    /// Cap the fan-out worker-thread count (0 = available parallelism).
+    /// Affects scheduling only — results are identical for any value.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers;
+    }
+
+    /// Enable or disable the scoped-thread fan-out. The serial path
+    /// derives the same per-tile sub-streams, so results are identical.
+    pub fn set_parallel(&mut self, parallel: bool) {
+        self.parallel = parallel;
+    }
+
+    fn worker_count(&self) -> usize {
+        let n = if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
+        n.min(self.tiles.len()).max(1)
+    }
+
+    /// Logical (row, col) origin of tile `k`.
+    fn tile_origin(&self, k: usize) -> (usize, usize) {
+        (
+            (k / self.grid_cols) * self.geom.tile_rows,
+            (k % self.grid_cols) * self.geom.tile_cols,
+        )
+    }
+
+    /// Gather the per-tile blocks of a logical row-major `src` into the
+    /// per-tile staging buffers.
+    fn gather_blocks(&mut self, src: &[f32]) {
+        debug_assert_eq!(src.len(), self.len());
+        let cols = self.cols;
+        for k in 0..self.tiles.len() {
+            let (r0, c0) = self.tile_origin(k);
+            let (tr, tc) = (self.tiles[k].rows, self.tiles[k].cols);
+            let buf = &mut self.scratch[k];
+            for lr in 0..tr {
+                let s = (r0 + lr) * cols + c0;
+                buf[lr * tc..(lr + 1) * tc].copy_from_slice(&src[s..s + tc]);
+            }
+        }
+    }
+
+    /// Scatter every tile's weights into a logical row-major `out`.
+    fn scatter_weights(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len());
+        let cols = self.cols;
+        for (k, tile) in self.tiles.iter().enumerate() {
+            let (r0, c0) = self.tile_origin(k);
+            for lr in 0..tile.rows {
+                let d = (r0 + lr) * cols + c0;
+                out[d..d + tile.cols]
+                    .copy_from_slice(&tile.w[lr * tile.cols..(lr + 1) * tile.cols]);
+            }
+        }
+    }
+
+    /// Run `f(tile, staged_block, sub_rng)` over every tile, serially
+    /// or bucketed over scoped threads (`k % workers`, like the
+    /// row-chunked path in `DeviceArray`). Tile `k` always gets the
+    /// sub-stream `Rng::new(base, k)`, so the two schedules — and any
+    /// worker count — produce bit-identical results.
+    fn fan_out<F>(&mut self, base: u64, f: F)
+    where
+        F: Fn(&mut DeviceArray, &[f32], &mut Rng) + Sync,
+    {
+        let workers = self.worker_count();
+        if !self.parallel || workers <= 1 {
+            for (k, (tile, buf)) in
+                self.tiles.iter_mut().zip(self.scratch.iter()).enumerate()
+            {
+                let mut sub = Rng::new(base, k as u64);
+                f(tile, buf.as_slice(), &mut sub);
+            }
+            return;
+        }
+        struct Job<'a> {
+            idx: u64,
+            tile: &'a mut DeviceArray,
+            buf: &'a [f32],
+        }
+        let mut buckets: Vec<Vec<Job>> = (0..workers).map(|_| Vec::new()).collect();
+        for (k, (tile, buf)) in
+            self.tiles.iter_mut().zip(self.scratch.iter()).enumerate()
+        {
+            buckets[k % workers].push(Job { idx: k as u64, tile, buf: buf.as_slice() });
+        }
+        let fr = &f;
+        std::thread::scope(|s| {
+            for bucket in buckets {
+                s.spawn(move || {
+                    for job in bucket {
+                        let mut sub = Rng::new(base, job.idx);
+                        fr(job.tile, job.buf, &mut sub);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Aggregated analog update (paper Eq. 2) of the logical increment
+    /// `dw`, fanned out per tile. Single-tile grids delegate with the
+    /// caller's RNG (bit-identical to [`DeviceArray::analog_update`]).
+    pub fn analog_update(&mut self, dw: &[f32], rng: &mut Rng) {
+        debug_assert_eq!(dw.len(), self.len());
+        if self.tiles.len() == 1 {
+            self.tiles[0].analog_update(dw, rng);
+            return;
+        }
+        self.gather_blocks(dw);
+        let base = rng.next_u64();
+        self.fan_out(base, |tile, buf, sub| tile.analog_update(buf, sub));
+    }
+
+    /// Deterministic update (round-to-nearest, no noise) — the
+    /// Python-parity mode, per tile. Consumes no randomness, so the
+    /// fan-out is trivially schedule-independent.
+    pub fn analog_update_det(&mut self, dw: &[f32]) {
+        debug_assert_eq!(dw.len(), self.len());
+        if self.tiles.len() == 1 {
+            self.tiles[0].analog_update_det(dw);
+            return;
+        }
+        self.gather_blocks(dw);
+        self.fan_out(0, |tile, buf, _| tile.analog_update_det(buf));
+    }
+
+    /// One ZS cycle: the same polarity pulse on every cell of every
+    /// tile.
+    pub fn pulse_all(&mut self, up: bool, rng: &mut Rng) {
+        if self.tiles.len() == 1 {
+            self.tiles[0].pulse_all(up, rng);
+            return;
+        }
+        let base = rng.next_u64();
+        self.fan_out(base, |tile, _, sub| tile.pulse_all(up, sub));
+    }
+
+    /// One stochastic ZS cycle: independent random polarity per cell.
+    pub fn pulse_all_random(&mut self, rng: &mut Rng) {
+        if self.tiles.len() == 1 {
+            self.tiles[0].pulse_all_random(rng);
+            return;
+        }
+        let base = rng.next_u64();
+        self.fan_out(base, |tile, _, sub| tile.pulse_all_random(sub));
+    }
+
+    /// Program the logical array to `target` weights (per-tile
+    /// programming pulses; counts into the tiles' pulse counters).
+    pub fn program(&mut self, target: &[f32], rng: &mut Rng) {
+        debug_assert_eq!(target.len(), self.len());
+        if self.tiles.len() == 1 {
+            self.tiles[0].program(target, rng);
+            return;
+        }
+        self.gather_blocks(target);
+        let base = rng.next_u64();
+        self.fan_out(base, |tile, buf, sub| tile.program(buf, sub));
+    }
+
+    /// Noisy read-out of the whole logical array into `out`
+    /// (allocation-free). Read noise for tile `k` comes from the
+    /// sub-stream `Rng::new(base, k)`, applied per tile row — parallel
+    /// bands (one per tile-row of the grid) produce results identical
+    /// to the serial order for any worker count. A zero `read_noise`
+    /// is a pure scatter and consumes no randomness.
+    pub fn read_into(&self, read_noise: f64, rng: &mut Rng, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len());
+        if self.tiles.len() == 1 {
+            self.tiles[0].read_into(read_noise, rng, out);
+            return;
+        }
+        if read_noise <= 0.0 {
+            self.scatter_weights(out);
+            return;
+        }
+        let base = rng.next_u64();
+        let noise = read_noise as f32;
+        let cols = self.cols;
+        let grid_cols = self.grid_cols;
+        // one band = one tile-row of the grid = a contiguous span of
+        // `out`; each tile inside it scatters + perturbs its own
+        // column stripe from its own sub-stream
+        let read_band = |tr: usize, band: &mut [f32], tiles: &[DeviceArray]| {
+            let mut c0 = 0;
+            for (tj, tile) in tiles.iter().enumerate() {
+                let mut sub = Rng::new(base, (tr * grid_cols + tj) as u64);
+                for lr in 0..tile.rows {
+                    let d = lr * cols + c0;
+                    let dst = &mut band[d..d + tile.cols];
+                    dst.copy_from_slice(&tile.w[lr * tile.cols..(lr + 1) * tile.cols]);
+                    sub.add_normal_f32(dst, noise);
+                }
+                c0 += tile.cols;
+            }
+        };
+        let band_span = self.geom.tile_rows * cols;
+        let bands = out.chunks_mut(band_span).zip(self.tiles.chunks(grid_cols));
+        let workers = self.worker_count().min(self.grid_rows).max(1);
+        if !self.parallel || workers <= 1 {
+            for (tr, (band, tiles)) in bands.enumerate() {
+                read_band(tr, band, tiles);
+            }
+            return;
+        }
+        let mut buckets: Vec<Vec<(usize, &mut [f32], &[DeviceArray])>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (tr, (band, tiles)) in bands.enumerate() {
+            buckets[tr % workers].push((tr, band, tiles));
+        }
+        let rb = &read_band;
+        std::thread::scope(|s| {
+            for bucket in buckets {
+                s.spawn(move || {
+                    for (tr, band, tiles) in bucket {
+                        rb(tr, band, tiles);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Noisy read-out of the whole logical array (allocating wrapper).
+    pub fn read(&self, read_noise: f64, rng: &mut Rng) -> Vec<f32> {
+        let mut out = vec![0.0; self.len()];
+        self.read_into(read_noise, rng, &mut out);
+        out
+    }
+
+    /// Ground-truth SP of every logical cell, written into `out` — the
+    /// soft-bounds closed form inlined per tile, bit-identical to
+    /// [`DeviceArray::symmetric_points_into`] on the same cells.
+    pub fn symmetric_points_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len());
+        let cols = self.cols;
+        for (k, tile) in self.tiles.iter().enumerate() {
+            let (r0, c0) = self.tile_origin(k);
+            let tmax = tile.tau_max as f64;
+            let tmin = tile.tau_min as f64;
+            for lr in 0..tile.rows {
+                for lc in 0..tile.cols {
+                    let i = lr * tile.cols + lc;
+                    let ap = tile.alpha_p[i] as f64;
+                    let am = tile.alpha_m[i] as f64;
+                    out[(r0 + lr) * cols + c0 + lc] =
+                        ((ap - am) / (ap / tmax + am / tmin)) as f32;
+                }
+            }
+        }
+    }
+
+    /// Ground-truth SP of every logical cell (allocating wrapper).
+    pub fn symmetric_points(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.len()];
+        self.symmetric_points_into(&mut out);
+        out
+    }
+
+    /// Mean asymmetric magnitude ||G(w)||² / n over the logical array —
+    /// the cell-weighted mean of the per-tile metric (delegates for a
+    /// single tile, so the 1×1 contract holds bit-exactly).
+    pub fn mean_g_sq(&self) -> f64 {
+        if self.tiles.len() == 1 {
+            return self.tiles[0].mean_g_sq();
+        }
+        if self.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = self
+            .tiles
+            .iter()
+            .map(|t| t.mean_g_sq() * t.len() as f64)
+            .sum();
+        s / self.len() as f64
+    }
+
+    /// `y[b, cols] = x[b, rows] @ W` through each tile's IO chain with
+    /// digital accumulation of the per-tile partial products (the
+    /// standard partial-sum tile architecture). Single-tile grids
+    /// delegate to the tile's own chain (bit-identical to
+    /// [`IoChain::mvm`]); multi-tile ADC noise comes from per-tile
+    /// sub-streams. `deterministic` consumes no randomness.
+    pub fn mvm(&self, x: &[f32], b: usize, rng: &mut Rng, deterministic: bool) -> Vec<f32> {
+        assert_eq!(x.len(), b * self.rows);
+        if self.tiles.len() == 1 {
+            return self.io[0].mvm(
+                x,
+                &self.tiles[0].w,
+                b,
+                self.rows,
+                self.cols,
+                rng,
+                deterministic,
+            );
+        }
+        let base = if deterministic { 0 } else { rng.next_u64() };
+        let mut y = vec![0.0f32; b * self.cols];
+        let mut xblock = vec![0.0f32; b * self.geom.tile_rows];
+        for (k, tile) in self.tiles.iter().enumerate() {
+            let (r0, c0) = self.tile_origin(k);
+            let xb = &mut xblock[..b * tile.rows];
+            for bi in 0..b {
+                xb[bi * tile.rows..(bi + 1) * tile.rows]
+                    .copy_from_slice(&x[bi * self.rows + r0..bi * self.rows + r0 + tile.rows]);
+            }
+            let mut sub = Rng::new(base, k as u64);
+            let part =
+                self.io[k].mvm(xb, &tile.w, b, tile.rows, tile.cols, &mut sub, deterministic);
+            for bi in 0..b {
+                let dst = &mut y[bi * self.cols + c0..bi * self.cols + c0 + tile.cols];
+                for (o, p) in dst.iter_mut().zip(&part[bi * tile.cols..(bi + 1) * tile.cols]) {
+                    *o += *p;
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+
+    #[test]
+    fn geometry_is_validated() {
+        assert!(TileGeometry::new(0, 32).is_err());
+        assert!(TileGeometry::new(32, 0).is_err());
+        let g = TileGeometry::new(32, 16).unwrap();
+        assert_eq!(g.grid(64, 64), (2, 4));
+        assert_eq!(g.grid(65, 17), (3, 2), "ragged edges round up");
+        assert_eq!(g.grid(1, 1), (1, 1));
+        assert_eq!(TileGeometry::default(), TileGeometry::new(256, 256).unwrap());
+    }
+
+    #[test]
+    fn ragged_grid_covers_every_cell_exactly_once() {
+        let geom = TileGeometry::new(32, 32).unwrap();
+        let arr = TiledArray::sample(
+            70,
+            50,
+            geom,
+            &presets::preset("om").unwrap(),
+            0.3,
+            0.1,
+            0.1,
+            &mut Rng::from_seed(3),
+        );
+        assert_eq!(arr.grid_shape(), (3, 2));
+        assert_eq!(arr.n_tiles(), 6);
+        let cells: usize = (0..arr.n_tiles()).map(|k| arr.tile(k).len()).sum();
+        assert_eq!(cells, arr.len());
+        // edge tiles are ragged
+        assert_eq!(arr.tile(5).rows, 6);
+        assert_eq!(arr.tile(5).cols, 18);
+    }
+
+    #[test]
+    fn ragged_uniform_det_update_matches_single_slab() {
+        // uniform cells: the det path is purely per-cell, so any tiling
+        // must reproduce the single-slab result bit-for-bit
+        let dev = SoftBounds::from_gamma_rho(1.0, 0.2);
+        let geom = TileGeometry::new(32, 32).unwrap();
+        let mut tiled = TiledArray::uniform(70, 50, geom, &dev, 0.01, 0.0);
+        let mut flat = DeviceArray::uniform(70, 50, &dev, 0.01, 0.0);
+        let dw: Vec<f32> = (0..70 * 50)
+            .map(|i| ((i % 13) as f32 - 6.0) * 0.005)
+            .collect();
+        for _ in 0..3 {
+            tiled.analog_update_det(&dw);
+            flat.analog_update_det(&dw);
+        }
+        let mut got = vec![0.0f32; tiled.len()];
+        tiled.read_into(0.0, &mut Rng::from_seed(1), &mut got);
+        assert_eq!(got, flat.w);
+        assert_eq!(tiled.pulse_count(), flat.pulse_count);
+    }
+
+    #[test]
+    fn parallel_and_serial_fanout_agree() {
+        let geom = TileGeometry::new(32, 32).unwrap();
+        let preset = presets::preset("om").unwrap();
+        let mut a =
+            TiledArray::sample(96, 96, geom, &preset, 0.3, 0.1, 0.1, &mut Rng::from_seed(7));
+        let mut b = a.clone();
+        a.set_parallel(false);
+        b.set_parallel(true);
+        b.set_workers(3);
+        let dw = vec![0.02f32; 96 * 96];
+        let mut ra = Rng::from_seed(9);
+        let mut rb = Rng::from_seed(9);
+        for _ in 0..4 {
+            a.analog_update(&dw, &mut ra);
+            b.analog_update(&dw, &mut rb);
+        }
+        let wa = a.read(0.0, &mut ra);
+        let wb = b.read(0.0, &mut rb);
+        assert_eq!(wa, wb);
+        assert_eq!(a.pulse_count(), b.pulse_count());
+    }
+
+    #[test]
+    fn symmetric_points_match_per_tile() {
+        let geom = TileGeometry::new(32, 32).unwrap();
+        let arr = TiledArray::sample(
+            48,
+            40,
+            geom,
+            &presets::preset("om").unwrap(),
+            0.4,
+            0.1,
+            0.1,
+            &mut Rng::from_seed(11),
+        );
+        let sps = arr.symmetric_points();
+        for k in 0..arr.n_tiles() {
+            let tile_sps = arr.tile(k).symmetric_points();
+            let (r0, c0) = ((k / 2) * 32, (k % 2) * 32);
+            for lr in 0..arr.tile(k).rows {
+                for lc in 0..arr.tile(k).cols {
+                    assert_eq!(
+                        sps[(r0 + lr) * arr.cols + c0 + lc],
+                        tile_sps[lr * arr.tile(k).cols + lc],
+                        "tile {k} cell ({lr},{lc})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_mvm_close_to_ideal() {
+        let geom = TileGeometry::new(16, 16).unwrap();
+        let dev = SoftBounds::symmetric();
+        let mut arr = TiledArray::uniform(48, 32, geom, &dev, 1e-4, 0.0);
+        let mut rng = Rng::from_seed(13);
+        let target: Vec<f32> = (0..48 * 32).map(|i| ((i % 11) as f32 - 5.0) / 20.0).collect();
+        for _ in 0..6 {
+            arr.program(&target, &mut rng);
+        }
+        let x: Vec<f32> = (0..2 * 48).map(|i| ((i % 7) as f32 - 3.0) / 4.0).collect();
+        let y = arr.mvm(&x, 2, &mut rng, true);
+        let mut got = vec![0.0f32; arr.len()];
+        arr.read_into(0.0, &mut rng, &mut got);
+        for bi in 0..2 {
+            for c in 0..32 {
+                let mut s = 0.0f32;
+                for r in 0..48 {
+                    s += x[bi * 48 + r] * got[r * 32 + c];
+                }
+                assert!(
+                    (y[bi * 32 + c] - s).abs() < 0.15,
+                    "({bi},{c}): {} vs {s}",
+                    y[bi * 32 + c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mean_g_sq_is_cell_weighted() {
+        let geom = TileGeometry::new(32, 32).unwrap();
+        let arr = TiledArray::sample(
+            40,
+            40,
+            geom,
+            &presets::preset("om").unwrap(),
+            0.3,
+            0.2,
+            0.1,
+            &mut Rng::from_seed(17),
+        );
+        let want: f64 = (0..arr.n_tiles())
+            .map(|k| arr.tile(k).mean_g_sq() * arr.tile(k).len() as f64)
+            .sum::<f64>()
+            / arr.len() as f64;
+        assert!((arr.mean_g_sq() - want).abs() < 1e-15);
+    }
+}

@@ -53,12 +53,13 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                  \n\
                  generic (methods by registry name, shared by BOTH the\n\
                  \u{20}   pulse level and the NN scale:\n\
-                 \u{20}   sgd|ttv1|ttv2|agad|residual|rider|erider|digital):\n\
+                 \u{20}   sgd|ttv1|ttv2|agad|residual|rider|erider|mtres|digital):\n\
                  \u{20}  rider train --model fcn --algo erider [--steps N] [--ref-mean M]\n\
                  \u{20}             [--ref-std S] [--preset hfo2|om|precise|ideal]\n\
                  \u{20}  rider psweep [--method[s] a,b|all] [--means ..] [--stds ..]\n\
                  \u{20}             [--steps N] [--seeds K] [--dim D] [--preset om]\n\
                  \u{20}             [--lr-fast A] [--lr-transfer B] [--eta E] [--flip-p P]\n\
+                 \u{20}             [--tiles T] [--stage-steps N]   (mtres stack)\n\
                  \u{20}             [--config file.toml]   ([optimizer] section)\n\
                  \u{20}  rider calibrate --pulses N [--side 128] [--dw-min 1e-3]\n\
                  \u{20}  rider all    (reduced-size full suite; writes runs/)"
@@ -89,7 +90,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         "psweep" => {
             use analog_rider::coordinator::sweep;
             use analog_rider::device::presets;
-            let methods = method_list(args, &["sgd", "ttv2", "agad", "erider"])?;
+            let methods = method_list(args, &["sgd", "ttv2", "agad", "erider", "mtres"])?;
             let means = args.get_f64_list("means", &[0.0, 0.4]);
             let stds = args.get_f64_list("stds", &[0.05, 0.2]);
             let seeds: Vec<u64> = (1..=args.get_u64("seeds", 3)).collect();
@@ -212,7 +213,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 }
                 "fig4" => {
                     // validate --methods before the expensive fig4_left sweep
-                    let methods = method_list(args, &["ttv2", "agad", "erider"])?;
+                    let methods = method_list(args, &["ttv2", "agad", "erider", "mtres"])?;
                     print!("{}", training::fig4_left(&ctx, args.get_f64("target", 1.0))?.render());
                     let means = args.get_f64_list("means", &[0.4]);
                     let stds = args.get_f64_list("stds", &[0.05, 0.4, 1.0]);
@@ -227,7 +228,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                     Ok(())
                 }
                 "table1" => {
-                    let methods = method_list(args, &["ttv2", "agad", "erider"])?;
+                    let methods = method_list(args, &["ttv2", "agad", "erider", "mtres"])?;
                     let means = args.get_f64_list("means", &[0.0, 0.4]);
                     let stds = args.get_f64_list("stds", &[0.05, 0.4, 1.0]);
                     let t = training::robustness_grid(
@@ -237,7 +238,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                     Ok(())
                 }
                 "table2" => {
-                    let methods = method_list(args, &["ttv2", "agad", "erider"])?;
+                    let methods = method_list(args, &["ttv2", "agad", "erider", "mtres"])?;
                     let means = args.get_f64_list("means", &[0.0, 0.4]);
                     let stds = args.get_f64_list("stds", &[0.05, 0.4, 1.0]);
                     let t = training::robustness_grid(
@@ -258,7 +259,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 }
                 "all" => {
                     // validate --methods before any of the sweeps run
-                    let grid_methods = method_list(args, &["ttv2", "agad", "erider"])?;
+                    let grid_methods = method_list(args, &["ttv2", "agad", "erider", "mtres"])?;
                     let p = fig1::Fig1Params {
                         side: 64,
                         dw_mins: vec![5e-3, 2e-3, 1e-3],

@@ -67,6 +67,15 @@ impl Hypers {
                 flip_p: 0.0,
                 ..erider
             },
+            // multi-tile residual: at NN scale the tile stack has no
+            // dedicated lowered step yet, so it runs the E-RIDER step
+            // as a chopper-free single-tile stand-in (the true stack
+            // lives at the pulse level, analog/mtres.rs)
+            Method::Mtres => Hypers {
+                eta: 0.0,
+                flip_p: 0.0,
+                ..erider
+            },
             Method::Digital => Hypers {
                 lr_fast: 0.0,
                 lr_transfer: 0.0,

@@ -1,10 +1,11 @@
 //! Generic PulseCost accounting across the whole optimizer registry:
 //! every method must build from its spec, accumulate update pulses,
 //! keep its cost counters monotone, and charge programming events only
-//! when the chopper is active. A method added to the registry is
-//! covered here with no further edits.
+//! when the chopper is active. The loops iterate `Method::ALL`, so a
+//! method added to the enum is covered here with no further edits (and
+//! a name missing from `METHODS` fails the mirror check below).
 
-use analog_rider::analog::optimizer::{self, AnalogOptimizer, OptimizerSpec};
+use analog_rider::analog::optimizer::{self, AnalogOptimizer, Method, OptimizerSpec};
 use analog_rider::device::presets;
 use analog_rider::optim::Quadratic;
 use analog_rider::util::rng::Rng;
@@ -19,12 +20,24 @@ fn build(spec: &OptimizerSpec, seed: u64) -> (Box<dyn AnalogOptimizer>, Quadrati
     (opt, obj, rng)
 }
 
+/// Every registry name, derived from the `Method` enum itself so new
+/// variants cannot dodge these tests.
+fn names() -> impl Iterator<Item = &'static str> {
+    Method::ALL.iter().map(|m| m.name())
+}
+
+#[test]
+fn method_all_mirrors_the_name_registry() {
+    let from_enum: Vec<&str> = names().collect();
+    assert_eq!(from_enum, optimizer::METHODS, "Method::ALL and METHODS diverged");
+}
+
 #[test]
 fn every_method_accumulates_update_pulses_monotonically() {
-    for name in optimizer::METHODS {
+    for name in names() {
         let spec = optimizer::spec(name).expect(name);
         let (mut opt, obj, mut rng) = build(&spec, 11);
-        assert_eq!(opt.name(), *name, "registry name must round-trip");
+        assert_eq!(opt.name(), name, "registry name must round-trip");
         let mut prev = opt.cost();
         for chunk in 0..10 {
             for _ in 0..10 {
@@ -41,7 +54,7 @@ fn every_method_accumulates_update_pulses_monotonically() {
             assert!(c.total_pulses() >= prev.total_pulses(), "{name}");
             prev = c;
         }
-        if *name == "digital" {
+        if name == "digital" {
             // the baseline arm is pulse-free by definition; its work is
             // accounted as digital ops
             assert_eq!(prev.total_pulses(), 0, "digital must stay pulse-free");
@@ -57,7 +70,7 @@ fn every_method_accumulates_update_pulses_monotonically() {
 
 #[test]
 fn flip_p_zero_implies_zero_programming_events() {
-    for name in optimizer::METHODS {
+    for name in names() {
         let mut spec = optimizer::spec(name).expect(name);
         spec.flip_p = 0.0;
         let (mut opt, obj, mut rng) = build(&spec, 13);
@@ -74,14 +87,14 @@ fn flip_p_zero_implies_zero_programming_events() {
 
 #[test]
 fn calibration_pulses_charged_only_by_two_stage() {
-    for name in optimizer::METHODS {
+    for name in names() {
         let spec = optimizer::spec(name).expect(name);
         let (mut opt, obj, mut rng) = build(&spec, 17);
         for _ in 0..20 {
             opt.step(&obj, &mut rng);
         }
         let c = opt.cost();
-        if *name == "residual" {
+        if name == "residual" {
             assert_eq!(
                 c.calibration_pulses,
                 spec.zs_pulses * DIM as u64,
@@ -95,7 +108,7 @@ fn calibration_pulses_charged_only_by_two_stage() {
 
 #[test]
 fn set_reference_round_trips_through_the_trait() {
-    for name in optimizer::METHODS {
+    for name in names() {
         let spec = optimizer::spec(name).expect(name);
         let (mut opt, _obj, _rng) = build(&spec, 19);
         let q = vec![0.25f32; DIM];
@@ -107,13 +120,13 @@ fn set_reference_round_trips_through_the_trait() {
 #[test]
 fn both_layers_accept_the_same_name_set_and_err_on_unknown() {
     use analog_rider::train::TrainConfig;
-    for name in optimizer::METHODS {
+    for name in names() {
         // pulse level
         optimizer::spec_or_err(name).expect(name);
         // NN scale: the same registry drives TrainConfig; no artifacts
         // are needed to resolve a method name
         let cfg = TrainConfig::by_name("fcn", name).expect(name);
-        assert_eq!(cfg.algo(), *name, "registry name must round-trip");
+        assert_eq!(cfg.algo(), name, "registry name must round-trip");
     }
     // unknown names are an Err listing the registry — never a panic
     let err = optimizer::spec_or_err("sgdd").unwrap_err();
@@ -126,9 +139,9 @@ fn nn_zs_policy_defaults_come_from_the_registry() {
     use analog_rider::train::TrainConfig;
     // only the two-stage residual pipeline calibrates by default; its
     // budget is the spec's zs_pulses
-    for name in optimizer::METHODS {
+    for name in names() {
         let cfg = TrainConfig::by_name("fcn", name).unwrap();
-        if *name == "residual" {
+        if name == "residual" {
             assert_eq!(cfg.zs_pulses, cfg.spec.zs_pulses);
             assert!(cfg.zs_pulses > 0, "residual must calibrate by default");
         } else {

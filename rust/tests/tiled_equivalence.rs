@@ -1,0 +1,140 @@
+//! Pins the tiled-substrate determinism contract (see
+//! `device/tile.rs` module docs): a single-tile `TiledArray` is
+//! bit-identical to a bare `DeviceArray` on every path, multi-tile
+//! results never depend on the worker-thread count or the
+//! serial/parallel schedule, and ragged tilings cover the logical
+//! array exactly.
+
+use analog_rider::device::{presets, DeviceArray, SoftBounds, TileGeometry, TiledArray};
+use analog_rider::util::rng::Rng;
+
+const ROWS: usize = 48;
+const COLS: usize = 40;
+
+/// A geometry at least as large as the array → a 1×1 grid.
+fn single_tile_geom() -> TileGeometry {
+    TileGeometry::new(64, 64).unwrap()
+}
+
+fn sampled_pair(seed: u64) -> (TiledArray, DeviceArray) {
+    let preset = presets::preset("om").unwrap();
+    let tiled = TiledArray::sample(
+        ROWS,
+        COLS,
+        single_tile_geom(),
+        &preset,
+        0.4,
+        0.2,
+        0.1,
+        &mut Rng::from_seed(seed),
+    );
+    let flat = DeviceArray::sample(ROWS, COLS, &preset, 0.4, 0.2, 0.1, &mut Rng::from_seed(seed));
+    (tiled, flat)
+}
+
+fn weights(arr: &TiledArray) -> Vec<f32> {
+    let mut out = vec![0.0f32; arr.len()];
+    arr.read_into(0.0, &mut Rng::from_seed(0), &mut out);
+    out
+}
+
+#[test]
+fn single_tile_sampling_is_bit_identical() {
+    let (tiled, flat) = sampled_pair(21);
+    assert_eq!(tiled.grid_shape(), (1, 1));
+    assert_eq!(weights(&tiled), flat.w);
+    assert_eq!(tiled.symmetric_points(), flat.symmetric_points());
+    assert_eq!(tiled.mean_g_sq(), flat.mean_g_sq());
+}
+
+#[test]
+fn single_tile_det_update_is_bit_identical() {
+    let (mut tiled, mut flat) = sampled_pair(22);
+    let dw: Vec<f32> = (0..ROWS * COLS)
+        .map(|i| ((i % 13) as f32 - 6.0) * 0.01)
+        .collect();
+    for _ in 0..5 {
+        tiled.analog_update_det(&dw);
+        flat.analog_update_det(&dw);
+    }
+    assert_eq!(weights(&tiled), flat.w);
+    assert_eq!(tiled.pulse_count(), flat.pulse_count);
+}
+
+#[test]
+fn single_tile_stochastic_paths_are_bit_identical() {
+    // OM has c2c > 0, so every op below consumes randomness; the
+    // single-tile fast path must hand the caller's RNG straight through
+    let (mut tiled, mut flat) = sampled_pair(23);
+    let mut rt = Rng::from_seed(101);
+    let mut rf = Rng::from_seed(101);
+    let dw: Vec<f32> = (0..ROWS * COLS)
+        .map(|i| ((i % 7) as f32 - 3.0) * 0.02)
+        .collect();
+    for _ in 0..4 {
+        tiled.analog_update(&dw, &mut rt);
+        flat.analog_update(&dw, &mut rf);
+    }
+    tiled.pulse_all(true, &mut rt);
+    flat.pulse_all(true, &mut rf);
+    tiled.pulse_all_random(&mut rt);
+    flat.pulse_all_random(&mut rf);
+    let target = vec![0.1f32; ROWS * COLS];
+    tiled.program(&target, &mut rt);
+    flat.program(&target, &mut rf);
+    assert_eq!(weights(&tiled), flat.w);
+    assert_eq!(tiled.pulse_count(), flat.pulse_count);
+    // noisy reads draw from the same (shared) stream position
+    let mut got_t = vec![0.0f32; tiled.len()];
+    let mut got_f = vec![0.0f32; flat.len()];
+    tiled.read_into(0.02, &mut rt, &mut got_t);
+    flat.read_into(0.02, &mut rf, &mut got_f);
+    assert_eq!(got_t, got_f);
+}
+
+#[test]
+fn worker_count_never_changes_results() {
+    let geom = TileGeometry::new(16, 16).unwrap();
+    let preset = presets::preset("om").unwrap();
+    let base = TiledArray::sample(70, 50, geom, &preset, 0.3, 0.1, 0.1, &mut Rng::from_seed(31));
+    let dw: Vec<f32> = (0..70 * 50)
+        .map(|i| ((i % 11) as f32 - 5.0) * 0.01)
+        .collect();
+    let run = |mut arr: TiledArray, parallel: bool, workers: usize| {
+        arr.set_parallel(parallel);
+        arr.set_workers(workers);
+        let mut rng = Rng::from_seed(77);
+        for _ in 0..3 {
+            arr.analog_update(&dw, &mut rng);
+        }
+        arr.pulse_all_random(&mut rng);
+        let noisy = arr.read(0.02, &mut rng);
+        (weights(&arr), noisy, arr.pulse_count())
+    };
+    let serial = run(base.clone(), false, 0);
+    for workers in [1, 2, 4, 64] {
+        let par = run(base.clone(), true, workers);
+        assert_eq!(par, serial, "workers = {workers}");
+    }
+}
+
+#[test]
+fn ragged_tiling_matches_single_slab_on_uniform_cells() {
+    // uniform cells make the det path purely per-cell, so a ragged
+    // 32x32 tiling of 70x50 must reproduce the flat array bit-for-bit
+    let dev = SoftBounds::from_gamma_rho(1.0, 0.25);
+    let geom = TileGeometry::new(32, 32).unwrap();
+    let mut tiled = TiledArray::uniform(70, 50, geom, &dev, 0.01, 0.0);
+    let mut flat = DeviceArray::uniform(70, 50, &dev, 0.01, 0.0);
+    assert_eq!(tiled.grid_shape(), (3, 2));
+    let dw: Vec<f32> = (0..70 * 50)
+        .map(|i| ((i % 17) as f32 - 8.0) * 0.004)
+        .collect();
+    for _ in 0..4 {
+        tiled.analog_update_det(&dw);
+        flat.analog_update_det(&dw);
+    }
+    assert_eq!(weights(&tiled), flat.w);
+    assert_eq!(tiled.pulse_count(), flat.pulse_count);
+    assert_eq!(tiled.symmetric_points(), flat.symmetric_points());
+}
