@@ -1,8 +1,16 @@
 #!/usr/bin/env bash
 # CI gate for the Rust substrate.
 #
-#   ./ci.sh         tier-1 gate (build + tests), then e2e, then doc+lint
-#   ./ci.sh lint    lint only (fmt --check, clippy -D warnings)
+#   ./ci.sh         tier-1 gate (build + tests), then verify, then e2e,
+#                   then doc+lint
+#   ./ci.sh lint    lint only (fmt --check, clippy -D warnings plus the
+#                   repo deny-set: undocumented unsafe blocks)
+#   ./ci.sh verify  static plan verification: `rider verify` re-checks
+#                   every compiled artifact plan (def-before-use, alias
+#                   resolution, buffer-reuse soundness, shape
+#                   re-inference, fusion legality, while contracts)
+#                   without executing; a "skipping:" line fails the
+#                   stage — the artifacts must be present
 #   ./ci.sh doc     rustdoc gate only (cargo doc --no-deps with
 #                   RUSTDOCFLAGS="-D warnings": broken links and
 #                   missing docs on the gated modules fail)
@@ -37,8 +45,23 @@ cd "$(dirname "$0")"
 lint() {
     echo "== cargo fmt --check =="
     cargo fmt --check
-    echo "== cargo clippy (all targets, -D warnings) =="
-    cargo clippy --all-targets -- -D warnings
+    echo "== cargo clippy (all targets, -D warnings + repo deny-set) =="
+    cargo clippy --all-targets -- -D warnings \
+        -D clippy::undocumented_unsafe_blocks
+}
+
+verify() {
+    echo "== verify: static plan checks over artifacts/ =="
+    local out
+    out="$(mktemp)"
+    cargo run --release --quiet -- verify 2>&1 | tee "$out"
+    if grep -q "skipping:" "$out"; then
+        rm -f "$out"
+        echo "verify FAILED: artifacts not built — the plan checks must run"
+        exit 1
+    fi
+    rm -f "$out"
+    echo "verify OK"
 }
 
 doc() {
@@ -147,7 +170,8 @@ e2e() {
     local out
     out="$(mktemp)"
     cargo test --release --test runtime_integration --test trainer_integration \
-        --test interp_golden --test plan_equivalence -- --nocapture 2>&1 | tee "$out"
+        --test interp_golden --test plan_equivalence --test verify_plans \
+        -- --nocapture 2>&1 | tee "$out"
     if grep -q "skipping:" "$out"; then
         rm -f "$out"
         echo "e2e FAILED: artifact-gated tests skipped — the NN-scale path must run"
@@ -174,6 +198,10 @@ case "${1:-}" in
         e2e
         exit 0
         ;;
+    verify)
+        verify
+        exit 0
+        ;;
     bench)
         bench
         if [ "${2:-}" = "--check" ]; then
@@ -189,6 +217,7 @@ cargo build --release --all-targets
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+verify
 e2e
 doc
 lint

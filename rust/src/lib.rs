@@ -11,6 +11,8 @@
 //!   artifacts, the training coordinator, and the experiment harness
 //!   that regenerates every figure and table of the paper.
 
+#![forbid(unsafe_code)]
+
 pub mod analog;
 pub mod cli;
 pub mod config;

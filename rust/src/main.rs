@@ -62,6 +62,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                  \u{20}             [--tiles T] [--stage-steps N]   (mtres stack)\n\
                  \u{20}             [--config file.toml]   ([optimizer] section)\n\
                  \u{20}  rider calibrate --pulses N [--side 128] [--dw-min 1e-3]\n\
+                 \u{20}  rider verify (statically check every compiled artifact plan)\n\
                  \u{20}  rider all    (reduced-size full suite; writes runs/)"
             );
             Ok(())
@@ -159,6 +160,62 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 100.0 * res.rel_mean_error(),
                 res.pulses
             );
+            Ok(())
+        }
+        "verify" => {
+            let dir = Registry::default_dir();
+            if !dir.join("manifest.json").exists() {
+                println!("skipping: artifacts not built");
+                return Ok(());
+            }
+            let reg = Registry::load(&dir)?;
+            let mut total = analog_rider::runtime::VerifyStats::default();
+            let mut failures = 0usize;
+            for (name, spec) in &reg.artifacts {
+                let src = std::fs::read_to_string(&spec.file)?;
+                match analog_rider::runtime::verify_hlo_text(&src) {
+                    Ok(st) => {
+                        println!(
+                            "ok   {name}: {} instrs, {} steps, {} fused groups \
+                             ({} members), {} buffers / {} slots (reuse {:.2}x)",
+                            st.instructions,
+                            st.steps,
+                            st.groups,
+                            st.members,
+                            st.buffers,
+                            st.buffer_slots,
+                            st.reuse_ratio()
+                        );
+                        total.computations += st.computations;
+                        total.instructions += st.instructions;
+                        total.steps += st.steps;
+                        total.groups += st.groups;
+                        total.members += st.members;
+                        total.buffers += st.buffers;
+                        total.buffer_slots += st.buffer_slots;
+                    }
+                    Err(e) => {
+                        failures += 1;
+                        println!("FAIL {name}: {e}");
+                    }
+                }
+            }
+            println!(
+                "{} artifacts, {} failures; {} instrs, {} steps, {} fused groups \
+                 ({} members), {} buffers / {} slots (reuse {:.2}x)",
+                reg.artifacts.len(),
+                failures,
+                total.instructions,
+                total.steps,
+                total.groups,
+                total.members,
+                total.buffers,
+                total.buffer_slots,
+                total.reuse_ratio()
+            );
+            if failures > 0 {
+                anyhow::bail!("{failures} artifact plan(s) failed verification");
+            }
             Ok(())
         }
         sub => {

@@ -730,7 +730,10 @@ pub fn parse(text: &str) -> Result<HloModule, XlaError> {
             continue;
         }
         if line == "}" {
-            blocks.push(cur.take().unwrap());
+            match cur.take() {
+                Some(b) => blocks.push(b),
+                None => return Err(err("unmatched '}' outside a computation")),
+            }
             continue;
         }
         if let Some(b) = cur.as_mut() {

@@ -4,19 +4,23 @@
 //! Layering: [`artifact`] parses the manifest, [`interp`] parses HLO
 //! text and defines the reference op semantics, [`plan`] compiles a
 //! parsed module into the planned execution engine (the hot path),
-//! [`xla`] mirrors the PJRT API surface over both, and [`executor`]
-//! caches compiled executables and moves host tensors across the
-//! boundary.
+//! [`xla`] mirrors the PJRT API surface over both, [`verify`]
+//! statically cross-checks compiled plans without executing them, and
+//! [`executor`] caches compiled executables and moves host tensors
+//! across the boundary.
 
 #![warn(missing_docs)]
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
 
 pub mod artifact;
 pub mod executor;
 pub mod interp;
 pub mod literal;
 pub mod plan;
+pub mod verify;
 pub mod xla;
 
 pub use artifact::{ArtifactSpec, Dtype, IoSpec, ModelSpec, Registry, StateLeaf};
 pub use executor::Executor;
 pub use literal::HostTensor;
+pub use verify::{verify_hlo_text, verify_plan, VerifyError, VerifyStats};

@@ -56,8 +56,13 @@ const MAX_RANK: usize = 16;
 // ------------------------------------------------------------ plan types
 
 /// Where a slot's value lives at run time (resolved at plan time).
-#[derive(Clone, Copy, Debug)]
-enum ValSrc {
+///
+/// `pub(crate)` (with the other plan data types below) so the static
+/// verifier in [`crate::runtime::verify`] can inspect compiled plans
+/// through [`Plan::inspect`] — the verifier reads these records but
+/// re-derives everything else independently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum ValSrc {
     /// Pooled buffer in the computation's cached state.
     Buf(usize),
     /// Plan-owned literal (constants and folded iotas).
@@ -90,13 +95,13 @@ enum CSrc {
 
 /// Slab element type of a fused member.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum SDt {
+pub(crate) enum SDt {
     F32,
     U32,
     Pred,
 }
 
-fn to_sdt(dt: Dt) -> Option<SDt> {
+pub(crate) fn to_sdt(dt: Dt) -> Option<SDt> {
     match dt {
         Dt::F32 => Some(SDt::F32),
         Dt::U32 => Some(SDt::U32),
@@ -107,22 +112,22 @@ fn to_sdt(dt: Dt) -> Option<SDt> {
 
 /// A fused operand: an earlier member's slab or an external input.
 #[derive(Clone, Copy, Debug)]
-enum FRef {
+pub(crate) enum FRef {
     Slab(usize),
     Ext(usize),
 }
 
 /// External input of a fused group.
 #[derive(Clone, Copy, Debug)]
-struct ExtIn {
-    src: ValSrc,
+pub(crate) struct ExtIn {
+    pub(crate) src: ValSrc,
     /// numel == 1: read once and splat.
-    scalar: bool,
+    pub(crate) scalar: bool,
 }
 
 /// One fused member's operation over a block.
 #[derive(Clone, Copy, Debug)]
-enum FOp {
+pub(crate) enum FOp {
     Bin(BinOp, FRef, FRef),
     Un(UnOp, FRef),
     Cmp(Cmp, SDt, FRef, FRef),
@@ -133,27 +138,29 @@ enum FOp {
 }
 
 #[derive(Clone, Debug)]
-struct FMember {
-    op: FOp,
-    sdt: SDt,
+pub(crate) struct FMember {
+    pub(crate) op: FOp,
+    pub(crate) sdt: SDt,
 }
 
 /// A fused elementwise group: executed as one blocked loop at the
 /// program position of its root (the single member with external
 /// consumers).
 #[derive(Clone, Debug)]
-struct Group {
-    root: usize,
-    numel: usize,
-    /// Ascending instruction order (operands precede consumers); the
-    /// root is the last member.
-    members: Vec<FMember>,
-    ext: Vec<ExtIn>,
+pub(crate) struct Group {
+    pub(crate) root: usize,
+    pub(crate) numel: usize,
+    /// Member instruction indices, ascending (operands precede
+    /// consumers); the root is the last member. `members[k]` is the
+    /// compiled form of instruction `slots[k]`.
+    pub(crate) slots: Vec<usize>,
+    pub(crate) members: Vec<FMember>,
+    pub(crate) ext: Vec<ExtIn>,
 }
 
 /// One executable step of a computation's program.
 #[derive(Clone, Copy, Debug)]
-enum Step {
+pub(crate) enum Step {
     /// Run instruction `i` into its planned buffer (or run its `while`).
     Prim(usize),
     /// Run fused group `g`.
@@ -161,17 +168,17 @@ enum Step {
 }
 
 /// Compiled program of one computation.
-struct CompPlan {
-    steps: Vec<Step>,
-    src: Vec<ValSrc>,
-    consts: Vec<Literal>,
-    groups: Vec<Group>,
-    buf_dt: Vec<Dt>,
-    buf_cap: Vec<usize>,
-    n_lits: usize,
-    n_params: usize,
-    root: usize,
-    max_members: usize,
+pub(crate) struct CompPlan {
+    pub(crate) steps: Vec<Step>,
+    pub(crate) src: Vec<ValSrc>,
+    pub(crate) consts: Vec<Literal>,
+    pub(crate) groups: Vec<Group>,
+    pub(crate) buf_dt: Vec<Dt>,
+    pub(crate) buf_cap: Vec<usize>,
+    pub(crate) n_lits: usize,
+    pub(crate) n_params: usize,
+    pub(crate) root: usize,
+    pub(crate) max_members: usize,
 }
 
 // --------------------------------------------------------- runtime state
@@ -384,6 +391,15 @@ impl Plan {
     /// bit-identical for every setting.
     pub fn set_threads(&self, n: usize) {
         self.threads.set(n.max(1));
+    }
+
+    /// Read-only view of the compiled plan for the static verifier
+    /// (`runtime::verify`): the module plus every per-computation
+    /// program. Deliberately the *only* non-test window into plan
+    /// internals — the planner's derivation helpers stay private so the
+    /// verifier cannot accidentally share them.
+    pub(crate) fn inspect(&self) -> PlanInspect<'_> {
+        PlanInspect { module: &self.module, comps: &self.comps }
     }
 
     /// Validate `args` against the entry parameters and run the planned
@@ -748,6 +764,30 @@ impl Plan {
             }
         }
         Ok(())
+    }
+}
+
+/// Borrowed, read-only introspection surface over a compiled [`Plan`]:
+/// everything the static verifier may look at.
+pub(crate) struct PlanInspect<'p> {
+    /// The parsed module the plan was compiled from.
+    pub(crate) module: &'p HloModule,
+    /// One compiled program per computation, in `module.computations`
+    /// order.
+    pub(crate) comps: &'p [CompPlan],
+}
+
+/// Test-only mutation hooks: the negative tests in `runtime::verify`
+/// corrupt real compiled plans through these and assert that the
+/// matching diagnostic fires.
+#[cfg(test)]
+impl Plan {
+    pub(crate) fn comps_mut(&mut self) -> &mut Vec<CompPlan> {
+        &mut self.comps
+    }
+
+    pub(crate) fn module_mut(&mut self) -> &mut HloModule {
+        Rc::make_mut(&mut self.module)
     }
 }
 
@@ -1898,7 +1938,8 @@ fn plan_comp(module: &HloModule, ci: usize) -> Result<CompPlan, XlaError> {
         members.sort_unstable();
         group_slots.push(members);
     }
-    let group_root: Vec<usize> = group_slots.iter().map(|m| *m.last().unwrap()).collect();
+    let group_root: Vec<usize> =
+        group_slots.iter().map(|m| *m.last().expect("groups have >= 2 members")).collect();
 
     // last use per producing slot, in *step* positions (a use inside a
     // fused group pins the value until the group's root executes)
@@ -1914,7 +1955,7 @@ fn plan_comp(module: &HloModule, ci: usize) -> Result<CompPlan, XlaError> {
         if !live[s] || uses[s].is_empty() {
             continue;
         }
-        let last = uses[s].iter().map(|&c| step_of(c)).max().unwrap();
+        let last = uses[s].iter().map(|&c| step_of(c)).max().expect("uses checked non-empty");
         if last != VIRT {
             free_at[last].push(s);
         }
@@ -2012,7 +2053,7 @@ fn plan_comp(module: &HloModule, ci: usize) -> Result<CompPlan, XlaError> {
             }
             _ => {
                 let is_member = member_of[i].is_some();
-                let is_root = is_member && group_root[member_of[i].unwrap()] == i;
+                let is_root = matches!(member_of[i], Some(g) if group_root[g] == i);
                 if is_member && !is_root {
                     // slab-only member: no buffer, no step
                     continue;
@@ -2032,7 +2073,7 @@ fn plan_comp(module: &HloModule, ci: usize) -> Result<CompPlan, XlaError> {
                 };
                 src[i] = ValSrc::Buf(b);
                 if is_root {
-                    let gid = member_of[i].unwrap();
+                    let gid = member_of[i].expect("fused root is a member");
                     group_built[gid] = true;
                     groups.push(build_group(
                         comp,
@@ -2085,7 +2126,7 @@ fn build_group(
     src: &[ValSrc],
     lit_of: &BTreeMap<usize, usize>,
 ) -> Result<Group, XlaError> {
-    let root = *slots.last().unwrap();
+    let root = *slots.last().expect("groups have >= 2 members");
     let numel = comp.instrs[root].shape.numel();
     let midx: BTreeMap<usize, usize> = slots.iter().enumerate().map(|(k, &s)| (s, k)).collect();
     let mut pool = ExtPool {
@@ -2134,6 +2175,7 @@ fn build_group(
     Ok(Group {
         root,
         numel,
+        slots: slots.to_vec(),
         members,
         ext: pool.ext,
     })

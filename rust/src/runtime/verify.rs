@@ -1,0 +1,1698 @@
+//! Static plan verifier: independent soundness checking for the
+//! planned HLO engine.
+//!
+//! [`verify_plan`] re-derives, **without executing**, everything the
+//! planner ([`crate::runtime::plan`]) promises about a compiled
+//! [`Plan`] and cross-checks the plan's recorded metadata against its
+//! own derivation:
+//!
+//! 1. **Program** — every step defines a slot exactly once, every read
+//!    happens strictly after its definition, and the plan's bookkeeping
+//!    tables (src, consts, literal slots, parameters, root) are
+//!    internally consistent.
+//! 2. **Alias** — reshape / get-tuple-element chains terminate (no
+//!    cycles) and every alias records exactly the value source of its
+//!    resolved producer.
+//! 3. **Buffer** — the reuse plan is sound: recompute live ranges from
+//!    the reads and prove that any two slots sharing a pooled buffer
+//!    have disjoint ranges, with matching dtype and sufficient
+//!    capacity.
+//! 4. **Shape** — full per-op shape/dtype re-inference over the parsed
+//!    module, compared against every instruction's declared shape.
+//! 5. **Fusion** — fused groups are legal: all members elementwise with
+//!    one block length, non-root members have no outside consumers,
+//!    slab references point at earlier members, external inputs carry
+//!    the resolved source and the right scalar-splat flag.
+//! 6. **While** — loop state contracts: condition/body take exactly the
+//!    loop state shape and the body's root returns it; the condition
+//!    root is a scalar predicate.
+//!
+//! The verifier deliberately shares **no derivation code** with the
+//! planner (same design as `execute` vs `execute_ref`): it reads the
+//! plan's records through [`crate::runtime::plan::Plan::inspect`] but
+//! re-resolves aliases, re-infers shapes, and re-computes liveness from
+//! the instruction list alone. A planner bug and a matching verifier
+//! bug would have to be introduced independently to slip through.
+//!
+//! Wired in at three layers: `PjRtClient::compile` (debug builds, or
+//! `RIDER_VERIFY=1` in release), the `rider verify` CLI subcommand
+//! (every module under `artifacts/`), and the `./ci.sh verify` stage.
+
+use crate::runtime::interp::{
+    iota_values, lit_dims, lit_dt, BinOp, Computation, Dt, HloModule, Op, Shape, UnOp,
+};
+use crate::runtime::plan::{to_sdt, CompPlan, FOp, FRef, Group, Plan, SDt, Step, ValSrc};
+use crate::runtime::xla::{Data, Literal, XlaError};
+
+/// Maximum array rank the planned engine's fixed-size index registers
+/// support (re-stated here independently of the planner's constant).
+const MAX_RANK: usize = 16;
+
+// --------------------------------------------------------------- errors
+
+/// One verification failure, tagged by check class. Each variant names
+/// the computation it fired in plus a human-readable detail string; the
+/// negative tests assert on the variant, never on the text.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VerifyError {
+    /// Def-before-use / single-definition / bookkeeping-table failure.
+    Program {
+        /// Computation the check fired in.
+        comp: String,
+        /// What went wrong.
+        detail: String,
+    },
+    /// Alias chain does not terminate or records the wrong source.
+    Alias {
+        /// Computation the check fired in.
+        comp: String,
+        /// What went wrong.
+        detail: String,
+    },
+    /// Buffer-plan unsoundness: overlapping live ranges, dtype or
+    /// capacity mismatch on a pooled buffer.
+    Buffer {
+        /// Computation the check fired in.
+        comp: String,
+        /// What went wrong.
+        detail: String,
+    },
+    /// Declared shape/dtype disagrees with re-inference.
+    Shape {
+        /// Computation the check fired in.
+        comp: String,
+        /// What went wrong.
+        detail: String,
+    },
+    /// Fusion-group illegality.
+    Fusion {
+        /// Computation the check fired in.
+        comp: String,
+        /// What went wrong.
+        detail: String,
+    },
+    /// `while` loop state contract violation.
+    While {
+        /// Computation the check fired in.
+        comp: String,
+        /// What went wrong.
+        detail: String,
+    },
+}
+
+impl VerifyError {
+    fn program(comp: &str, detail: impl Into<String>) -> VerifyError {
+        VerifyError::Program { comp: comp.into(), detail: detail.into() }
+    }
+
+    fn alias(comp: &str, detail: impl Into<String>) -> VerifyError {
+        VerifyError::Alias { comp: comp.into(), detail: detail.into() }
+    }
+
+    fn buffer(comp: &str, detail: impl Into<String>) -> VerifyError {
+        VerifyError::Buffer { comp: comp.into(), detail: detail.into() }
+    }
+
+    fn shape(comp: &str, detail: impl Into<String>) -> VerifyError {
+        VerifyError::Shape { comp: comp.into(), detail: detail.into() }
+    }
+
+    fn fusion(comp: &str, detail: impl Into<String>) -> VerifyError {
+        VerifyError::Fusion { comp: comp.into(), detail: detail.into() }
+    }
+
+    fn whilev(comp: &str, detail: impl Into<String>) -> VerifyError {
+        VerifyError::While { comp: comp.into(), detail: detail.into() }
+    }
+
+    /// The check class, as a stable diagnostic prefix.
+    pub fn class(&self) -> &'static str {
+        match self {
+            VerifyError::Program { .. } => "Program",
+            VerifyError::Alias { .. } => "Alias",
+            VerifyError::Buffer { .. } => "Buffer",
+            VerifyError::Shape { .. } => "Shape",
+            VerifyError::Fusion { .. } => "Fusion",
+            VerifyError::While { .. } => "While",
+        }
+    }
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (comp, detail) = match self {
+            VerifyError::Program { comp, detail }
+            | VerifyError::Alias { comp, detail }
+            | VerifyError::Buffer { comp, detail }
+            | VerifyError::Shape { comp, detail }
+            | VerifyError::Fusion { comp, detail }
+            | VerifyError::While { comp, detail } => (comp, detail),
+        };
+        write!(f, "{}[{}]: {}", self.class(), comp, detail)
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+// ---------------------------------------------------------------- stats
+
+/// Aggregate statistics of a verified module, summed over its
+/// computations (the `rider verify` subcommand prints these per
+/// module).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VerifyStats {
+    /// Computations in the module.
+    pub computations: usize,
+    /// Total parsed instructions.
+    pub instructions: usize,
+    /// Executable steps across all computation programs.
+    pub steps: usize,
+    /// Fused elementwise groups.
+    pub groups: usize,
+    /// Fused members across all groups.
+    pub members: usize,
+    /// Pooled buffers allocated by the plans.
+    pub buffers: usize,
+    /// Buffer-backed slots (each occupies one pooled buffer for its
+    /// live range).
+    pub buffer_slots: usize,
+}
+
+impl VerifyStats {
+    /// Buffer reuse ratio: buffer-backed slots per pooled buffer
+    /// (1.0 when nothing is reused or no buffers exist).
+    pub fn reuse_ratio(&self) -> f64 {
+        if self.buffers == 0 {
+            1.0
+        } else {
+            self.buffer_slots as f64 / self.buffers as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------- entry points
+
+/// Statically verify a compiled [`Plan`] against its parsed module.
+///
+/// Returns aggregate [`VerifyStats`] on success, or the first
+/// [`VerifyError`] found. Runs all shape/while checks over every
+/// computation first, then the program / alias / buffer / fusion
+/// checks per computation.
+pub fn verify_plan(plan: &Plan) -> Result<VerifyStats, VerifyError> {
+    let ins = plan.inspect();
+    let module = ins.module;
+    let comps = ins.comps;
+    if comps.len() != module.computations.len() {
+        return Err(VerifyError::program("<module>", "plan/computation count mismatch"));
+    }
+    for ci in 0..module.computations.len() {
+        check_shapes(module, ci)?;
+    }
+    let mut stats = VerifyStats {
+        computations: module.computations.len(),
+        ..VerifyStats::default()
+    };
+    for (ci, cp) in comps.iter().enumerate() {
+        check_comp(module, ci, cp, &mut stats)?;
+    }
+    Ok(stats)
+}
+
+/// Parse, plan, and statically verify one HLO-text module (the CLI
+/// `verify` subcommand and the artifact-sweep integration test).
+pub fn verify_hlo_text(src: &str) -> Result<VerifyStats, XlaError> {
+    let module = crate::runtime::interp::parse(src)?;
+    let plan = Plan::new(std::rc::Rc::new(module))?;
+    verify_plan(&plan).map_err(|e| XlaError(format!("plan verification failed: {e}")))
+}
+
+// ------------------------------------------------------ alias resolution
+
+/// A resolved (alias-free) value source: a real producing instruction,
+/// or one element of a tuple-shaped parameter / `while` result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Res {
+    Inst(usize),
+    ParamPart(usize, usize),
+    WhilePart(usize, usize),
+}
+
+/// Follow reshape / gte chains from operand `o` to a real producer.
+/// `fuel` bounds the walk (instruction count + 1): running out means
+/// the chain cycles, which the planner can never emit.
+fn resolve(comp: &Computation, cname: &str, mut o: usize, mut fuel: usize) -> Result<Res, VerifyError> {
+    loop {
+        if fuel == 0 {
+            return Err(VerifyError::alias(
+                cname,
+                format!("alias chain at slot {o} does not terminate (cycle)"),
+            ));
+        }
+        fuel -= 1;
+        let Some(ins) = comp.instrs.get(o) else {
+            return Err(VerifyError::program(cname, format!("operand index {o} out of range")));
+        };
+        match &ins.op {
+            Op::Reshape => {
+                let (Some(&next), 1) = (ins.operands.first(), ins.operands.len()) else {
+                    return Err(VerifyError::program(cname, format!("reshape at {o}: operand count")));
+                };
+                o = next;
+            }
+            Op::Gte { index } => {
+                let (Some(&inner), 1) = (ins.operands.first(), ins.operands.len()) else {
+                    return Err(VerifyError::program(cname, format!("gte at {o}: operand count")));
+                };
+                let j = *index;
+                match resolve(comp, cname, inner, fuel)? {
+                    Res::Inst(t) => match &comp.instrs[t].op {
+                        Op::Tuple => match comp.instrs[t].operands.get(j) {
+                            Some(&e) => o = e,
+                            None => {
+                                return Err(VerifyError::alias(
+                                    cname,
+                                    format!("gte at {o}: index {j} out of range"),
+                                ));
+                            }
+                        },
+                        Op::While { .. } => return Ok(Res::WhilePart(t, j)),
+                        Op::Parameter(_) => return Ok(Res::ParamPart(t, j)),
+                        _ => {
+                            return Err(VerifyError::alias(
+                                cname,
+                                format!("gte at {o}: operand is not tuple-valued"),
+                            ));
+                        }
+                    },
+                    Res::ParamPart(..) | Res::WhilePart(..) => {
+                        return Err(VerifyError::alias(
+                            cname,
+                            format!("gte at {o}: nested tuple parts"),
+                        ));
+                    }
+                }
+            }
+            _ => return Ok(Res::Inst(o)),
+        }
+    }
+}
+
+/// Shape of a resolved source (element shape for tuple parts).
+fn resolved_shape<'c>(comp: &'c Computation, cname: &str, r: Res) -> Result<&'c Shape, VerifyError> {
+    match r {
+        Res::Inst(s) => Ok(&comp.instrs[s].shape),
+        Res::ParamPart(p, j) | Res::WhilePart(p, j) => match &comp.instrs[p].shape {
+            Shape::Tuple(parts) => parts
+                .get(j)
+                .ok_or_else(|| VerifyError::alias(cname, "tuple element index out of range")),
+            Shape::Array { .. } => {
+                Err(VerifyError::alias(cname, "tuple part of non-tuple shape"))
+            }
+        },
+    }
+}
+
+/// The [`ValSrc`] a correct plan must record for a resolved source.
+fn res_valsrc(comp: &Computation, cp: &CompPlan, r: Res) -> ValSrc {
+    match r {
+        Res::Inst(t) => cp.src[t],
+        Res::ParamPart(p, j) => match comp.instrs[p].op {
+            Op::Parameter(k) => ValSrc::ParamPart(k, j),
+            // unreachable: resolve only returns ParamPart for parameters
+            _ => ValSrc::Dead,
+        },
+        Res::WhilePart(w, j) => match cp.src[w] {
+            ValSrc::Lit(li) => ValSrc::LitPart(li, j),
+            // a dead while: its parts are never materialized
+            _ => ValSrc::Dead,
+        },
+    }
+}
+
+// ------------------------------------------------------ shape inference
+
+fn arr_shape<'c>(
+    comp: &'c Computation,
+    cname: &str,
+    i: usize,
+    o: usize,
+) -> Result<(Dt, &'c [usize]), VerifyError> {
+    match &comp.instrs[o].shape {
+        Shape::Array { dt, dims } => Ok((*dt, dims.as_slice())),
+        Shape::Tuple(_) => Err(VerifyError::shape(
+            cname,
+            format!("slot {i}: operand {o} is tuple-shaped"),
+        )),
+    }
+}
+
+fn arr_of<'s>(sh: &'s Shape, cname: &str, i: usize) -> Result<(Dt, &'s [usize]), VerifyError> {
+    match sh {
+        Shape::Array { dt, dims } => Ok((*dt, dims.as_slice())),
+        Shape::Tuple(_) => Err(VerifyError::shape(
+            cname,
+            format!("slot {i}: tuple shape on array-valued op"),
+        )),
+    }
+}
+
+fn numel(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+fn data_len(l: &Literal) -> usize {
+    match &l.data {
+        Data::F32(v) => v.len(),
+        Data::I32(v) => v.len(),
+        Data::U32(v) => v.len(),
+        Data::Pred(v) => v.len(),
+        Data::Tuple(_) => 0,
+    }
+}
+
+/// Exact (bit-level for f32) literal equality; tuples never compare
+/// equal (plan constants are always arrays).
+fn lit_eq(a: &Literal, b: &Literal) -> bool {
+    if a.dims != b.dims {
+        return false;
+    }
+    match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (Data::I32(x), Data::I32(y)) => x == y,
+        (Data::U32(x), Data::U32(y)) => x == y,
+        (Data::Pred(x), Data::Pred(y)) => x == y,
+        _ => false,
+    }
+}
+
+/// Independently re-derive the literal a folded `iota` must produce.
+fn iota_literal(shape: &Shape, dim: usize) -> Option<Literal> {
+    let Shape::Array { dt, dims } = shape else { return None };
+    let vals = iota_values(dims, dim);
+    let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    let data = match dt {
+        Dt::U32 => Data::U32(vals.iter().map(|&v| v as u32).collect()),
+        Dt::S32 => Data::I32(vals.iter().map(|&v| v as i32).collect()),
+        Dt::F32 => Data::F32(vals.iter().map(|&v| v as f32).collect()),
+        Dt::Pred => return None,
+    };
+    Some(Literal { data, dims: dims_i })
+}
+
+/// Re-infer every instruction's shape/dtype from its operands and
+/// compare with the declared shape (check class 4), including the
+/// `while` state contracts (check class 6). Runs before the per-plan
+/// checks so those can index operands without re-validating bounds.
+fn check_shapes(module: &HloModule, ci: usize) -> Result<(), VerifyError> {
+    let comp = &module.computations[ci];
+    let cname = comp.name.as_str();
+    let n = comp.instrs.len();
+    for (i, ins) in comp.instrs.iter().enumerate() {
+        for &o in &ins.operands {
+            if o >= n {
+                return Err(VerifyError::program(
+                    cname,
+                    format!("slot {i}: operand {o} out of range"),
+                ));
+            }
+        }
+        let fail = |what: String| VerifyError::shape(cname, format!("slot {i}: {what}"));
+        let nops = |c: usize| -> Result<(), VerifyError> {
+            if ins.operands.len() == c {
+                Ok(())
+            } else {
+                Err(fail(format!("expected {c} operands, got {}", ins.operands.len())))
+            }
+        };
+        match &ins.op {
+            Op::Parameter(k) => {
+                nops(0)?;
+                if *k >= comp.params.len() || comp.params[*k] != i {
+                    return Err(fail(format!("parameter({k}) binding mismatch")));
+                }
+            }
+            Op::Constant(l) => {
+                nops(0)?;
+                let (dt, dims) = arr_of(&ins.shape, cname, i)?;
+                if lit_dt(l) != Some(dt) || lit_dims(l) != dims || data_len(l) != numel(dims) {
+                    return Err(fail("constant: literal/shape mismatch".into()));
+                }
+            }
+            Op::Iota { dim } => {
+                nops(0)?;
+                let (dt, dims) = arr_of(&ins.shape, cname, i)?;
+                if dt == Dt::Pred {
+                    return Err(fail("iota dtype".into()));
+                }
+                if dims.is_empty() || *dim >= dims.len() {
+                    return Err(fail("iota dimension out of range".into()));
+                }
+            }
+            Op::Bin(b) => {
+                nops(2)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                let bb = arr_shape(comp, cname, i, ins.operands[1])?;
+                if a != bb {
+                    return Err(fail("binary operand shapes differ".into()));
+                }
+                let allowed = match a.0 {
+                    Dt::F32 => matches!(
+                        b,
+                        BinOp::Add
+                            | BinOp::Sub
+                            | BinOp::Mul
+                            | BinOp::Div
+                            | BinOp::Max
+                            | BinOp::Min
+                            | BinOp::Pow
+                    ),
+                    Dt::S32 => matches!(
+                        b,
+                        BinOp::Add
+                            | BinOp::Sub
+                            | BinOp::Mul
+                            | BinOp::Max
+                            | BinOp::Min
+                            | BinOp::And
+                            | BinOp::Or
+                            | BinOp::Xor
+                    ),
+                    Dt::U32 => !matches!(b, BinOp::Pow),
+                    Dt::Pred => true,
+                };
+                if !allowed {
+                    return Err(fail(format!("binary op {b:?} unsupported on {:?}", a.0)));
+                }
+                if arr_of(&ins.shape, cname, i)? != a {
+                    return Err(fail("binary: declared shape mismatch".into()));
+                }
+            }
+            Op::Un(u) => {
+                nops(1)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                let ok = match a.0 {
+                    Dt::F32 => *u != UnOp::Not,
+                    Dt::U32 | Dt::Pred => *u == UnOp::Not,
+                    Dt::S32 => matches!(u, UnOp::Neg | UnOp::Abs),
+                };
+                if !ok {
+                    return Err(fail(format!("unary op {u:?} unsupported on {:?}", a.0)));
+                }
+                if arr_of(&ins.shape, cname, i)? != a {
+                    return Err(fail("unary: declared shape mismatch".into()));
+                }
+            }
+            Op::Compare(_) => {
+                nops(2)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                let bb = arr_shape(comp, cname, i, ins.operands[1])?;
+                if a != bb || a.0 == Dt::Pred {
+                    return Err(fail("compare operand shapes".into()));
+                }
+                if arr_of(&ins.shape, cname, i)? != (Dt::Pred, a.1) {
+                    return Err(fail("compare: declared shape mismatch".into()));
+                }
+            }
+            Op::Select => {
+                nops(3)?;
+                let p = arr_shape(comp, cname, i, ins.operands[0])?;
+                let a = arr_shape(comp, cname, i, ins.operands[1])?;
+                let bb = arr_shape(comp, cname, i, ins.operands[2])?;
+                if p.0 != Dt::Pred {
+                    return Err(fail("select predicate dtype".into()));
+                }
+                if a != bb || !matches!(a.0, Dt::F32 | Dt::U32) {
+                    return Err(fail("select branch shapes".into()));
+                }
+                let pn = numel(p.1);
+                if pn != 1 && pn != numel(a.1) {
+                    return Err(fail("select predicate numel".into()));
+                }
+                if arr_of(&ins.shape, cname, i)? != a {
+                    return Err(fail("select: declared shape mismatch".into()));
+                }
+            }
+            Op::Clamp => {
+                nops(3)?;
+                let lo = arr_shape(comp, cname, i, ins.operands[0])?;
+                let x = arr_shape(comp, cname, i, ins.operands[1])?;
+                let hi = arr_shape(comp, cname, i, ins.operands[2])?;
+                if lo.0 != Dt::F32 || x.0 != Dt::F32 || hi.0 != Dt::F32 {
+                    return Err(fail("clamp operand dtypes".into()));
+                }
+                let nx = numel(x.1);
+                for bn in [numel(lo.1), numel(hi.1)] {
+                    if bn != 1 && bn != nx {
+                        return Err(fail("clamp bound numel".into()));
+                    }
+                }
+                if arr_of(&ins.shape, cname, i)? != x {
+                    return Err(fail("clamp: declared shape mismatch".into()));
+                }
+            }
+            Op::Convert => {
+                nops(1)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                let (_, dims) = arr_of(&ins.shape, cname, i)?;
+                if dims != a.1 {
+                    return Err(fail("convert: declared dims mismatch".into()));
+                }
+            }
+            Op::Broadcast { dims } => {
+                nops(1)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                let (odt, odims) = arr_of(&ins.shape, cname, i)?;
+                if dims.len() != a.1.len() {
+                    return Err(fail("broadcast dimensions length".into()));
+                }
+                for (pos, &od) in dims.iter().enumerate() {
+                    if od >= odims.len() || odims[od] != a.1[pos] {
+                        return Err(fail("broadcast dimension mapping".into()));
+                    }
+                }
+                if odt != a.0 {
+                    return Err(fail("broadcast dtype".into()));
+                }
+            }
+            Op::Reshape => {
+                nops(1)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                let (dt, dims) = arr_of(&ins.shape, cname, i)?;
+                if dt != a.0 || numel(dims) != numel(a.1) {
+                    return Err(fail("reshape: dtype/numel mismatch".into()));
+                }
+            }
+            Op::Transpose { perm } => {
+                nops(1)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                let mut seen = vec![false; a.1.len()];
+                let is_perm = perm.len() == a.1.len()
+                    && perm.iter().all(|&p| p < seen.len() && !std::mem::replace(&mut seen[p], true));
+                if !is_perm {
+                    return Err(fail("transpose: not a permutation".into()));
+                }
+                let derived: Vec<usize> = perm.iter().map(|&p| a.1[p]).collect();
+                if arr_of(&ins.shape, cname, i)? != (a.0, derived.as_slice()) {
+                    return Err(fail("transpose: declared shape mismatch".into()));
+                }
+            }
+            Op::Slice { starts, limits, strides } => {
+                nops(1)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                if starts.len() != a.1.len() || limits.len() != a.1.len() || strides.len() != a.1.len()
+                {
+                    return Err(fail("slice rank".into()));
+                }
+                let mut derived = Vec::with_capacity(a.1.len());
+                for (d, &sd) in a.1.iter().enumerate() {
+                    if limits[d] > sd || starts[d] > limits[d] || strides[d] == 0 {
+                        return Err(fail("slice bounds".into()));
+                    }
+                    derived.push((limits[d] - starts[d]).div_ceil(strides[d]));
+                }
+                if arr_of(&ins.shape, cname, i)? != (a.0, derived.as_slice()) {
+                    return Err(fail("slice: declared shape mismatch".into()));
+                }
+            }
+            Op::Concat { dim } => {
+                if ins.operands.is_empty() {
+                    return Err(fail("concatenate needs operands".into()));
+                }
+                let first = arr_shape(comp, cname, i, ins.operands[0])?;
+                if *dim >= first.1.len() {
+                    return Err(fail("concatenate dim out of range".into()));
+                }
+                let mut total = 0usize;
+                for &o in &ins.operands {
+                    let a = arr_shape(comp, cname, i, o)?;
+                    if a.0 != first.0 || a.1.len() != first.1.len() {
+                        return Err(fail("concatenate operand dtype/rank".into()));
+                    }
+                    for (dd, (&x, &y)) in a.1.iter().zip(first.1).enumerate() {
+                        if dd != *dim && x != y {
+                            return Err(fail(format!("concatenate dim {dd} mismatch")));
+                        }
+                    }
+                    total += a.1[*dim];
+                }
+                let mut derived = first.1.to_vec();
+                derived[*dim] = total;
+                if arr_of(&ins.shape, cname, i)? != (first.0, derived.as_slice()) {
+                    return Err(fail("concatenate: declared shape mismatch".into()));
+                }
+            }
+            Op::Pad { low, high, interior } => {
+                nops(2)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                let pv = arr_shape(comp, cname, i, ins.operands[1])?;
+                if low.len() != a.1.len() || high.len() != a.1.len() || interior.len() != a.1.len()
+                {
+                    return Err(fail("pad rank".into()));
+                }
+                if a.0 == Dt::Pred || pv.0 != a.0 || numel(pv.1) == 0 {
+                    return Err(fail("pad value".into()));
+                }
+                let mut derived = Vec::with_capacity(a.1.len());
+                for (d, &sd) in a.1.iter().enumerate() {
+                    let od = sd as i64
+                        + (sd.saturating_sub(1) * interior[d]) as i64
+                        + low[d]
+                        + high[d];
+                    if od < 0 {
+                        return Err(fail("pad: negative output dim".into()));
+                    }
+                    derived.push(od as usize);
+                }
+                if arr_of(&ins.shape, cname, i)? != (a.0, derived.as_slice()) {
+                    return Err(fail("pad: declared shape mismatch".into()));
+                }
+            }
+            Op::Dot { lc, rc } => {
+                nops(2)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                let b = arr_shape(comp, cname, i, ins.operands[1])?;
+                if a.0 != Dt::F32 || b.0 != Dt::F32 {
+                    return Err(fail("dot operand dtypes".into()));
+                }
+                if a.1.len() != 2 || b.1.len() != 2 || *lc > 1 || *rc > 1 {
+                    return Err(fail("dot: rank-2 with one contracting dim required".into()));
+                }
+                if a.1[*lc] != b.1[*rc] {
+                    return Err(fail("dot contracting dims differ".into()));
+                }
+                let derived = [a.1[1 - *lc], b.1[1 - *rc]];
+                if arr_of(&ins.shape, cname, i)? != (Dt::F32, derived.as_slice()) {
+                    return Err(fail("dot: declared shape mismatch".into()));
+                }
+            }
+            Op::Reduce { dims, comp: rc } => {
+                nops(2)?;
+                let a = arr_shape(comp, cname, i, ins.operands[0])?;
+                let iv = arr_shape(comp, cname, i, ins.operands[1])?;
+                if a.0 != Dt::F32 || iv.0 != Dt::F32 || numel(iv.1) != 1 {
+                    return Err(fail("reduce operand/init".into()));
+                }
+                if dims.iter().any(|&d| d >= a.1.len()) {
+                    return Err(fail("reduce dims out of range".into()));
+                }
+                let Some(cc) = module.computations.get(*rc) else {
+                    return Err(fail("reduce combiner out of range".into()));
+                };
+                if cc.params.len() != 2 {
+                    return Err(fail("reduce combiner arity".into()));
+                }
+                let scalar_f32 = Shape::Array { dt: Dt::F32, dims: Vec::new() };
+                for &pk in &cc.params {
+                    if cc.instrs.get(pk).map(|p| &p.shape) != Some(&scalar_f32) {
+                        return Err(fail("reduce combiner parameter must be scalar f32".into()));
+                    }
+                }
+                if cc.instrs.get(cc.root).map(|r| &r.shape) != Some(&scalar_f32) {
+                    return Err(fail("reduce combiner root must be scalar f32".into()));
+                }
+                let derived: Vec<usize> = a
+                    .1
+                    .iter()
+                    .enumerate()
+                    .filter(|(d, _)| !dims.contains(d))
+                    .map(|(_, &sd)| sd)
+                    .collect();
+                if arr_of(&ins.shape, cname, i)? != (Dt::F32, derived.as_slice()) {
+                    return Err(fail("reduce: declared shape mismatch".into()));
+                }
+            }
+            Op::Tuple => {
+                let Shape::Tuple(parts) = &ins.shape else {
+                    return Err(fail("tuple: declared arity mismatch".into()));
+                };
+                if parts.len() != ins.operands.len() {
+                    return Err(fail("tuple: declared arity mismatch".into()));
+                }
+                for (e, &o) in parts.iter().zip(&ins.operands) {
+                    if *e != comp.instrs[o].shape {
+                        return Err(fail("tuple: element shape mismatch".into()));
+                    }
+                }
+            }
+            Op::Gte { index } => {
+                nops(1)?;
+                let Shape::Tuple(parts) = &comp.instrs[ins.operands[0]].shape else {
+                    return Err(fail("get-tuple-element on non-tuple".into()));
+                };
+                let Some(part) = parts.get(*index) else {
+                    return Err(fail("get-tuple-element index out of range".into()));
+                };
+                if ins.shape != *part {
+                    return Err(fail("get-tuple-element: declared shape mismatch".into()));
+                }
+            }
+            Op::While { cond, body } => {
+                nops(1)?;
+                let wfail = |what: String| VerifyError::whilev(cname, format!("slot {i}: {what}"));
+                let state = &comp.instrs[ins.operands[0]].shape;
+                if ins.shape != *state {
+                    return Err(wfail("while shape != loop state shape".into()));
+                }
+                for (which, kci) in [("condition", *cond), ("body", *body)] {
+                    let Some(sub) = module.computations.get(kci) else {
+                        return Err(wfail(format!("{which} out of range")));
+                    };
+                    if sub.params.len() != 1 {
+                        return Err(wfail(format!("{which} must take one parameter")));
+                    }
+                    if sub.instrs.get(sub.params[0]).map(|p| &p.shape) != Some(state) {
+                        return Err(wfail(format!("{which} parameter shape != loop state")));
+                    }
+                }
+                let scalar_pred = Shape::Array { dt: Dt::Pred, dims: Vec::new() };
+                let croot = &module.computations[*cond];
+                if croot.instrs.get(croot.root).map(|r| &r.shape) != Some(&scalar_pred) {
+                    return Err(wfail("condition root must be scalar pred".into()));
+                }
+                let broot = &module.computations[*body];
+                if broot.instrs.get(broot.root).map(|r| &r.shape) != Some(state) {
+                    return Err(wfail("body root shape != loop state".into()));
+                }
+            }
+        }
+        if let Shape::Array { dims, .. } = &ins.shape {
+            if dims.len() > MAX_RANK {
+                return Err(fail(format!("rank > {MAX_RANK}")));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------- program / buffers / fusion checks
+
+/// Whether an op executes as a step (everything else is a parameter,
+/// plan constant, alias, or on-demand tuple).
+fn executable(op: &Op) -> bool {
+    match op {
+        Op::Bin(_)
+        | Op::Un(_)
+        | Op::Compare(_)
+        | Op::Select
+        | Op::Clamp
+        | Op::Convert
+        | Op::Broadcast { .. }
+        | Op::Transpose { .. }
+        | Op::Slice { .. }
+        | Op::Concat { .. }
+        | Op::Pad { .. }
+        | Op::Dot { .. }
+        | Op::Reduce { .. }
+        | Op::While { .. } => true,
+        Op::Parameter(_) | Op::Constant(_) | Op::Iota { .. } | Op::Reshape | Op::Gte { .. } | Op::Tuple => false,
+    }
+}
+
+/// Record one leaf read at step `pos`: def-before-use for materialized
+/// slots, and extend that slot's live range.
+fn read_leaf(
+    cp: &CompPlan,
+    defined_at: &[Option<usize>],
+    last_use: &mut [Option<usize>],
+    cname: &str,
+    r: Res,
+    pos: usize,
+    what: &str,
+) -> Result<(), VerifyError> {
+    let Res::Inst(t) = r else {
+        // param tuple element / dead-while part: no step defines it
+        return Ok(());
+    };
+    match cp.src[t] {
+        ValSrc::Dead => Err(VerifyError::program(
+            cname,
+            format!("{what}: reads slot {t} which is never materialized"),
+        )),
+        ValSrc::Buf(_) | ValSrc::Lit(_) => match defined_at[t] {
+            None => Err(VerifyError::program(cname, format!("{what}: reads undefined slot {t}"))),
+            Some(d) if d >= pos => Err(VerifyError::program(
+                cname,
+                format!("{what}: reads slot {t} defined at step {d}, used at step {pos}"),
+            )),
+            Some(_) => {
+                match last_use[t] {
+                    Some(lu) if lu >= pos => {}
+                    Some(_) | None => last_use[t] = Some(pos),
+                }
+                Ok(())
+            }
+        },
+        // always-available sources: plan constants, caller arguments,
+        // tuple parts of either, on-demand tuples
+        ValSrc::Const(_)
+        | ValSrc::Param(_)
+        | ValSrc::ParamPart(..)
+        | ValSrc::LitPart(..)
+        | ValSrc::Tuple => Ok(()),
+    }
+}
+
+/// Expand a (possibly tuple-valued) operand into the leaves its
+/// materialization reads, recording each (the `while` state and the
+/// root materialization read whole tuples).
+#[allow(clippy::too_many_arguments)]
+fn expand_reads(
+    comp: &Computation,
+    cp: &CompPlan,
+    defined_at: &[Option<usize>],
+    last_use: &mut [Option<usize>],
+    cname: &str,
+    o: usize,
+    pos: usize,
+    what: &str,
+    fuel: usize,
+) -> Result<(), VerifyError> {
+    if fuel == 0 {
+        return Err(VerifyError::alias(
+            cname,
+            format!("{what}: tuple expansion does not terminate"),
+        ));
+    }
+    let r = resolve(comp, cname, o, comp.instrs.len() + 1)?;
+    if let Res::Inst(t) = r {
+        if matches!(comp.instrs[t].op, Op::Tuple) {
+            for &e in &comp.instrs[t].operands {
+                expand_reads(comp, cp, defined_at, last_use, cname, e, pos, what, fuel - 1)?;
+            }
+            return Ok(());
+        }
+    }
+    read_leaf(cp, defined_at, last_use, cname, r, pos, what)
+}
+
+/// Verify one computation's plan (check classes 1–3 and 5; class 4 and
+/// 6 ran in [`check_shapes`]) and accumulate its statistics.
+fn check_comp(
+    module: &HloModule,
+    ci: usize,
+    cp: &CompPlan,
+    stats: &mut VerifyStats,
+) -> Result<(), VerifyError> {
+    let comp = &module.computations[ci];
+    let cname = comp.name.as_str();
+    let n = comp.instrs.len();
+    let fuel = n + 1;
+    let n_bufs = cp.buf_dt.len();
+    if cp.buf_cap.len() != n_bufs {
+        return Err(VerifyError::buffer(cname, "buf_dt / buf_cap length mismatch"));
+    }
+    if cp.src.len() != n {
+        return Err(VerifyError::program(cname, "src table length != instruction count"));
+    }
+    if cp.n_params != comp.params.len() {
+        return Err(VerifyError::program(cname, "n_params mismatch"));
+    }
+    if cp.root != comp.root || cp.root >= n {
+        return Err(VerifyError::program(cname, "plan root != computation root"));
+    }
+    for (k, &pi) in comp.params.iter().enumerate() {
+        if cp.src[pi] != ValSrc::Param(k) {
+            return Err(VerifyError::program(
+                cname,
+                format!("parameter {k}: src is not Param({k})"),
+            ));
+        }
+    }
+
+    // --- pass 1: walk the program, record definitions (class 1)
+    let mut defined_at: Vec<Option<usize>> = vec![None; n];
+    let mut group_step: Vec<Option<usize>> = vec![None; cp.groups.len()];
+    let mut n_while = 0usize;
+    let mut lits_defined = vec![false; cp.n_lits];
+    for (pos, st) in cp.steps.iter().enumerate() {
+        match *st {
+            Step::Prim(x) => {
+                if x >= n {
+                    return Err(VerifyError::program(
+                        cname,
+                        format!("step {pos}: slot {x} out of range"),
+                    ));
+                }
+                if !executable(&comp.instrs[x].op) {
+                    return Err(VerifyError::program(
+                        cname,
+                        format!("step {pos}: slot {x} is not an executable op"),
+                    ));
+                }
+                if let Some(prev) = defined_at[x] {
+                    return Err(VerifyError::program(
+                        cname,
+                        format!("slot {x}: multiple definitions (steps {prev} and {pos})"),
+                    ));
+                }
+                if matches!(comp.instrs[x].op, Op::While { .. }) {
+                    n_while += 1;
+                    match cp.src[x] {
+                        ValSrc::Lit(li) if lits_defined.get(li) == Some(&false) => {
+                            lits_defined[li] = true;
+                        }
+                        _ => {
+                            return Err(VerifyError::program(
+                                cname,
+                                format!("slot {x}: while step needs a unique literal slot"),
+                            ));
+                        }
+                    }
+                } else if !matches!(cp.src[x], ValSrc::Buf(b) if b < n_bufs) {
+                    return Err(VerifyError::program(
+                        cname,
+                        format!("slot {x}: prim step without a valid buffer"),
+                    ));
+                }
+                defined_at[x] = Some(pos);
+            }
+            Step::Fused(g) => {
+                let Some(grp) = cp.groups.get(g) else {
+                    return Err(VerifyError::program(
+                        cname,
+                        format!("step {pos}: group {g} out of range"),
+                    ));
+                };
+                if group_step[g].is_some() {
+                    return Err(VerifyError::program(cname, format!("group {g}: scheduled twice")));
+                }
+                group_step[g] = Some(pos);
+                let root = grp.root;
+                if root >= n {
+                    return Err(VerifyError::program(cname, format!("group {g}: root out of range")));
+                }
+                if defined_at[root].is_some() {
+                    return Err(VerifyError::program(
+                        cname,
+                        format!("slot {root}: multiple definitions"),
+                    ));
+                }
+                if !matches!(cp.src[root], ValSrc::Buf(b) if b < n_bufs) {
+                    return Err(VerifyError::program(
+                        cname,
+                        format!("slot {root}: fused root without a valid buffer"),
+                    ));
+                }
+                defined_at[root] = Some(pos);
+            }
+        }
+    }
+    if n_while != cp.n_lits {
+        return Err(VerifyError::program(cname, "n_lits != number of while steps"));
+    }
+    for (g, st) in group_step.iter().enumerate() {
+        if st.is_none() {
+            return Err(VerifyError::program(cname, format!("group {g}: never scheduled")));
+        }
+    }
+
+    // --- alias consistency (class 2): every alias's recorded source
+    // must equal its resolved producer's source
+    let stepped: Vec<bool> = defined_at.iter().map(Option::is_some).collect();
+    for (i, ins) in comp.instrs.iter().enumerate() {
+        let s = cp.src[i];
+        match &ins.op {
+            Op::Reshape | Op::Gte { .. } => {
+                let r = resolve(comp, cname, i, fuel)?;
+                let want = res_valsrc(comp, cp, r);
+                if s != want {
+                    return Err(VerifyError::alias(
+                        cname,
+                        format!("slot {i}: alias src {s:?} != resolved source {want:?}"),
+                    ));
+                }
+            }
+            Op::Parameter(_) => {} // checked against comp.params above
+            Op::Constant(_) | Op::Iota { .. } => {
+                if !matches!(s, ValSrc::Const(_) | ValSrc::Dead) {
+                    return Err(VerifyError::program(
+                        cname,
+                        format!("slot {i}: constant src {s:?}"),
+                    ));
+                }
+            }
+            Op::Tuple => {
+                if s != ValSrc::Tuple {
+                    return Err(VerifyError::program(cname, format!("slot {i}: tuple src {s:?}")));
+                }
+            }
+            Op::Bin(_)
+            | Op::Un(_)
+            | Op::Compare(_)
+            | Op::Select
+            | Op::Clamp
+            | Op::Convert
+            | Op::Broadcast { .. }
+            | Op::Transpose { .. }
+            | Op::Slice { .. }
+            | Op::Concat { .. }
+            | Op::Pad { .. }
+            | Op::Dot { .. }
+            | Op::Reduce { .. }
+            | Op::While { .. } => {
+                // executable op that never runs: dead code or a fused
+                // non-root member — never buffer-backed
+                if !stepped[i] {
+                    match s {
+                        ValSrc::Dead => {}
+                        ValSrc::Buf(_) => {
+                            return Err(VerifyError::program(
+                                cname,
+                                format!("slot {i}: buffer-backed slot is never defined"),
+                            ));
+                        }
+                        other => {
+                            return Err(VerifyError::program(
+                                cname,
+                                format!("slot {i}: unscheduled slot src {other:?}"),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // --- plan constants: re-derive and compare (class 4 metadata)
+    for (i, ins) in comp.instrs.iter().enumerate() {
+        let ValSrc::Const(c) = cp.src[i] else { continue };
+        match &ins.op {
+            Op::Constant(l) => {
+                let Some(got) = cp.consts.get(c) else {
+                    return Err(VerifyError::program(
+                        cname,
+                        format!("slot {i}: const index out of range"),
+                    ));
+                };
+                if !lit_eq(got, l) {
+                    return Err(VerifyError::shape(
+                        cname,
+                        format!("slot {i}: plan constant disagrees with instruction"),
+                    ));
+                }
+            }
+            Op::Iota { dim } => {
+                let Some(got) = cp.consts.get(c) else {
+                    return Err(VerifyError::program(
+                        cname,
+                        format!("slot {i}: const index out of range"),
+                    ));
+                };
+                let want = iota_literal(&ins.shape, *dim).ok_or_else(|| {
+                    VerifyError::shape(cname, format!("slot {i}: iota constant underivable"))
+                })?;
+                if !lit_eq(got, &want) {
+                    return Err(VerifyError::shape(
+                        cname,
+                        format!("slot {i}: plan constant disagrees with instruction"),
+                    ));
+                }
+            }
+            // aliases of a constant share the producer's const entry
+            Op::Parameter(_)
+            | Op::Bin(_)
+            | Op::Un(_)
+            | Op::Compare(_)
+            | Op::Select
+            | Op::Clamp
+            | Op::Convert
+            | Op::Broadcast { .. }
+            | Op::Reshape
+            | Op::Transpose { .. }
+            | Op::Slice { .. }
+            | Op::Concat { .. }
+            | Op::Pad { .. }
+            | Op::Dot { .. }
+            | Op::Reduce { .. }
+            | Op::Tuple
+            | Op::Gte { .. }
+            | Op::While { .. } => {}
+        }
+    }
+
+    // --- reads: def-before-use + live-range recomputation (classes 1, 3)
+    let n_steps = cp.steps.len();
+    let mut last_use: Vec<Option<usize>> = vec![None; n];
+    for (pos, st) in cp.steps.iter().enumerate() {
+        match *st {
+            Step::Prim(x) => {
+                let ins = &comp.instrs[x];
+                if matches!(ins.op, Op::While { .. }) {
+                    let what = format!("while at slot {x}");
+                    expand_reads(
+                        comp, cp, &defined_at, &mut last_use, cname, ins.operands[0], pos, &what,
+                        fuel,
+                    )?;
+                } else {
+                    let what = format!("slot {x}");
+                    for &o in &ins.operands {
+                        let r = resolve(comp, cname, o, fuel)?;
+                        read_leaf(cp, &defined_at, &mut last_use, cname, r, pos, &what)?;
+                    }
+                }
+            }
+            Step::Fused(g) => {
+                let grp = &cp.groups[g];
+                for &m in &grp.slots {
+                    let Some(mins) = comp.instrs.get(m) else {
+                        return Err(VerifyError::fusion(
+                            cname,
+                            format!("group {g}: member {m} out of range"),
+                        ));
+                    };
+                    let what = format!("group {g} member {m}");
+                    for &o in &mins.operands {
+                        let r = resolve(comp, cname, o, fuel)?;
+                        if let Res::Inst(t) = r {
+                            if grp.slots.contains(&t) {
+                                continue; // in-group slab read
+                            }
+                        }
+                        read_leaf(cp, &defined_at, &mut last_use, cname, r, pos, &what)?;
+                    }
+                }
+            }
+        }
+    }
+    expand_reads(
+        comp,
+        cp,
+        &defined_at,
+        &mut last_use,
+        cname,
+        cp.root,
+        n_steps,
+        "root materialization",
+        fuel,
+    )?;
+
+    // --- buffer plan (class 3): per-buffer intervals must be disjoint
+    let mut by_buf: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); n_bufs];
+    let mut slot_count = 0usize;
+    for i in 0..n {
+        let Some(dpos) = defined_at[i] else { continue };
+        let ValSrc::Buf(b) = cp.src[i] else { continue };
+        slot_count += 1;
+        let Shape::Array { dt, dims } = &comp.instrs[i].shape else {
+            return Err(VerifyError::buffer(
+                cname,
+                format!("slot {i}: tuple-shaped slot with a pooled buffer"),
+            ));
+        };
+        let nel = numel(dims);
+        if cp.buf_dt[b] != *dt {
+            return Err(VerifyError::buffer(
+                cname,
+                format!("slot {i}: buffer {b} dtype {:?} != {dt:?}", cp.buf_dt[b]),
+            ));
+        }
+        if cp.buf_cap[b] < nel {
+            return Err(VerifyError::buffer(
+                cname,
+                format!("slot {i}: buffer {b} capacity {} < {nel}", cp.buf_cap[b]),
+            ));
+        }
+        let lu = last_use[i].unwrap_or(dpos);
+        by_buf[b].push((dpos, lu, i));
+    }
+    for (b, ivals) in by_buf.iter_mut().enumerate() {
+        ivals.sort_unstable();
+        for w in ivals.windows(2) {
+            let (d0, u0, s0) = w[0];
+            let (d1, _, s1) = w[1];
+            // the engine releases a buffer only *after* the defining
+            // instruction of its last use, so a reuse at d1 == u0 would
+            // already clobber the live value
+            if d1 <= u0 {
+                return Err(VerifyError::buffer(
+                    cname,
+                    format!(
+                        "buffer {b}: slots {s0} (live [{d0},{u0}]) and {s1} \
+                         (defined at step {d1}) overlap"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // --- fusion groups (class 5)
+    for (g, grp) in cp.groups.iter().enumerate() {
+        check_group(comp, cname, cp, g, grp, fuel)?;
+    }
+
+    stats.instructions += n;
+    stats.steps += n_steps;
+    stats.groups += cp.groups.len();
+    stats.members += cp.groups.iter().map(|grp| grp.members.len()).sum::<usize>();
+    stats.buffers += n_bufs;
+    stats.buffer_slots += slot_count;
+    Ok(())
+}
+
+/// Verify one fused group's legality (check class 5).
+fn check_group(
+    comp: &Computation,
+    cname: &str,
+    cp: &CompPlan,
+    g: usize,
+    grp: &Group,
+    fuel: usize,
+) -> Result<(), VerifyError> {
+    let bad = |msg: String| VerifyError::fusion(cname, format!("group {g}: {msg}"));
+    let slots = &grp.slots;
+    if slots.len() != grp.members.len() || slots.len() < 2 {
+        return Err(bad("member/slot list mismatch or too small".into()));
+    }
+    if grp.members.len() > cp.max_members {
+        return Err(bad("more members than max_members (slab overflow)".into()));
+    }
+    if slots.windows(2).any(|w| w[1] <= w[0]) {
+        return Err(bad("member slots not strictly ascending".into()));
+    }
+    if slots.last() != Some(&grp.root) {
+        return Err(bad("root is not the last member".into()));
+    }
+    let Some(Shape::Array { dims: root_dims, .. }) = comp.instrs.get(grp.root).map(|r| &r.shape)
+    else {
+        return Err(bad("root out of range or tuple-shaped".into()));
+    };
+    if grp.numel != numel(root_dims) {
+        return Err(bad("group numel != root numel".into()));
+    }
+    for (mi, (&s, mem)) in slots.iter().zip(&grp.members).enumerate() {
+        let Some(ins) = comp.instrs.get(s) else {
+            return Err(bad(format!("member {s}: out of range")));
+        };
+        match &ins.op {
+            Op::Bin(_)
+            | Op::Un(_)
+            | Op::Compare(_)
+            | Op::Select
+            | Op::Clamp
+            | Op::Convert
+            | Op::Broadcast { .. } => {}
+            Op::Parameter(_)
+            | Op::Constant(_)
+            | Op::Iota { .. }
+            | Op::Reshape
+            | Op::Transpose { .. }
+            | Op::Slice { .. }
+            | Op::Concat { .. }
+            | Op::Pad { .. }
+            | Op::Dot { .. }
+            | Op::Reduce { .. }
+            | Op::Tuple
+            | Op::Gte { .. }
+            | Op::While { .. } => {
+                return Err(bad(format!("member {s}: op is not elementwise")));
+            }
+        }
+        let Shape::Array { dt, dims } = &ins.shape else {
+            return Err(bad(format!("member {s}: tuple-shaped member")));
+        };
+        if numel(dims) != grp.numel {
+            return Err(bad(format!("member {s}: numel != group block length")));
+        }
+        if to_sdt(*dt) != Some(mem.sdt) {
+            return Err(bad(format!(
+                "member {s}: slab dtype {:?} != declared {dt:?}",
+                mem.sdt
+            )));
+        }
+        if mi + 1 < slots.len() && cp.src[s] != ValSrc::Dead {
+            return Err(bad(format!("member {s}: non-root member must be Dead")));
+        }
+        let operand_dt = |k: usize| -> Result<Dt, VerifyError> {
+            match &comp.instrs[ins.operands[k]].shape {
+                Shape::Array { dt, .. } => Ok(*dt),
+                Shape::Tuple(_) => Err(bad(format!("member {s}: tuple-shaped operand"))),
+            }
+        };
+        let refs: Vec<FRef> = match (&mem.op, &ins.op) {
+            (FOp::Bin(fb, a, b), Op::Bin(ib)) => {
+                if fb != ib {
+                    return Err(bad(format!("member {s}: binary op mismatch")));
+                }
+                if mem.sdt == SDt::F32
+                    && !matches!(
+                        fb,
+                        BinOp::Add
+                            | BinOp::Sub
+                            | BinOp::Mul
+                            | BinOp::Div
+                            | BinOp::Max
+                            | BinOp::Min
+                            | BinOp::Pow
+                    )
+                {
+                    return Err(bad(format!("member {s}: op not fusible on f32")));
+                }
+                if mem.sdt == SDt::U32 && matches!(fb, BinOp::Pow) {
+                    return Err(bad(format!("member {s}: pow not fusible on u32")));
+                }
+                vec![*a, *b]
+            }
+            (FOp::Un(fu, a), Op::Un(iu)) => {
+                if fu != iu {
+                    return Err(bad(format!("member {s}: unary op mismatch")));
+                }
+                if (mem.sdt == SDt::F32) == (*fu == UnOp::Not) {
+                    return Err(bad(format!(
+                        "member {s}: unary op not fusible on {:?}",
+                        mem.sdt
+                    )));
+                }
+                vec![*a]
+            }
+            (FOp::Cmp(fd, fdt, a, b), Op::Compare(id)) => {
+                if fd != id {
+                    return Err(bad(format!("member {s}: compare direction mismatch")));
+                }
+                let odt = operand_dt(0)?;
+                if !matches!(odt, Dt::F32 | Dt::U32) || to_sdt(odt) != Some(*fdt) {
+                    return Err(bad(format!("member {s}: compare operand dtype")));
+                }
+                vec![*a, *b]
+            }
+            (FOp::Sel(a, b, c), Op::Select) => vec![*a, *b, *c],
+            (FOp::Clamp(a, b, c), Op::Clamp) => vec![*a, *b, *c],
+            (FOp::Cvt(fdt, a), Op::Convert) => {
+                if *fdt != operand_dt(0)? {
+                    return Err(bad(format!("member {s}: convert source dtype mismatch")));
+                }
+                vec![*a]
+            }
+            (FOp::Splat(a), Op::Broadcast { .. }) => {
+                if comp.instrs[ins.operands[0]].shape.numel() != 1 {
+                    return Err(bad(format!("member {s}: splat of non-scalar operand")));
+                }
+                vec![*a]
+            }
+            _ => {
+                return Err(bad(format!(
+                    "member {s}: fused op does not match the instruction"
+                )));
+            }
+        };
+        if refs.len() != ins.operands.len() {
+            return Err(bad(format!("member {s}: operand count mismatch")));
+        }
+        for (&fref, &o) in refs.iter().zip(&ins.operands) {
+            let r = resolve(comp, cname, o, fuel)?;
+            match fref {
+                FRef::Slab(j) => {
+                    if j >= mi {
+                        return Err(bad(format!(
+                            "member {s}: slab operand {j} does not precede member {mi}"
+                        )));
+                    }
+                    if r != Res::Inst(slots[j]) {
+                        return Err(bad(format!(
+                            "member {s}: slab operand {j} != resolved producer"
+                        )));
+                    }
+                }
+                FRef::Ext(e) => {
+                    let Some(ext) = grp.ext.get(e) else {
+                        return Err(bad(format!("member {s}: ext operand out of range")));
+                    };
+                    if let Res::Inst(t) = r {
+                        if slots.contains(&t) {
+                            return Err(bad(format!(
+                                "member {s}: group member read through ext input"
+                            )));
+                        }
+                    }
+                    let want = res_valsrc(comp, cp, r);
+                    if ext.src != want {
+                        return Err(bad(format!(
+                            "member {s}: ext src {:?} != resolved {want:?}",
+                            ext.src
+                        )));
+                    }
+                    let Shape::Array { dims, .. } = resolved_shape(comp, cname, r)? else {
+                        return Err(bad(format!("member {s}: tuple-shaped ext input")));
+                    };
+                    let nel = numel(dims);
+                    if ext.scalar != (nel == 1) {
+                        return Err(bad(format!("member {s}: ext scalar flag wrong")));
+                    }
+                    if !ext.scalar && nel != grp.numel {
+                        return Err(bad(format!(
+                            "member {s}: non-scalar ext numel != block length"
+                        )));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Registry;
+    use crate::runtime::interp::parse;
+    use std::rc::Rc;
+
+    /// Compile one checked-in artifact into a plan; `None` (with the
+    /// e2e "skipping:" marker) when artifacts are not built.
+    fn load_plan(file: &str) -> Option<Plan> {
+        let path = Registry::default_dir().join(file);
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let src = std::fs::read_to_string(&path).expect("artifact readable");
+        let module = parse(&src).expect("artifact parses");
+        Some(Plan::new(Rc::new(module)).expect("artifact compiles"))
+    }
+
+    #[test]
+    fn clean_artifact_plan_verifies() {
+        let Some(plan) = load_plan("fcn_step_sgd.hlo.txt") else { return };
+        let st = verify_plan(&plan).expect("clean plan verifies");
+        assert!(st.instructions > 0 && st.steps > 0, "stats must be populated");
+        assert!(st.groups > 0 && st.members >= 2 * st.groups, "fusion stats");
+        assert!(st.buffer_slots >= st.buffers, "buffers are reused, never unused");
+        assert!(st.reuse_ratio() >= 1.0);
+    }
+
+    #[test]
+    fn clean_while_artifact_verifies() {
+        let Some(plan) = load_plan("fcn_zs.hlo.txt") else { return };
+        let st = verify_plan(&plan).expect("while-loop plan verifies");
+        assert!(st.computations > 1, "ZS artifacts carry cond/body computations");
+    }
+
+    /// Class 3 (Buffer): give a step the pooled buffer of a live
+    /// operand — the recomputed live ranges must overlap.
+    #[test]
+    fn corrupt_shared_buffer_is_caught() {
+        let Some(mut plan) = load_plan("fcn_step_sgd.hlo.txt") else { return };
+        let target = {
+            let ins = plan.inspect();
+            let ci = ins.module.entry;
+            let comp = &ins.module.computations[ci];
+            let cp = &ins.comps[ci];
+            let mut found = None;
+            'outer: for st in &cp.steps {
+                let Step::Prim(x) = *st else { continue };
+                if matches!(comp.instrs[x].op, Op::While { .. }) {
+                    continue;
+                }
+                let ValSrc::Buf(mine) = cp.src[x] else { continue };
+                for &o in &comp.instrs[x].operands {
+                    let mut t = o;
+                    while matches!(comp.instrs[t].op, Op::Reshape) {
+                        t = comp.instrs[t].operands[0];
+                    }
+                    if let ValSrc::Buf(b) = cp.src[t] {
+                        if b != mine {
+                            found = Some((ci, x, cp.src[t]));
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            found.expect("a step reading another live buffer exists")
+        };
+        let (ci, x, stolen) = target;
+        plan.comps_mut()[ci].src[x] = stolen;
+        let e = verify_plan(&plan).expect_err("shared buffer must be diagnosed");
+        assert!(matches!(e, VerifyError::Buffer { .. }), "got {e}");
+    }
+
+    /// Class 2 (Alias): a reshape aliasing itself must be reported as a
+    /// non-terminating chain, not hang or overflow.
+    #[test]
+    fn corrupt_alias_cycle_is_caught() {
+        let Some(mut plan) = load_plan("fcn_step_sgd.hlo.txt") else { return };
+        let (ci, i) = {
+            let ins = plan.inspect();
+            let ci = ins.module.entry;
+            let comp = &ins.module.computations[ci];
+            let i = comp
+                .instrs
+                .iter()
+                .position(|x| matches!(x.op, Op::Reshape))
+                .expect("a reshape exists");
+            (ci, i)
+        };
+        plan.module_mut().computations[ci].instrs[i].operands[0] = i;
+        let e = verify_plan(&plan).expect_err("alias cycle must be diagnosed");
+        assert!(matches!(e, VerifyError::Alias { .. }), "got {e}");
+    }
+
+    /// Class 5 (Fusion): a wrong fused block length breaks the
+    /// numel-per-member invariant.
+    #[test]
+    fn corrupt_group_block_length_is_caught() {
+        let Some(mut plan) = load_plan("fcn_step_sgd.hlo.txt") else { return };
+        let ci = plan.inspect().module.entry;
+        assert!(!plan.inspect().comps[ci].groups.is_empty(), "entry has fused groups");
+        plan.comps_mut()[ci].groups[0].numel += 1;
+        let e = verify_plan(&plan).expect_err("block length lie must be diagnosed");
+        assert!(matches!(e, VerifyError::Fusion { .. }), "got {e}");
+    }
+
+    /// Class 4 (Shape): a `dot` declaring the wrong output dims fails
+    /// re-inference.
+    #[test]
+    fn corrupt_declared_shape_is_caught() {
+        let Some(mut plan) = load_plan("fcn_step_sgd.hlo.txt") else { return };
+        let (ci, i) = {
+            let ins = plan.inspect();
+            let ci = ins.module.entry;
+            let comp = &ins.module.computations[ci];
+            let i = comp
+                .instrs
+                .iter()
+                .position(|x| matches!(x.op, Op::Dot { .. }))
+                .expect("a dot exists");
+            (ci, i)
+        };
+        match &mut plan.module_mut().computations[ci].instrs[i].shape {
+            Shape::Array { dims, .. } => dims[0] += 1,
+            Shape::Tuple(_) => unreachable!("dot is array-valued"),
+        }
+        let e = verify_plan(&plan).expect_err("declared-shape lie must be diagnosed");
+        assert!(matches!(e, VerifyError::Shape { .. }), "got {e}");
+    }
+
+    /// Class 1 (Program): scheduling a consumer before its producer is
+    /// a def-before-use violation.
+    #[test]
+    fn corrupt_use_before_def_is_caught() {
+        let Some(mut plan) = load_plan("fcn_step_sgd.hlo.txt") else { return };
+        let swap = {
+            let ins = plan.inspect();
+            let ci = ins.module.entry;
+            let comp = &ins.module.computations[ci];
+            let cp = &ins.comps[ci];
+            let mut found = None;
+            'outer: for (pos, st) in cp.steps.iter().enumerate() {
+                let Step::Prim(x) = *st else { continue };
+                if matches!(comp.instrs[x].op, Op::While { .. }) {
+                    continue;
+                }
+                for &o in &comp.instrs[x].operands {
+                    let mut t = o;
+                    while matches!(comp.instrs[t].op, Op::Reshape) {
+                        t = comp.instrs[t].operands[0];
+                    }
+                    if !matches!(cp.src[t], ValSrc::Buf(_)) {
+                        continue;
+                    }
+                    if let Some(dpos) = cp
+                        .steps
+                        .iter()
+                        .position(|s| matches!(*s, Step::Prim(y) if y == t))
+                    {
+                        found = Some((ci, dpos, pos));
+                        break 'outer;
+                    }
+                }
+            }
+            found.expect("a producer/consumer step pair exists")
+        };
+        let (ci, dpos, pos) = swap;
+        plan.comps_mut()[ci].steps.swap(dpos, pos);
+        let e = verify_plan(&plan).expect_err("use-before-def must be diagnosed");
+        assert!(matches!(e, VerifyError::Program { .. }), "got {e}");
+    }
+
+    /// Class 1 (Program): the same slot scheduled twice violates
+    /// single-definition.
+    #[test]
+    fn corrupt_multiple_definition_is_caught() {
+        let Some(mut plan) = load_plan("fcn_step_sgd.hlo.txt") else { return };
+        let (ci, dup) = {
+            let ins = plan.inspect();
+            let ci = ins.module.entry;
+            let comp = &ins.module.computations[ci];
+            let dup = ins.comps[ci]
+                .steps
+                .iter()
+                .find_map(|st| match *st {
+                    Step::Prim(x) if !matches!(comp.instrs[x].op, Op::While { .. }) => Some(x),
+                    _ => None,
+                })
+                .expect("a prim step exists");
+            (ci, dup)
+        };
+        plan.comps_mut()[ci].steps.push(Step::Prim(dup));
+        let e = verify_plan(&plan).expect_err("double definition must be diagnosed");
+        assert!(matches!(e, VerifyError::Program { .. }), "got {e}");
+    }
+
+    /// Class 6 (While): pointing the body root at a slot whose shape is
+    /// not the loop state breaks the state contract.
+    #[test]
+    fn corrupt_while_contract_is_caught() {
+        let Some(mut plan) = load_plan("fcn_zs.hlo.txt") else { return };
+        let (bci, j) = {
+            let ins = plan.inspect();
+            let ci = ins.module.entry;
+            let comp = &ins.module.computations[ci];
+            let mut found = None;
+            for x in &comp.instrs {
+                let Op::While { body, .. } = x.op else { continue };
+                let state = &comp.instrs[x.operands[0]].shape;
+                let bc = &ins.module.computations[body];
+                if let Some(j) = bc.instrs.iter().position(|bi| bi.shape != *state) {
+                    found = Some((body, j));
+                    break;
+                }
+            }
+            found.expect("a while body with a non-state-shaped slot exists")
+        };
+        plan.module_mut().computations[bci].root = j;
+        let e = verify_plan(&plan).expect_err("state contract break must be diagnosed");
+        assert!(matches!(e, VerifyError::While { .. }), "got {e}");
+    }
+
+    #[test]
+    fn verify_hlo_text_runs_end_to_end() {
+        let st = verify_hlo_text(
+            "HloModule t\n\nENTRY %main (p0: f32[4]) -> (f32[4]) {\n  \
+             %p0 = f32[4] parameter(0)\n  %n = f32[4] negate(%p0)\n  \
+             %m = f32[4] multiply(%n, %n)\n  ROOT %t = (f32[4]) tuple(%m)\n}\n",
+        )
+        .expect("tiny module verifies");
+        assert_eq!(st.computations, 1);
+        assert_eq!(st.groups, 1, "negate+multiply fuse into one group");
+    }
+
+    #[test]
+    fn error_display_carries_class_and_computation() {
+        let e = VerifyError::buffer("main", "slots 3 and 7 overlap");
+        assert_eq!(format!("{e}"), "Buffer[main]: slots 3 and 7 overlap");
+        assert_eq!(e.class(), "Buffer");
+    }
+}

@@ -233,8 +233,18 @@ impl PjRtClient {
     /// (instruction program, fusion groups, buffer plan). Shape or
     /// dtype inconsistencies in the module surface here rather than at
     /// execute time.
+    ///
+    /// Debug builds additionally run the static plan verifier
+    /// ([`crate::runtime::verify`]) over the result; release builds do
+    /// the same when `RIDER_VERIFY` is set to anything but `0`.
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
         let plan = Plan::new(comp.module.clone())?;
+        let verify_on = cfg!(debug_assertions)
+            || std::env::var_os("RIDER_VERIFY").is_some_and(|v| v != "0");
+        if verify_on {
+            crate::runtime::verify::verify_plan(&plan)
+                .map_err(|e| XlaError(format!("plan verification failed: {e}")))?;
+        }
         Ok(PjRtLoadedExecutable {
             module: comp.module.clone(),
             plan,

@@ -1,0 +1,52 @@
+//! Documentation-drift invariants: the README registry table, the CLI
+//! help text, and the `Method` enum must all list exactly the names in
+//! `optimizer::METHODS`, in the same order. Adding (or renaming) a
+//! method without updating the docs fails this test, not a reader.
+
+use analog_rider::analog::optimizer::{Method, METHODS};
+
+const README: &str = include_str!("../../README.md");
+const MAIN_RS: &str = include_str!("../src/main.rs");
+
+/// Names from the README registry table: rows of the form
+/// ``| `name` | description |`` (the only table in the README whose
+/// first column is backticked).
+fn readme_table_names() -> Vec<String> {
+    README
+        .lines()
+        .filter_map(|l| {
+            let rest = l.strip_prefix("| `")?;
+            let (name, _) = rest.split_once('`')?;
+            Some(name.to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn readme_registry_table_matches_methods() {
+    let got = readme_table_names();
+    assert_eq!(
+        got, METHODS,
+        "README registry table rows must list exactly optimizer::METHODS, in order"
+    );
+}
+
+#[test]
+fn cli_help_lists_every_method() {
+    // the help text names the registry inline as `a|b|...):` — rebuild
+    // that string from the source of truth and require it verbatim
+    let want = format!("{}):", METHODS.join("|"));
+    assert!(
+        MAIN_RS.contains(&want),
+        "rider help text must list the method registry as `{want}`"
+    );
+}
+
+#[test]
+fn method_enum_matches_methods() {
+    let got: Vec<&str> = Method::ALL.iter().map(|m| m.name()).collect();
+    assert_eq!(
+        got, METHODS,
+        "Method::ALL and METHODS must stay in lock-step (same names, same order)"
+    );
+}
