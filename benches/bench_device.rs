@@ -33,6 +33,33 @@ fn main() {
         println!("{}", r.report_throughput("cells", (side * side) as f64));
     }
 
+    // chaos layer: the same 256x256 aggregated update with a fault mask
+    // armed — empty (the zero-cost-when-disarmed contract: must match
+    // analog_update/256x256) and with 1% stuck + 5% drifting cells (the
+    // post-update mask's real overhead)
+    {
+        use analog_rider::device::fault::{FaultFamily, FaultPlan};
+        let side = 256usize;
+        let dw = vec![0.01f32; side * side];
+        let mut arr = DeviceArray::sample(side, side, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
+        FaultPlan::none(7).arm_array(&mut arr, 0);
+        let r = b.run(&format!("analog_update_fault_empty/{side}x{side}"), || {
+            arr.analog_update(&dw, &mut rng);
+        });
+        println!("{}", r.report_throughput("cells", (side * side) as f64));
+        let mut arr = DeviceArray::sample(side, side, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
+        let plan = FaultPlan {
+            drift_rate: 0.05,
+            drift_step: 0.05,
+            ..FaultPlan::of(7, FaultFamily::StuckAtBound, 0.01)
+        };
+        plan.arm_array(&mut arr, 0);
+        let r = b.run(&format!("analog_update_fault/{side}x{side}"), || {
+            arr.analog_update(&dw, &mut rng);
+        });
+        println!("{}", r.report_throughput("cells", (side * side) as f64));
+    }
+
     // tiled substrate: the same 1024x1024 aggregated update as a 4x4
     // grid of 256^2 tiles, serial vs per-tile scoped-thread fan-out
     let geom = TileGeometry::new(256, 256).expect("valid geometry");

@@ -171,6 +171,7 @@ e2e() {
     out="$(mktemp)"
     cargo test --release --test runtime_integration --test trainer_integration \
         --test interp_golden --test plan_equivalence --test verify_plans \
+        --test fault_recovery \
         -- --nocapture 2>&1 | tee "$out"
     if grep -q "skipping:" "$out"; then
         rm -f "$out"
@@ -182,6 +183,9 @@ e2e() {
     cargo run --release --example train_digits_e2e 150
     echo "== e2e: rider table1 (reduced budget) =="
     cargo run --release -- table1 --steps 20 --seeds 1
+    echo "== e2e: rider faultsweep (reduced smoke grid) =="
+    cargo run --release -- faultsweep --steps 20 --seeds 1 \
+        --methods residual,rider --families drift --rates 0.2
     echo "e2e OK"
 }
 

@@ -60,6 +60,7 @@ use crate::analog::sgd::{AnalogSgd, SgdHypers};
 use crate::analog::tiki_taka::{TikiTaka, TtHypers, TtVariant};
 use crate::cli::Args;
 use crate::config::Config;
+use crate::device::fault::FaultPlan;
 use crate::device::Preset;
 use crate::optim::Objective;
 use crate::util::rng::Rng;
@@ -108,6 +109,12 @@ pub trait AnalogOptimizer {
     fn convergence_metrics(&mut self, _obj: &dyn Objective) -> Option<(f64, f64, f64)> {
         None
     }
+
+    /// Arm a device [`FaultPlan`] on the arrays the method owns, one
+    /// fault sub-stream per array (the chaos-layer seam; see
+    /// `device/fault.rs`). Methods that have not wired the seam yet
+    /// keep the default no-op — their substrate simply stays healthy.
+    fn arm_faults(&mut self, _plan: &FaultPlan) {}
 }
 
 /// Registry identifier of a method (both layers address methods through

@@ -221,6 +221,13 @@ impl AnalogOptimizer for Rider {
         Some(self.q_tracking_error())
     }
 
+    /// Chaos-layer seam: stream 0 faults the fast array P, stream 1
+    /// the slow array W.
+    fn arm_faults(&mut self, plan: &crate::device::fault::FaultPlan) {
+        plan.arm_array(&mut self.p, 0);
+        plan.arm_array(&mut self.w, 1);
+    }
+
     fn convergence_metrics(&mut self, obj: &dyn Objective) -> Option<(f64, f64, f64)> {
         Some(self.metrics(obj))
     }

@@ -86,6 +86,11 @@ impl AnalogOptimizer for AnalogSgd {
     fn name(&self) -> &'static str {
         "sgd"
     }
+
+    /// Chaos-layer seam: stream 0 faults the single weight array.
+    fn arm_faults(&mut self, plan: &crate::device::fault::FaultPlan) {
+        plan.arm_array(&mut self.w, 0);
+    }
 }
 
 #[cfg(test)]

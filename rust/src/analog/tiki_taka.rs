@@ -167,6 +167,13 @@ impl AnalogOptimizer for TikiTaka {
             TtVariant::V2 => "ttv2",
         }
     }
+
+    /// Chaos-layer seam: stream 0 faults the fast array A, stream 1
+    /// the slow array W.
+    fn arm_faults(&mut self, plan: &crate::device::fault::FaultPlan) {
+        plan.arm_array(&mut self.a, 0);
+        plan.arm_array(&mut self.w, 1);
+    }
 }
 
 #[cfg(test)]

@@ -6,7 +6,7 @@
 //! the weight towards the device SP, so after N pulses the read-out is an
 //! SP estimate. Pulse accounting is exact (DeviceArray counts pulses).
 
-use crate::device::DeviceArray;
+use crate::device::{DeviceArray, TiledArray};
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -97,6 +97,33 @@ pub fn run(
     }
 }
 
+/// Selective re-calibration of a tiled array: run ZS on the listed
+/// tiles only (the recovery layer's response to detected faults) and
+/// return the pulses spent. One `base` is drawn from the caller's
+/// stream; tile `k` recalibrates from the sub-stream `Rng::new(base,
+/// k)` — the standard fan-out derivation — so the result is
+/// independent of the order and grouping of recovery batches with the
+/// same base. An empty tile list consumes no randomness.
+pub fn recalibrate_tiles(
+    arr: &mut TiledArray,
+    tiles: &[usize],
+    n_pulses: u64,
+    variant: ZsVariant,
+    rng: &mut Rng,
+) -> u64 {
+    if tiles.is_empty() {
+        return 0;
+    }
+    let base = rng.next_u64();
+    let mut spent = 0u64;
+    for &k in tiles {
+        let mut sub = Rng::new(base, k as u64);
+        let res = run(arr.tile_mut(k), n_pulses, variant, &mut sub);
+        spent += res.pulses;
+    }
+    spent
+}
+
 /// Smallest pulse budget (from a doubling schedule) whose relative
 /// SP-mean error is below `target` — the Fig. 1b measurement.
 pub fn pulses_to_target(
@@ -164,6 +191,36 @@ mod tests {
         let first = res.g_sq_trace[0];
         let last = *res.g_sq_trace.last().unwrap();
         assert!(last < 0.2 * first, "first {first} last {last}");
+    }
+
+    #[test]
+    fn recalibrate_tiles_touches_only_listed_tiles() {
+        use crate::device::TileGeometry;
+        let geom = TileGeometry::new(16, 16).unwrap();
+        let mut arr = TiledArray::sample(
+            32,
+            32,
+            geom,
+            &presets::preset("om").unwrap(),
+            0.3,
+            0.1,
+            0.1,
+            &mut Rng::from_seed(5),
+        );
+        let before: Vec<u64> = (0..4).map(|k| arr.tile(k).pulse_count).collect();
+        let mut rng = Rng::from_seed(6);
+        let spent = recalibrate_tiles(&mut arr, &[1, 3], 100, ZsVariant::Cyclic, &mut rng);
+        assert_eq!(spent, 2 * 100 * 256);
+        for k in [0usize, 2] {
+            assert_eq!(arr.tile(k).pulse_count, before[k], "tile {k} untouched");
+        }
+        for k in [1usize, 3] {
+            assert_eq!(arr.tile(k).pulse_count, before[k] + 100 * 256, "tile {k}");
+        }
+        // empty work list: free and draws nothing
+        let mut r1 = Rng::from_seed(9);
+        assert_eq!(recalibrate_tiles(&mut arr, &[], 100, ZsVariant::Cyclic, &mut r1), 0);
+        assert_eq!(r1.next_u64(), Rng::from_seed(9).next_u64());
     }
 
     #[test]

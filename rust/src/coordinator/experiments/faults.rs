@@ -1,0 +1,174 @@
+//! `rider faultsweep` — the chaos-layer experiment: registry methods x
+//! fault families x rates, each run three ways (clean, faulted, and
+//! faulted with self-healing recovery). The axis the sweep is built to
+//! show: ZS-precalibrated pipelines (`residual`) bake their reference
+//! in once and lose more accuracy under post-calibration faults (drift
+//! in particular) than the SP-tracking methods (`rider`, `erider`) at
+//! the same pulse budget — and budgeted recovery (rewind to the last
+//! healthy checkpoint + selective ZS recalibration of the affected
+//! tiles) recoups part of the gap at a pulse cost the table reports.
+
+use anyhow::Result;
+
+use crate::coordinator::experiments::training::{data_for, ExpCtx};
+use crate::coordinator::metrics::RunDir;
+use crate::coordinator::sweep::Cell;
+use crate::data::Batcher;
+use crate::device::fault::{FaultFamily, FaultPlan};
+use crate::train::fault::{LossSpikeMonitor, NnFaultInjector, RecoveryPolicy};
+use crate::train::{TrainConfig, Trainer};
+use crate::util::table::Table;
+
+/// Default method set: one ZS-precalibrated pipeline against the
+/// paper's SP-tracking methods.
+pub const DEFAULT_METHODS: &[&str] = &["residual", "rider", "erider"];
+
+/// Default fault families for the sweep (the two most distinct
+/// degradation shapes: gradual retention drift vs hard stuck cells).
+pub const DEFAULT_FAMILIES: &[FaultFamily] =
+    &[FaultFamily::DriftToSp, FaultFamily::StuckAtBound];
+
+/// One training run under an armed fault plan, optionally with the
+/// self-healing loop. Returns (test acc %, recovery pulses,
+/// recoveries). Detection combines the spike monitor with an
+/// EMA-degradation check (gradual drift never "spikes"); recovery
+/// rewinds to the last healthy checkpoint, recalibrates only the
+/// affected tiles, and re-applies the (persistent) defects.
+fn run_one(
+    ctx: &ExpCtx,
+    mut cfg: TrainConfig,
+    plan: &FaultPlan,
+    policy: &RecoveryPolicy,
+    recover: bool,
+    seed: u64,
+) -> Result<(f64, u64, u32)> {
+    cfg.seed = seed;
+    cfg.steps = ctx.steps;
+    let train = data_for(&cfg.model, 320, seed ^ 0xDA7A);
+    let test = data_for(&cfg.model, 200, seed ^ 0x7E57);
+    let spec = ctx.reg.model(&cfg.model)?;
+    let dev = cfg.dev;
+    let mut t = Trainer::new(ctx.exec, ctx.reg, cfg)?;
+    let inj = NnFaultInjector::compile(plan, spec, &t.state, &dev);
+    // defects exist from step zero
+    inj.apply(&mut t.state);
+    let mut batcher = Batcher::new(train.n, spec.batch, seed ^ 0xB00C);
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    let mut monitor = LossSpikeMonitor::new(2.5, 10);
+    let mut best_ema = f64::INFINITY;
+    let mut good = t.checkpoint(0);
+    let mut recoveries = 0u32;
+    let mut last_rec = 0usize;
+    let mut recovery_pulses = 0u64;
+    for k in 0..ctx.steps {
+        batcher.next_batch(&train, &mut x, &mut y);
+        let loss = t.step(&x, &y)?;
+        inj.apply(&mut t.state);
+        let spiked = monitor.observe(loss);
+        let ema = monitor.ema();
+        if ema.is_finite() && ema < best_ema {
+            best_ema = ema;
+            if k % 10 == 0 {
+                good = t.checkpoint(k as u64);
+            }
+        }
+        let degraded =
+            spiked || (k > 20 && ema.is_finite() && ema > 1.3 * best_ema);
+        if recover
+            && degraded
+            && !inj.is_empty()
+            && policy.allows(recoveries, k - last_rec)
+        {
+            t.restore(&good);
+            recovery_pulses +=
+                t.recalibrate_tiles(inj.affected_tiles(), policy.zs_pulses)?;
+            inj.apply(&mut t.state);
+            recoveries += 1;
+            last_rec = k;
+            good = t.checkpoint(k as u64);
+            monitor = LossSpikeMonitor::new(2.5, 10);
+            best_ema = f64::INFINITY;
+        }
+    }
+    let (_, acc) = t.eval(&test)?;
+    Ok((acc, recovery_pulses, recoveries))
+}
+
+fn base_cfg(model: &str, method: &str) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::by_name(model, method)?;
+    cfg.ref_mean = 0.4;
+    cfg.ref_std = 0.2;
+    Ok(cfg)
+}
+
+/// The sweep: methods x families x rates, seeds averaged. Every row
+/// reports the clean baseline, the faulted accuracy, the self-healed
+/// accuracy and what the healing cost in ZS pulses.
+pub fn faultsweep(
+    ctx: &ExpCtx,
+    model: &str,
+    methods: &[String],
+    families: &[FaultFamily],
+    rates: &[f64],
+    policy: &RecoveryPolicy,
+) -> Result<Table> {
+    let rd = RunDir::create("faultsweep")?;
+    let mut t = Table::new(
+        &format!(
+            "Fault sweep: test accuracy (model {model}, {} steps, \
+             {} seed(s); recovery budget {} ZS pulses/tile)",
+            ctx.steps,
+            ctx.seeds.len(),
+            policy.zs_pulses
+        ),
+        &[
+            "method",
+            "family",
+            "rate",
+            "clean %",
+            "faulted %",
+            "healed %",
+            "recoveries",
+            "recovery pulses",
+        ],
+    );
+    for m in methods {
+        let mut clean = Cell::default();
+        for &seed in &ctx.seeds {
+            let plan = FaultPlan::none(seed);
+            let (acc, _, _) = run_one(ctx, base_cfg(model, m)?, &plan, policy, false, seed)?;
+            clean.samples.push(acc);
+        }
+        for &fam in families {
+            for &rate in rates {
+                let mut faulted = Cell::default();
+                let mut healed = Cell::default();
+                let mut recs = 0u32;
+                let mut pulses = 0u64;
+                for &seed in &ctx.seeds {
+                    let plan = FaultPlan::of(seed ^ 0xFA17, fam, rate);
+                    let (a, _, _) =
+                        run_one(ctx, base_cfg(model, m)?, &plan, policy, false, seed)?;
+                    faulted.samples.push(a);
+                    let (a, p, r) =
+                        run_one(ctx, base_cfg(model, m)?, &plan, policy, true, seed)?;
+                    healed.samples.push(a);
+                    recs += r;
+                    pulses += p;
+                }
+                t.row(vec![
+                    m.clone(),
+                    fam.name().into(),
+                    format!("{rate}"),
+                    clean.pm(),
+                    faulted.pm(),
+                    healed.pm(),
+                    recs.to_string(),
+                    pulses.to_string(),
+                ]);
+            }
+        }
+    }
+    rd.write_table("faultsweep", &t)?;
+    Ok(t)
+}

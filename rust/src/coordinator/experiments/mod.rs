@@ -1,5 +1,6 @@
 //! One module per paper figure/table (DESIGN.md section 4 index).
 
+pub mod faults;
 pub mod fig1;
 pub mod theory;
 pub mod training;

@@ -26,7 +26,7 @@ pub struct ExpCtx<'a> {
     pub seeds: Vec<u64>,
 }
 
-fn data_for(model: &str, n: usize, seed: u64) -> Dataset {
+pub(crate) fn data_for(model: &str, n: usize, seed: u64) -> Dataset {
     if model == "convnet3" {
         synth_cifar::dataset(n, seed)
     } else {

@@ -34,12 +34,26 @@ impl Cell {
     }
 }
 
+/// One failed grid job: which (mean, std, seed) cell panicked and what
+/// the panic payload said. The rest of the grid still completes; the
+/// failed sample is recorded as NaN (which the NaN-safe stats absorb).
+#[derive(Clone, Debug)]
+pub struct GridFailure {
+    pub mean: f64,
+    pub std: f64,
+    pub seed: u64,
+    pub message: String,
+}
+
 /// A (mean x std) grid of cells for one method.
 #[derive(Clone, Debug)]
 pub struct Grid {
     pub means: Vec<f64>,
     pub stds: Vec<f64>,
     pub cells: Vec<Cell>, // row-major [mean][std]
+    /// Jobs that panicked instead of returning a metric (empty on a
+    /// healthy sweep).
+    pub failures: Vec<GridFailure>,
 }
 
 impl Grid {
@@ -48,6 +62,7 @@ impl Grid {
             means: means.to_vec(),
             stds: stds.to_vec(),
             cells: vec![Cell::default(); means.len() * stds.len()],
+            failures: Vec::new(),
         }
     }
 
@@ -88,7 +103,12 @@ where
         }
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
-    let locals: Vec<Vec<(usize, f64)>> = std::thread::scope(|scope| {
+    // Each job runs under catch_unwind: a panicking cell becomes a NaN
+    // sample plus a recorded (mean, std, seed, message) failure instead
+    // of aborting the whole sweep. The per-worker join can therefore
+    // only fail on a panic *outside* the job loop; that too is caught
+    // and surfaced rather than unwrapped.
+    let locals: Vec<Vec<(usize, Result<f64, String>)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..threads.max(1))
             .map(|_| {
                 scope.spawn(|| {
@@ -99,23 +119,64 @@ where
                             break;
                         }
                         let (_, _, m, s, seed) = jobs[i];
-                        local.push((i, f(m, s, seed)));
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || f(m, s, seed),
+                        ))
+                        .map_err(|e| panic_message(&e));
+                        local.push((i, r));
                     }
                     local
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        handles
+            .into_iter()
+            .filter_map(|h| match h.join() {
+                Ok(local) => Some(local),
+                Err(e) => {
+                    eprintln!("sweep: worker thread died: {}", panic_message(&e));
+                    None
+                }
+            })
+            .collect()
     });
-    let mut flat = vec![0.0f64; jobs.len()];
+    let mut flat: Vec<Option<Result<f64, String>>> = vec![None; jobs.len()];
     for (i, v) in locals.into_iter().flatten() {
-        flat[i] = v;
+        flat[i] = Some(v);
     }
     let mut grid = Grid::new(means, stds);
-    for (&(mi, si, ..), &v) in jobs.iter().zip(&flat) {
-        grid.cells[mi * stds.len() + si].samples.push(v);
+    for (&(mi, si, m, s, seed), v) in jobs.iter().zip(flat) {
+        let sample = match v {
+            Some(Ok(v)) => v,
+            Some(Err(message)) => {
+                grid.failures.push(GridFailure { mean: m, std: s, seed, message });
+                f64::NAN
+            }
+            None => {
+                grid.failures.push(GridFailure {
+                    mean: m,
+                    std: s,
+                    seed,
+                    message: "lost with its worker thread".to_string(),
+                });
+                f64::NAN
+            }
+        };
+        grid.cells[mi * stds.len() + si].samples.push(sample);
     }
     grid
+}
+
+/// Best-effort text of a panic payload (the `&str` / `String` forms
+/// `panic!` produces; anything else gets a placeholder).
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Scale parameters of a pulse-level robustness sweep (one quadratic
@@ -165,6 +226,12 @@ pub fn pulse_robustness_grid_specs(
             let grid = run_grid(means, stds, seeds, p.threads, |m, s, seed| {
                 pulse_cell(spec, p, m, s, seed)
             });
+            for fail in &grid.failures {
+                eprintln!(
+                    "sweep: method {} cell (mean={:.3}, std={:.3}) seed {} panicked: {}",
+                    name, fail.mean, fail.std, fail.seed, fail.message
+                );
+            }
             (name.clone(), grid)
         })
         .collect()
@@ -235,6 +302,30 @@ mod tests {
         // thread interleaving — the per-worker merge preserves job order
         let c = g.cell(1, 2);
         assert_eq!(c.samples, vec![0.8 + 1.0, 0.8 + 2.0, 0.8 + 3.0, 0.8 + 4.0]);
+    }
+
+    #[test]
+    fn panicking_job_does_not_abort_the_grid() {
+        // one poisoned (mean, seed) combination; every other job must
+        // still complete, and the failure is attributed to its exact
+        // (mean, std, seed) coordinates
+        let g = run_grid(&[0.0, 0.5], &[0.1], &[1, 2], 2, |m, s, seed| {
+            if m == 0.5 && seed == 2 {
+                panic!("injected grid failure");
+            }
+            m + s + seed as f64
+        });
+        assert_eq!(g.failures.len(), 1);
+        let fail = &g.failures[0];
+        assert_eq!((fail.mean, fail.std, fail.seed), (0.5, 0.1, 2));
+        assert!(fail.message.contains("injected grid failure"));
+        // the healthy cell is intact, order preserved
+        assert_eq!(g.cell(0, 0).samples, vec![1.1, 2.1]);
+        // the poisoned cell records NaN for the failed seed
+        let c = g.cell(1, 0);
+        assert_eq!(c.samples.len(), 2);
+        assert_eq!(c.samples[0], 1.6);
+        assert!(c.samples[1].is_nan());
     }
 
     #[test]

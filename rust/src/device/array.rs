@@ -23,6 +23,7 @@
 //! (every shipped preset) and `dw_min` is a power of two (as in the
 //! equivalence tests) and agree to the last ulp otherwise.
 
+use crate::device::fault::FaultState;
 use crate::device::presets::Preset;
 use crate::device::response::SoftBounds;
 use crate::util::rng::Rng;
@@ -183,6 +184,10 @@ pub struct DeviceArray {
     pub pulse_count: u64,
     /// reusable scratch for `program` (grown once, then allocation-free)
     scratch: Vec<f32>,
+    /// armed fault mask (`device/fault.rs`), applied after every
+    /// mutating path; `None` keeps every path bit-identical to a build
+    /// without the chaos layer
+    fault: Option<FaultState>,
 }
 
 impl DeviceArray {
@@ -232,6 +237,7 @@ impl DeviceArray {
             c2c: preset.c2c as f32,
             pulse_count: 0,
             scratch: Vec::new(),
+            fault: None,
         }
     }
 
@@ -250,6 +256,36 @@ impl DeviceArray {
             c2c: c2c as f32,
             pulse_count: 0,
             scratch: Vec::new(),
+            fault: None,
+        }
+    }
+
+    /// Arm a compiled fault mask: stuck pins snap immediately (a real
+    /// defect is present before the next update), then the mask is
+    /// re-applied after every mutating path. See `device/fault.rs`.
+    pub fn arm_faults(&mut self, state: FaultState) {
+        for &(i, v) in &state.stuck {
+            self.w[i as usize] = v;
+        }
+        self.fault = Some(state);
+    }
+
+    /// Disarm the fault mask (already-pinned weights keep their last
+    /// value; subsequent updates move them freely again).
+    pub fn clear_faults(&mut self) {
+        self.fault = None;
+    }
+
+    /// The armed fault mask, if any.
+    pub fn fault_state(&self) -> Option<&FaultState> {
+        self.fault.as_ref()
+    }
+
+    /// Post-update fault hook: one `None` check on the clean path.
+    #[inline]
+    fn apply_faults(&mut self) {
+        if let Some(f) = &self.fault {
+            f.apply(&mut self.w);
         }
     }
 
@@ -332,6 +368,7 @@ impl DeviceArray {
         let nw = if up { w + step } else { w - step };
         self.w[i] = nw.clamp(-self.tau_min, self.tau_max);
         self.pulse_count += 1;
+        self.apply_faults();
     }
 
     /// One ZS cycle: apply the same polarity to every cell (batched).
@@ -340,6 +377,7 @@ impl DeviceArray {
         let dir = if up { PulseDir::Up } else { PulseDir::Down };
         pulse_span(&mut self.w, &self.alpha_p, &self.alpha_m, dir, &p, rng);
         self.pulse_count += self.w.len() as u64;
+        self.apply_faults();
     }
 
     /// One stochastic ZS cycle: independent random polarity per cell.
@@ -347,6 +385,7 @@ impl DeviceArray {
         let p = self.params();
         pulse_span(&mut self.w, &self.alpha_p, &self.alpha_m, PulseDir::Random, &p, rng);
         self.pulse_count += self.w.len() as u64;
+        self.apply_faults();
     }
 
     /// Analog Update (paper Eq. 2): realise the desired per-cell
@@ -358,11 +397,12 @@ impl DeviceArray {
         debug_assert_eq!(dw.len(), self.len());
         if self.len() >= PAR_MIN_CELLS && self.rows > PAR_CHUNK_ROWS {
             self.analog_update_chunked(dw, rng);
-            return;
+        } else {
+            let p = self.params();
+            let sent = update_span(&mut self.w, &self.alpha_p, &self.alpha_m, dw, &p, rng);
+            self.pulse_count += sent;
         }
-        let p = self.params();
-        let sent = update_span(&mut self.w, &self.alpha_p, &self.alpha_m, dw, &p, rng);
-        self.pulse_count += sent;
+        self.apply_faults();
     }
 
     /// Row-chunked parallel aggregated update for large tiles. Chunks
@@ -449,11 +489,13 @@ impl DeviceArray {
             self.w[i] = nw.clamp(-self.tau_min, self.tau_max);
             self.pulse_count += n as u64;
         }
+        self.apply_faults();
     }
 
     /// Deterministic variant (round-to-nearest, no noise) — the parity
     /// mode shared with `kernels/ref.py`. Bit-stable: keeps the original
-    /// scalar arithmetic untouched.
+    /// scalar arithmetic untouched (the fault hook is a no-op unless a
+    /// mask is armed).
     pub fn analog_update_det(&mut self, dw: &[f32]) {
         let dwm = self.dw_min;
         for i in 0..self.len() {
@@ -469,6 +511,7 @@ impl DeviceArray {
             self.w[i] = nw.clamp(-self.tau_min, self.tau_max);
             self.pulse_count += n as u64;
         }
+        self.apply_faults();
     }
 
     /// Noisy read-out of the full tile into a caller-owned buffer

@@ -1,0 +1,408 @@
+//! Deterministic device fault injection: the chaos layer of the
+//! crossbar substrate.
+//!
+//! Real crossbars fail in more ways than a biased symmetric point:
+//! cells get stuck at a conductance bound or at their SP, conductances
+//! drift toward the SP between programming cycles, whole rows/columns
+//! lose their drivers, entire tiles die, and ADC periphery develops
+//! offsets or early saturation (the general non-ideality axis of
+//! arXiv:2502.06309). This module models all of those as a declarative
+//! [`FaultPlan`] that is *compiled once* into a per-tile [`FaultState`]
+//! and then applied as a pure post-update mask.
+//!
+//! Contracts (pinned by `rust/tests/fault_equivalence.rs`):
+//!
+//! * **Zero-cost when disarmed.** With no plan armed, every substrate
+//!   path is bit-for-bit identical to a build without this module: the
+//!   only addition to the hot paths is one `if let Some` on a `None`.
+//! * **Deterministic.** All randomness is consumed at *arm* time from
+//!   the sub-stream `Rng::new(plan.seed, k)` — the same derivation the
+//!   tiled fan-out and the row-chunked parallel update use — where `k`
+//!   is the tile index (or a caller-chosen stream for bare arrays).
+//!   Applying a compiled [`FaultState`] consumes no randomness at all,
+//!   so the serial and scoped-thread fan-outs stay bit-identical at
+//!   any worker count, faults armed or not.
+//! * **Pulse accounting is unchanged.** Stuck and dead cells still
+//!   receive (and count) pulses; the fault mask simply forces their
+//!   conductance afterwards, like a real defect would.
+
+use crate::device::array::DeviceArray;
+use crate::util::rng::Rng;
+
+/// The fault families the chaos layer can inject. Each maps a single
+/// `rate` knob onto one [`FaultPlan`] field via [`FaultPlan::of`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultFamily {
+    /// Cells stuck at a window bound (±τ), polarity chosen at arm time.
+    StuckAtBound,
+    /// Cells stuck exactly at their own symmetric point.
+    StuckAtSp,
+    /// Cells whose conductance relaxes toward the SP a little after
+    /// every update cycle (retention loss).
+    DriftToSp,
+    /// Whole rows/columns whose drivers are dead (cells read as 0).
+    DeadLines,
+    /// Entire tiles failing (every cell pinned to 0).
+    TileFailure,
+    /// ADC periphery fault: a constant output offset on the IO chain.
+    Adc,
+}
+
+impl FaultFamily {
+    /// Every injectable family, in sweep order.
+    pub const ALL: [FaultFamily; 6] = [
+        FaultFamily::StuckAtBound,
+        FaultFamily::StuckAtSp,
+        FaultFamily::DriftToSp,
+        FaultFamily::DeadLines,
+        FaultFamily::TileFailure,
+        FaultFamily::Adc,
+    ];
+
+    /// Stable CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultFamily::StuckAtBound => "stuckbound",
+            FaultFamily::StuckAtSp => "stucksp",
+            FaultFamily::DriftToSp => "drift",
+            FaultFamily::DeadLines => "deadlines",
+            FaultFamily::TileFailure => "tilefail",
+            FaultFamily::Adc => "adc",
+        }
+    }
+
+    /// Parse a CLI name produced by [`FaultFamily::name`].
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|f| f.name() == s)
+    }
+}
+
+/// Declarative fault-injection plan: which families to inject and how
+/// hard. A plan is plain data; compiling it against a tile (shape +
+/// SP map + seeded sub-stream) yields the [`FaultState`] mask that the
+/// substrate applies after every update. The all-zero plan compiles to
+/// an empty state everywhere.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// Base seed of the fault sub-streams; tile `k` compiles with
+    /// `Rng::new(seed, k)`.
+    pub seed: u64,
+    /// Probability each cell is stuck at a window bound.
+    pub stuck_bound_rate: f64,
+    /// Probability each cell is stuck at its own SP.
+    pub stuck_sp_rate: f64,
+    /// Probability each cell suffers retention drift toward its SP.
+    pub drift_rate: f64,
+    /// Per-update fractional relaxation toward the SP of drifting
+    /// cells (0.05 = 5% of the remaining distance per update cycle).
+    pub drift_step: f64,
+    /// Probability each physical row / column has a dead driver.
+    pub dead_line_rate: f64,
+    /// Probability an entire tile is dead.
+    pub tile_fail_rate: f64,
+    /// Constant ADC output offset (pre-rescale units; 0 = disabled).
+    pub adc_offset: f32,
+    /// ADC saturation bound tighter than the chain's own
+    /// (`f32::INFINITY` = disabled).
+    pub adc_sat: f32,
+}
+
+impl FaultPlan {
+    /// A plan with every family disabled (compiles to empty states).
+    pub fn none(seed: u64) -> Self {
+        Self {
+            seed,
+            stuck_bound_rate: 0.0,
+            stuck_sp_rate: 0.0,
+            drift_rate: 0.0,
+            drift_step: 0.0,
+            dead_line_rate: 0.0,
+            tile_fail_rate: 0.0,
+            adc_offset: 0.0,
+            adc_sat: f32::INFINITY,
+        }
+    }
+
+    /// A single-family plan at the given rate — the sweep axis of
+    /// `rider faultsweep`. For [`FaultFamily::DriftToSp`] the rate is
+    /// the fraction of drifting cells (relaxation step fixed at 5%);
+    /// for [`FaultFamily::Adc`] the rate is the output offset.
+    pub fn of(seed: u64, family: FaultFamily, rate: f64) -> Self {
+        let mut p = Self::none(seed);
+        match family {
+            FaultFamily::StuckAtBound => p.stuck_bound_rate = rate,
+            FaultFamily::StuckAtSp => p.stuck_sp_rate = rate,
+            FaultFamily::DriftToSp => {
+                p.drift_rate = rate;
+                p.drift_step = 0.05;
+            }
+            FaultFamily::DeadLines => p.dead_line_rate = rate,
+            FaultFamily::TileFailure => p.tile_fail_rate = rate,
+            FaultFamily::Adc => p.adc_offset = rate as f32,
+        }
+        p
+    }
+
+    /// Whether the plan injects nothing at all.
+    pub fn is_noop(&self) -> bool {
+        self.stuck_bound_rate == 0.0
+            && self.stuck_sp_rate == 0.0
+            && self.drift_rate == 0.0
+            && self.dead_line_rate == 0.0
+            && self.tile_fail_rate == 0.0
+            && self.adc_offset == 0.0
+            && !self.adc_sat.is_finite()
+    }
+
+    /// Compile the plan for one `rows x cols` tile into a concrete
+    /// fault mask. `sp` is the tile's per-cell SP map (row-major), and
+    /// `lo`/`hi` the conductance window. All randomness is consumed
+    /// here, in a fixed order (tile failure, dead rows, dead columns,
+    /// stuck-at-bound, stuck-at-SP, drift); families at rate 0 consume
+    /// none, so the all-zero plan compiles without touching `rng`.
+    pub fn compile(
+        &self,
+        rows: usize,
+        cols: usize,
+        sp: &[f32],
+        lo: f32,
+        hi: f32,
+        rng: &mut Rng,
+    ) -> FaultState {
+        debug_assert_eq!(sp.len(), rows * cols);
+        let n = rows * cols;
+        let mut st = FaultState::default();
+        if self.tile_fail_rate > 0.0 && rng.uniform() < self.tile_fail_rate {
+            st.dead_tile = true;
+            st.stuck = (0..n as u32).map(|i| (i, 0.0)).collect();
+            return st;
+        }
+        // dead lines pin every cell of the row/column to 0
+        let mut pinned = vec![false; n];
+        if self.dead_line_rate > 0.0 {
+            for r in 0..rows {
+                if rng.uniform() < self.dead_line_rate {
+                    for c in 0..cols {
+                        pinned[r * cols + c] = true;
+                    }
+                }
+            }
+            for c in 0..cols {
+                if rng.uniform() < self.dead_line_rate {
+                    for r in 0..rows {
+                        pinned[r * cols + c] = true;
+                    }
+                }
+            }
+            for (i, &p) in pinned.iter().enumerate() {
+                if p {
+                    st.stuck.push((i as u32, 0.0));
+                }
+            }
+        }
+        if self.stuck_bound_rate > 0.0 {
+            for i in 0..n {
+                if rng.uniform() < self.stuck_bound_rate && !pinned[i] {
+                    let v = if rng.uniform() < 0.5 { hi } else { lo };
+                    st.stuck.push((i as u32, v));
+                    pinned[i] = true;
+                }
+            }
+        }
+        if self.stuck_sp_rate > 0.0 {
+            for i in 0..n {
+                if rng.uniform() < self.stuck_sp_rate && !pinned[i] {
+                    st.stuck.push((i as u32, sp[i]));
+                    pinned[i] = true;
+                }
+            }
+        }
+        if self.drift_rate > 0.0 && self.drift_step > 0.0 {
+            st.drift_step = self.drift_step as f32;
+            for i in 0..n {
+                if rng.uniform() < self.drift_rate && !pinned[i] {
+                    st.drift.push((i as u32, sp[i]));
+                }
+            }
+        }
+        st
+    }
+
+    /// Compile and arm directly on a bare [`DeviceArray`], using the
+    /// sub-stream `Rng::new(self.seed, stream)` — the seam the
+    /// pulse-level optimizers use (one stream index per owned array).
+    pub fn arm_array(&self, arr: &mut DeviceArray, stream: u64) {
+        let mut sub = Rng::new(self.seed, stream);
+        let mut sp = vec![0.0f32; arr.len()];
+        arr.symmetric_points_into(&mut sp);
+        let st = self.compile(arr.rows, arr.cols, &sp, -arr.tau_min, arr.tau_max, &mut sub);
+        arr.arm_faults(st);
+    }
+}
+
+/// A compiled, per-tile fault mask: everything random has already been
+/// decided, so applying it is a deterministic, allocation-free pass
+/// over the weight slab (drift first, then stuck pins — a cell that is
+/// both stuck and drifting stays stuck).
+#[derive(Clone, Debug, Default)]
+pub struct FaultState {
+    /// Cells pinned to a fixed conductance: `(cell index, value)`.
+    pub stuck: Vec<(u32, f32)>,
+    /// Cells relaxing toward a target (their SP): `(cell index, sp)`.
+    pub drift: Vec<(u32, f32)>,
+    /// Fractional relaxation per update cycle for `drift` cells.
+    pub drift_step: f32,
+    /// Whether the whole tile failed (reported by tile status; the
+    /// cells are also all in `stuck`).
+    pub dead_tile: bool,
+}
+
+impl FaultState {
+    /// Whether the mask injects nothing (the armed-but-empty case —
+    /// still allocation-free and bit-identical to disarmed).
+    pub fn is_empty(&self) -> bool {
+        self.stuck.is_empty() && self.drift.is_empty()
+    }
+
+    /// Number of cells this mask touches.
+    pub fn n_faulty(&self) -> usize {
+        self.stuck.len() + self.drift.len()
+    }
+
+    /// Apply the mask to a weight slab: drift cells relax toward their
+    /// target, stuck cells snap to their pin. Consumes no randomness
+    /// and performs no allocation.
+    pub fn apply(&self, w: &mut [f32]) {
+        let step = self.drift_step;
+        if step != 0.0 {
+            for &(i, sp) in &self.drift {
+                let wv = w[i as usize];
+                w[i as usize] = wv + step * (sp - wv);
+            }
+        }
+        for &(i, v) in &self.stuck {
+            w[i as usize] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+
+    fn arr(seed: u64) -> DeviceArray {
+        DeviceArray::sample(
+            16,
+            16,
+            &presets::preset("om").unwrap(),
+            0.3,
+            0.1,
+            0.1,
+            &mut Rng::from_seed(seed),
+        )
+    }
+
+    #[test]
+    fn noop_plan_compiles_empty_and_draws_nothing() {
+        let plan = FaultPlan::none(7);
+        assert!(plan.is_noop());
+        let mut rng = Rng::new(7, 0);
+        let before = rng.next_u64();
+        let mut rng = Rng::new(7, 0);
+        let sp = vec![0.0f32; 16];
+        let st = plan.compile(4, 4, &sp, -1.0, 1.0, &mut rng);
+        assert!(st.is_empty());
+        assert_eq!(rng.next_u64(), before, "no-op compile must not draw");
+    }
+
+    #[test]
+    fn compile_is_deterministic() {
+        let plan = FaultPlan::of(11, FaultFamily::StuckAtBound, 0.1);
+        let a = arr(1);
+        let sp = a.symmetric_points();
+        let s1 = plan.compile(16, 16, &sp, -1.0, 1.0, &mut Rng::new(11, 3));
+        let s2 = plan.compile(16, 16, &sp, -1.0, 1.0, &mut Rng::new(11, 3));
+        assert_eq!(s1.stuck, s2.stuck);
+    }
+
+    #[test]
+    fn stuck_cells_stay_pinned_under_updates() {
+        let mut a = arr(2);
+        let plan = FaultPlan::of(5, FaultFamily::StuckAtBound, 0.2);
+        plan.arm_array(&mut a, 0);
+        let pins: Vec<(u32, f32)> = a.fault_state().unwrap().stuck.clone();
+        assert!(!pins.is_empty(), "rate 0.2 over 256 cells must pin some");
+        let mut rng = Rng::from_seed(3);
+        let dw = vec![0.05f32; a.len()];
+        for _ in 0..5 {
+            a.analog_update(&dw, &mut rng);
+        }
+        for &(i, v) in &pins {
+            assert_eq!(a.w[i as usize], v, "cell {i}");
+        }
+    }
+
+    #[test]
+    fn drift_relaxes_toward_sp() {
+        let mut a = arr(3);
+        let sp = a.symmetric_points();
+        let plan = FaultPlan::of(9, FaultFamily::DriftToSp, 1.0);
+        plan.arm_array(&mut a, 0);
+        let n_drift = a.fault_state().unwrap().drift.len();
+        assert!(n_drift > 200, "rate 1.0 must catch nearly all cells");
+        let d0: f64 = a
+            .w
+            .iter()
+            .zip(&sp)
+            .map(|(w, s)| (w - s).abs() as f64)
+            .sum();
+        // deterministic zero update: only the fault mask acts
+        let dw = vec![0.0f32; a.len()];
+        for _ in 0..50 {
+            a.analog_update_det(&dw);
+        }
+        let d1: f64 = a
+            .w
+            .iter()
+            .zip(&sp)
+            .map(|(w, s)| (w - s).abs() as f64)
+            .sum();
+        assert!(d1 < 0.1 * d0 + 1e-6, "distance {d0} -> {d1}");
+    }
+
+    #[test]
+    fn dead_lines_pin_whole_rows() {
+        let plan = FaultPlan::of(21, FaultFamily::DeadLines, 0.5);
+        let a = arr(4);
+        let sp = a.symmetric_points();
+        let st = plan.compile(16, 16, &sp, -1.0, 1.0, &mut Rng::new(21, 0));
+        assert!(!st.stuck.is_empty());
+        assert!(st.stuck.iter().all(|&(_, v)| v == 0.0));
+        // dead lines come in full rows/cols: count must be a multiple
+        // of nothing in general (rows and cols overlap), but every
+        // pinned cell shares a row or column with 15 other pins
+        for &(i, _) in &st.stuck {
+            let (r, c) = (i as usize / 16, i as usize % 16);
+            let row_pins = st.stuck.iter().filter(|&&(j, _)| j as usize / 16 == r).count();
+            let col_pins = st.stuck.iter().filter(|&&(j, _)| j as usize % 16 == c).count();
+            assert!(row_pins == 16 || col_pins == 16, "cell {i} not on a dead line");
+        }
+    }
+
+    #[test]
+    fn tile_failure_pins_everything() {
+        let plan = FaultPlan::of(13, FaultFamily::TileFailure, 1.0);
+        let st = plan.compile(4, 4, &[0.0; 16], -1.0, 1.0, &mut Rng::new(13, 0));
+        assert!(st.dead_tile);
+        assert_eq!(st.stuck.len(), 16);
+    }
+
+    #[test]
+    fn family_names_round_trip() {
+        for f in FaultFamily::ALL {
+            assert_eq!(FaultFamily::parse(f.name()), Some(f));
+        }
+        assert_eq!(FaultFamily::parse("nope"), None);
+    }
+}

@@ -17,6 +17,12 @@ pub struct IoChain {
     pub out_bound: f32,
     /// ADC read-noise std (pre-rescale units).
     pub out_noise: f32,
+    /// Injected ADC fault: constant output offset (pre-rescale units;
+    /// 0 = healthy). Armed by the fault layer (`device/fault.rs`).
+    pub adc_offset: f32,
+    /// Injected ADC fault: early saturation bound tighter than
+    /// `out_bound` (`f32::INFINITY` = healthy).
+    pub adc_sat: f32,
 }
 
 impl Default for IoChain {
@@ -26,6 +32,8 @@ impl Default for IoChain {
             out_res: 1.0 / 511.0, // 9-bit ADC
             out_bound: 12.0,
             out_noise: 0.06,
+            adc_offset: 0.0,
+            adc_sat: f32::INFINITY,
         }
     }
 }
@@ -39,11 +47,25 @@ impl IoChain {
             out_res: 1e-9,
             out_bound: 1e9,
             out_noise: 0.0,
+            adc_offset: 0.0,
+            adc_sat: f32::INFINITY,
         }
+    }
+
+    /// Whether an ADC fault is armed on this chain.
+    pub fn adc_faulty(&self) -> bool {
+        self.adc_offset != 0.0 || self.adc_sat.is_finite()
+    }
+
+    /// Reset the injected ADC fault fields to healthy.
+    pub fn clear_faults(&mut self) {
+        self.adc_offset = 0.0;
+        self.adc_sat = f32::INFINITY;
     }
 
     /// y[b,n] = x[b,k] @ w[k,n] through the analog chain.
     /// `deterministic` drops read noise (quantization stays).
+    /// Allocating wrapper over [`IoChain::mvm_into`].
     pub fn mvm(
         &self,
         x: &[f32],
@@ -54,10 +76,36 @@ impl IoChain {
         rng: &mut Rng,
         deterministic: bool,
     ) -> Vec<f32> {
-        assert_eq!(x.len(), b * k);
-        assert_eq!(w.len(), k * n);
         let mut out = vec![0.0f32; b * n];
         let mut xq = vec![0.0f32; k];
+        self.mvm_into(x, w, b, k, n, rng, deterministic, &mut out, &mut xq);
+        out
+    }
+
+    /// Allocation-free MVM into caller-owned scratch: `out` receives
+    /// the `b x n` result (overwritten), `xq` is the DAC staging buffer
+    /// (length `k`). Bit-identical to [`IoChain::mvm`] — the tiled
+    /// partial-sum path uses this to stop allocating two `Vec`s per
+    /// tile per call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mvm_into(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        b: usize,
+        k: usize,
+        n: usize,
+        rng: &mut Rng,
+        deterministic: bool,
+        out: &mut [f32],
+        xq: &mut [f32],
+    ) {
+        assert_eq!(x.len(), b * k);
+        assert_eq!(w.len(), k * n);
+        assert_eq!(out.len(), b * n);
+        assert_eq!(xq.len(), k);
+        out.fill(0.0);
+        let faulty = self.adc_faulty();
         for bi in 0..b {
             let row = &x[bi * k..(bi + 1) * k];
             // ABS_MAX noise management
@@ -88,11 +136,15 @@ impl IoChain {
                 rng.add_normal_f32(orow, self.out_noise);
             }
             for o in orow.iter_mut() {
-                let y = (*o / self.out_res).round() * self.out_res;
+                let mut y = (*o / self.out_res).round() * self.out_res;
+                // injected ADC fault (offset / early saturation):
+                // branch-guarded so a healthy chain stays bit-identical
+                if faulty {
+                    y = (y + self.adc_offset).clamp(-self.adc_sat, self.adc_sat);
+                }
                 *o = y.clamp(-self.out_bound, self.out_bound) * scale;
             }
         }
-        out
     }
 }
 
@@ -155,6 +207,52 @@ mod tests {
             (var - want_var).abs() < 0.15 * want_var,
             "var {var} vs {want_var}"
         );
+    }
+
+    #[test]
+    fn mvm_into_bit_identical_to_mvm() {
+        let io = IoChain::default();
+        let (b, k, n) = (3, 16, 8);
+        let x: Vec<f32> = (0..b * k).map(|i| ((i * 37 % 17) as f32 - 8.0) / 8.0).collect();
+        let w: Vec<f32> = (0..k * n).map(|i| ((i * 53 % 13) as f32 - 6.0) / 13.0).collect();
+        let mut r1 = Rng::from_seed(77);
+        let mut r2 = Rng::from_seed(77);
+        let y1 = io.mvm(&x, &w, b, k, n, &mut r1, false);
+        let mut y2 = vec![1.0f32; b * n]; // stale scratch must be overwritten
+        let mut xq = vec![1.0f32; k];
+        io.mvm_into(&x, &w, b, k, n, &mut r2, false, &mut y2, &mut xq);
+        assert_eq!(y1, y2);
+        assert_eq!(r1.next_u64(), r2.next_u64(), "same RNG consumption");
+    }
+
+    #[test]
+    fn adc_offset_fault_shifts_output() {
+        let healthy = IoChain::default();
+        let faulty = IoChain {
+            adc_offset: 0.25,
+            ..IoChain::default()
+        };
+        let mut rng = Rng::from_seed(2);
+        let x = vec![1.0f32; 4]; // scale = 1
+        let w = vec![0.1f32; 4];
+        let yh = healthy.mvm(&x, &w, 1, 4, 1, &mut rng, true)[0];
+        let yf = faulty.mvm(&x, &w, 1, 4, 1, &mut rng, true)[0];
+        assert!((yf - yh - 0.25).abs() < 1e-6, "{yf} vs {yh}");
+    }
+
+    #[test]
+    fn adc_saturation_fault_clips_early() {
+        let faulty = IoChain {
+            adc_sat: 0.2,
+            ..IoChain::default()
+        };
+        assert!(faulty.adc_faulty());
+        let mut rng = Rng::from_seed(2);
+        let y = faulty.mvm(&[1.0; 4], &[1.0; 4], 1, 4, 1, &mut rng, true)[0];
+        assert!((y - 0.2).abs() < 1e-6, "{y}");
+        let mut healed = faulty;
+        healed.clear_faults();
+        assert!(!healed.adc_faulty());
     }
 
     #[test]

@@ -4,12 +4,14 @@
 #![warn(missing_docs)]
 
 pub mod array;
+pub mod fault;
 pub mod io;
 pub mod presets;
 pub mod response;
 pub mod tile;
 
 pub use array::DeviceArray;
+pub use fault::{FaultFamily, FaultPlan, FaultState};
 pub use io::IoChain;
 pub use presets::{preset, Preset, HFO2, IDEAL, OM, PRECISE};
 pub use response::{ExpDevice, LinearMonotone, Response, SoftBounds};

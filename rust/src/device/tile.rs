@@ -28,6 +28,7 @@
 //! tiles trained on successive residuals and summed at read-out.
 
 use crate::device::array::DeviceArray;
+use crate::device::fault::{FaultPlan, FaultState};
 use crate::device::io::IoChain;
 use crate::device::presets::Preset;
 use crate::device::response::SoftBounds;
@@ -250,6 +251,63 @@ impl TiledArray {
     /// Total pulses applied across all tiles (pulse accounting).
     pub fn pulse_count(&self) -> u64 {
         self.tiles.iter().map(|t| t.pulse_count).sum()
+    }
+
+    /// Arm a [`FaultPlan`] across the grid: tile `k` compiles the plan
+    /// against its own SP map with the sub-stream `Rng::new(plan.seed,
+    /// k)` — the same derivation as every other per-tile fan-out — and
+    /// the plan's ADC fault fields are installed on every tile's IO
+    /// chain. Applying the compiled masks consumes no randomness, so
+    /// the serial and threaded fan-outs stay bit-identical with faults
+    /// armed.
+    pub fn arm_faults(&mut self, plan: &FaultPlan) {
+        let mut sp = Vec::new();
+        for (k, tile) in self.tiles.iter_mut().enumerate() {
+            sp.resize(tile.len(), 0.0);
+            tile.symmetric_points_into(&mut sp);
+            let mut sub = Rng::new(plan.seed, k as u64);
+            let st = plan.compile(tile.rows, tile.cols, &sp, -tile.tau_min, tile.tau_max, &mut sub);
+            tile.arm_faults(st);
+            self.io[k].adc_offset = plan.adc_offset;
+            self.io[k].adc_sat = plan.adc_sat;
+        }
+    }
+
+    /// Disarm every tile's fault mask and heal the IO chains.
+    pub fn clear_faults(&mut self) {
+        for tile in self.tiles.iter_mut() {
+            tile.clear_faults();
+        }
+        for io in self.io.iter_mut() {
+            io.clear_faults();
+        }
+    }
+
+    /// Tile `k`'s compiled fault mask, if a plan is armed.
+    pub fn tile_fault(&self, k: usize) -> Option<&FaultState> {
+        self.tiles[k].fault_state()
+    }
+
+    /// Per-tile fault status: the indices of tiles whose compiled mask
+    /// touches at least one cell (the selective-recalibration work
+    /// list of the recovery layer).
+    pub fn faulty_tiles(&self) -> Vec<usize> {
+        (0..self.tiles.len())
+            .filter(|&k| {
+                self.tiles[k]
+                    .fault_state()
+                    .map(|f| !f.is_empty())
+                    .unwrap_or(false)
+            })
+            .collect()
+    }
+
+    /// Total number of fault-masked cells across the grid.
+    pub fn faulty_cells(&self) -> usize {
+        self.tiles
+            .iter()
+            .filter_map(|t| t.fault_state().map(|f| f.n_faulty()))
+            .sum()
     }
 
     /// Cap the fan-out worker-thread count (0 = available parallelism).
@@ -552,7 +610,12 @@ impl TiledArray {
         }
         let base = if deterministic { 0 } else { rng.next_u64() };
         let mut y = vec![0.0f32; b * self.cols];
+        // per-call staging (sized for the largest tile) reused across
+        // all tiles: the per-tile partial-sum loop itself is
+        // allocation-free via `IoChain::mvm_into`
         let mut xblock = vec![0.0f32; b * self.geom.tile_rows];
+        let mut part = vec![0.0f32; b * self.geom.tile_cols];
+        let mut xq = vec![0.0f32; self.geom.tile_rows];
         for (k, tile) in self.tiles.iter().enumerate() {
             let (r0, c0) = self.tile_origin(k);
             let xb = &mut xblock[..b * tile.rows];
@@ -561,11 +624,21 @@ impl TiledArray {
                     .copy_from_slice(&x[bi * self.rows + r0..bi * self.rows + r0 + tile.rows]);
             }
             let mut sub = Rng::new(base, k as u64);
-            let part =
-                self.io[k].mvm(xb, &tile.w, b, tile.rows, tile.cols, &mut sub, deterministic);
+            let pt = &mut part[..b * tile.cols];
+            self.io[k].mvm_into(
+                xb,
+                &tile.w,
+                b,
+                tile.rows,
+                tile.cols,
+                &mut sub,
+                deterministic,
+                pt,
+                &mut xq[..tile.rows],
+            );
             for bi in 0..b {
                 let dst = &mut y[bi * self.cols + c0..bi * self.cols + c0 + tile.cols];
-                for (o, p) in dst.iter_mut().zip(&part[bi * tile.cols..(bi + 1) * tile.cols]) {
+                for (o, p) in dst.iter_mut().zip(&pt[bi * tile.cols..(bi + 1) * tile.cols]) {
                     *o += *p;
                 }
             }

@@ -2,7 +2,7 @@
 //! generic `train` / `calibrate` entry points. See README for usage.
 
 use analog_rider::cli::Args;
-use analog_rider::coordinator::experiments::{fig1, theory, training};
+use analog_rider::coordinator::experiments::{faults, fig1, theory, training};
 use analog_rider::runtime::{Executor, Registry};
 use analog_rider::train::{DevParams, TrainConfig, Trainer};
 
@@ -50,6 +50,13 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                  \u{20}             [--method[s] a,b|all]  (table1/table2 grids)\n\
                  \u{20}  rider ablations [--steps N]\n\
                  \u{20}  rider theory [--seed S] [--method[s] erider,residual|all]\n\
+                 \n\
+                 chaos layer (device fault injection + self-healing):\n\
+                 \u{20}  rider faultsweep [--steps N] [--seeds K] [--model fcn]\n\
+                 \u{20}             [--method[s] residual,rider,erider|all]\n\
+                 \u{20}             [--families drift,stuckbound]  (stuckbound|stucksp|\n\
+                 \u{20}              drift|deadlines|tilefail|adc) [--rates 0.05,0.2]\n\
+                 \u{20}             [--recovery-pulses 500]  (ZS budget per healed tile)\n\
                  \n\
                  generic (methods by registry name, shared by BOTH the\n\
                  \u{20}   pulse level and the NN scale:\n\
@@ -306,6 +313,32 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 }
                 "table8" => {
                     print!("{}", training::table8(&ctx)?.render());
+                    Ok(())
+                }
+                "faultsweep" => {
+                    use analog_rider::device::fault::FaultFamily;
+                    use analog_rider::train::RecoveryPolicy;
+                    let methods = method_list(args, faults::DEFAULT_METHODS)?;
+                    let names = args.get_str_list("families", &["drift", "stuckbound"]);
+                    let mut families = Vec::new();
+                    for f in &names {
+                        families.push(FaultFamily::parse(f).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "unknown fault family '{f}' (families: \
+                                 stuckbound|stucksp|drift|deadlines|tilefail|adc)"
+                            )
+                        })?);
+                    }
+                    let rates = args.get_f64_list("rates", &[0.05, 0.2]);
+                    let policy = RecoveryPolicy {
+                        zs_pulses: args.get_u64("recovery-pulses", 500),
+                        ..RecoveryPolicy::default()
+                    };
+                    let model = args.get_str("model", "fcn");
+                    let t = faults::faultsweep(
+                        &ctx, &model, &methods, &families, &rates, &policy,
+                    )?;
+                    print!("{}", t.render());
                     Ok(())
                 }
                 "ablations" => {

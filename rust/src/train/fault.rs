@@ -1,0 +1,578 @@
+//! NN-scale fault injection and self-healing recovery.
+//!
+//! The pulse-level chaos layer lives in [`crate::device::fault`]; this
+//! module lifts it to the HLO training path, where the crossbar state
+//! is a set of flat host tensors (one per manifest leaf) rather than a
+//! live [`crate::device::DeviceArray`]. A [`NnFaultInjector`] compiles
+//! a [`FaultPlan`] against the model manifest once — per-element SPs
+//! are reconstructed from the `wap`/`wam` (and `pap`/`pam`) slope
+//! leaves, and each leaf gets its own sub-stream `Rng::new(plan.seed,
+//! leaf_index)` — and is then applied as a pure post-step mask on
+//! [`ModelState`], exactly mirroring the post-update hook the device
+//! arrays use.
+//!
+//! On top sit the recovery primitives: a loss-spike monitor and an
+//! SP-residual probe for detection, a [`RecoveryPolicy`] budget, and an
+//! atomic, crash-consistent [`Checkpoint`] of the model state plus
+//! pulse accounting, so a recovery (or a crash) can rewind training to
+//! a known-good point bit-for-bit.
+//!
+//! ADC-family plans are a no-op at this level: the IO chain is baked
+//! into the AOT artifacts, so ADC faults only exist on the pulse-level
+//! substrate (`IoChain::adc_offset`/`adc_sat`).
+
+use anyhow::{anyhow, Result};
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::analog::pulse_counter::PulseCost;
+use crate::device::fault::{FaultPlan, FaultState};
+use crate::runtime::ModelSpec;
+use crate::train::hypers::DevParams;
+use crate::train::state::ModelState;
+use crate::util::rng::Rng;
+
+/// The analog roles that live on physical crossbars at NN scale, with
+/// the slope-leaf roles their per-element SPs are derived from.
+const ANALOG_ROLES: [(&str, &str, &str); 2] = [("w", "wap", "wam"), ("p", "pap", "pam")];
+
+/// Per-element symmetric point from the device slope maps:
+/// `sp = (a+ - a-)/(a+/tau_max + a-/tau_min)` (paper Eq. 3 rearranged),
+/// with a zero fallback when the denominator vanishes.
+fn sp_from_slopes(ap: f32, am: f32, tau_max: f32, tau_min: f32) -> f32 {
+    let den = ap / tau_max + am / tau_min;
+    if den.abs() < 1e-12 {
+        0.0
+    } else {
+        (ap - am) / den
+    }
+}
+
+fn leaf_by_role_tile(spec: &ModelSpec, role: &str, tile: usize) -> Option<usize> {
+    spec.state
+        .iter()
+        .position(|l| l.role == role && l.tile == tile)
+}
+
+/// A [`FaultPlan`] compiled against a model manifest: one
+/// [`FaultState`] per analog leaf, applied to the flat state tensors
+/// after every optimizer step. Compilation consumes all randomness;
+/// [`NnFaultInjector::apply`] is deterministic and allocation-free.
+#[derive(Clone, Debug)]
+pub struct NnFaultInjector {
+    /// `(leaf index, compiled mask)` for every faulted analog leaf.
+    masks: Vec<(usize, FaultState)>,
+    /// Sorted, deduplicated tile indices with at least one faulty cell
+    /// — the recovery layer's work list.
+    tiles: Vec<usize>,
+}
+
+impl NnFaultInjector {
+    /// Compile `plan` against the manifest. Leaf `i` (with an analog
+    /// role) compiles from the sub-stream `Rng::new(plan.seed, i)`, so
+    /// the result is independent of iteration order and of which other
+    /// leaves exist. The conductance window is `[-dev.tau_min,
+    /// dev.tau_max]`, as on the pulse-level arrays.
+    pub fn compile(
+        plan: &FaultPlan,
+        spec: &ModelSpec,
+        state: &ModelState,
+        dev: &DevParams,
+    ) -> NnFaultInjector {
+        let mut masks = Vec::new();
+        let mut tiles = Vec::new();
+        for (i, leaf) in spec.state.iter().enumerate() {
+            let Some((_, ap_role, am_role)) =
+                ANALOG_ROLES.iter().find(|(r, _, _)| leaf.role == *r)
+            else {
+                continue;
+            };
+            let n = leaf.numel();
+            let (rows, cols) = if leaf.shape.len() >= 2 && leaf.shape[0] > 0 {
+                (leaf.shape[0], n / leaf.shape[0])
+            } else {
+                (1, n)
+            };
+            let ap = leaf_by_role_tile(spec, ap_role, leaf.tile);
+            let am = leaf_by_role_tile(spec, am_role, leaf.tile);
+            let sp: Vec<f32> = match (ap, am) {
+                (Some(ap), Some(am)) => (0..n)
+                    .map(|j| {
+                        sp_from_slopes(
+                            state.leaves[ap][j],
+                            state.leaves[am][j],
+                            dev.tau_max,
+                            dev.tau_min,
+                        )
+                    })
+                    .collect(),
+                _ => vec![0.0; n],
+            };
+            let mut sub = Rng::new(plan.seed, i as u64);
+            let st = plan.compile(rows, cols, &sp, -dev.tau_min, dev.tau_max, &mut sub);
+            if !st.is_empty() {
+                tiles.push(leaf.tile);
+                masks.push((i, st));
+            }
+        }
+        tiles.sort_unstable();
+        tiles.dedup();
+        NnFaultInjector { masks, tiles }
+    }
+
+    /// Apply the compiled masks to the state (call after each step).
+    /// Stuck pins snap immediately; drift cells relax one step.
+    pub fn apply(&self, state: &mut ModelState) {
+        for (i, st) in &self.masks {
+            st.apply(&mut state.leaves[*i]);
+        }
+    }
+
+    /// Tiles with at least one faulty cell — what selective
+    /// recalibration should target.
+    pub fn affected_tiles(&self) -> &[usize] {
+        &self.tiles
+    }
+
+    /// Total number of faulty cells across all leaves.
+    pub fn n_faulty(&self) -> usize {
+        self.masks.iter().map(|(_, s)| s.n_faulty()).sum()
+    }
+
+    /// Whether the compiled plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.masks.is_empty()
+    }
+}
+
+/// Mean absolute gap between the stored reference `q` and the *actual*
+/// per-element SP of the fast array `p` (reconstructed from the
+/// `pap`/`pam` slopes) — the detection signal the paper's SP-tracking
+/// argument suggests: drift faults move the effective SP landscape
+/// away from whatever was calibrated. Returns 0 when the manifest has
+/// no `(p, q)` tile pairs.
+pub fn sp_residual(spec: &ModelSpec, state: &ModelState, dev: &DevParams) -> f64 {
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for leaf in &spec.state {
+        if leaf.role != "p" {
+            continue;
+        }
+        let (Some(ap), Some(am), Some(q)) = (
+            leaf_by_role_tile(spec, "pap", leaf.tile),
+            leaf_by_role_tile(spec, "pam", leaf.tile),
+            leaf_by_role_tile(spec, "q", leaf.tile),
+        ) else {
+            continue;
+        };
+        for j in 0..leaf.numel().min(state.leaves[q].len()) {
+            let sp = sp_from_slopes(
+                state.leaves[ap][j],
+                state.leaves[am][j],
+                dev.tau_max,
+                dev.tau_min,
+            );
+            sum += (sp - state.leaves[q][j]).abs() as f64;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// EMA-based loss-spike detector: fires when the instantaneous loss
+/// exceeds `factor` times the running EMA after a warmup period. The
+/// EMA uses the trainer's own 0.95/0.05 smoothing so the two curves
+/// are directly comparable.
+#[derive(Clone, Copy, Debug)]
+pub struct LossSpikeMonitor {
+    ema: f64,
+    factor: f64,
+    warmup: usize,
+    seen: usize,
+}
+
+impl LossSpikeMonitor {
+    /// `factor` = spike threshold relative to the EMA; `warmup` = steps
+    /// observed before the monitor may fire.
+    pub fn new(factor: f64, warmup: usize) -> Self {
+        Self {
+            ema: f64::NAN,
+            factor,
+            warmup,
+            seen: 0,
+        }
+    }
+
+    /// Feed one training loss; returns `true` on a spike. The spike
+    /// test runs against the EMA *before* this observation so a single
+    /// bad step cannot mask itself.
+    pub fn observe(&mut self, loss: f64) -> bool {
+        self.seen += 1;
+        let spiked = self.seen > self.warmup
+            && self.ema.is_finite()
+            && loss.is_finite()
+            && loss > self.factor * self.ema;
+        // a non-finite loss is itself a spike, and must not poison the EMA
+        if !loss.is_finite() {
+            return self.seen > self.warmup;
+        }
+        self.ema = if self.ema.is_nan() {
+            loss
+        } else {
+            0.95 * self.ema + 0.05 * loss
+        };
+        spiked
+    }
+
+    /// Current EMA of the observed losses.
+    pub fn ema(&self) -> f64 {
+        self.ema
+    }
+}
+
+/// Budgeted recovery policy: how many ZS pulses a recalibration may
+/// spend per tile, how many recoveries a run may attempt, and the
+/// minimum step gap between attempts (so one persistent fault cannot
+/// burn the whole pulse budget in consecutive steps).
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryPolicy {
+    /// ZS pulse cycles per recalibrated tile.
+    pub zs_pulses: u64,
+    /// Maximum number of recovery attempts per training run.
+    pub max_recoveries: u32,
+    /// Minimum steps between two recovery attempts.
+    pub cooldown: usize,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        Self {
+            zs_pulses: 500,
+            max_recoveries: 3,
+            cooldown: 25,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// Whether another recovery is allowed given the attempts so far
+    /// and the steps elapsed since the last one.
+    pub fn allows(&self, attempts: u32, steps_since_last: usize) -> bool {
+        attempts < self.max_recoveries && steps_since_last >= self.cooldown
+    }
+}
+
+const CKPT_MAGIC: u64 = 0x5250_434B_5054_0001; // "RPCKPT" + version 1
+
+/// A crash-consistent snapshot of a training run: the model state
+/// tensors plus everything needed to resume bit-for-bit (the artifact
+/// key counter and the pulse accounting). Saved atomically — the file
+/// is fully written and synced under a temporary name, then renamed
+/// into place, so a reader never observes a torn checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Step index the snapshot was taken at.
+    pub step: u64,
+    /// The trainer's artifact key counter (RNG stream position).
+    pub key_counter: u64,
+    /// Pulse accounting at snapshot time (calibration + recovery).
+    pub cost: PulseCost,
+    /// One flat tensor per manifest leaf, in manifest order.
+    pub leaves: Vec<Vec<f32>>,
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+impl Checkpoint {
+    /// Serialize to a little-endian, length-prefixed binary buffer.
+    fn to_bytes(&self) -> Vec<u8> {
+        let payload: usize = self.leaves.iter().map(|l| 8 + 4 * l.len()).sum();
+        let mut buf = Vec::with_capacity(8 * 7 + payload);
+        put_u64(&mut buf, CKPT_MAGIC);
+        put_u64(&mut buf, self.step);
+        put_u64(&mut buf, self.key_counter);
+        put_u64(&mut buf, self.cost.update_pulses);
+        put_u64(&mut buf, self.cost.calibration_pulses);
+        put_u64(&mut buf, self.cost.programming_events);
+        put_u64(&mut buf, self.cost.digital_ops);
+        put_u64(&mut buf, self.leaves.len() as u64);
+        for leaf in &self.leaves {
+            put_u64(&mut buf, leaf.len() as u64);
+            for &v in leaf {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        buf
+    }
+
+    /// Atomically write the checkpoint to `path` (write + sync a
+    /// sibling `.tmp`, then rename over the target).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp)
+                .map_err(|e| anyhow!("checkpoint {}: {e}", tmp.display()))?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path)
+            .map_err(|e| anyhow!("checkpoint rename to {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`Checkpoint::save`].
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = fs::File::open(path)
+            .map_err(|e| anyhow!("checkpoint {}: {e}", path.display()))?;
+        if get_u64(&mut f)? != CKPT_MAGIC {
+            return Err(anyhow!("{}: not a checkpoint file", path.display()));
+        }
+        let step = get_u64(&mut f)?;
+        let key_counter = get_u64(&mut f)?;
+        let cost = PulseCost {
+            update_pulses: get_u64(&mut f)?,
+            calibration_pulses: get_u64(&mut f)?,
+            programming_events: get_u64(&mut f)?,
+            digital_ops: get_u64(&mut f)?,
+        };
+        let n_leaves = get_u64(&mut f)? as usize;
+        if n_leaves > 1 << 20 {
+            return Err(anyhow!("{}: implausible leaf count {n_leaves}", path.display()));
+        }
+        let mut leaves = Vec::with_capacity(n_leaves);
+        for _ in 0..n_leaves {
+            let len = get_u64(&mut f)? as usize;
+            if len > 1 << 28 {
+                return Err(anyhow!("{}: implausible leaf length {len}", path.display()));
+            }
+            let mut bytes = vec![0u8; 4 * len];
+            f.read_exact(&mut bytes)?;
+            let leaf = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            leaves.push(leaf);
+        }
+        Ok(Checkpoint {
+            step,
+            key_counter,
+            cost,
+            leaves,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::fault::FaultFamily;
+    use crate::runtime::{ModelSpec, StateLeaf};
+
+    fn leaf(name: &str, shape: Vec<usize>, role: &str, tile: usize) -> StateLeaf {
+        StateLeaf {
+            name: name.into(),
+            shape,
+            role: role.into(),
+            tile,
+        }
+    }
+
+    /// A two-tile manifest with full analog role sets.
+    fn spec() -> ModelSpec {
+        let mut state = Vec::new();
+        for t in 0..2usize {
+            for role in ["w", "wap", "wam", "p", "pap", "pam", "q"] {
+                state.push(leaf(&format!("t{t}.{role}"), vec![4, 4], role, t));
+            }
+        }
+        state.push(leaf("b", vec![4], "bias", 0));
+        ModelSpec {
+            name: "toy".into(),
+            batch: 2,
+            eval_batch: 2,
+            d_in: 4,
+            n_classes: 4,
+            state,
+        }
+    }
+
+    fn state_for(spec: &ModelSpec) -> ModelState {
+        let leaves = spec
+            .state
+            .iter()
+            .map(|l| {
+                let v = match l.role.as_str() {
+                    "wap" | "pap" => 1.2,
+                    "wam" | "pam" => 0.8,
+                    _ => 0.25,
+                };
+                vec![v; l.numel()]
+            })
+            .collect();
+        ModelState { leaves }
+    }
+
+    fn dev() -> DevParams {
+        DevParams {
+            tau_max: 1.0,
+            tau_min: 1.0,
+            ..DevParams::from_preset(&crate::device::OM)
+        }
+    }
+
+    #[test]
+    fn sp_matches_closed_form() {
+        // tau = 1: sp = (ap - am) / (ap + am)
+        let sp = sp_from_slopes(1.2, 0.8, 1.0, 1.0);
+        assert!((sp - 0.2).abs() < 1e-6, "{sp}");
+        assert_eq!(sp_from_slopes(0.0, 0.0, 1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn noop_plan_compiles_empty() {
+        let s = spec();
+        let st = state_for(&s);
+        let inj = NnFaultInjector::compile(&FaultPlan::none(3), &s, &st, &dev());
+        assert!(inj.is_empty());
+        assert!(inj.affected_tiles().is_empty());
+        let mut after = st.clone();
+        inj.apply(&mut after);
+        for (a, b) in after.leaves.iter().zip(&st.leaves) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn stuck_sp_pins_to_slope_derived_sp() {
+        let s = spec();
+        let mut st = state_for(&s);
+        let plan = FaultPlan::of(5, FaultFamily::StuckAtSp, 1.0);
+        let inj = NnFaultInjector::compile(&plan, &s, &st, &dev());
+        assert!(!inj.is_empty());
+        assert_eq!(inj.affected_tiles(), &[0, 1]);
+        // 4 analog leaves (w, p on both tiles) x 16 cells
+        assert_eq!(inj.n_faulty(), 4 * 16);
+        inj.apply(&mut st);
+        for (i, l) in s.state.iter().enumerate() {
+            match l.role.as_str() {
+                "w" | "p" => {
+                    for &v in &st.leaves[i] {
+                        assert!((v - 0.2).abs() < 1e-6, "{} pinned to {v}", l.name);
+                    }
+                }
+                _ => assert!(st.leaves[i].iter().all(|&v| v != 0.2)),
+            }
+        }
+    }
+
+    #[test]
+    fn compile_is_deterministic_per_leaf() {
+        let s = spec();
+        let st = state_for(&s);
+        let plan = FaultPlan::of(9, FaultFamily::StuckAtBound, 0.3);
+        let a = NnFaultInjector::compile(&plan, &s, &st, &dev());
+        let b = NnFaultInjector::compile(&plan, &s, &st, &dev());
+        assert_eq!(a.masks.len(), b.masks.len());
+        for ((ia, sa), (ib, sb)) in a.masks.iter().zip(&b.masks) {
+            assert_eq!(ia, ib);
+            assert_eq!(sa.stuck, sb.stuck);
+        }
+    }
+
+    #[test]
+    fn sp_residual_sees_calibration_gap() {
+        let s = spec();
+        let mut st = state_for(&s);
+        // q == true SP (0.2) -> zero residual
+        for (i, l) in s.state.iter().enumerate() {
+            if l.role == "q" {
+                st.leaves[i] = vec![0.2; l.numel()];
+            }
+        }
+        assert!(sp_residual(&s, &st, &dev()) < 1e-6);
+        // stale q -> residual equals the gap
+        for (i, l) in s.state.iter().enumerate() {
+            if l.role == "q" {
+                st.leaves[i] = vec![0.0; l.numel()];
+            }
+        }
+        let r = sp_residual(&s, &st, &dev());
+        assert!((r - 0.2).abs() < 1e-6, "{r}");
+    }
+
+    #[test]
+    fn loss_spike_monitor_fires_after_warmup() {
+        let mut m = LossSpikeMonitor::new(2.0, 3);
+        assert!(!m.observe(1.0));
+        assert!(!m.observe(1.0));
+        assert!(!m.observe(1.0));
+        assert!(!m.observe(1.05), "steady loss must not trip");
+        assert!(m.observe(5.0), "5x the EMA is a spike");
+        assert!(m.observe(f64::NAN), "non-finite loss is a spike");
+        assert!(m.ema().is_finite(), "NaN must not poison the EMA");
+    }
+
+    #[test]
+    fn recovery_policy_budget_and_cooldown() {
+        let p = RecoveryPolicy {
+            zs_pulses: 100,
+            max_recoveries: 2,
+            cooldown: 10,
+        };
+        assert!(p.allows(0, 10));
+        assert!(!p.allows(0, 9), "cooldown not elapsed");
+        assert!(!p.allows(2, 100), "budget exhausted");
+    }
+
+    #[test]
+    fn checkpoint_round_trips_bit_exact() {
+        let ck = Checkpoint {
+            step: 42,
+            key_counter: 0xDEAD_BEEF_0001,
+            cost: PulseCost {
+                update_pulses: 7,
+                calibration_pulses: 11,
+                programming_events: 2,
+                digital_ops: 3,
+            },
+            leaves: vec![vec![1.5, -0.0, f32::MIN_POSITIVE], vec![], vec![42.0; 9]],
+        };
+        let path = std::env::temp_dir().join(format!(
+            "rpallas_ckpt_test_{}.ckpt",
+            std::process::id()
+        ));
+        ck.save(&path).unwrap();
+        // atomic save leaves no temp file behind
+        assert!(!path.with_extension("tmp").exists());
+        let back = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, ck);
+        // -0.0 survives bit-exactly
+        assert_eq!(back.leaves[0][1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn checkpoint_rejects_garbage() {
+        let path = std::env::temp_dir().join(format!(
+            "rpallas_ckpt_garbage_{}.ckpt",
+            std::process::id()
+        ));
+        std::fs::write(&path, b"not a checkpoint at all....").unwrap();
+        let err = Checkpoint::load(&path);
+        std::fs::remove_file(&path).ok();
+        assert!(err.is_err());
+    }
+}

@@ -1,10 +1,12 @@
 //! HLO-driven training: state management, hyperparameters and the
 //! trainer loop over the AOT step artifacts.
 
+pub mod fault;
 pub mod hypers;
 pub mod state;
 pub mod trainer;
 
+pub use fault::{Checkpoint, LossSpikeMonitor, NnFaultInjector, RecoveryPolicy};
 pub use hypers::{DevParams, Hypers};
 pub use state::ModelState;
 pub use trainer::{TrainConfig, TrainResult, Trainer, BL};

@@ -14,6 +14,7 @@ use crate::analog::optimizer::{self, Method, OptimizerSpec};
 use crate::analog::pulse_counter::PulseCost;
 use crate::data::{Batcher, Dataset};
 use crate::runtime::{Executor, HostTensor, Registry};
+use crate::train::fault::Checkpoint;
 use crate::train::hypers::{DevParams, Hypers};
 use crate::train::state::ModelState;
 
@@ -160,6 +161,68 @@ impl<'a> Trainer<'a> {
         };
         t.key_counter ^= t.cfg.seed.rotate_left(17);
         Ok(t)
+    }
+
+    /// Snapshot the run for crash-consistent recovery: the state
+    /// tensors plus the key counter and pulse accounting, so a
+    /// [`Trainer::restore`] continues training bit-for-bit.
+    pub fn checkpoint(&self, step: u64) -> Checkpoint {
+        Checkpoint {
+            step,
+            key_counter: self.key_counter,
+            cost: self.calib_cost,
+            leaves: self.state.leaves.clone(),
+        }
+    }
+
+    /// Rewind to a [`Checkpoint`] taken from this trainer (state, key
+    /// counter and pulse accounting are all restored, so replaying the
+    /// same batches reproduces the original trajectory exactly).
+    pub fn restore(&mut self, ck: &Checkpoint) {
+        self.state.leaves = ck.leaves.clone();
+        self.key_counter = ck.key_counter;
+        self.calib_cost = ck.cost;
+    }
+
+    /// Pulse accounting accrued outside `train` (initial ZS calibration
+    /// plus any recovery recalibrations).
+    pub fn calibration_cost(&self) -> PulseCost {
+        self.calib_cost
+    }
+
+    /// Self-healing recalibration: re-run the ZS calibration artifact
+    /// and keep its output only for the leaves on `tiles`, leaving every
+    /// healthy tile's state untouched. The pulse bill — `zs_pulses`
+    /// cycles times the number of weights on the affected tiles — is
+    /// charged to `calibration_pulses`, where `train` carries it into
+    /// `TrainResult.cost`. Returns the pulses spent; an empty tile list
+    /// costs nothing and runs nothing.
+    pub fn recalibrate_tiles(&mut self, tiles: &[usize], zs_pulses: u64) -> Result<u64> {
+        if tiles.is_empty() || zs_pulses == 0 {
+            return Ok(0);
+        }
+        let spec = self.reg.model(&self.cfg.model)?;
+        let zs = self.reg.artifact(&format!("{}_zs", self.cfg.model))?;
+        let mut inputs = self.state.to_inputs();
+        inputs.push(HostTensor::U32(vec![zs_pulses as u32]));
+        inputs.push(self.next_key());
+        inputs.push(HostTensor::F32(self.cfg.dev.to_vec(self.reg)));
+        let outputs = self.exec.run(zs, &inputs)?;
+        let mut fresh = ModelState::from_outputs(spec, outputs)?;
+        for (i, leaf) in spec.state.iter().enumerate() {
+            if tiles.contains(&leaf.tile) {
+                self.state.leaves[i] = std::mem::take(&mut fresh.leaves[i]);
+            }
+        }
+        let affected: u64 = spec
+            .state
+            .iter()
+            .filter(|l| l.role == "w" && tiles.contains(&l.tile))
+            .map(|l| l.numel() as u64)
+            .sum();
+        let spent = zs_pulses * affected;
+        self.calib_cost.calibration_pulses += spent;
+        Ok(spent)
     }
 
     fn next_key(&mut self) -> HostTensor {

@@ -48,7 +48,8 @@ impl BenchResult {
     /// `util::stats::std` so the two toolboxes cannot drift apart.
     pub fn from_samples(name: &str, mut samples: Vec<f64>) -> BenchResult {
         assert!(!samples.is_empty(), "bench case produced no samples");
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: NaN samples sort to the top instead of panicking
+        samples.sort_by(f64::total_cmp);
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         BenchResult {
             name: name.to_string(),
@@ -169,6 +170,15 @@ mod tests {
         assert_eq!(r.iters, 3);
         // ... and agrees with the stats toolbox by construction
         assert_eq!(r.std_ns, crate::util::stats::std(&[90.0, 92.0, 94.0]));
+    }
+
+    #[test]
+    fn from_samples_survives_nan() {
+        // must not panic; total_cmp sorts the NaN to the top so min
+        // and median stay finite
+        let r = BenchResult::from_samples("n", vec![2.0, f64::NAN, 1.0]);
+        assert_eq!(r.min_ns, 1.0);
+        assert_eq!(r.median_ns, 2.0);
     }
 
     #[test]

@@ -28,13 +28,15 @@ pub fn std_pop(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// p-th percentile (p in [0,100], linear interpolation).
+/// p-th percentile (p in [0,100], linear interpolation). NaN-safe:
+/// `total_cmp` sorts NaN samples to the top instead of panicking —
+/// a faulty device can legitimately produce them.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -193,6 +195,16 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert_eq!(percentile(&xs, 50.0), 50.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // a faulty device can emit NaN losses; percentile must not
+        // panic, and total_cmp sorts NaNs above every finite value so
+        // low/mid percentiles stay meaningful
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

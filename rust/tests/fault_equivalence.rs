@@ -1,0 +1,217 @@
+//! Pins the chaos-layer contracts (see `device/fault.rs` module docs):
+//!
+//! * with no fault plan armed — or a no-op plan armed, or a plan
+//!   armed and cleared — every substrate path is bit-for-bit identical
+//!   to a never-armed build, including the RNG stream position;
+//! * with faults armed, results are deterministic for a fixed plan
+//!   seed and independent of the worker-thread count and schedule;
+//! * pulse accounting is unchanged by the fault mask (stuck cells
+//!   still receive and count pulses).
+
+use analog_rider::device::fault::{FaultFamily, FaultPlan};
+use analog_rider::device::{presets, DeviceArray, TileGeometry, TiledArray};
+use analog_rider::util::rng::Rng;
+
+const ROWS: usize = 48;
+const COLS: usize = 40;
+
+fn bare(seed: u64) -> DeviceArray {
+    DeviceArray::sample(
+        ROWS,
+        COLS,
+        &presets::preset("om").unwrap(),
+        0.4,
+        0.2,
+        0.1,
+        &mut Rng::from_seed(seed),
+    )
+}
+
+fn tiled(seed: u64) -> TiledArray {
+    TiledArray::sample(
+        70,
+        50,
+        TileGeometry::new(16, 16).unwrap(),
+        &presets::preset("om").unwrap(),
+        0.3,
+        0.1,
+        0.1,
+        &mut Rng::from_seed(seed),
+    )
+}
+
+/// Every mutating path once, from a caller-owned RNG; returns the
+/// final weights, the pulse count and the RNG's next draw (stream
+/// position probe).
+fn exercise(arr: &mut DeviceArray, rng_seed: u64) -> (Vec<f32>, u64, u64) {
+    let mut rng = Rng::from_seed(rng_seed);
+    let dw: Vec<f32> = (0..arr.len())
+        .map(|i| ((i % 7) as f32 - 3.0) * 0.02)
+        .collect();
+    for _ in 0..3 {
+        arr.analog_update(&dw, &mut rng);
+    }
+    arr.analog_update_det(&dw);
+    arr.pulse_all(true, &mut rng);
+    arr.pulse_all_random(&mut rng);
+    let target = vec![0.1f32; arr.len()];
+    arr.program(&target, &mut rng);
+    (arr.w.clone(), arr.pulse_count, rng.next_u64())
+}
+
+#[test]
+fn disarmed_noop_and_cleared_are_bit_identical() {
+    let baseline = exercise(&mut bare(21), 101);
+
+    // a no-op plan armed: the mask is Some(empty), the hot-path branch
+    // is taken, and nothing may change
+    let mut noop = bare(21);
+    FaultPlan::none(7).arm_array(&mut noop, 0);
+    assert!(noop.fault_state().unwrap().is_empty());
+    assert_eq!(exercise(&mut noop, 101), baseline);
+
+    // a real plan armed on a *fresh* copy and cleared before any use:
+    // arming snaps the stuck pins, so clear must come before exercise
+    // on yet another fresh copy to prove clear_faults removes the hook
+    let mut cleared = bare(21);
+    FaultPlan::none(9).arm_array(&mut cleared, 0);
+    cleared.clear_faults();
+    assert!(cleared.fault_state().is_none());
+    assert_eq!(exercise(&mut cleared, 101), baseline);
+}
+
+#[test]
+fn noop_plan_keeps_tiled_fanout_bit_identical() {
+    let base = tiled(31);
+    let dw: Vec<f32> = (0..70 * 50)
+        .map(|i| ((i % 11) as f32 - 5.0) * 0.01)
+        .collect();
+    let run = |mut arr: TiledArray, workers: usize| {
+        arr.set_parallel(workers > 0);
+        arr.set_workers(workers);
+        let mut rng = Rng::from_seed(77);
+        for _ in 0..3 {
+            arr.analog_update(&dw, &mut rng);
+        }
+        arr.pulse_all_random(&mut rng);
+        let noisy = arr.read(0.02, &mut rng);
+        (noisy, arr.pulse_count(), rng.next_u64())
+    };
+    let clean = run(base.clone(), 0);
+    for workers in [1usize, 2, 4, 64] {
+        let mut armed = base.clone();
+        armed.arm_faults(&FaultPlan::none(5));
+        assert!(armed.faulty_tiles().is_empty());
+        assert_eq!(armed.faulty_cells(), 0);
+        assert_eq!(run(armed, workers), clean, "workers = {workers}");
+    }
+}
+
+#[test]
+fn armed_faults_are_deterministic_and_schedule_independent() {
+    let plan = FaultPlan {
+        drift_rate: 0.2,
+        drift_step: 0.05,
+        ..FaultPlan::of(13, FaultFamily::StuckAtBound, 0.05)
+    };
+    let base = {
+        let mut a = tiled(41);
+        a.arm_faults(&plan);
+        a
+    };
+    assert!(!base.faulty_tiles().is_empty(), "plan must fault some tiles");
+    assert!(base.faulty_cells() > 0);
+    let dw: Vec<f32> = (0..70 * 50)
+        .map(|i| ((i % 9) as f32 - 4.0) * 0.01)
+        .collect();
+    let run = |mut arr: TiledArray, parallel: bool, workers: usize| {
+        arr.set_parallel(parallel);
+        arr.set_workers(workers);
+        let mut rng = Rng::from_seed(55);
+        for _ in 0..4 {
+            arr.analog_update(&dw, &mut rng);
+        }
+        arr.pulse_all_random(&mut rng);
+        let mut w = vec![0.0f32; arr.len()];
+        arr.read_into(0.0, &mut Rng::from_seed(0), &mut w);
+        (w, arr.pulse_count())
+    };
+    let serial = run(base.clone(), false, 0);
+    // same plan, fresh compile: bit-identical (determinism)
+    let again = {
+        let mut a = tiled(41);
+        a.arm_faults(&plan);
+        run(a, false, 0)
+    };
+    assert_eq!(again, serial);
+    // any worker count: bit-identical (schedule independence)
+    for workers in [1usize, 2, 4, 64] {
+        assert_eq!(run(base.clone(), true, workers), serial, "workers = {workers}");
+    }
+}
+
+#[test]
+fn armed_faults_do_not_change_pulse_accounting() {
+    let mut clean = bare(61);
+    let mut faulty = bare(61);
+    FaultPlan::of(3, FaultFamily::StuckAtBound, 0.3).arm_array(&mut faulty, 0);
+    let dw = vec![0.03f32; ROWS * COLS];
+    let mut rc = Rng::from_seed(5);
+    let mut rf = Rng::from_seed(5);
+    for _ in 0..3 {
+        clean.analog_update(&dw, &mut rc);
+        faulty.analog_update(&dw, &mut rf);
+    }
+    // stuck cells still receive (and count) pulses
+    assert_eq!(clean.pulse_count, faulty.pulse_count);
+    // ... and the two streams stay in lockstep
+    assert_eq!(rc.next_u64(), rf.next_u64());
+}
+
+#[test]
+fn single_tile_armed_grid_matches_bare_array() {
+    // tile 0 compiles from Rng::new(seed, 0) — the same sub-stream
+    // `arm_array(arr, 0)` uses — so a 1×1 grid stays bit-identical to
+    // the bare array even with faults armed
+    let preset = presets::preset("om").unwrap();
+    let geom = TileGeometry::new(64, 64).unwrap();
+    let mut grid = TiledArray::sample(ROWS, COLS, geom, &preset, 0.4, 0.2, 0.1, &mut Rng::from_seed(71));
+    assert_eq!(grid.grid_shape(), (1, 1));
+    let mut flat =
+        DeviceArray::sample(ROWS, COLS, &preset, 0.4, 0.2, 0.1, &mut Rng::from_seed(71));
+    let plan = FaultPlan::of(17, FaultFamily::StuckAtSp, 0.1);
+    grid.arm_faults(&plan);
+    plan.arm_array(&mut flat, 0);
+    let dw: Vec<f32> = (0..ROWS * COLS)
+        .map(|i| ((i % 13) as f32 - 6.0) * 0.01)
+        .collect();
+    let mut rt = Rng::from_seed(81);
+    let mut rf = Rng::from_seed(81);
+    for _ in 0..4 {
+        grid.analog_update(&dw, &mut rt);
+        flat.analog_update(&dw, &mut rf);
+    }
+    let mut got = vec![0.0f32; grid.len()];
+    grid.read_into(0.0, &mut Rng::from_seed(0), &mut got);
+    assert_eq!(got, flat.w);
+    assert_eq!(grid.pulse_count(), flat.pulse_count);
+}
+
+#[test]
+fn adc_faults_arm_and_clear_on_the_io_chains() {
+    let mut arr = tiled(91);
+    let mut plan = FaultPlan::of(1, FaultFamily::Adc, 0.25);
+    plan.adc_sat = 1.5;
+    arr.arm_faults(&plan);
+    for k in 0..arr.n_tiles() {
+        assert_eq!(arr.io(k).adc_offset, 0.25);
+        assert_eq!(arr.io(k).adc_sat, 1.5);
+    }
+    // ADC faults touch the periphery only — no cell masks
+    assert!(arr.faulty_tiles().is_empty());
+    arr.clear_faults();
+    for k in 0..arr.n_tiles() {
+        assert_eq!(arr.io(k).adc_offset, 0.0);
+        assert!(arr.io(k).adc_sat.is_infinite());
+    }
+}

@@ -1,0 +1,83 @@
+//! Allocation accounting for the chaos layer: applying a compiled
+//! fault mask is part of the `analog_update` hot path, so it must not
+//! touch the heap — neither when the armed mask is empty (the
+//! zero-cost-when-disarmed contract) nor when it pins and drifts real
+//! cells (all randomness and allocation happen at arm time).
+//!
+//! Verified with a counting global allocator. This binary intentionally
+//! holds a single #[test] so no concurrent test can allocate while the
+//! hot loop is being counted. The array stays below the row-chunked
+//! parallel threshold, where the update path is allocation-free.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use analog_rider::device::fault::{FaultFamily, FaultPlan};
+use analog_rider::device::{presets, DeviceArray};
+use analog_rider::util::rng::Rng;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn fault_mask_application_never_allocates() {
+    let preset = presets::preset("om").unwrap();
+    // (label, plan): the armed-but-empty hook and a mask with real work
+    let cases: [(&str, FaultPlan); 3] = [
+        ("armed-empty", FaultPlan::none(7)),
+        ("stuck", FaultPlan::of(11, FaultFamily::StuckAtBound, 0.1)),
+        ("drift", FaultPlan::of(13, FaultFamily::DriftToSp, 0.2)),
+    ];
+    for (label, plan) in cases {
+        let mut rng = Rng::from_seed(41);
+        let mut arr = DeviceArray::sample(64, 64, &preset, 0.3, 0.1, 0.1, &mut rng);
+        // arming may allocate freely (compiles the mask)
+        plan.arm_array(&mut arr, 0);
+        let dw: Vec<f32> = (0..arr.len())
+            .map(|i| ((i % 7) as f32 - 3.0) * 0.02)
+            .collect();
+        for _ in 0..3 {
+            arr.analog_update(&dw, &mut rng);
+            arr.analog_update_det(&dw);
+        }
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let mut acc = 0.0f64;
+        for _ in 0..50 {
+            arr.analog_update(&dw, &mut rng);
+            arr.analog_update_det(&dw);
+            acc += arr.w[0] as f64;
+        }
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert!(acc.is_finite());
+        assert_eq!(
+            after - before,
+            0,
+            "{label}: faulted analog_update touched the heap"
+        );
+    }
+}
