@@ -4,23 +4,28 @@
 //! batched path) to 1024x1024 (row-chunked parallel path), and the
 //! rider/erider step cases measure the end-to-end optimizer hot path at
 //! NN-tile width — the numbers `./ci.sh bench` records in
-//! BENCH_device.json to track speedups across PRs.
+//! BENCH_device.json to track speedups across PRs. Cases are collected
+//! by a `BenchSuite`, which also records them into the live metrics
+//! facade and writes `$BENCH_JSON_OUT` itself (no awk post-processing).
 
 use analog_rider::analog::optimizer::{self, AnalogOptimizer as _};
 use analog_rider::device::{presets, DeviceArray, IoChain, TileGeometry, TiledArray};
 use analog_rider::optim::Quadratic;
-use analog_rider::util::bench::{consume, Bench};
+use analog_rider::util::bench::{consume, Bench, BenchSuite};
+use analog_rider::util::metrics;
 use analog_rider::util::rng::Rng;
 
 fn main() {
+    metrics::install();
     let b = Bench::default();
+    let mut suite = BenchSuite::new();
     let mut rng = Rng::from_seed(1);
 
     let mut arr = DeviceArray::sample(128, 128, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
     let r = b.run("pulse_all_random/128x128", || {
         arr.pulse_all_random(&mut rng);
     });
-    println!("{}", r.report_throughput("pulses", (128 * 128) as f64));
+    suite.push_throughput(&r, "pulses", (128 * 128) as f64);
 
     // aggregated updates: 128x128 runs the serial batched engine,
     // 256x256 and 1024x1024 fan out to the row-chunked parallel path
@@ -30,7 +35,7 @@ fn main() {
         let r = b.run(&format!("analog_update/{side}x{side}"), || {
             arr.analog_update(&dw, &mut rng);
         });
-        println!("{}", r.report_throughput("cells", (side * side) as f64));
+        suite.push_throughput(&r, "cells", (side * side) as f64);
     }
 
     // chaos layer: the same 256x256 aggregated update with a fault mask
@@ -46,7 +51,7 @@ fn main() {
         let r = b.run(&format!("analog_update_fault_empty/{side}x{side}"), || {
             arr.analog_update(&dw, &mut rng);
         });
-        println!("{}", r.report_throughput("cells", (side * side) as f64));
+        suite.push_throughput(&r, "cells", (side * side) as f64);
         let mut arr = DeviceArray::sample(side, side, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
         let plan = FaultPlan {
             drift_rate: 0.05,
@@ -57,7 +62,7 @@ fn main() {
         let r = b.run(&format!("analog_update_fault/{side}x{side}"), || {
             arr.analog_update(&dw, &mut rng);
         });
-        println!("{}", r.report_throughput("cells", (side * side) as f64));
+        suite.push_throughput(&r, "cells", (side * side) as f64);
     }
 
     // tiled substrate: the same 1024x1024 aggregated update as a 4x4
@@ -70,12 +75,12 @@ fn main() {
     let r = b.run("tiled_update_serial/1024x1024t256", || {
         tiled.analog_update(&dw, &mut rng);
     });
-    println!("{}", r.report_throughput("cells", (1024 * 1024) as f64));
+    suite.push_throughput(&r, "cells", (1024 * 1024) as f64);
     tiled.set_parallel(true);
     let r = b.run("tiled_update_parallel/1024x1024t256", || {
         tiled.analog_update(&dw, &mut rng);
     });
-    println!("{}", r.report_throughput("cells", (1024 * 1024) as f64));
+    suite.push_throughput(&r, "cells", (1024 * 1024) as f64);
 
     // noisy tile read-out through the zero-alloc path
     let arr = DeviceArray::sample(1024, 1024, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
@@ -84,7 +89,7 @@ fn main() {
         arr.read_into(0.01, &mut rng, &mut out);
         consume(out[0]);
     });
-    println!("{}", r.report_throughput("cells", (1024 * 1024) as f64));
+    suite.push_throughput(&r, "cells", (1024 * 1024) as f64);
 
     // end-to-end pulse-level optimizer step at NN-tile width: two device
     // updates + one read + one noisy gradient per step, all batched
@@ -95,7 +100,7 @@ fn main() {
         let r = b.run(&format!("{name}_step/d4096"), || {
             opt.step(&obj, &mut rng);
         });
-        println!("{}", r.report_throughput("steps", 1.0));
+        suite.push_throughput(&r, "steps", 1.0);
     }
 
     let io = IoChain::default();
@@ -104,5 +109,7 @@ fn main() {
     let r = b.run("io_mvm/16x256x128", || {
         consume(io.mvm(&x, &w, 16, 256, 128, &mut rng, false));
     });
-    println!("{}", r.report_throughput("flops", (2 * 16 * 256 * 128) as f64));
+    suite.push_throughput(&r, "flops", (2 * 16 * 256 * 128) as f64);
+
+    suite.finish().expect("write BENCH_JSON_OUT");
 }

@@ -2,15 +2,20 @@
 //!
 //! Iterates the whole method registry: any method added to
 //! `analog::optimizer::METHODS` is benched here with no further edits.
+//! Cases are collected by a `BenchSuite`, which writes `$BENCH_JSON_OUT`
+//! itself (no awk post-processing in `./ci.sh bench`).
 
 use analog_rider::analog::optimizer::{self, AnalogOptimizer as _};
 use analog_rider::device::presets;
 use analog_rider::optim::Quadratic;
-use analog_rider::util::bench::Bench;
+use analog_rider::util::bench::{Bench, BenchSuite};
+use analog_rider::util::metrics;
 use analog_rider::util::rng::Rng;
 
 fn main() {
+    metrics::install();
     let b = Bench::default();
+    let mut suite = BenchSuite::new();
     let mut rng = Rng::from_seed(3);
     let obj = Quadratic::new(256, 1.0, 4.0, 0.3, &mut rng);
     let p = presets::PRECISE;
@@ -22,6 +27,8 @@ fn main() {
         let r = b.run(&format!("{name}_step/d256"), || {
             opt.step(&obj, &mut rng);
         });
-        println!("{}", r.report());
+        suite.push(&r);
     }
+
+    suite.finish().expect("write BENCH_JSON_OUT");
 }

@@ -3,14 +3,16 @@
 //! cost). The `step/*` cases run the planned execution engine (the
 //! production path); the `stepref/*` cases run the same artifacts on
 //! the scalar reference walker, so one bench run quantifies the
-//! planned-engine speedup. Recorded by `./ci.sh bench` into
-//! BENCH_optimizers.json and gated against BENCH_baseline/ with
-//! `--check`. Skips silently when artifacts are absent.
+//! planned-engine speedup. `./ci.sh bench` appends these cases into
+//! BENCH_optimizers.json via `$BENCH_JSON_OUT` + `$BENCH_JSON_APPEND`,
+//! gated against BENCH_baseline/ with `--check`. Skips silently when
+//! artifacts are absent (leaving any existing trajectory file intact).
 
 use analog_rider::data::Dataset;
 use analog_rider::runtime::{Executor, HostTensor, Registry};
 use analog_rider::train::{TrainConfig, Trainer};
-use analog_rider::util::bench::Bench;
+use analog_rider::util::bench::{Bench, BenchSuite};
+use analog_rider::util::metrics;
 
 fn batch_xy(ds: &Dataset, d_in: usize, batch: usize) -> (Vec<f32>, Vec<i32>) {
     let d = d_in.min(ds.d);
@@ -22,6 +24,7 @@ fn batch_xy(ds: &Dataset, d_in: usize, batch: usize) -> (Vec<f32>, Vec<i32>) {
 }
 
 fn main() {
+    metrics::install();
     let dir = Registry::default_dir();
     if !dir.join("manifest.json").exists() {
         println!("BENCH\tskipped (run `make artifacts` first)");
@@ -32,6 +35,7 @@ fn main() {
         println!("BENCH\tskipped (PJRT/XLA backend unavailable in this build)");
         return;
     };
+    let mut suite = BenchSuite::new();
     let ds = Dataset::digits(64, 5);
     let b = Bench {
         warmup: std::time::Duration::from_millis(2000),
@@ -56,7 +60,7 @@ fn main() {
         let r = b.run(&format!("step/{model}/{algo}"), || {
             t.step(&x, &y).unwrap();
         });
-        println!("{}", r.report_throughput("steps", 1.0));
+        suite.push_throughput(&r, "steps", 1.0);
     }
 
     // scalar-walker baselines for the speedup record: same artifacts,
@@ -83,6 +87,8 @@ fn main() {
         let r = bref.run(&format!("stepref/{model}/{algo}"), || {
             exec.run_ref(art, &inputs).unwrap();
         });
-        println!("{}", r.report_throughput("steps", 1.0));
+        suite.push_throughput(&r, "steps", 1.0);
     }
+
+    suite.finish().expect("write BENCH_JSON_OUT");
 }

@@ -2,7 +2,7 @@
 # CI gate for the Rust substrate.
 #
 #   ./ci.sh         tier-1 gate (build + tests), then verify, then e2e,
-#                   then doc+lint
+#                   then metrics, then doc+lint
 #   ./ci.sh lint    lint only (fmt --check, clippy -D warnings plus the
 #                   repo deny-set: undocumented unsafe blocks)
 #   ./ci.sh verify  static plan verification: `rider verify` re-checks
@@ -23,16 +23,22 @@
 #                   artifacts/ fixtures
 #   ./ci.sh bench [--check]
 #                   run the device + optimizer + train-step bench
-#                   suites and emit machine-readable BENCH_device.json /
-#                   BENCH_optimizers.json at the repo root (the
-#                   train-step cases — planned `step/*` and
-#                   scalar-walker `stepref/*` — land in
-#                   BENCH_optimizers.json) so successive PRs can track
-#                   the speedup trajectory. With --check, compare
+#                   suites; each suite's BenchSuite (util/bench.rs,
+#                   backed by util/metrics.rs) writes machine-readable
+#                   BENCH_device.json / BENCH_optimizers.json at the
+#                   repo root via $BENCH_JSON_OUT (the train-step
+#                   cases — planned `step/*` and scalar-walker
+#                   `stepref/*` — append into BENCH_optimizers.json
+#                   with $BENCH_JSON_APPEND=1) so successive PRs can
+#                   track the speedup trajectory. With --check, compare
 #                   per-case min_ns against the committed
 #                   BENCH_baseline/*.json and fail on a >25% regression
 #                   (missing baselines are bootstrapped from the fresh
 #                   run and must be committed).
+#   ./ci.sh metrics observability smoke stage: a 5-step `rider table1`
+#                   must leave a parseable runs/table1/metrics.jsonl
+#                   trace containing every METRICS.md-required key, and
+#                   `rider metrics` must emit Prometheus exposition text
 #
 # Tier-1 (ROADMAP.md): cargo build --release && cargo test -q.
 # The build covers --all-targets so benches and examples can't silently
@@ -69,58 +75,19 @@ doc() {
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 }
 
-# bench_json <raw-output> <out.json>: convert `BENCH\t...` report lines
-# into a JSON array. Field layout (util/bench.rs BenchResult::report):
-#   BENCH <name> iters=N mean=T median=T min=T std=T [throughput=X u/s]
-# with T carrying a ns/us/ms/s suffix; all times are normalized to ns.
-bench_json() {
-    awk -F'\t' '
-    function to_ns(s) {
-        if (s ~ /ns$/) return substr(s, 1, length(s) - 2) + 0
-        if (s ~ /us$/) return (substr(s, 1, length(s) - 2) + 0) * 1e3
-        if (s ~ /ms$/) return (substr(s, 1, length(s) - 2) + 0) * 1e6
-        return (substr(s, 1, length(s) - 1) + 0) * 1e9
-    }
-    BEGIN { printf "["; n = 0 }
-    $1 == "BENCH" && NF >= 7 {
-        name = $2
-        iters = substr($3, 7) + 0
-        mean = to_ns(substr($4, 6))
-        median = to_ns(substr($5, 8))
-        min = to_ns(substr($6, 5))
-        std = to_ns(substr($7, 5))
-        has_thr = 0
-        if (NF >= 8 && $8 ~ /^throughput=/) {
-            split(substr($8, 12), a, " ")
-            thr = a[1] + 0
-            unit = a[2]
-            sub(/\/s$/, "", unit)
-            has_thr = 1
-        }
-        if (n++) printf ","
-        printf "\n  {\"name\":\"%s\",\"iters\":%d,\"mean_ns\":%.1f,\"median_ns\":%.1f,\"min_ns\":%.1f,\"std_ns\":%.1f", \
-            name, iters, mean, median, min, std
-        if (has_thr) printf ",\"throughput_per_s\":%.4e,\"throughput_unit\":\"%s\"", thr, unit
-        printf "}"
-    }
-    END { printf "\n]\n" }
-    ' "$1" > "$2"
-    echo "wrote $2 ($(grep -c '"name"' "$2") cases)"
-}
-
+# The BENCH_*.json emission lives in the bench binaries themselves:
+# each one drives a util/bench.rs BenchSuite, which records every case
+# into the metrics facade and writes $BENCH_JSON_OUT on exit
+# ($BENCH_JSON_APPEND=1 merges into an existing array, so the
+# train-step cases land in the same file as the optimizer cases).
 bench() {
-    local tmp
-    tmp="$(mktemp -d)"
     echo "== cargo bench --bench bench_device =="
-    cargo bench --bench bench_device | tee "$tmp/device.out"
+    BENCH_JSON_OUT=BENCH_device.json cargo bench --bench bench_device
     echo "== cargo bench --bench bench_optimizers =="
-    cargo bench --bench bench_optimizers | tee "$tmp/optimizers.out"
+    BENCH_JSON_OUT=BENCH_optimizers.json cargo bench --bench bench_optimizers
     echo "== cargo bench --bench bench_train_step =="
-    cargo bench --bench bench_train_step | tee "$tmp/train_step.out"
-    bench_json "$tmp/device.out" BENCH_device.json
-    cat "$tmp/optimizers.out" "$tmp/train_step.out" > "$tmp/optimizers_all.out"
-    bench_json "$tmp/optimizers_all.out" BENCH_optimizers.json
-    rm -rf "$tmp"
+    BENCH_JSON_OUT=BENCH_optimizers.json BENCH_JSON_APPEND=1 \
+        cargo bench --bench bench_train_step
 }
 
 # bench_check: per-case min_ns vs BENCH_baseline/<file>; >25% slower
@@ -189,9 +156,52 @@ e2e() {
     echo "e2e OK"
 }
 
+# metrics: observability smoke. A reduced `rider table1` must leave a
+# JSONL metrics trace whose every line parses and which carries the
+# documented required keys (util/metrics.rs REQUIRED_TRACE_KEYS /
+# METRICS.md), and `rider metrics` must emit Prometheus exposition text.
+metrics() {
+    echo "== metrics: JSONL trace smoke (5-step rider table1) =="
+    local runs trace
+    runs="$(mktemp -d)"
+    RIDER_RUNS="$runs" cargo run --release --quiet -- \
+        table1 --steps 5 --seeds 1 > /dev/null
+    trace="$runs/table1/metrics.jsonl"
+    if [ ! -s "$trace" ]; then
+        echo "metrics FAILED: $trace missing or empty"
+        exit 1
+    fi
+    python3 - "$trace" <<'EOF'
+import json, sys
+required = {"train_loss", "train_update_pulses_total", "sp_residual"}
+seen = set()
+with open(sys.argv[1]) as f:
+    for n, line in enumerate(f, 1):
+        rec = json.loads(line)
+        assert {"step", "key", "type"} <= rec.keys(), f"line {n}: missing fields"
+        seen.add(rec["key"])
+missing = required - seen
+assert not missing, f"required keys missing from trace: {sorted(missing)}"
+print(f"trace OK: {len(seen)} distinct keys")
+EOF
+    rm -rf "$runs"
+    echo "== metrics: rider metrics (Prometheus exposition) =="
+    local prom
+    prom="$(mktemp)"
+    cargo run --release --quiet -- metrics > "$prom"
+    grep -q '^# TYPE device_pulses_total counter$' "$prom"
+    grep -q '^device_sp_drift ' "$prom"
+    rm -f "$prom"
+    echo "metrics OK"
+}
+
 case "${1:-}" in
     lint)
         lint
+        exit 0
+        ;;
+    metrics)
+        metrics
         exit 0
         ;;
     doc)
@@ -223,6 +233,7 @@ cargo test -q
 
 verify
 e2e
+metrics
 doc
 lint
 echo "CI OK"

@@ -89,12 +89,19 @@ pub fn run(
             trace.push(arr.mean_g_sq());
         }
     }
-    ZsResult {
+    let res = ZsResult {
         estimate: arr.w.clone(),
         truth,
         pulses: arr.pulse_count - before,
         g_sq_trace: trace,
+    };
+    if crate::util::metrics::enabled() {
+        crate::util::metrics::gauge(
+            crate::util::metrics::MetricId::DeviceSpDrift,
+            res.mean_abs_error(),
+        );
     }
+    res
 }
 
 /// Selective re-calibration of a tiled array: run ZS on the listed

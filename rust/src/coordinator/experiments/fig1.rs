@@ -10,10 +10,15 @@ use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::table::Table;
 
+/// Scale knobs for the Fig. 1 ZS pulse-complexity study.
 pub struct Fig1Params {
+    /// Array side length (paper: 512).
     pub side: usize,
+    /// ZS pulse budgets for panel (a).
     pub budgets: Vec<u64>,
+    /// `dw_min` sweep values for panel (b).
     pub dw_mins: Vec<f64>,
+    /// Base RNG seed.
     pub seed: u64,
 }
 
@@ -30,6 +35,7 @@ impl Default for Fig1Params {
     }
 }
 
+/// Run both Fig. 1 panels and write them under `runs/fig1/`.
 pub fn run(p: &Fig1Params) -> anyhow::Result<(Table, Table)> {
     let rd = RunDir::create("fig1")?;
 

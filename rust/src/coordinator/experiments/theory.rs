@@ -21,6 +21,8 @@ use crate::util::table::Table;
 /// the paper's headline pair.
 pub const DEFAULT_METHODS: &[&str] = &["erider", "residual"];
 
+/// Run every theory-validation table (`methods` selects the Cor 3.9
+/// family members) and write them under `runs/theory/`.
 pub fn run(seed: u64, methods: &[String]) -> anyhow::Result<Vec<Table>> {
     let rd = RunDir::create("theory")?;
     let mut out = Vec::new();

@@ -19,10 +19,16 @@ use crate::runtime::{Executor, Registry};
 use crate::train::{TrainConfig, Trainer};
 use crate::util::table::Table;
 
+/// Shared context for the HLO-driven experiments: executor, artifact
+/// registry and the common (steps, seeds) scale knobs.
 pub struct ExpCtx<'a> {
+    /// Executor the trainers run on.
     pub exec: &'a Executor,
+    /// Artifact registry (model manifests).
     pub reg: &'a Registry,
+    /// Trainer steps per run.
     pub steps: usize,
+    /// Seeds per cell (mean±std over these).
     pub seeds: Vec<u64>,
 }
 
@@ -126,6 +132,11 @@ pub fn fig4_left(ctx: &ExpCtx, target_loss: f64) -> Result<Table> {
 /// reference mean/std settings. `methods` are registry names — both
 /// `&["ttv2", "erider"]` literals and the `Vec<String>` produced by
 /// `optimizer::resolve_names` (i.e. `--methods all`) are accepted.
+///
+/// While the grid runs, the live metrics facade's JSONL snapshot trace
+/// is attached to `<run dir>/metrics.jsonl`, so every `rider table1/
+/// table2/fig4` invocation leaves a per-step telemetry trace (loss,
+/// SP residual, pulse totals) next to its tables.
 pub fn robustness_grid<S: AsRef<str>>(
     ctx: &ExpCtx,
     name: &str,
@@ -136,33 +147,39 @@ pub fn robustness_grid<S: AsRef<str>>(
     dev: Option<crate::train::DevParams>,
 ) -> Result<Table> {
     let rd = RunDir::create(name)?;
-    let mut headers = vec!["method".to_string(), "mean\\std".to_string()];
-    headers.extend(stds.iter().map(|s| format!("{s}")));
-    let mut t = Table::new(
-        &format!("{name}: test accuracy (model {model}, {} steps)", ctx.steps),
-        &headers,
-    );
-    for algo in methods {
-        let algo = algo.as_ref();
-        for &m in means {
-            let mut row = vec![algo.to_string(), format!("{m}")];
-            for &sd in stds {
-                let mut cell = Cell::default();
-                for &seed in &ctx.seeds {
-                    let mut cfg = TrainConfig::by_name(model, algo)?;
-                    cfg.ref_mean = m as f32;
-                    cfg.ref_std = sd as f32;
-                    if let Some(d) = dev {
-                        cfg.dev = d;
+    rd.attach_metrics_trace()?;
+    let built = (|| -> Result<Table> {
+        let mut headers = vec!["method".to_string(), "mean\\std".to_string()];
+        headers.extend(stds.iter().map(|s| format!("{s}")));
+        let mut t = Table::new(
+            &format!("{name}: test accuracy (model {model}, {} steps)", ctx.steps),
+            &headers,
+        );
+        for algo in methods {
+            let algo = algo.as_ref();
+            for &m in means {
+                let mut row = vec![algo.to_string(), format!("{m}")];
+                for &sd in stds {
+                    let mut cell = Cell::default();
+                    for &seed in &ctx.seeds {
+                        let mut cfg = TrainConfig::by_name(model, algo)?;
+                        cfg.ref_mean = m as f32;
+                        cfg.ref_std = sd as f32;
+                        if let Some(d) = dev {
+                            cfg.dev = d;
+                        }
+                        let (_, acc, _) = one_run(ctx, cfg, 320, seed)?;
+                        cell.samples.push(acc);
                     }
-                    let (_, acc, _) = one_run(ctx, cfg, 320, seed)?;
-                    cell.samples.push(acc);
+                    row.push(cell.pm());
                 }
-                row.push(cell.pm());
+                t.row(row);
             }
-            t.row(row);
         }
-    }
+        Ok(t)
+    })();
+    crate::util::metrics::detach_trace();
+    let t = built?;
     rd.write_table(name, &t)?;
     Ok(t)
 }

@@ -10,7 +10,11 @@ use anyhow::{Context, Result};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
+/// A per-experiment output directory under `runs/` (override the base
+/// with `$RIDER_RUNS`): tables, curves, JSONL records and the live
+/// metrics trace land next to each other.
 pub struct RunDir {
+    /// Absolute-or-relative directory path, already created.
     pub path: PathBuf,
 }
 
@@ -23,8 +27,17 @@ impl RunDir {
         Ok(RunDir { path })
     }
 
+    /// Path of `name` inside the run directory.
     pub fn file(&self, name: &str) -> PathBuf {
         self.path.join(name)
+    }
+
+    /// Attach the live metrics facade's JSONL snapshot trace to
+    /// `metrics.jsonl` in this run directory (no-op unless a recorder
+    /// is installed — detach with `util::metrics::detach_trace`).
+    pub fn attach_metrics_trace(&self) -> Result<()> {
+        crate::util::metrics::attach_trace(&self.file("metrics.jsonl"))
+            .with_context(|| format!("attach metrics trace in {}", self.path.display()))
     }
 
     /// Write a table both as rendered text and CSV.

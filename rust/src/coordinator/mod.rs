@@ -1,6 +1,8 @@
 //! Experiment coordination: run directories, metric sinks, sweeps, and
 //! the per-figure/table experiment harness.
 
+#![warn(missing_docs)]
+
 pub mod experiments;
 pub mod metrics;
 pub mod sweep;

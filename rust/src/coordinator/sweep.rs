@@ -10,6 +10,7 @@
 use crate::analog::optimizer::{self, AnalogOptimizer as _, OptimizerSpec};
 use crate::device::Preset;
 use crate::optim::Quadratic;
+use crate::util::metrics;
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::table::Table;
@@ -17,18 +18,22 @@ use crate::util::table::Table;
 /// One cell of a robustness grid: per-seed metric samples.
 #[derive(Clone, Debug, Default)]
 pub struct Cell {
+    /// Metric samples in seed order (NaN for failed jobs).
     pub samples: Vec<f64>,
 }
 
 impl Cell {
+    /// Mean over the cell's samples.
     pub fn mean(&self) -> f64 {
         stats::mean(&self.samples)
     }
 
+    /// Sample standard deviation over the cell's samples.
     pub fn std(&self) -> f64 {
         stats::std(&self.samples)
     }
 
+    /// `mean±std` in the paper's table format.
     pub fn pm(&self) -> String {
         crate::util::table::Table::pm(self.mean(), self.std())
     }
@@ -39,24 +44,32 @@ impl Cell {
 /// failed sample is recorded as NaN (which the NaN-safe stats absorb).
 #[derive(Clone, Debug)]
 pub struct GridFailure {
+    /// `ref_mean` coordinate of the failed cell.
     pub mean: f64,
+    /// `ref_std` coordinate of the failed cell.
     pub std: f64,
+    /// Seed of the failed job.
     pub seed: u64,
+    /// Text of the panic payload.
     pub message: String,
 }
 
 /// A (mean x std) grid of cells for one method.
 #[derive(Clone, Debug)]
 pub struct Grid {
+    /// `ref_mean` axis values.
     pub means: Vec<f64>,
+    /// `ref_std` axis values.
     pub stds: Vec<f64>,
-    pub cells: Vec<Cell>, // row-major [mean][std]
+    /// Cells in row-major `[mean][std]` order.
+    pub cells: Vec<Cell>,
     /// Jobs that panicked instead of returning a metric (empty on a
     /// healthy sweep).
     pub failures: Vec<GridFailure>,
 }
 
 impl Grid {
+    /// Empty grid over the given axes.
     pub fn new(means: &[f64], stds: &[f64]) -> Grid {
         Grid {
             means: means.to_vec(),
@@ -66,10 +79,12 @@ impl Grid {
         }
     }
 
+    /// Mutable cell at (mean index, std index).
     pub fn cell_mut(&mut self, mi: usize, si: usize) -> &mut Cell {
         &mut self.cells[mi * self.stds.len() + si]
     }
 
+    /// Cell at (mean index, std index).
     pub fn cell(&self, mi: usize, si: usize) -> &Cell {
         &self.cells[mi * self.stds.len() + si]
     }
@@ -164,6 +179,11 @@ where
         };
         grid.cells[mi * stds.len() + si].samples.push(sample);
     }
+    metrics::counter(metrics::MetricId::SweepJobsTotal, jobs.len() as u64);
+    metrics::counter(
+        metrics::MetricId::SweepJobFailuresTotal,
+        grid.failures.len() as u64,
+    );
     grid
 }
 
@@ -182,13 +202,16 @@ fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
 /// Scale parameters of a pulse-level robustness sweep (one quadratic
 /// objective per cell, methods built from the registry).
 pub struct PulseSweep<'a> {
+    /// Problem / tile dimension per cell.
     pub dim: usize,
+    /// Device response preset the cells run on.
     pub preset: &'a Preset,
     /// optimizer steps per cell; the metric is the mean loss over the
     /// final fifth of the run
     pub steps: usize,
     /// gradient-noise scale of the stochastic oracle
     pub sigma: f64,
+    /// Worker threads for the job fan-out.
     pub threads: usize,
 }
 

@@ -26,6 +26,7 @@
 use crate::device::fault::FaultState;
 use crate::device::presets::Preset;
 use crate::device::response::SoftBounds;
+use crate::util::metrics::{self, MetricId};
 use crate::util::rng::Rng;
 
 /// Cells per batched inner block: noise for a block is pre-filled into
@@ -377,6 +378,7 @@ impl DeviceArray {
         let dir = if up { PulseDir::Up } else { PulseDir::Down };
         pulse_span(&mut self.w, &self.alpha_p, &self.alpha_m, dir, &p, rng);
         self.pulse_count += self.w.len() as u64;
+        metrics::counter(MetricId::DevicePulsesTotal, self.w.len() as u64);
         self.apply_faults();
     }
 
@@ -385,6 +387,7 @@ impl DeviceArray {
         let p = self.params();
         pulse_span(&mut self.w, &self.alpha_p, &self.alpha_m, PulseDir::Random, &p, rng);
         self.pulse_count += self.w.len() as u64;
+        metrics::counter(MetricId::DevicePulsesTotal, self.w.len() as u64);
         self.apply_faults();
     }
 
@@ -401,6 +404,7 @@ impl DeviceArray {
             let p = self.params();
             let sent = update_span(&mut self.w, &self.alpha_p, &self.alpha_m, dw, &p, rng);
             self.pulse_count += sent;
+            metrics::counter(MetricId::DevicePulsesTotal, sent);
         }
         self.apply_faults();
     }
@@ -455,6 +459,7 @@ impl DeviceArray {
             handles.into_iter().map(|h| h.join().unwrap()).sum()
         });
         self.pulse_count += sent;
+        metrics::counter(MetricId::DevicePulsesTotal, sent);
     }
 
     /// Scalar reference implementation of [`DeviceArray::analog_update`]
@@ -463,6 +468,7 @@ impl DeviceArray {
     /// (`rust/tests/batched_engine.rs`); not a hot path.
     pub fn analog_update_ref(&mut self, dw: &[f32], rng: &mut Rng) {
         debug_assert_eq!(dw.len(), self.len());
+        let before = self.pulse_count;
         let dwm = self.dw_min;
         for i in 0..self.len() {
             let d = dw[i];
@@ -489,6 +495,7 @@ impl DeviceArray {
             self.w[i] = nw.clamp(-self.tau_min, self.tau_max);
             self.pulse_count += n as u64;
         }
+        metrics::counter(MetricId::DevicePulsesTotal, self.pulse_count - before);
         self.apply_faults();
     }
 
@@ -497,6 +504,7 @@ impl DeviceArray {
     /// scalar arithmetic untouched (the fault hook is a no-op unless a
     /// mask is armed).
     pub fn analog_update_det(&mut self, dw: &[f32]) {
+        let before = self.pulse_count;
         let dwm = self.dw_min;
         for i in 0..self.len() {
             let d = dw[i];
@@ -511,6 +519,7 @@ impl DeviceArray {
             self.w[i] = nw.clamp(-self.tau_min, self.tau_max);
             self.pulse_count += n as u64;
         }
+        metrics::counter(MetricId::DevicePulsesTotal, self.pulse_count - before);
         self.apply_faults();
     }
 

@@ -7,6 +7,9 @@ use analog_rider::runtime::{Executor, Registry};
 use analog_rider::train::{DevParams, TrainConfig, Trainer};
 
 fn main() {
+    // the library never installs the metrics recorder; the binary does,
+    // so every experiment leaves a telemetry trace (see METRICS.md)
+    analog_rider::util::metrics::install();
     let args = match Args::from_env() {
         Ok(a) => a,
         Err(e) => {
@@ -70,6 +73,8 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                  \u{20}             [--config file.toml]   ([optimizer] section)\n\
                  \u{20}  rider calibrate --pulses N [--side 128] [--dw-min 1e-3]\n\
                  \u{20}  rider verify (statically check every compiled artifact plan)\n\
+                 \u{20}  rider metrics [--pulses N] [--out FILE]  (run a sample device\n\
+                 \u{20}             workload, dump Prometheus exposition text; see METRICS.md)\n\
                  \u{20}  rider all    (reduced-size full suite; writes runs/)"
             );
             Ok(())
@@ -225,6 +230,29 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
             }
             Ok(())
         }
+        "metrics" => {
+            use analog_rider::analog::zs::{self, ZsVariant};
+            use analog_rider::device::{presets, DeviceArray};
+            use analog_rider::util::rng::Rng;
+            // artifact-free sample workload: populate the device/ZS
+            // series, then dump the Prometheus exposition text
+            let mut rng = Rng::from_seed(args.get_u64("seed", 0));
+            let mut arr =
+                DeviceArray::sample(64, 64, &presets::PRECISE, 0.4, 0.2, 0.1, &mut rng);
+            let _ = zs::run(&mut arr, args.get_u64("pulses", 200), ZsVariant::Cyclic, &mut rng);
+            let dw = vec![0.01f32; arr.len()];
+            for _ in 0..5 {
+                arr.analog_update(&dw, &mut rng);
+            }
+            let text = analog_rider::util::metrics::prometheus_text();
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, &text)?;
+                println!("wrote {path}");
+            } else {
+                print!("{text}");
+            }
+            Ok(())
+        }
         sub => {
             // everything below needs artifacts
             let reg = Registry::load(Registry::default_dir())?;
@@ -259,8 +287,12 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                         cfg.seed ^ 0xDA7A,
                     );
                     let test = analog_rider::data::Dataset::digits(200, cfg.seed ^ 0x7E57);
+                    let rd = analog_rider::coordinator::metrics::RunDir::create("train")?;
+                    rd.attach_metrics_trace()?;
                     let mut t = Trainer::new(&exec, &reg, cfg)?;
                     let res = t.train(&train, Some(&test))?;
+                    analog_rider::util::metrics::detach_trace();
+                    println!("metrics trace: {}", rd.file("metrics.jsonl").display());
                     println!(
                         "final loss {:.4}, test acc {:.2}%, update pulses {}, \
                          calib pulses {}",

@@ -28,6 +28,7 @@ pub struct Executor {
 }
 
 impl Executor {
+    /// Build an executor on the CPU (interpreter-backed) client.
     pub fn cpu() -> Result<Executor> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
         Ok(Executor {
@@ -53,6 +54,13 @@ impl Executor {
             .compile(&comp)
             .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
         let exe = std::rc::Rc::new(exe);
+        {
+            use crate::util::metrics::{self, MetricId};
+            metrics::counter(MetricId::ExecutorCompilesTotal, 1);
+            let (bufs, slots) = exe.buffer_stats();
+            metrics::counter(MetricId::PlanBuffersTotal, bufs as u64);
+            metrics::counter(MetricId::PlanBufferSlotsTotal, slots as u64);
+        }
         self.cache
             .borrow_mut()
             .insert(spec.name.clone(), exe.clone());
@@ -87,6 +95,7 @@ impl Executor {
             ));
         }
         let exe = self.compile(spec)?;
+        crate::util::metrics::counter(crate::util::metrics::MetricId::ExecutorRunsTotal, 1);
         let lits: Vec<xla::Literal> = spec
             .inputs
             .iter()

@@ -402,6 +402,26 @@ impl Plan {
         PlanInspect { module: &self.module, comps: &self.comps }
     }
 
+    /// Buffer-assignment summary across every computation: the number
+    /// of planned output buffers and the number of instruction value
+    /// slots that resolved to a buffer (the reuse the planner bought).
+    /// Feeds the `plan_buffers_total` / `plan_buffer_slots_total`
+    /// metrics at compile time.
+    pub fn buffer_stats(&self) -> (usize, usize) {
+        let bufs = self.comps.iter().map(|cp| cp.buf_dt.len()).sum();
+        let slots = self
+            .comps
+            .iter()
+            .map(|cp| {
+                cp.src
+                    .iter()
+                    .filter(|s| matches!(s, ValSrc::Buf(_)))
+                    .count()
+            })
+            .sum();
+        (bufs, slots)
+    }
+
     /// Validate `args` against the entry parameters and run the planned
     /// program. Bit-identical to [`interp::execute_ref`] on the same
     /// module and arguments.

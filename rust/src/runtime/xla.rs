@@ -285,6 +285,12 @@ impl PjRtLoadedExecutable {
         Ok(vec![vec![PjRtBuffer { literal: root }]])
     }
 
+    /// Buffer-assignment summary of the compiled plan: (planned output
+    /// buffers, buffer-backed value slots). See [`Plan::buffer_stats`].
+    pub fn buffer_stats(&self) -> (usize, usize) {
+        self.plan.buffer_stats()
+    }
+
     /// Override the plan's `dot` worker-thread budget (testing hook;
     /// results are bit-identical for every setting).
     pub fn set_threads(&self, n: usize) {

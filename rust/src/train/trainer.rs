@@ -17,6 +17,7 @@ use crate::runtime::{Executor, HostTensor, Registry};
 use crate::train::fault::Checkpoint;
 use crate::train::hypers::{DevParams, Hypers};
 use crate::train::state::ModelState;
+use crate::util::metrics::{self, MetricId};
 
 /// Average pulse train length per weight update event (Fig. 4 caption).
 pub const BL: u64 = 5;
@@ -150,6 +151,10 @@ impl<'a> Trainer<'a> {
             let outputs = exec.run(zs, &inputs)?;
             state = ModelState::from_outputs(spec, outputs)?;
             calib_cost.calibration_pulses = cfg.zs_pulses * spec.n_weights() as u64;
+            metrics::counter(
+                MetricId::TrainCalibrationPulsesTotal,
+                calib_cost.calibration_pulses,
+            );
         }
         let mut t = Trainer {
             exec,
@@ -222,6 +227,7 @@ impl<'a> Trainer<'a> {
             .sum();
         let spent = zs_pulses * affected;
         self.calib_cost.calibration_pulses += spent;
+        metrics::counter(MetricId::TrainCalibrationPulsesTotal, spent);
         Ok(spent)
     }
 
@@ -235,6 +241,7 @@ impl<'a> Trainer<'a> {
 
     /// One optimizer step on a batch; returns the loss.
     pub fn step(&mut self, x: &[f32], y: &[i32]) -> Result<f64> {
+        let t0 = metrics::enabled().then(std::time::Instant::now);
         let spec = self.reg.model(&self.cfg.model)?;
         let art = self.reg.artifact(&self.cfg.step_artifact())?;
         let mut inputs = self.state.to_inputs();
@@ -249,6 +256,10 @@ impl<'a> Trainer<'a> {
             .and_then(|v| v.first().copied())
             .ok_or_else(|| anyhow!("step returned no loss"))? as f64;
         self.state = ModelState::from_outputs(spec, outputs)?;
+        if let Some(t0) = t0 {
+            metrics::counter(MetricId::TrainStepsTotal, 1);
+            metrics::histogram(MetricId::TrainStepSeconds, t0.elapsed().as_secs_f64());
+        }
         Ok(loss)
     }
 
@@ -344,6 +355,20 @@ impl<'a> Trainer<'a> {
             let loss = self.step(&x, &y)?;
             res.losses.push(loss);
             res.steps_run = k + 1;
+            if metrics::enabled() {
+                metrics::gauge(MetricId::TrainLoss, loss);
+                if self.cfg.spec.method != Method::Digital {
+                    metrics::counter(
+                        MetricId::TrainUpdatePulsesTotal,
+                        spec.n_weights() as u64 * BL,
+                    );
+                }
+                metrics::gauge(
+                    MetricId::SpResidual,
+                    crate::train::fault::sp_residual(spec, &self.state, &self.cfg.dev),
+                );
+                metrics::trace_sample(k as u64);
+            }
             ema = if ema.is_nan() { loss } else { 0.95 * ema + 0.05 * loss };
             if self.cfg.log && (k % 50 == 0 || k + 1 == self.cfg.steps) {
                 println!("  step {k:5}  loss {loss:.4}  ema {ema:.4}");

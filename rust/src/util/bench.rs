@@ -4,8 +4,13 @@
 //!
 //! Bench binaries are declared with `harness = false` and call
 //! [`Bench::run`] per case; output is both human-readable and
-//! machine-parseable (one `BENCH\t...` line per case).
+//! machine-parseable (one `BENCH\t...` line per case). A [`BenchSuite`]
+//! additionally records every case into the live metrics facade
+//! (`util::metrics`, labeled `bench_*` gauges) and writes the
+//! `BENCH_*.json` trajectory file when `$BENCH_JSON_OUT` is set — the
+//! pipeline `./ci.sh bench` consumes.
 
+use crate::util::metrics;
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};
 
@@ -14,9 +19,13 @@ pub use std::hint::black_box;
 /// Configuration for a bench run.
 #[derive(Clone, Debug)]
 pub struct Bench {
+    /// Warmup phase length (also used to estimate per-iter cost).
     pub warmup: Duration,
+    /// Target measurement phase length.
     pub measure: Duration,
+    /// Lower bound on timed iterations.
     pub min_iters: u32,
+    /// Upper bound on timed iterations.
     pub max_iters: u32,
 }
 
@@ -34,11 +43,17 @@ impl Default for Bench {
 /// Result of one bench case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name, e.g. `analog_update/256x256`.
     pub name: String,
+    /// Timed iterations.
     pub iters: u32,
+    /// Mean wall-clock per iteration, nanoseconds.
     pub mean_ns: f64,
+    /// Sample standard deviation (n−1 denominator), nanoseconds.
     pub std_ns: f64,
+    /// Median wall-clock per iteration, nanoseconds.
     pub median_ns: f64,
+    /// Fastest iteration, nanoseconds.
     pub min_ns: f64,
 }
 
@@ -61,6 +76,7 @@ impl BenchResult {
         }
     }
 
+    /// The machine-parseable one-line report (`BENCH\t...` fields).
     pub fn report(&self) -> String {
         format!(
             "BENCH\t{}\titers={}\tmean={}\tmedian={}\tmin={}\tstd={}",
@@ -80,6 +96,7 @@ impl BenchResult {
     }
 }
 
+/// Render a nanosecond figure with an auto-selected ns/us/ms/s unit.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{:.1}ns", ns)
@@ -141,6 +158,65 @@ pub fn consume<T>(x: T) -> T {
     bb(x)
 }
 
+/// Suite-level collector: prints each case's `BENCH\t...` line, records
+/// it into the metrics facade (labeled `bench_*` gauges) and, on
+/// [`finish`], writes the collected cases to `$BENCH_JSON_OUT` in the
+/// `BENCH_*.json` array schema (`$BENCH_JSON_APPEND=1` merges into an
+/// existing file so several suites can share one trajectory file).
+///
+/// [`finish`]: BenchSuite::finish
+#[derive(Default)]
+pub struct BenchSuite {
+    cases: Vec<metrics::BenchCase>,
+}
+
+impl BenchSuite {
+    /// Empty suite.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Print `r`'s plain report, record it, and collect it for export.
+    pub fn push(&mut self, r: &BenchResult) {
+        println!("{}", r.report());
+        self.collect(r, None);
+    }
+
+    /// Print `r`'s throughput report (`per_iter` items per iteration,
+    /// labeled `unit`), record it, and collect it for export.
+    pub fn push_throughput(&mut self, r: &BenchResult, unit: &str, per_iter: f64) {
+        println!("{}", r.report_throughput(unit, per_iter));
+        let per_sec = per_iter / (r.mean_ns * 1e-9);
+        self.collect(r, Some((per_sec, unit.to_string())));
+    }
+
+    fn collect(&mut self, r: &BenchResult, throughput: Option<(f64, String)>) {
+        let case = metrics::BenchCase {
+            name: r.name.clone(),
+            iters: u64::from(r.iters),
+            mean_ns: r.mean_ns,
+            median_ns: r.median_ns,
+            min_ns: r.min_ns,
+            std_ns: r.std_ns,
+            throughput,
+        };
+        metrics::record_bench(&case);
+        self.cases.push(case);
+    }
+
+    /// Export the collected cases to `$BENCH_JSON_OUT` if set (no-op
+    /// otherwise, so ad-hoc `cargo bench` runs stay file-free).
+    pub fn finish(self) -> std::io::Result<()> {
+        let Ok(path) = std::env::var("BENCH_JSON_OUT") else {
+            return Ok(());
+        };
+        let append = std::env::var("BENCH_JSON_APPEND").map(|v| v == "1").unwrap_or(false);
+        metrics::write_bench_json(&self.cases, std::path::Path::new(&path), append)?;
+        println!("wrote {path} ({} cases)", self.cases.len());
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +263,19 @@ mod tests {
         assert!(fmt_ns(5e3).ends_with("us"));
         assert!(fmt_ns(5e6).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn suite_collects_cases() {
+        let mut s = BenchSuite::new();
+        let r = BenchResult::from_samples("c/1", vec![10.0, 20.0, 30.0]);
+        s.push(&r);
+        s.push_throughput(&r, "ops", 100.0);
+        assert_eq!(s.cases.len(), 2);
+        assert!(s.cases[0].throughput.is_none());
+        let t = s.cases[1].throughput.as_ref().expect("throughput case");
+        assert_eq!(t.1, "ops");
+        assert!(t.0 > 0.0);
     }
 
     #[test]

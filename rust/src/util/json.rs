@@ -6,17 +6,26 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value; numbers are uniformly `f64`.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object (sorted key order).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse `src` as a single JSON value; trailing non-space is an
+    /// error.
     pub fn parse(src: &str) -> Result<Json, String> {
         let mut p = Parser {
             b: src.as_bytes(),
@@ -33,6 +42,7 @@ impl Json {
 
     // -------- accessors ------------------------------------------------
 
+    /// Object field lookup (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -40,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Array element lookup (`None` on non-arrays / out of range).
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -47,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The string payload, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -54,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -61,10 +74,12 @@ impl Json {
         }
     }
 
+    /// The numeric payload truncated to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The element slice, if this is a [`Json::Arr`].
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -72,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is a [`Json::Obj`].
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -79,6 +95,7 @@ impl Json {
         }
     }
 
+    /// Collect a numeric array into `Vec<f32>` (non-numbers skipped).
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
         self.as_arr()
             .map(|v| v.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
@@ -86,6 +103,9 @@ impl Json {
 
     // -------- emit ------------------------------------------------------
 
+    /// Serialize to compact JSON text (round-trips through [`parse`]).
+    ///
+    /// [`parse`]: Json::parse
     pub fn dump(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -151,14 +171,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Shorthand for [`Json::Num`].
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// Shorthand for an owned [`Json::Str`].
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Build a numeric [`Json::Arr`] from an `f64` slice.
 pub fn arr_f64(v: &[f64]) -> Json {
     Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
 }

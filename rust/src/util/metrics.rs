@@ -1,0 +1,936 @@
+//! Live metrics facade: dependency-free counters, gauges and
+//! fixed-bucket histograms behind a pluggable [`Recorder`] trait.
+//!
+//! Call sites record through the free functions ([`counter`],
+//! [`gauge`], [`histogram`]) using compile-time [`MetricId`] keys, so
+//! an instrumented hot path costs a single relaxed atomic load while
+//! no recorder is installed (the default — the library never installs
+//! one; the `rider` binary and the bench suites opt in). [`install`]
+//! activates the process-wide [`MemorySink`], whose aggregates feed
+//! three exporters:
+//!
+//! * a JSON-lines snapshot trace ([`attach_trace`] / [`trace_sample`]),
+//!   routed through `coordinator::metrics::RunDir` so experiment
+//!   telemetry lands next to the tables under `runs/`;
+//! * a plain-text Prometheus exposition dump ([`prometheus_text`],
+//!   served by the `rider metrics` subcommand);
+//! * the `BENCH_*.json` bench-trajectory files ([`write_bench_json`]),
+//!   fed by the same labeled `bench_*` gauge series the bench binaries
+//!   record via [`record_bench`].
+//!
+//! Every key is registered in [`SPECS`]; `METRICS.md` documents the
+//! table and `rust/tests/doc_drift.rs` pins the two to each other.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Metric kind: monotone counter, last-value gauge, or fixed-bucket
+/// histogram.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    /// Monotonically increasing `u64` total.
+    Counter,
+    /// Last-written `f64` value.
+    Gauge,
+    /// Fixed-bucket distribution of `f64` observations (buckets are
+    /// [`SECONDS_BUCKETS`] for every histogram in the registry).
+    Histogram,
+}
+
+/// Compile-time key for a registered metric.
+///
+/// The discriminant indexes [`SPECS`]; `registry_is_aligned` in this
+/// module's tests pins the two orderings together, so recording is an
+/// array index — no string hashing on the hot path (the "interning"
+/// is done by the compiler).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MetricId {
+    /// Pulses charged on crossbar cells (`device/array.rs`).
+    DevicePulsesTotal,
+    /// Mean |SP − q| after a zero-shifting calibration (`analog/zs.rs`).
+    DeviceSpDrift,
+    /// Training loss of the latest step (`train/trainer.rs`).
+    TrainLoss,
+    /// NN-scale symmetric-point residual probe (`train/fault.rs`).
+    SpResidual,
+    /// Completed trainer steps.
+    TrainStepsTotal,
+    /// Wall-clock seconds per trainer step.
+    TrainStepSeconds,
+    /// Update pulses charged by trainer steps.
+    TrainUpdatePulsesTotal,
+    /// Pulses spent on ZS calibration (initial + selective re-runs).
+    TrainCalibrationPulsesTotal,
+    /// Plan compilations (executor cache misses).
+    ExecutorCompilesTotal,
+    /// Planned-engine executions.
+    ExecutorRunsTotal,
+    /// Reusable buffers allocated by freshly compiled plans.
+    PlanBuffersTotal,
+    /// Buffer-backed value slots in freshly compiled plans.
+    PlanBufferSlotsTotal,
+    /// Sweep jobs completed (including failed ones).
+    SweepJobsTotal,
+    /// Sweep jobs that panicked and were reported as failures.
+    SweepJobFailuresTotal,
+    /// Bench: measured iterations per case.
+    BenchIters,
+    /// Bench: mean wall-clock per iteration, nanoseconds.
+    BenchMeanNs,
+    /// Bench: median wall-clock per iteration, nanoseconds.
+    BenchMedianNs,
+    /// Bench: fastest iteration, nanoseconds (the regression-gated
+    /// series in `BENCH_baseline/`).
+    BenchMinNs,
+    /// Bench: sample standard deviation, nanoseconds.
+    BenchStdNs,
+    /// Bench: throughput, items per second.
+    BenchThroughputPerS,
+}
+
+impl MetricId {
+    /// Every registered metric in registry (documentation) order.
+    pub const ALL: &'static [MetricId] = &[
+        MetricId::DevicePulsesTotal,
+        MetricId::DeviceSpDrift,
+        MetricId::TrainLoss,
+        MetricId::SpResidual,
+        MetricId::TrainStepsTotal,
+        MetricId::TrainStepSeconds,
+        MetricId::TrainUpdatePulsesTotal,
+        MetricId::TrainCalibrationPulsesTotal,
+        MetricId::ExecutorCompilesTotal,
+        MetricId::ExecutorRunsTotal,
+        MetricId::PlanBuffersTotal,
+        MetricId::PlanBufferSlotsTotal,
+        MetricId::SweepJobsTotal,
+        MetricId::SweepJobFailuresTotal,
+        MetricId::BenchIters,
+        MetricId::BenchMeanNs,
+        MetricId::BenchMedianNs,
+        MetricId::BenchMinNs,
+        MetricId::BenchStdNs,
+        MetricId::BenchThroughputPerS,
+    ];
+}
+
+/// Registry entry describing one metric key — the canonical source of
+/// the `METRICS.md` reference table.
+pub struct KeySpec {
+    /// Exported key name (JSONL `key` field / Prometheus family name).
+    pub name: &'static str,
+    /// Aggregation kind.
+    pub kind: Kind,
+    /// Unit of the recorded value (`"1"` for dimensionless counts).
+    pub unit: &'static str,
+    /// Label dimension (`"-"` for unlabeled series).
+    pub labels: &'static str,
+    /// Module that records the key.
+    pub module: &'static str,
+    /// One-line description (the Prometheus `# HELP` text).
+    pub help: &'static str,
+}
+
+/// Canonical key registry, indexed by `MetricId as usize`. `METRICS.md`
+/// mirrors this table and `rust/tests/doc_drift.rs` fails on drift.
+pub const SPECS: &[KeySpec] = &[
+    KeySpec {
+        name: "device_pulses_total",
+        kind: Kind::Counter,
+        unit: "pulses",
+        labels: "-",
+        module: "device/array.rs",
+        help: "Pulses charged on crossbar cells across all update paths",
+    },
+    KeySpec {
+        name: "device_sp_drift",
+        kind: Kind::Gauge,
+        unit: "norm. conductance",
+        labels: "-",
+        module: "analog/zs.rs",
+        help: "Mean abs(SP - q) over the array after the latest ZS calibration",
+    },
+    KeySpec {
+        name: "train_loss",
+        kind: Kind::Gauge,
+        unit: "loss",
+        labels: "-",
+        module: "train/trainer.rs",
+        help: "Training loss of the latest completed step",
+    },
+    KeySpec {
+        name: "sp_residual",
+        kind: Kind::Gauge,
+        unit: "norm. conductance",
+        labels: "-",
+        module: "train/trainer.rs",
+        help: "NN-scale symmetric-point residual (train/fault.rs probe)",
+    },
+    KeySpec {
+        name: "train_steps_total",
+        kind: Kind::Counter,
+        unit: "1",
+        labels: "-",
+        module: "train/trainer.rs",
+        help: "Completed trainer steps",
+    },
+    KeySpec {
+        name: "train_step_seconds",
+        kind: Kind::Histogram,
+        unit: "seconds",
+        labels: "-",
+        module: "train/trainer.rs",
+        help: "Wall-clock seconds per trainer step",
+    },
+    KeySpec {
+        name: "train_update_pulses_total",
+        kind: Kind::Counter,
+        unit: "pulses",
+        labels: "-",
+        module: "train/trainer.rs",
+        help: "Update pulses charged by trainer steps (BL per weight)",
+    },
+    KeySpec {
+        name: "train_calibration_pulses_total",
+        kind: Kind::Counter,
+        unit: "pulses",
+        labels: "-",
+        module: "train/trainer.rs",
+        help: "Pulses spent on ZS calibration (initial and selective re-runs)",
+    },
+    KeySpec {
+        name: "executor_compiles_total",
+        kind: Kind::Counter,
+        unit: "1",
+        labels: "-",
+        module: "runtime/executor.rs",
+        help: "Plan compilations (executor cache misses)",
+    },
+    KeySpec {
+        name: "executor_runs_total",
+        kind: Kind::Counter,
+        unit: "1",
+        labels: "-",
+        module: "runtime/executor.rs",
+        help: "Planned-engine executions dispatched by the executor",
+    },
+    KeySpec {
+        name: "plan_buffers_total",
+        kind: Kind::Counter,
+        unit: "1",
+        labels: "-",
+        module: "runtime/executor.rs",
+        help: "Reusable buffers allocated by freshly compiled plans",
+    },
+    KeySpec {
+        name: "plan_buffer_slots_total",
+        kind: Kind::Counter,
+        unit: "1",
+        labels: "-",
+        module: "runtime/executor.rs",
+        help: "Buffer-backed value slots in freshly compiled plans",
+    },
+    KeySpec {
+        name: "sweep_jobs_total",
+        kind: Kind::Counter,
+        unit: "1",
+        labels: "-",
+        module: "coordinator/sweep.rs",
+        help: "Sweep jobs completed, including failed ones",
+    },
+    KeySpec {
+        name: "sweep_job_failures_total",
+        kind: Kind::Counter,
+        unit: "1",
+        labels: "-",
+        module: "coordinator/sweep.rs",
+        help: "Sweep jobs that panicked and were reported as failures",
+    },
+    KeySpec {
+        name: "bench_iters",
+        kind: Kind::Gauge,
+        unit: "1",
+        labels: "case",
+        module: "util/bench.rs",
+        help: "Bench: measured iterations per case",
+    },
+    KeySpec {
+        name: "bench_mean_ns",
+        kind: Kind::Gauge,
+        unit: "ns",
+        labels: "case",
+        module: "util/bench.rs",
+        help: "Bench: mean wall-clock per iteration",
+    },
+    KeySpec {
+        name: "bench_median_ns",
+        kind: Kind::Gauge,
+        unit: "ns",
+        labels: "case",
+        module: "util/bench.rs",
+        help: "Bench: median wall-clock per iteration",
+    },
+    KeySpec {
+        name: "bench_min_ns",
+        kind: Kind::Gauge,
+        unit: "ns",
+        labels: "case",
+        module: "util/bench.rs",
+        help: "Bench: fastest iteration (the regression-gated series)",
+    },
+    KeySpec {
+        name: "bench_std_ns",
+        kind: Kind::Gauge,
+        unit: "ns",
+        labels: "case",
+        module: "util/bench.rs",
+        help: "Bench: sample standard deviation",
+    },
+    KeySpec {
+        name: "bench_throughput_per_s",
+        kind: Kind::Gauge,
+        unit: "items/s",
+        labels: "case",
+        module: "util/bench.rs",
+        help: "Bench: throughput in case-specific items per second",
+    },
+];
+
+/// Bucket upper bounds (seconds) shared by every histogram in the
+/// registry; the implicit `+Inf` bucket is appended on export.
+pub const SECONDS_BUCKETS: &[f64] = &[1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0];
+
+/// Keys the `./ci.sh metrics` smoke stage requires in every JSONL run
+/// trace (the trainer-level series every NN-scale experiment emits).
+pub const REQUIRED_TRACE_KEYS: &[&str] =
+    &["train_loss", "train_update_pulses_total", "sp_residual"];
+
+/// A metrics sink: receives every recorded sample.
+///
+/// Implementations must be thread-safe — recording happens from the
+/// scoped-thread fan-outs in `device/`, `coordinator/sweep.rs` and the
+/// planned-engine row pools without external synchronization.
+pub trait Recorder: Sync {
+    /// Add `delta` to a monotone counter.
+    fn counter(&self, id: MetricId, delta: u64);
+    /// Set a gauge to `value` (last write wins).
+    fn gauge(&self, id: MetricId, value: f64);
+    /// Observe `value` into a fixed-bucket histogram.
+    fn histogram(&self, id: MetricId, value: f64);
+    /// Set the `label`-tagged series of a labeled gauge to `value`.
+    fn gauge_labeled(&self, id: MetricId, label: &str, value: f64);
+}
+
+/// The do-nothing sink: what every call site effectively sees until
+/// [`install`] runs (the facade short-circuits on a disabled flag, so
+/// this type exists for tests and explicit composition).
+pub struct NoopRecorder;
+
+impl Recorder for NoopRecorder {
+    fn counter(&self, _id: MetricId, _delta: u64) {}
+    fn gauge(&self, _id: MetricId, _value: f64) {}
+    fn histogram(&self, _id: MetricId, _value: f64) {}
+    fn gauge_labeled(&self, _id: MetricId, _label: &str, _value: f64) {}
+}
+
+/// Gauge-slot sentinel: a quiet-NaN bit pattern meaning "never set".
+const UNSET_BITS: u64 = 0x7ff8_dead_beef_0000;
+
+/// In-memory aggregating sink: lock-free atomics for the unlabeled
+/// series (pre-allocated per [`SPECS`] entry, so recording never
+/// touches the heap), a mutex-guarded map for the cold labeled
+/// `bench_*` series.
+pub struct MemorySink {
+    counters: Vec<AtomicU64>,
+    /// f64 bit patterns; `UNSET_BITS` marks a never-written gauge.
+    gauges: Vec<AtomicU64>,
+    /// Per-metric bucket counts (`SECONDS_BUCKETS.len() + 1` slots,
+    /// the last being `+Inf`); empty for non-histogram entries.
+    hist_counts: Vec<Vec<AtomicU64>>,
+    /// f64 bit patterns updated by compare-exchange.
+    hist_sums: Vec<AtomicU64>,
+    hist_totals: Vec<AtomicU64>,
+    labeled: Mutex<BTreeMap<(usize, String), f64>>,
+}
+
+impl Default for MemorySink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemorySink {
+    /// Build a sink with one pre-allocated slot per registry entry.
+    pub fn new() -> Self {
+        let n = SPECS.len();
+        MemorySink {
+            counters: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            gauges: (0..n).map(|_| AtomicU64::new(UNSET_BITS)).collect(),
+            hist_counts: SPECS
+                .iter()
+                .map(|s| {
+                    let slots = if s.kind == Kind::Histogram {
+                        SECONDS_BUCKETS.len() + 1
+                    } else {
+                        0
+                    };
+                    (0..slots).map(|_| AtomicU64::new(0)).collect()
+                })
+                .collect(),
+            hist_sums: (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
+            hist_totals: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            labeled: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn labeled_guard(&self) -> std::sync::MutexGuard<'_, BTreeMap<(usize, String), f64>> {
+        self.labeled.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Current value of a counter.
+    pub fn counter_value(&self, id: MetricId) -> u64 {
+        self.counters[id as usize].load(Ordering::Relaxed)
+    }
+
+    /// Current value of an unlabeled gauge, `None` if never written.
+    pub fn gauge_value(&self, id: MetricId) -> Option<f64> {
+        let bits = self.gauges[id as usize].load(Ordering::Relaxed);
+        if bits == UNSET_BITS {
+            None
+        } else {
+            Some(f64::from_bits(bits))
+        }
+    }
+
+    /// `(count, sum)` of a histogram.
+    pub fn histogram_totals(&self, id: MetricId) -> (u64, f64) {
+        let i = id as usize;
+        (
+            self.hist_totals[i].load(Ordering::Relaxed),
+            f64::from_bits(self.hist_sums[i].load(Ordering::Relaxed)),
+        )
+    }
+
+    /// Render the sink as Prometheus exposition text: `# HELP`/`# TYPE`
+    /// headers per family, cumulative `_bucket{le=...}` lines plus
+    /// `_sum`/`_count` for histograms, `name{case="..."}` samples for
+    /// the labeled bench series. Counters always appear; gauges and
+    /// labeled series only once written.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for &id in MetricId::ALL {
+            let i = id as usize;
+            let spec = &SPECS[i];
+            match spec.kind {
+                Kind::Counter => {
+                    let _ = writeln!(out, "# HELP {} {}", spec.name, spec.help);
+                    let _ = writeln!(out, "# TYPE {} counter", spec.name);
+                    let v = self.counters[i].load(Ordering::Relaxed);
+                    let _ = writeln!(out, "{} {}", spec.name, v);
+                }
+                Kind::Gauge if spec.labels == "-" => {
+                    let Some(v) = self.gauge_value(id) else {
+                        continue;
+                    };
+                    if !v.is_finite() {
+                        continue;
+                    }
+                    let _ = writeln!(out, "# HELP {} {}", spec.name, spec.help);
+                    let _ = writeln!(out, "# TYPE {} gauge", spec.name);
+                    let _ = writeln!(out, "{} {}", spec.name, v);
+                }
+                Kind::Gauge => {
+                    let map = self.labeled_guard();
+                    let series: Vec<(String, f64)> = map
+                        .iter()
+                        .filter(|((k, _), _)| *k == i)
+                        .map(|((_, label), v)| (label.clone(), *v))
+                        .collect();
+                    drop(map);
+                    if series.is_empty() {
+                        continue;
+                    }
+                    let _ = writeln!(out, "# HELP {} {}", spec.name, spec.help);
+                    let _ = writeln!(out, "# TYPE {} gauge", spec.name);
+                    for (label, v) in series {
+                        let _ = writeln!(
+                            out,
+                            "{}{{{}=\"{}\"}} {}",
+                            spec.name,
+                            spec.labels,
+                            escape_label(&label),
+                            v
+                        );
+                    }
+                }
+                Kind::Histogram => {
+                    let _ = writeln!(out, "# HELP {} {}", spec.name, spec.help);
+                    let _ = writeln!(out, "# TYPE {} histogram", spec.name);
+                    let mut cum = 0u64;
+                    for (bi, b) in SECONDS_BUCKETS.iter().enumerate() {
+                        cum += self.hist_counts[i][bi].load(Ordering::Relaxed);
+                        let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", spec.name, b, cum);
+                    }
+                    cum += self.hist_counts[i][SECONDS_BUCKETS.len()].load(Ordering::Relaxed);
+                    let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", spec.name, cum);
+                    let (n, s) = self.histogram_totals(id);
+                    let _ = writeln!(out, "{}_sum {}", spec.name, s);
+                    let _ = writeln!(out, "{}_count {}", spec.name, n);
+                }
+            }
+        }
+        out
+    }
+
+    /// Append one JSONL snapshot line per populated unlabeled metric to
+    /// `out`, stamped with `step`. Counters always appear (a zero total
+    /// is data); gauges once written and finite; histograms once they
+    /// hold at least one observation. Labeled bench series stay out of
+    /// run traces.
+    pub fn trace_lines(&self, step: u64, out: &mut String) {
+        for &id in MetricId::ALL {
+            let i = id as usize;
+            let spec = &SPECS[i];
+            match spec.kind {
+                Kind::Counter => {
+                    let v = self.counters[i].load(Ordering::Relaxed);
+                    let _ = writeln!(
+                        out,
+                        "{{\"step\":{step},\"key\":\"{}\",\"type\":\"counter\",\"value\":{v}}}",
+                        spec.name
+                    );
+                }
+                Kind::Gauge => {
+                    if spec.labels != "-" {
+                        continue;
+                    }
+                    let Some(v) = self.gauge_value(id) else {
+                        continue;
+                    };
+                    if !v.is_finite() {
+                        continue;
+                    }
+                    let _ = writeln!(
+                        out,
+                        "{{\"step\":{step},\"key\":\"{}\",\"type\":\"gauge\",\"value\":{v}}}",
+                        spec.name
+                    );
+                }
+                Kind::Histogram => {
+                    let (n, s) = self.histogram_totals(id);
+                    if n == 0 {
+                        continue;
+                    }
+                    let _ = writeln!(
+                        out,
+                        "{{\"step\":{step},\"key\":\"{}\",\"type\":\"histogram\",\
+                         \"count\":{n},\"sum\":{s}}}",
+                        spec.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+impl Recorder for MemorySink {
+    fn counter(&self, id: MetricId, delta: u64) {
+        self.counters[id as usize].fetch_add(delta, Ordering::Relaxed);
+    }
+
+    fn gauge(&self, id: MetricId, value: f64) {
+        self.gauges[id as usize].store(value.to_bits(), Ordering::Relaxed);
+    }
+
+    fn histogram(&self, id: MetricId, value: f64) {
+        let i = id as usize;
+        let counts = &self.hist_counts[i];
+        if counts.is_empty() {
+            return; // not registered as a histogram
+        }
+        let bi = SECONDS_BUCKETS
+            .iter()
+            .position(|b| value <= *b)
+            .unwrap_or(SECONDS_BUCKETS.len());
+        counts[bi].fetch_add(1, Ordering::Relaxed);
+        let cell = &self.hist_sums[i];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + value).to_bits();
+            match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        self.hist_totals[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn gauge_labeled(&self, id: MetricId, label: &str, value: f64) {
+        let mut map = self.labeled_guard();
+        map.insert((id as usize, label.to_string()), value);
+    }
+}
+
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+// ---------------------------------------------------------------------
+// Global facade
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: OnceLock<MemorySink> = OnceLock::new();
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static TRACE: Mutex<Option<BufWriter<File>>> = Mutex::new(None);
+
+/// `true` once [`install`] has activated the global sink. Call sites
+/// can use this to skip *computing* an expensive value (the recording
+/// functions already self-guard).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install the process-wide [`MemorySink`] and enable recording.
+///
+/// One-way and idempotent: the first call wins, later calls are
+/// no-ops. The library never calls this — binaries opt in at startup.
+pub fn install() {
+    let _ = SINK.get_or_init(MemorySink::new);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Add `delta` to the counter `id`. One relaxed load when disabled.
+#[inline]
+pub fn counter(id: MetricId, delta: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(s) = SINK.get() {
+        s.counter(id, delta);
+    }
+}
+
+/// Set the gauge `id` to `value`. One relaxed load when disabled.
+#[inline]
+pub fn gauge(id: MetricId, value: f64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(s) = SINK.get() {
+        s.gauge(id, value);
+    }
+}
+
+/// Observe `value` into the histogram `id`. One relaxed load when
+/// disabled.
+#[inline]
+pub fn histogram(id: MetricId, value: f64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(s) = SINK.get() {
+        s.histogram(id, value);
+    }
+}
+
+/// Set the `label`-tagged series of labeled gauge `id` to `value`.
+/// Takes a mutex — cold paths only (the bench suites).
+#[inline]
+pub fn gauge_labeled(id: MetricId, label: &str, value: f64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(s) = SINK.get() {
+        s.gauge_labeled(id, label, value);
+    }
+}
+
+/// Render the global sink as Prometheus exposition text (empty string
+/// if no recorder is installed).
+pub fn prometheus_text() -> String {
+    match SINK.get() {
+        Some(s) => s.prometheus_text(),
+        None => String::new(),
+    }
+}
+
+fn trace_guard() -> std::sync::MutexGuard<'static, Option<BufWriter<File>>> {
+    TRACE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Attach the JSONL snapshot trace writer to `path` (truncating).
+/// Subsequent [`trace_sample`] calls append one snapshot per call.
+pub fn attach_trace(path: &Path) -> std::io::Result<()> {
+    let f = File::create(path)?;
+    let mut g = trace_guard();
+    *g = Some(BufWriter::new(f));
+    drop(g);
+    TRACE_ON.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Flush and detach the JSONL trace writer. Safe to call when no
+/// trace is attached.
+pub fn detach_trace() {
+    TRACE_ON.store(false, Ordering::Relaxed);
+    let mut g = trace_guard();
+    if let Some(mut w) = g.take() {
+        let _ = w.flush();
+    }
+}
+
+/// Append a snapshot of every populated metric to the attached trace,
+/// stamped with `step`. One relaxed load when no trace is attached,
+/// so per-step call sites cost nothing outside traced runs. Lines
+/// from concurrent callers never interleave (one buffered write per
+/// call under the writer lock).
+pub fn trace_sample(step: u64) {
+    if !TRACE_ON.load(Ordering::Relaxed) || !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let Some(sink) = SINK.get() else {
+        return;
+    };
+    let mut buf = String::new();
+    sink.trace_lines(step, &mut buf);
+    let mut g = trace_guard();
+    if let Some(w) = g.as_mut() {
+        let _ = w.write_all(buf.as_bytes());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bench exporter
+// ---------------------------------------------------------------------
+
+/// One measured bench case, as recorded into the labeled `bench_*`
+/// series and exported to the `BENCH_*.json` trajectory files.
+#[derive(Clone, Debug)]
+pub struct BenchCase {
+    /// Case name, e.g. `analog_update/256x256`.
+    pub name: String,
+    /// Measured iterations.
+    pub iters: u64,
+    /// Mean wall-clock per iteration, nanoseconds.
+    pub mean_ns: f64,
+    /// Median wall-clock per iteration, nanoseconds.
+    pub median_ns: f64,
+    /// Fastest iteration, nanoseconds (the regression-gated series).
+    pub min_ns: f64,
+    /// Sample standard deviation (n−1 denominator), nanoseconds.
+    pub std_ns: f64,
+    /// Optional throughput: (items per second, item unit).
+    pub throughput: Option<(f64, String)>,
+}
+
+/// Record `case` into the labeled `bench_*` gauge series.
+pub fn record_bench(case: &BenchCase) {
+    gauge_labeled(MetricId::BenchIters, &case.name, case.iters as f64);
+    gauge_labeled(MetricId::BenchMeanNs, &case.name, case.mean_ns);
+    gauge_labeled(MetricId::BenchMedianNs, &case.name, case.median_ns);
+    gauge_labeled(MetricId::BenchMinNs, &case.name, case.min_ns);
+    gauge_labeled(MetricId::BenchStdNs, &case.name, case.std_ns);
+    if let Some((per_s, _)) = &case.throughput {
+        gauge_labeled(MetricId::BenchThroughputPerS, &case.name, *per_s);
+    }
+}
+
+/// Write `cases` as a `BENCH_*.json` array — the `./ci.sh bench`
+/// trajectory schema (one object per line; `min_ns` is gated against
+/// `BENCH_baseline/` by `./ci.sh bench --check`). With `append`, the
+/// cases are merged into an existing array written by an earlier
+/// suite in the same run.
+pub fn write_bench_json(cases: &[BenchCase], path: &Path, append: bool) -> std::io::Result<()> {
+    let mut body = String::new();
+    for (n, c) in cases.iter().enumerate() {
+        if n > 0 {
+            body.push_str(",\n");
+        }
+        let _ = write!(
+            body,
+            "  {{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\"median_ns\":{:.1},\
+             \"min_ns\":{:.1},\"std_ns\":{:.1}",
+            c.name, c.iters, c.mean_ns, c.median_ns, c.min_ns, c.std_ns
+        );
+        if let Some((per_s, unit)) = &c.throughput {
+            let _ = write!(
+                body,
+                ",\"throughput_per_s\":{per_s:.4e},\"throughput_unit\":\"{unit}\""
+            );
+        }
+        body.push('}');
+    }
+    let text = if append && path.exists() {
+        let prev = fs::read_to_string(path)?;
+        if cases.is_empty() {
+            prev
+        } else {
+            let head = prev
+                .trim_end()
+                .strip_suffix(']')
+                .ok_or_else(|| {
+                    std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "existing bench json is not an array",
+                    )
+                })?
+                .trim_end()
+                .to_string();
+            if head.ends_with('[') {
+                format!("{head}\n{body}\n]\n")
+            } else {
+                format!("{head},\n{body}\n]\n")
+            }
+        }
+    } else if cases.is_empty() {
+        "[]\n".to_string()
+    } else {
+        format!("[\n{body}\n]\n")
+    };
+    fs::write(path, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_aligned() {
+        assert_eq!(MetricId::ALL.len(), SPECS.len());
+        for (k, &id) in MetricId::ALL.iter().enumerate() {
+            assert_eq!(id as usize, k, "{id:?} out of registry order");
+        }
+        for a in 0..SPECS.len() {
+            for b in a + 1..SPECS.len() {
+                assert_ne!(SPECS[a].name, SPECS[b].name, "duplicate key name");
+            }
+        }
+    }
+
+    #[test]
+    fn required_trace_keys_are_registered_and_unlabeled() {
+        for key in REQUIRED_TRACE_KEYS {
+            let spec = SPECS.iter().find(|s| s.name == *key);
+            let spec = spec.unwrap_or_else(|| panic!("{key} not in SPECS"));
+            assert_eq!(spec.labels, "-", "{key} must be an unlabeled series");
+        }
+    }
+
+    #[test]
+    fn buckets_are_sorted() {
+        for w in SECONDS_BUCKETS.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn sink_aggregates_and_renders_prometheus() {
+        let s = MemorySink::new();
+        s.counter(MetricId::DevicePulsesTotal, 3);
+        s.counter(MetricId::DevicePulsesTotal, 4);
+        s.gauge(MetricId::TrainLoss, 0.5);
+        s.gauge(MetricId::TrainLoss, 0.25);
+        s.histogram(MetricId::TrainStepSeconds, 5e-4);
+        s.histogram(MetricId::TrainStepSeconds, 20.0);
+        s.gauge_labeled(MetricId::BenchMinNs, "analog_update/128x128", 125.0);
+        assert_eq!(s.counter_value(MetricId::DevicePulsesTotal), 7);
+        assert_eq!(s.gauge_value(MetricId::TrainLoss), Some(0.25));
+        assert_eq!(s.gauge_value(MetricId::SpResidual), None);
+        let text = s.prometheus_text();
+        assert!(text.contains("# TYPE device_pulses_total counter"));
+        assert!(text.contains("device_pulses_total 7"));
+        assert!(text.contains("train_loss 0.25"));
+        assert!(!text.contains("sp_residual"), "unset gauge must not render");
+        assert!(text.contains("train_step_seconds_bucket{le=\"0.0001\"} 0"));
+        assert!(text.contains("train_step_seconds_bucket{le=\"0.001\"} 1"));
+        assert!(text.contains("train_step_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("train_step_seconds_count 2"));
+        assert!(text.contains("bench_min_ns{case=\"analog_update/128x128\"} 125"));
+    }
+
+    #[test]
+    fn trace_lines_parse_as_json_and_cover_required_keys() {
+        let s = MemorySink::new();
+        s.counter(MetricId::TrainUpdatePulsesTotal, 320);
+        s.gauge(MetricId::TrainLoss, 0.5);
+        s.gauge(MetricId::SpResidual, 0.0125);
+        s.histogram(MetricId::TrainStepSeconds, 0.25);
+        s.gauge_labeled(MetricId::BenchMinNs, "never/in-trace", 1.0);
+        let mut out = String::new();
+        s.trace_lines(7, &mut out);
+        let mut keys = Vec::new();
+        for line in out.lines() {
+            let j = crate::util::json::Json::parse(line).expect("trace line parses");
+            let key = j.get("key").and_then(|k| k.as_str()).expect("key field");
+            keys.push(key.to_string());
+            assert_eq!(j.get("step").and_then(|v| v.as_f64()), Some(7.0));
+        }
+        for key in REQUIRED_TRACE_KEYS {
+            assert!(keys.iter().any(|k| k == key), "{key} missing from trace");
+        }
+        assert!(!keys.iter().any(|k| k.starts_with("bench_")));
+    }
+
+    #[test]
+    fn histogram_on_non_histogram_id_is_ignored() {
+        let s = MemorySink::new();
+        s.histogram(MetricId::TrainLoss, 1.0);
+        assert_eq!(s.histogram_totals(MetricId::TrainLoss), (0, 0.0));
+    }
+
+    #[test]
+    fn bench_json_roundtrip_and_append() {
+        let path = std::env::temp_dir()
+            .join(format!("rider_bench_{}.json", std::process::id()));
+        let a = BenchCase {
+            name: "a/1".into(),
+            iters: 10,
+            mean_ns: 1.25,
+            median_ns: 1.0,
+            min_ns: 0.7,
+            std_ns: 0.5,
+            throughput: Some((1.5e6, "cells".into())),
+        };
+        let b = BenchCase {
+            name: "b/2".into(),
+            iters: 3,
+            mean_ns: 9.0,
+            median_ns: 9.0,
+            min_ns: 8.0,
+            std_ns: 0.1,
+            throughput: None,
+        };
+        write_bench_json(&[a], &path, false).expect("write");
+        write_bench_json(&[b], &path, true).expect("append");
+        let text = fs::read_to_string(&path).expect("read back");
+        let _ = fs::remove_file(&path);
+        assert!(text.contains("\"name\":\"a/1\""));
+        assert!(text.contains("\"min_ns\":0.7"));
+        assert!(text.contains("\"throughput_per_s\":1.5000e6"));
+        assert!(text.contains("\"name\":\"b/2\""));
+        assert!(!text.contains("\"throughput_unit\":\"\""));
+        let opens = text.matches('{').count();
+        let closes = text.matches('}').count();
+        assert_eq!(opens, 2);
+        assert_eq!(closes, 2);
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.starts_with('['));
+    }
+
+    #[test]
+    fn noop_recorder_is_callable() {
+        let r = NoopRecorder;
+        r.counter(MetricId::DevicePulsesTotal, 1);
+        r.gauge(MetricId::TrainLoss, 1.0);
+        r.histogram(MetricId::TrainStepSeconds, 1.0);
+        r.gauge_labeled(MetricId::BenchIters, "x", 1.0);
+    }
+}

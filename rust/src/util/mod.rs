@@ -1,9 +1,13 @@
 //! Foundational substrates built in-repo (the offline crate set has no
 //! rand / serde / clap / criterion / proptest): RNG, JSON, statistics,
-//! table rendering, a bench harness and a property-testing harness.
+//! table rendering, a bench harness, a property-testing harness and
+//! the live metrics facade.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod json;
+pub mod metrics;
 pub mod prop;
 pub mod rng;
 pub mod stats;

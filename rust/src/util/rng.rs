@@ -14,10 +14,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Start a sequence from `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64-bit value in the sequence.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -52,10 +54,12 @@ impl Rng {
         rng
     }
 
+    /// Construct stream 0 of `seed` (the common single-stream case).
     pub fn from_seed(seed: u64) -> Self {
         Self::new(seed, 0)
     }
 
+    /// Next 32-bit value (one PCG32 step).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -67,6 +71,7 @@ impl Rng {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64-bit value (two PCG32 steps, high word first).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

@@ -102,6 +102,7 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self {
             n: 0,
@@ -112,6 +113,7 @@ impl Summary {
         }
     }
 
+    /// Fold one sample into the running moments.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -121,14 +123,17 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Number of samples folded in.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0.0 when empty).
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Sample variance (n−1 denominator; 0.0 for n < 2).
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -137,14 +142,17 @@ impl Summary {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
 
+    /// Smallest sample seen (+inf when empty).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen (−inf when empty).
     pub fn max(&self) -> f64 {
         self.max
     }

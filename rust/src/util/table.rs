@@ -20,6 +20,7 @@ impl Table {
         }
     }
 
+    /// Append a data row (must match the header column count).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells);
@@ -30,6 +31,7 @@ impl Table {
         format!("{:.2}±{:.1}", mean, std)
     }
 
+    /// Render the column-aligned ASCII table with separators.
     pub fn render(&self) -> String {
         let ncols = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();

@@ -1,12 +1,17 @@
 //! Documentation-drift invariants: the README registry table, the CLI
 //! help text, and the `Method` enum must all list exactly the names in
-//! `optimizer::METHODS`, in the same order. Adding (or renaming) a
-//! method without updating the docs fails this test, not a reader.
+//! `optimizer::METHODS`, in the same order — and the METRICS.md key
+//! reference must mirror the canonical metric registry
+//! (`util::metrics::SPECS`) row for row. Adding (or renaming) a method
+//! or a metric without updating the docs fails this test, not a reader.
 
 use analog_rider::analog::optimizer::{Method, METHODS};
+use analog_rider::util::metrics::{Kind, REQUIRED_TRACE_KEYS, SPECS};
 
 const README: &str = include_str!("../../README.md");
 const MAIN_RS: &str = include_str!("../src/main.rs");
+const METRICS_MD: &str = include_str!("../../METRICS.md");
+const CI_SH: &str = include_str!("../../ci.sh");
 
 /// Names from the README registry table: rows of the form
 /// ``| `name` | description |`` (the only table in the README whose
@@ -49,4 +54,57 @@ fn method_enum_matches_methods() {
         got, METHODS,
         "Method::ALL and METHODS must stay in lock-step (same names, same order)"
     );
+}
+
+/// The METRICS.md key table must mirror `util::metrics::SPECS` exactly:
+/// same rows, same order, every column. The registry is the source of
+/// truth; regenerate the table from it when this fails.
+#[test]
+fn metrics_md_key_table_matches_registry() {
+    let rows: Vec<&str> = METRICS_MD
+        .lines()
+        .filter(|l| l.starts_with("| `"))
+        .collect();
+    assert_eq!(
+        rows.len(),
+        SPECS.len(),
+        "METRICS.md must document every registered key (one `| `name`` row each)"
+    );
+    for (row, s) in rows.iter().zip(SPECS) {
+        let kind = match s.kind {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        };
+        let want = format!(
+            "| `{}` | {} | {} | {} | `{}` | {} |",
+            s.name, kind, s.unit, s.labels, s.module, s.help
+        );
+        assert_eq!(
+            *row, want,
+            "METRICS.md row for `{}` must mirror util::metrics::SPECS",
+            s.name
+        );
+    }
+}
+
+/// Every key the `./ci.sh metrics` smoke stage requires must be a
+/// registered, documented series, and the stage itself must assert it
+/// by name — the three artifacts cannot drift apart.
+#[test]
+fn required_trace_keys_are_documented_and_ci_checked() {
+    for key in REQUIRED_TRACE_KEYS {
+        assert!(
+            SPECS.iter().any(|s| s.name == *key),
+            "required trace key {key} is not in the registry"
+        );
+        assert!(
+            METRICS_MD.contains(&format!("`{key}`")),
+            "METRICS.md must document required trace key {key}"
+        );
+        assert!(
+            CI_SH.contains(&format!("\"{key}\"")),
+            "the ci.sh metrics stage must assert required trace key {key}"
+        );
+    }
 }

@@ -1,0 +1,140 @@
+//! Integration tests for the live metrics facade (`util::metrics`):
+//! deterministic aggregation under concurrent recording (scoped-thread
+//! fan-outs are the crate's concurrency model), exporter golden output
+//! for both the Prometheus exposition dump and the JSONL trace lines,
+//! and the global install-once facade.
+
+use std::thread;
+
+use analog_rider::util::metrics::{
+    self, Kind, MemorySink, MetricId, Recorder, SECONDS_BUCKETS, SPECS,
+};
+
+/// Record a fixed global workload split across `workers` threads:
+/// worker `w` handles the global indices `[w*per, (w+1)*per)`, so the
+/// multiset of recorded samples is identical for every worker count.
+/// Observations are integer-valued, so the f64 histogram sum is exact
+/// and the totals must be bit-identical regardless of schedule.
+fn record_load(sink: &MemorySink, workers: usize) {
+    const TOTAL: usize = 1200;
+    let per = TOTAL / workers;
+    assert_eq!(per * workers, TOTAL, "worker count must divide the load");
+    thread::scope(|s| {
+        for w in 0..workers {
+            s.spawn(move || {
+                for g in w * per..(w + 1) * per {
+                    sink.counter(MetricId::DevicePulsesTotal, 3);
+                    sink.gauge(MetricId::TrainLoss, 0.5);
+                    sink.histogram(MetricId::TrainStepSeconds, (g % 7) as f64);
+                    sink.gauge_labeled(MetricId::BenchIters, "shared/case", 11.0);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn concurrent_recording_is_deterministic_across_worker_counts() {
+    let reference = MemorySink::new();
+    record_load(&reference, 1);
+    let want_counter = reference.counter_value(MetricId::DevicePulsesTotal);
+    let want_hist = reference.histogram_totals(MetricId::TrainStepSeconds);
+    assert_eq!(want_counter, 3 * 1200);
+    assert_eq!(want_hist.0, 1200);
+    for workers in [2usize, 4, 8] {
+        let s = MemorySink::new();
+        record_load(&s, workers);
+        assert_eq!(
+            s.counter_value(MetricId::DevicePulsesTotal),
+            want_counter,
+            "{workers} workers"
+        );
+        assert_eq!(s.gauge_value(MetricId::TrainLoss), Some(0.5));
+        let (n, sum) = s.histogram_totals(MetricId::TrainStepSeconds);
+        assert_eq!((n, sum), want_hist, "{workers} workers");
+        // identical exposition text, too: the whole exporter surface
+        // is schedule-independent
+        assert_eq!(s.prometheus_text(), reference.prometheus_text());
+    }
+}
+
+#[test]
+fn prometheus_histogram_golden() {
+    let s = MemorySink::new();
+    s.histogram(MetricId::TrainStepSeconds, 5e-4);
+    let text = s.prometheus_text();
+    let golden = "# HELP train_step_seconds Wall-clock seconds per trainer step\n\
+                  # TYPE train_step_seconds histogram\n\
+                  train_step_seconds_bucket{le=\"0.0001\"} 0\n\
+                  train_step_seconds_bucket{le=\"0.001\"} 1\n\
+                  train_step_seconds_bucket{le=\"0.01\"} 1\n\
+                  train_step_seconds_bucket{le=\"0.1\"} 1\n\
+                  train_step_seconds_bucket{le=\"1\"} 1\n\
+                  train_step_seconds_bucket{le=\"10\"} 1\n\
+                  train_step_seconds_bucket{le=\"+Inf\"} 1\n\
+                  train_step_seconds_sum 0.0005\n\
+                  train_step_seconds_count 1\n";
+    assert!(
+        text.contains(golden),
+        "histogram family must render exactly:\n{text}"
+    );
+    // bucket cardinality is fixed by the registry
+    assert_eq!(
+        text.matches("train_step_seconds_bucket").count(),
+        SECONDS_BUCKETS.len() + 1
+    );
+}
+
+#[test]
+fn prometheus_label_escaping() {
+    let s = MemorySink::new();
+    s.gauge_labeled(MetricId::BenchMinNs, "odd\"case\\name", 2.0);
+    let text = s.prometheus_text();
+    assert!(
+        text.contains("bench_min_ns{case=\"odd\\\"case\\\\name\"} 2"),
+        "{text}"
+    );
+}
+
+#[test]
+fn jsonl_trace_golden() {
+    let s = MemorySink::new();
+    s.counter(MetricId::TrainUpdatePulsesTotal, 160);
+    s.gauge(MetricId::TrainLoss, 0.5);
+    let mut out = String::new();
+    s.trace_lines(3, &mut out);
+    assert!(out.contains(
+        "{\"step\":3,\"key\":\"train_update_pulses_total\",\"type\":\"counter\",\"value\":160}\n"
+    ));
+    assert!(out.contains(
+        "{\"step\":3,\"key\":\"train_loss\",\"type\":\"gauge\",\"value\":0.5}\n"
+    ));
+    // counters always snapshot (zero totals are data); gauges and
+    // histograms only once populated — so a fresh sink contributes
+    // exactly the counter rows
+    let n_counters = SPECS.iter().filter(|k| k.kind == Kind::Counter).count();
+    let mut fresh = String::new();
+    MemorySink::new().trace_lines(0, &mut fresh);
+    assert_eq!(fresh.lines().count(), n_counters);
+}
+
+#[test]
+fn global_facade_records_after_install() {
+    // install() is one-way and idempotent; the deltas below are ours
+    // alone (this binary holds no other global-facade test)
+    metrics::install();
+    assert!(metrics::enabled());
+    let before = metrics::prometheus_text();
+    metrics::counter(MetricId::SweepJobsTotal, 2);
+    metrics::counter(MetricId::SweepJobsTotal, 3);
+    metrics::install(); // second call must not reset anything
+    let after = metrics::prometheus_text();
+    let get = |text: &str| -> u64 {
+        text.lines()
+            .find_map(|l| l.strip_prefix("sweep_jobs_total "))
+            .expect("counter line present")
+            .parse()
+            .expect("integer counter")
+    };
+    assert_eq!(get(&after), get(&before) + 5);
+}

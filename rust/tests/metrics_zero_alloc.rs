@@ -1,0 +1,92 @@
+//! Allocation accounting for the metrics facade: `analog_update` is
+//! instrumented with a `device_pulses_total` counter, and the facade's
+//! cost contract says the disabled path is a single relaxed atomic
+//! load and the enabled path a pre-allocated atomic add — neither may
+//! touch the heap. Verified with a counting global allocator, first
+//! with no recorder installed and then after `metrics::install()`.
+//!
+//! This binary intentionally holds a single #[test] so no concurrent
+//! test can allocate while the hot loop is being counted. The array
+//! stays below the row-chunked parallel threshold, where the update
+//! path is allocation-free.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use analog_rider::device::{presets, DeviceArray};
+use analog_rider::util::metrics;
+use analog_rider::util::rng::Rng;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// 50 counted iterations of the instrumented update hot path; returns
+/// the allocation delta.
+fn count_update_allocs(arr: &mut DeviceArray, dw: &[f32], rng: &mut Rng) -> u64 {
+    for _ in 0..3 {
+        arr.analog_update(dw, rng);
+        arr.analog_update_det(dw);
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let mut acc = 0.0f64;
+    for _ in 0..50 {
+        arr.analog_update(dw, rng);
+        arr.analog_update_det(dw);
+        acc += arr.w[0] as f64;
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert!(acc.is_finite());
+    after - before
+}
+
+#[test]
+fn instrumented_analog_update_never_allocates() {
+    let preset = presets::preset("om").unwrap();
+    let mut rng = Rng::from_seed(43);
+    let mut arr = DeviceArray::sample(64, 64, &preset, 0.3, 0.1, 0.1, &mut rng);
+    let dw: Vec<f32> = (0..arr.len())
+        .map(|i| ((i % 7) as f32 - 3.0) * 0.02)
+        .collect();
+
+    // no recorder installed: the instrumentation is one relaxed load
+    assert!(!metrics::enabled());
+    assert_eq!(
+        count_update_allocs(&mut arr, &dw, &mut rng),
+        0,
+        "disabled metrics path touched the heap"
+    );
+
+    // recorder installed: counters are pre-allocated atomic adds
+    metrics::install();
+    assert_eq!(
+        count_update_allocs(&mut arr, &dw, &mut rng),
+        0,
+        "enabled metrics path touched the heap"
+    );
+    assert!(metrics::prometheus_text().contains("device_pulses_total"));
+}
