@@ -10,13 +10,15 @@
 //! `rider psweep` takes — and unknown names error with the registry
 //! listing instead of panicking.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::coordinator::metrics::RunDir;
 use crate::coordinator::sweep::Cell;
 use crate::data::{synth_cifar, Dataset};
 use crate::runtime::{Executor, Registry};
-use crate::train::{TrainConfig, Trainer};
+use crate::train::{PipelineConfig, PipelineTrainer, TrainConfig, Trainer};
 use crate::util::table::Table;
 
 /// Shared context for the HLO-driven experiments: executor, artifact
@@ -239,6 +241,113 @@ pub fn ablations(ctx: &ExpCtx) -> Result<(Table, Table)> {
     }
     rd.write_table("table10_gamma", &t10)?;
     Ok((t9, t10))
+}
+
+/// Pipeline experiment: synchronous vs pipelined training per method at
+/// equal pulse budgets (same step count, so identical update-pulse
+/// bills by construction — the "update pulses" column shows it). For
+/// each method the table reports the synchronous oracle, the `D=0`
+/// pipelined run (with a live bit-exactness check against the oracle:
+/// every per-step loss and the final eval accuracy compared by bits),
+/// and — when `staleness > 0` — the stale run with its accuracy delta.
+/// Wall-clock per schedule makes the pipelining overhead/benefit a
+/// first-class reported number.
+pub fn table_pipeline<S: AsRef<str>>(
+    ctx: &ExpCtx,
+    model: &str,
+    methods: &[S],
+    stages: usize,
+    workers: usize,
+    staleness: u64,
+) -> Result<Table> {
+    let rd = RunDir::create("table_pipeline")?;
+    rd.attach_metrics_trace()?;
+    let built = (|| -> Result<Table> {
+        let mut t = Table::new(
+            &format!(
+                "table_pipeline: sync vs pipelined, {stages} stages x {workers} workers \
+                 (model {model}, {} steps, equal pulse budgets)",
+                ctx.steps
+            ),
+            &[
+                "method",
+                "schedule",
+                "final loss",
+                "test acc %",
+                "update pulses",
+                "wall s",
+                "vs sync",
+            ],
+        );
+        let seed = ctx.seeds.first().copied().unwrap_or(1);
+        let train = data_for(model, 320, seed ^ 0xDA7A);
+        let test = data_for(model, 200, seed ^ 0x7E57);
+        for algo in methods {
+            let algo = algo.as_ref();
+            let mk_cfg = || -> Result<TrainConfig> {
+                let mut cfg = TrainConfig::by_name(model, algo)?;
+                cfg.ref_mean = 0.3;
+                cfg.ref_std = 0.2;
+                cfg.seed = seed;
+                cfg.steps = ctx.steps;
+                Ok(cfg)
+            };
+            let t0 = Instant::now();
+            let mut st = Trainer::new(ctx.exec, ctx.reg, mk_cfg()?)?;
+            let sres = st.train(&train, Some(&test))?;
+            t.row(vec![
+                algo.to_string(),
+                "sync".into(),
+                format!("{:.4}", sres.final_loss(30)),
+                format!("{:.2}", sres.final_eval_acc),
+                sres.cost.update_pulses.to_string(),
+                format!("{:.2}", t0.elapsed().as_secs_f64()),
+                "-".into(),
+            ]);
+            let mut depths = vec![0u64];
+            if staleness > 0 {
+                depths.push(staleness);
+            }
+            for d in depths {
+                let pcfg = PipelineConfig {
+                    stages,
+                    workers,
+                    staleness: d,
+                    plan_threads: 0,
+                };
+                let t0 = Instant::now();
+                let mut pt = PipelineTrainer::new(ctx.exec, ctx.reg, mk_cfg()?, pcfg)?;
+                let pres = pt.train(&train, Some(&test))?;
+                let wall = t0.elapsed().as_secs_f64();
+                let vs = if d == 0 {
+                    let exact = pres.losses.len() == sres.losses.len()
+                        && pres
+                            .losses
+                            .iter()
+                            .zip(&sres.losses)
+                            .all(|(a, b)| a.to_bits() == b.to_bits())
+                        && pres.final_eval_acc.to_bits() == sres.final_eval_acc.to_bits();
+                    if exact { "bit-exact".to_string() } else { "DIVERGED".to_string() }
+                } else {
+                    format!("{:+.2} acc", pres.final_eval_acc - sres.final_eval_acc)
+                };
+                t.row(vec![
+                    algo.to_string(),
+                    format!("pipe D={d}"),
+                    format!("{:.4}", pres.final_loss(30)),
+                    format!("{:.2}", pres.final_eval_acc),
+                    pres.cost.update_pulses.to_string(),
+                    format!("{wall:.2}"),
+                    vs,
+                ]);
+            }
+        }
+        Ok(t)
+    })();
+    crate::util::metrics::detach_trace();
+    let t = built?;
+    rd.write_table("table_pipeline", &t)?;
+    Ok(t)
 }
 
 /// Table 8 protocol: digital pre-train -> analog deploy (acc drop) ->

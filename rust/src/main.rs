@@ -4,7 +4,7 @@
 use analog_rider::cli::Args;
 use analog_rider::coordinator::experiments::{faults, fig1, theory, training};
 use analog_rider::runtime::{Executor, Registry};
-use analog_rider::train::{DevParams, TrainConfig, Trainer};
+use analog_rider::train::{DevParams, PipelineConfig, PipelineTrainer, TrainConfig, Trainer};
 
 fn main() {
     // the library never installs the metrics recorder; the binary does,
@@ -51,6 +51,9 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                  \u{20}  rider fig5   [--steps N] [--seeds K]\n\
                  \u{20}  rider table1 | table2 | table8  [--steps N] [--seeds K]\n\
                  \u{20}             [--method[s] a,b|all]  (table1/table2 grids)\n\
+                 \u{20}  rider table_pipeline [--steps N] [--model fcn] [--method[s] a,b|all]\n\
+                 \u{20}             [--stages S] [--workers W] [--staleness D]\n\
+                 \u{20}             (sync vs pipelined convergence + wall-clock, equal pulses)\n\
                  \u{20}  rider ablations [--steps N]\n\
                  \u{20}  rider theory [--seed S] [--method[s] erider,residual|all]\n\
                  \n\
@@ -66,6 +69,8 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                  \u{20}   sgd|ttv1|ttv2|agad|residual|rider|erider|mtres|digital):\n\
                  \u{20}  rider train --model fcn --algo erider [--steps N] [--ref-mean M]\n\
                  \u{20}             [--ref-std S] [--preset hfo2|om|precise|ideal]\n\
+                 \u{20}             [--pipeline-stages S] [--pipeline-workers W] [--staleness D]\n\
+                 \u{20}             (S > 0 trains pipelined; D=0 is bit-identical to sync)\n\
                  \u{20}  rider psweep [--method[s] a,b|all] [--means ..] [--stds ..]\n\
                  \u{20}             [--steps N] [--seeds K] [--dim D] [--preset om]\n\
                  \u{20}             [--lr-fast A] [--lr-transfer B] [--eta E] [--flip-p P]\n\
@@ -289,8 +294,20 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                     let test = analog_rider::data::Dataset::digits(200, cfg.seed ^ 0x7E57);
                     let rd = analog_rider::coordinator::metrics::RunDir::create("train")?;
                     rd.attach_metrics_trace()?;
-                    let mut t = Trainer::new(&exec, &reg, cfg)?;
-                    let res = t.train(&train, Some(&test))?;
+                    let stages = args.get_usize("pipeline-stages", 0);
+                    let res = if stages > 0 {
+                        let pcfg = PipelineConfig {
+                            stages,
+                            workers: args.get_usize("pipeline-workers", 2),
+                            staleness: args.get_u64("staleness", 0),
+                            plan_threads: 0,
+                        };
+                        let mut t = PipelineTrainer::new(&exec, &reg, cfg, pcfg)?;
+                        t.train(&train, Some(&test))?
+                    } else {
+                        let mut t = Trainer::new(&exec, &reg, cfg)?;
+                        t.train(&train, Some(&test))?
+                    };
                     analog_rider::util::metrics::detach_trace();
                     println!("metrics trace: {}", rd.file("metrics.jsonl").display());
                     println!(
@@ -345,6 +362,20 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 }
                 "table8" => {
                     print!("{}", training::table8(&ctx)?.render());
+                    Ok(())
+                }
+                "table_pipeline" => {
+                    let methods = method_list(args, &["ttv2", "erider"])?;
+                    let model = args.get_str("model", "fcn");
+                    let t = training::table_pipeline(
+                        &ctx,
+                        &model,
+                        &methods,
+                        args.get_usize("stages", 2),
+                        args.get_usize("workers", 2),
+                        args.get_u64("staleness", 1),
+                    )?;
+                    print!("{}", t.render());
                     Ok(())
                 }
                 "faultsweep" => {

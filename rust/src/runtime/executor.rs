@@ -151,3 +151,50 @@ impl Executor {
         self.cache.borrow().len()
     }
 }
+
+/// A `Send`-able recipe for building per-stage/per-worker executors.
+///
+/// `Executor` itself is deliberately thread-local (`Rc`/`RefCell`
+/// compile cache), so pipeline workers can't share one handle. This
+/// spec carries everything needed to rebuild an equivalent executor on
+/// another thread: the artifact names to precompile eagerly (so
+/// compile cost lands at worker startup, not mid-pipeline) and the
+/// planned-engine thread count to pin. Plan execution is bit-identical
+/// across executor instances and thread counts by the planned-engine
+/// contract, so handing each worker its own executor does not affect
+/// results.
+#[derive(Clone, Debug)]
+pub struct StageExecSpec {
+    /// Artifact names compiled eagerly by [`StageExecSpec::build`].
+    pub precompile: Vec<String>,
+    /// Planned-engine worker threads per executable (`0` = backend
+    /// default).
+    pub plan_threads: usize,
+}
+
+impl StageExecSpec {
+    /// Recipe that precompiles the given artifacts with default plan
+    /// threading.
+    pub fn new(precompile: Vec<String>) -> StageExecSpec {
+        StageExecSpec {
+            precompile,
+            plan_threads: 0,
+        }
+    }
+
+    /// Build a fresh thread-local executor and precompile the recipe's
+    /// artifacts from `reg`.
+    pub fn build(&self, reg: &Registry) -> Result<Executor> {
+        let exec = Executor::cpu()?;
+        for name in &self.precompile {
+            let spec = reg.artifact(name)?;
+            let exe = exec
+                .compile(spec)
+                .with_context(|| format!("precompiling {name}"))?;
+            if self.plan_threads > 0 {
+                exe.set_threads(self.plan_threads);
+            }
+        }
+        Ok(exec)
+    }
+}

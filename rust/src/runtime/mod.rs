@@ -21,6 +21,6 @@ pub mod verify;
 pub mod xla;
 
 pub use artifact::{ArtifactSpec, Dtype, IoSpec, ModelSpec, Registry, StateLeaf};
-pub use executor::Executor;
+pub use executor::{Executor, StageExecSpec};
 pub use literal::HostTensor;
 pub use verify::{verify_hlo_text, verify_plan, VerifyError, VerifyStats};

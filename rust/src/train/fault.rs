@@ -153,6 +153,12 @@ impl NnFaultInjector {
 /// away from whatever was calibrated. Returns 0 when the manifest has
 /// no `(p, q)` tile pairs.
 pub fn sp_residual(spec: &ModelSpec, state: &ModelState, dev: &DevParams) -> f64 {
+    sp_residual_leaves(spec, &state.leaves, dev)
+}
+
+/// `sp_residual` over bare leaf vectors in manifest order, for callers
+/// (the pipelined trainer) that hold state outside a `ModelState`.
+pub fn sp_residual_leaves(spec: &ModelSpec, leaves: &[Vec<f32>], dev: &DevParams) -> f64 {
     let mut sum = 0.0f64;
     let mut n = 0usize;
     for leaf in &spec.state {
@@ -166,14 +172,9 @@ pub fn sp_residual(spec: &ModelSpec, state: &ModelState, dev: &DevParams) -> f64
         ) else {
             continue;
         };
-        for j in 0..leaf.numel().min(state.leaves[q].len()) {
-            let sp = sp_from_slopes(
-                state.leaves[ap][j],
-                state.leaves[am][j],
-                dev.tau_max,
-                dev.tau_min,
-            );
-            sum += (sp - state.leaves[q][j]).abs() as f64;
+        for j in 0..leaf.numel().min(leaves[q].len()) {
+            let sp = sp_from_slopes(leaves[ap][j], leaves[am][j], dev.tau_max, dev.tau_min);
+            sum += (sp - leaves[q][j]).abs() as f64;
             n += 1;
         }
     }

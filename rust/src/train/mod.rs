@@ -3,10 +3,12 @@
 
 pub mod fault;
 pub mod hypers;
+pub mod pipeline;
 pub mod state;
 pub mod trainer;
 
 pub use fault::{Checkpoint, LossSpikeMonitor, NnFaultInjector, RecoveryPolicy};
 pub use hypers::{DevParams, Hypers};
+pub use pipeline::{PipelineConfig, PipelineTrainer};
 pub use state::ModelState;
 pub use trainer::{TrainConfig, TrainResult, Trainer, BL};

@@ -1,0 +1,852 @@
+//! Pipeline-parallel training with a bit-exact synchronous oracle.
+//!
+//! The pipelined trainer runs the same AOT step artifacts as
+//! [`Trainer`](crate::train::Trainer) but lets several microbatches be
+//! in flight at once, following the delayed-gradient pipeline analysis
+//! of arXiv:2410.15155 (PAPERS.md): a worker computing microbatch `m`
+//! reads the model state of version `base(m) = max(m - D, 0)`, where
+//! `D` is the configured staleness. The step artifacts are monolithic
+//! (forward + backward + device update fused per model), so staleness
+//! is realized as *delta application*: the state delta produced by a
+//! step against the stale snapshot is re-based onto the newest state by
+//! a chain of channel-connected stage appliers, each owning the leaves
+//! of a contiguous tile range.
+//!
+//! ## Topology
+//!
+//! ```text
+//!  claim m, wait published >= m-D        ordered Apply(m) messages
+//!  ┌─────────┐  snapshot    ┌────────────┐      ┌────────────┐
+//!  │ worker  │─────────────▶│  stage 0   │─────▶│  stage S-1 │─▶ publish m+1
+//!  │ pool ×W │  done(m)     │ tiles 0..a │ mpsc │ tiles b..T │
+//!  └─────────┘──▶ commit    └────────────┘      └────────────┘
+//! ```
+//!
+//! * **Workers** (×W) each own a thread-local [`Executor`] built from a
+//!   [`StageExecSpec`] (the shared executor is deliberately `!Send`).
+//!   They claim microbatch indices from a shared counter, block until
+//!   the input version is published, run the step artifact, and post
+//!   `(loss, output leaves)` to the hub.
+//! * **Stage appliers** (×S) receive `Apply(m)` messages strictly in
+//!   microbatch order over an mpsc chain and fold step `m`'s delta into
+//!   their own leaf group: `new = cur + (out - base)` elementwise —
+//!   except when `base == m` (always true at `D = 0`), where the output
+//!   *replaces* the group, because `a + (b - a) != b` in `f32` and the
+//!   bit-exactness contract below would not survive a zero-delta add.
+//! * **The coordinator** (caller thread) commits results in microbatch
+//!   order: losses, EMA, logging, metrics, evals and the target-loss
+//!   stop all happen exactly as in the synchronous loop.
+//!
+//! ## Determinism and the `D = 0` contract
+//!
+//! Every quantity that feeds an artifact execution is a pure function
+//! of the microbatch index `m`: the batch (pre-drawn from the same
+//! `Batcher` stream as the synchronous trainer), the RNG key
+//! (`key(m) = kc0 + m + 1 + kpe * evals_before(m)`, the same sub-stream
+//! derivation discipline as `TiledArray` and the row-chunked
+//! `analog_update` — worker count never enters), and the input version
+//! `base(m)`. Apply order is fixed by the channel chain, and commit
+//! order by the coordinator. Hence results are bit-identical across
+//! worker *and* stage counts for any `D`; and at `D = 0` the claim/wait
+//! protocol serializes workers so the run is bit-identical to
+//! [`Trainer::train`](crate::train::Trainer::train) — enforced by
+//! `rust/tests/pipeline_equivalence.rs`.
+//!
+//! Evaluation points (`eval_every`) and the final eval run on the
+//! coordinator thread against the fully-published state with the
+//! synchronous key counter re-derived, so eval results and the
+//! post-run `Trainer` state (checkpointable via
+//! [`PipelineTrainer::checkpoint`]) match the oracle bit for bit.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::analog::optimizer::Method;
+use crate::analog::pulse_counter::PulseCost;
+use crate::data::{Batcher, Dataset};
+use crate::runtime::{ArtifactSpec, Executor, HostTensor, ModelSpec, Registry, StageExecSpec};
+use crate::train::fault::{self, Checkpoint};
+use crate::train::state::ModelState;
+use crate::train::trainer::{TrainConfig, TrainResult, Trainer, BL};
+use crate::util::metrics::{self, MetricId};
+
+/// Pipeline topology knobs; see the module docs for semantics.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Stage appliers: the model's tiles are split into this many
+    /// contiguous groups (1 ..= number of distinct tiles).
+    pub stages: usize,
+    /// Compute workers claiming microbatches (>= 1). More workers only
+    /// help when `staleness > 0`; at `D = 0` they serialize.
+    pub workers: usize,
+    /// Gradient staleness bound `D`: microbatch `m` may read state as
+    /// old as version `m - D`. `0` reproduces the synchronous schedule
+    /// bit for bit.
+    pub staleness: u64,
+    /// Planned-engine threads pinned per worker executable (`0` =
+    /// backend default; results are thread-count independent either
+    /// way).
+    pub plan_threads: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> PipelineConfig {
+        PipelineConfig {
+            stages: 2,
+            workers: 2,
+            staleness: 0,
+            plan_threads: 0,
+        }
+    }
+}
+
+/// One stage's slice of the model state at one version.
+type GroupLeaves = Arc<Vec<Vec<f32>>>;
+
+/// A completed step waiting for its in-order commit.
+struct WorkerOut {
+    loss: f64,
+    /// Version the step's inputs were read from.
+    base: u64,
+    /// Full output leaves of the step artifact, in manifest order.
+    out: Arc<Vec<Vec<f32>>>,
+}
+
+/// In-order apply message travelling down the stage chain.
+enum ApplyMsg {
+    Step {
+        task: u64,
+        base: u64,
+        out: Arc<Vec<Vec<f32>>>,
+    },
+    Stop,
+}
+
+struct HubState {
+    /// `(version, stage)` -> that stage's leaf group at that version.
+    groups: BTreeMap<(u64, usize), GroupLeaves>,
+    /// Highest version present for *all* stages (set by the last stage).
+    published: u64,
+    /// Next unclaimed microbatch index.
+    next_task: u64,
+    /// Completed steps not yet committed by the coordinator.
+    done: BTreeMap<u64, WorkerOut>,
+    /// Claim freeze: set on target-loss stop and at shutdown.
+    stop: bool,
+    /// First error from any thread; everyone drains once set.
+    error: Option<String>,
+    /// Per-worker `(busy, alive)` seconds for the occupancy gauge.
+    occ: Vec<(f64, f64)>,
+}
+
+/// Shared mutable pipeline state: one mutex + condvar, notified on
+/// publish, completion, error and stop.
+struct Hub {
+    stages: usize,
+    m: Mutex<HubState>,
+    cv: Condvar,
+}
+
+impl Hub {
+    fn new(stages: usize, init_groups: Vec<Vec<Vec<f32>>>) -> Hub {
+        let mut groups = BTreeMap::new();
+        for (s, g) in init_groups.into_iter().enumerate() {
+            groups.insert((0u64, s), Arc::new(g));
+        }
+        Hub {
+            stages,
+            m: Mutex::new(HubState {
+                groups,
+                published: 0,
+                next_task: 0,
+                done: BTreeMap::new(),
+                stop: false,
+                error: None,
+                occ: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, HubState> {
+        self.m.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn wait<'g>(&self, g: MutexGuard<'g, HubState>) -> MutexGuard<'g, HubState> {
+        self.cv.wait(g).unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Claim the next microbatch, or `None` when stopped/exhausted.
+    fn claim(&self, steps: u64) -> Option<u64> {
+        let mut g = self.lock();
+        if g.stop || g.error.is_some() || g.next_task >= steps {
+            return None;
+        }
+        let m = g.next_task;
+        g.next_task += 1;
+        Some(m)
+    }
+
+    /// Block until version `v` is published; returns per-stage group
+    /// snapshots and the stall time, or `None` on stop/error.
+    fn wait_version(&self, v: u64) -> Option<(Vec<GroupLeaves>, f64)> {
+        let t0 = Instant::now();
+        let mut g = self.lock();
+        while g.published < v && !g.stop && g.error.is_none() {
+            g = self.wait(g);
+        }
+        if g.stop || g.error.is_some() {
+            return None;
+        }
+        let mut snap = Vec::with_capacity(self.stages);
+        for s in 0..self.stages {
+            match g.groups.get(&(v, s)) {
+                Some(a) => snap.push(a.clone()),
+                None => {
+                    g.error
+                        .get_or_insert_with(|| format!("pipeline: version {v} stage {s} evicted"));
+                    drop(g);
+                    self.cv.notify_all();
+                    return None;
+                }
+            }
+        }
+        Some((snap, t0.elapsed().as_secs_f64()))
+    }
+
+    fn complete(&self, m: u64, wo: WorkerOut) {
+        let mut g = self.lock();
+        g.done.insert(m, wo);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Block until step `k` has a completed result to commit.
+    fn wait_done(&self, k: u64) -> Result<WorkerOut> {
+        let mut g = self.lock();
+        loop {
+            if let Some(wo) = g.done.remove(&k) {
+                return Ok(wo);
+            }
+            if let Some(e) = &g.error {
+                return Err(anyhow!("{e}"));
+            }
+            g = self.wait(g);
+        }
+    }
+
+    /// Block until version `v` is published, then reassemble the full
+    /// leaf vector in manifest order (the coordinator's eval/drain
+    /// path; `v` never trails the retention window because the
+    /// coordinator only asks for versions it just had applied).
+    fn wait_assembled(
+        &self,
+        v: u64,
+        members: &[Vec<usize>],
+        spec: &ModelSpec,
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut g = self.lock();
+        while g.published < v && g.error.is_none() {
+            g = self.wait(g);
+        }
+        if let Some(e) = &g.error {
+            return Err(anyhow!("{e}"));
+        }
+        let mut leaves = vec![Vec::new(); spec.state.len()];
+        for (s, m) in members.iter().enumerate() {
+            let group = g
+                .groups
+                .get(&(v, s))
+                .ok_or_else(|| anyhow!("pipeline: version {v} stage {s} evicted"))?;
+            for (p, &li) in m.iter().enumerate() {
+                leaves[li] = group[p].clone();
+            }
+        }
+        Ok(leaves)
+    }
+
+    /// Freeze the claim frontier and wake everyone.
+    fn halt(&self) {
+        let mut g = self.lock();
+        g.stop = true;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Record the first error and wake everyone.
+    fn fail(&self, msg: String) {
+        let mut g = self.lock();
+        g.error.get_or_insert(msg);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    fn error_or(&self, fallback: &str) -> String {
+        let g = self.lock();
+        g.error.clone().unwrap_or_else(|| fallback.to_string())
+    }
+
+    /// Microbatches claimed but not yet committed.
+    fn inflight(&self, committed: u64) -> f64 {
+        let g = self.lock();
+        g.next_task.saturating_sub(committed) as f64
+    }
+
+    fn push_occupancy(&self, busy: f64, alive: f64) {
+        let mut g = self.lock();
+        g.occ.push((busy, alive));
+    }
+}
+
+/// Everything a compute worker needs, shareable across scoped threads.
+struct WorkerCtx<'r> {
+    reg: &'r Registry,
+    spec: &'r ModelSpec,
+    art: &'r ArtifactSpec,
+    exec_spec: StageExecSpec,
+    batches: &'r [(Vec<f32>, Vec<i32>)],
+    /// Leaf index -> (stage, position inside the stage's group).
+    locate: &'r [(usize, usize)],
+    hyp: &'r [f32],
+    devv: &'r [f32],
+    steps: u64,
+    staleness: u64,
+    /// Key counter at train start; worker keys are derived statically.
+    kc0: u64,
+    /// Eval period in steps (0 = no evals consume keys).
+    eval_every: u64,
+    /// RNG keys one eval sweep consumes.
+    keys_per_eval: u64,
+}
+
+impl WorkerCtx<'_> {
+    fn key_for(&self, m: u64) -> u64 {
+        step_key(self.kc0, self.keys_per_eval, self.eval_every, m)
+    }
+}
+
+/// The key the synchronous trainer would draw for step `m`: one per
+/// prior step, plus `keys_per_eval` per eval boundary passed — a pure
+/// function of the microbatch index, so worker count never enters.
+fn step_key(kc0: u64, keys_per_eval: u64, eval_every: u64, m: u64) -> u64 {
+    let evals = if eval_every > 0 { m / eval_every } else { 0 };
+    kc0.wrapping_add(m + 1)
+        .wrapping_add(keys_per_eval.wrapping_mul(evals))
+}
+
+/// Run the step artifact for microbatch `m` against a version snapshot.
+fn run_step(
+    ctx: &WorkerCtx<'_>,
+    exec: &Executor,
+    snap: &[GroupLeaves],
+    m: u64,
+) -> Result<(f64, Vec<Vec<f32>>)> {
+    let t0 = metrics::enabled().then(Instant::now);
+    let mut inputs = Vec::with_capacity(ctx.locate.len() + 5);
+    for &(s, p) in ctx.locate {
+        inputs.push(HostTensor::F32(snap[s][p].clone()));
+    }
+    let (x, y) = &ctx.batches[m as usize];
+    inputs.push(HostTensor::F32(x.clone()));
+    inputs.push(HostTensor::I32(y.clone()));
+    let key = ctx.key_for(m);
+    inputs.push(HostTensor::U32(vec![(key >> 32) as u32, key as u32]));
+    inputs.push(HostTensor::F32(ctx.hyp.to_vec()));
+    inputs.push(HostTensor::F32(ctx.devv.to_vec()));
+    let mut outputs = exec.run(ctx.art, &inputs)?;
+    let loss = outputs
+        .pop()
+        .and_then(|v| v.first().copied())
+        .ok_or_else(|| anyhow!("step returned no loss"))? as f64;
+    let out = ModelState::from_outputs(ctx.spec, outputs)?.leaves;
+    if let Some(t0) = t0 {
+        metrics::counter(MetricId::TrainStepsTotal, 1);
+        metrics::histogram(MetricId::TrainStepSeconds, t0.elapsed().as_secs_f64());
+    }
+    Ok((loss, out))
+}
+
+/// Compute-worker loop: claim, wait for the input version, execute,
+/// post the result. Exits on stop, error, or task exhaustion.
+fn worker(ctx: &WorkerCtx<'_>, hub: &Hub) {
+    let alive0 = Instant::now();
+    let mut busy = 0.0f64;
+    let exec = match ctx.exec_spec.build(ctx.reg) {
+        Ok(e) => e,
+        Err(e) => {
+            hub.fail(format!("pipeline worker executor: {e:#}"));
+            return;
+        }
+    };
+    while let Some(m) = hub.claim(ctx.steps) {
+        let base = m.saturating_sub(ctx.staleness);
+        let Some((snap, stall)) = hub.wait_version(base) else {
+            break;
+        };
+        metrics::histogram(MetricId::PipelineStallSeconds, stall);
+        let t0 = Instant::now();
+        let r = run_step(ctx, &exec, &snap, m);
+        busy += t0.elapsed().as_secs_f64();
+        match r {
+            Ok((loss, out)) => hub.complete(
+                m,
+                WorkerOut {
+                    loss,
+                    base,
+                    out: Arc::new(out),
+                },
+            ),
+            Err(e) => {
+                hub.fail(format!("pipeline step {m}: {e:#}"));
+                break;
+            }
+        }
+    }
+    hub.push_occupancy(busy, alive0.elapsed().as_secs_f64());
+}
+
+/// One stage applier: owns the leaves of a contiguous tile range.
+struct StageCtx {
+    idx: usize,
+    /// Manifest leaf indices in this stage's group, ascending.
+    members: Vec<usize>,
+    last: bool,
+    /// Versions kept behind the newest: `staleness + 1`.
+    retain: u64,
+}
+
+/// Stage-applier loop: fold each in-order `Apply` into this stage's
+/// leaf group and hand the message on. The last stage publishes.
+fn stage(
+    ctx: &StageCtx,
+    hub: &Hub,
+    rx: mpsc::Receiver<ApplyMsg>,
+    tx: Option<mpsc::Sender<ApplyMsg>>,
+) {
+    while let Ok(msg) = rx.recv() {
+        let ApplyMsg::Step { task, base, out } = msg else {
+            break;
+        };
+        let (cur, prev) = {
+            let g = hub.lock();
+            (
+                g.groups.get(&(task, ctx.idx)).cloned(),
+                g.groups.get(&(base, ctx.idx)).cloned(),
+            )
+        };
+        let (Some(cur), Some(prev)) = (cur, prev) else {
+            hub.fail(format!(
+                "pipeline stage {}: versions {task}/{base} evicted",
+                ctx.idx
+            ));
+            break;
+        };
+        let new: Vec<Vec<f32>> = if base == task {
+            // the step ran against the newest state: its output *is*
+            // version task+1 — applying it as a delta (cur + (out -
+            // cur)) would flip low bits and break the D=0 contract
+            ctx.members.iter().map(|&li| out[li].clone()).collect()
+        } else {
+            ctx.members
+                .iter()
+                .enumerate()
+                .map(|(p, &li)| {
+                    cur[p]
+                        .iter()
+                        .zip(prev[p].iter())
+                        .zip(out[li].iter())
+                        .map(|((&c, &b), &o)| c + (o - b))
+                        .collect()
+                })
+                .collect()
+        };
+        {
+            let mut g = hub.lock();
+            g.groups.insert((task + 1, ctx.idx), Arc::new(new));
+            let keep_from = (task + 1).saturating_sub(ctx.retain);
+            let idx = ctx.idx;
+            g.groups.retain(|&(v, s), _| s != idx || v >= keep_from);
+            if ctx.last {
+                g.published = task + 1;
+            }
+        }
+        if ctx.last {
+            hub.cv.notify_all();
+        }
+        if let Some(tx) = &tx {
+            if tx.send(ApplyMsg::Step { task, base, out }).is_err() {
+                break;
+            }
+        }
+    }
+    // rx/tx drop here, cascading shutdown down the chain
+    if let Some(tx) = tx {
+        let _ = tx.send(ApplyMsg::Stop);
+    }
+}
+
+/// Coordinator-side constants derived before the threads start.
+struct CoordCtx<'r> {
+    spec: &'r ModelSpec,
+    members: &'r [Vec<usize>],
+    steps: u64,
+    /// Eval period (0 = none); implies `test_ds` is present.
+    e: u64,
+    kpe: u64,
+    kc0: u64,
+}
+
+/// Keys one full eval sweep consumes: one per batch, two for a ragged
+/// tail batch (its loss needs a second artifact execution).
+fn keys_per_eval(n: usize, eval_batch: usize) -> u64 {
+    let mut keys = 0u64;
+    let mut lo = 0;
+    while lo < n {
+        let take = eval_batch.min(n - lo);
+        keys += if take == eval_batch { 1 } else { 2 };
+        lo += take;
+    }
+    keys
+}
+
+/// The in-order commit loop; mirrors `Trainer::train` line for line on
+/// everything observable (losses, EMA, logging, metrics, evals, cost).
+fn run_coordinator(
+    inner: &mut Trainer<'_>,
+    ctx: &CoordCtx<'_>,
+    hub: &Hub,
+    tx: &mpsc::Sender<ApplyMsg>,
+    test_ds: Option<&Dataset>,
+) -> Result<TrainResult> {
+    let spec = ctx.spec;
+    let n_weights = spec.n_weights() as u64;
+    let digital = inner.cfg.spec.method == Method::Digital;
+    let mut res = TrainResult {
+        cost: inner.calib_cost,
+        ..TrainResult::default()
+    };
+    let mut ema = f64::NAN;
+    let mut evals_done: u64 = 0;
+    for k in 0..ctx.steps {
+        let wo = hub.wait_done(k)?;
+        res.losses.push(wo.loss);
+        res.steps_run = (k + 1) as usize;
+        let ema_next = if ema.is_nan() {
+            wo.loss
+        } else {
+            0.95 * ema + 0.05 * wo.loss
+        };
+        let target_hit = inner.cfg.target_loss > 0.0
+            && ema_next < inner.cfg.target_loss
+            && res.reached_target_at.is_none();
+        if target_hit {
+            // freeze claims *before* version k+1 is published: workers
+            // blocked on it re-check `stop` on wake, so no speculative
+            // step beyond the break point runs at D=0
+            hub.halt();
+        }
+        if tx
+            .send(ApplyMsg::Step {
+                task: k,
+                base: wo.base,
+                out: wo.out.clone(),
+            })
+            .is_err()
+        {
+            return Err(anyhow!(hub.error_or("pipeline stage chain closed early")));
+        }
+        if metrics::enabled() {
+            metrics::gauge(MetricId::TrainLoss, wo.loss);
+            if !digital {
+                metrics::counter(MetricId::TrainUpdatePulsesTotal, n_weights * BL);
+            }
+            // post-step residual: at base==k the output IS state k+1;
+            // otherwise wait for the appliers to rebase it
+            let resid = if wo.base == k {
+                fault::sp_residual_leaves(spec, &wo.out, &inner.cfg.dev)
+            } else {
+                let leaves = hub.wait_assembled(k + 1, ctx.members, spec)?;
+                fault::sp_residual_leaves(spec, &leaves, &inner.cfg.dev)
+            };
+            metrics::gauge(MetricId::SpResidual, resid);
+            metrics::gauge(MetricId::PipelineInflight, hub.inflight(k + 1));
+            metrics::trace_sample(k);
+        }
+        ema = ema_next;
+        if inner.cfg.log && (k % 50 == 0 || k + 1 == ctx.steps) {
+            let loss = wo.loss;
+            println!("  step {k:5}  loss {loss:.4}  ema {ema:.4}");
+        }
+        if ctx.e > 0 && (k + 1) % ctx.e == 0 {
+            if let Some(ds) = test_ds {
+                let leaves = hub.wait_assembled(k + 1, ctx.members, spec)?;
+                inner.state.leaves = leaves;
+                inner.key_counter = ctx
+                    .kc0
+                    .wrapping_add(k + 1)
+                    .wrapping_add(ctx.kpe.wrapping_mul(evals_done));
+                let (el, ea) = inner.eval(ds)?;
+                evals_done += 1;
+                if inner.cfg.log {
+                    println!("  step {k:5}  eval loss {el:.4}  acc {ea:.2}%");
+                }
+                res.evals.push(((k + 1) as usize, el, ea));
+            }
+        }
+        if target_hit {
+            res.reached_target_at = Some((k + 1) as usize);
+            break;
+        }
+    }
+    // drain: the state after the last committed step becomes the
+    // trainer state, with the synchronous key counter re-derived
+    let final_v = res.steps_run as u64;
+    inner.state.leaves = hub.wait_assembled(final_v, ctx.members, spec)?;
+    inner.key_counter = ctx
+        .kc0
+        .wrapping_add(final_v)
+        .wrapping_add(ctx.kpe.wrapping_mul(evals_done));
+    if digital {
+        res.cost.digital_ops += final_v * n_weights;
+    } else {
+        res.cost.update_pulses = PulseCost::training_estimate(final_v, n_weights, BL);
+    }
+    if let Some(ds) = test_ds {
+        let (el, ea) = inner.eval(ds)?;
+        res.evals.push((res.steps_run, el, ea));
+        res.final_eval_acc = ea;
+    }
+    Ok(res)
+}
+
+/// Pipelined trainer over a wrapped synchronous [`Trainer`].
+///
+/// Construction, checkpointing and evaluation delegate to the inner
+/// trainer; only `train` replaces the step loop with the
+/// worker/stage-chain topology described in the module docs. After
+/// `train` returns, the inner trainer's state and key counter are
+/// exactly what the synchronous schedule would have left (for `D = 0`
+/// bit for bit), so sync and pipelined segments can be freely
+/// interleaved on one model.
+pub struct PipelineTrainer<'a> {
+    inner: Trainer<'a>,
+    pcfg: PipelineConfig,
+}
+
+impl<'a> PipelineTrainer<'a> {
+    /// Validate the topology against the model manifest and initialize
+    /// the model exactly like [`Trainer::new`].
+    pub fn new(
+        exec: &'a Executor,
+        reg: &'a Registry,
+        cfg: TrainConfig,
+        pcfg: PipelineConfig,
+    ) -> Result<PipelineTrainer<'a>> {
+        let spec = reg.model(&cfg.model)?;
+        let tiles = distinct_tiles(spec);
+        if pcfg.stages == 0 || pcfg.workers == 0 {
+            return Err(anyhow!("pipeline needs at least one stage and one worker"));
+        }
+        if pcfg.stages > tiles.len() {
+            return Err(anyhow!(
+                "model {} has {} tiles; cannot split into {} stages",
+                cfg.model,
+                tiles.len(),
+                pcfg.stages
+            ));
+        }
+        let inner = Trainer::new(exec, reg, cfg)?;
+        Ok(PipelineTrainer { inner, pcfg })
+    }
+
+    /// The wrapped synchronous trainer (state, config, eval).
+    pub fn inner(&self) -> &Trainer<'a> {
+        &self.inner
+    }
+
+    /// Mutable access to the wrapped trainer (e.g. to extend
+    /// `cfg.steps` between segments).
+    pub fn inner_mut(&mut self) -> &mut Trainer<'a> {
+        &mut self.inner
+    }
+
+    /// Snapshot the full trainer state; round-trips through
+    /// [`Checkpoint::save`]/[`Checkpoint::load`] like the synchronous
+    /// trainer's.
+    pub fn checkpoint(&self, step: u64) -> Checkpoint {
+        self.inner.checkpoint(step)
+    }
+
+    /// Restore a checkpoint taken from either trainer flavor.
+    pub fn restore(&mut self, ck: &Checkpoint) {
+        self.inner.restore(ck)
+    }
+
+    /// Pipelined training run; the observable result contract is
+    /// documented on the module.
+    pub fn train(&mut self, train_ds: &Dataset, test_ds: Option<&Dataset>) -> Result<TrainResult> {
+        let reg = self.inner.reg;
+        let spec = reg.model(&self.inner.cfg.model)?;
+        let art = reg.artifact(&self.inner.cfg.step_artifact())?;
+        let s_n = self.pcfg.stages;
+
+        // contiguous tile partition -> leaf groups and the reverse map
+        let tiles = distinct_tiles(spec);
+        if s_n == 0 || s_n > tiles.len() {
+            return Err(anyhow!("invalid stage count {s_n} for {} tiles", tiles.len()));
+        }
+        let mut members = vec![Vec::new(); s_n];
+        for (li, leaf) in spec.state.iter().enumerate() {
+            let ti = tiles.iter().position(|&t| t == leaf.tile).unwrap_or(0);
+            members[ti * s_n / tiles.len()].push(li);
+        }
+        let mut locate = vec![(0usize, 0usize); spec.state.len()];
+        for (s, m) in members.iter().enumerate() {
+            for (p, &li) in m.iter().enumerate() {
+                locate[li] = (s, p);
+            }
+        }
+
+        // pre-draw every batch from the synchronous Batcher stream
+        // (memory: steps x batch samples; fine at experiment scale)
+        let steps = self.inner.cfg.steps;
+        let mut batcher = Batcher::new(train_ds.n, spec.batch, self.inner.cfg.seed ^ 0xB00C);
+        let mut batches = Vec::with_capacity(steps);
+        let (mut bx, mut by) = (Vec::new(), Vec::new());
+        for _ in 0..steps {
+            batcher.next_batch(train_ds, &mut bx, &mut by);
+            batches.push((bx.clone(), by.clone()));
+        }
+
+        let e = if self.inner.cfg.eval_every > 0 && test_ds.is_some() {
+            self.inner.cfg.eval_every as u64
+        } else {
+            0
+        };
+        let kpe = match (e, test_ds) {
+            (1.., Some(ds)) => keys_per_eval(ds.n, spec.eval_batch),
+            _ => 0,
+        };
+        let hyp = self.inner.cfg.hypers.to_vec(reg);
+        let devv = self.inner.cfg.dev.to_vec(reg);
+        let kc0 = self.inner.key_counter;
+
+        let init_groups: Vec<Vec<Vec<f32>>> = members
+            .iter()
+            .map(|m| m.iter().map(|&li| self.inner.state.leaves[li].clone()).collect())
+            .collect();
+        let hub = Hub::new(s_n, init_groups);
+        let wctx = WorkerCtx {
+            reg,
+            spec,
+            art,
+            exec_spec: StageExecSpec {
+                precompile: vec![art.name.clone()],
+                plan_threads: self.pcfg.plan_threads,
+            },
+            batches: &batches,
+            locate: &locate,
+            hyp: &hyp,
+            devv: &devv,
+            steps: steps as u64,
+            staleness: self.pcfg.staleness,
+            kc0,
+            eval_every: e,
+            keys_per_eval: kpe,
+        };
+        let stage_ctxs: Vec<StageCtx> = members
+            .iter()
+            .enumerate()
+            .map(|(i, m)| StageCtx {
+                idx: i,
+                members: m.clone(),
+                last: i + 1 == s_n,
+                retain: self.pcfg.staleness + 1,
+            })
+            .collect();
+        let cctx = CoordCtx {
+            spec,
+            members: &members,
+            steps: steps as u64,
+            e,
+            kpe,
+            kc0,
+        };
+
+        let inner = &mut self.inner;
+        let workers = self.pcfg.workers;
+        let result = std::thread::scope(|sc| {
+            let (tx0, mut rx_prev) = mpsc::channel::<ApplyMsg>();
+            for (i, sctx) in stage_ctxs.iter().enumerate() {
+                let (tx_next, rx_next) = mpsc::channel::<ApplyMsg>();
+                let rx = std::mem::replace(&mut rx_prev, rx_next);
+                let tx = (i + 1 < s_n).then_some(tx_next);
+                let hub = &hub;
+                sc.spawn(move || stage(sctx, hub, rx, tx));
+            }
+            drop(rx_prev);
+            for _ in 0..workers {
+                let (wctx, hub) = (&wctx, &hub);
+                sc.spawn(move || worker(wctx, hub));
+            }
+            let out = run_coordinator(inner, &cctx, &hub, &tx0, test_ds);
+            hub.halt();
+            let _ = tx0.send(ApplyMsg::Stop);
+            out
+        });
+        if metrics::enabled() {
+            let g = hub.lock();
+            let (busy, alive) = g
+                .occ
+                .iter()
+                .fold((0.0, 0.0), |(b, a), &(wb, wa)| (b + wb, a + wa));
+            if alive > 0.0 {
+                metrics::gauge(MetricId::PipelineStageOccupancy, busy / alive);
+            }
+        }
+        result
+    }
+}
+
+/// Sorted distinct tile ids in the model manifest.
+fn distinct_tiles(spec: &ModelSpec) -> Vec<usize> {
+    let mut tiles: Vec<usize> = spec.state.iter().map(|l| l.tile).collect();
+    tiles.sort_unstable();
+    tiles.dedup();
+    tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_per_eval_counts_ragged_tail() {
+        // 200 samples, batch 200: one full batch, one key
+        assert_eq!(keys_per_eval(200, 200), 1);
+        // 250 samples, batch 200: full batch + ragged tail (2 keys)
+        assert_eq!(keys_per_eval(250, 200), 3);
+        // 90 samples, batch 200: single ragged batch
+        assert_eq!(keys_per_eval(90, 200), 2);
+        // exact multiple
+        assert_eq!(keys_per_eval(400, 200), 2);
+    }
+
+    #[test]
+    fn key_derivation_matches_sync_discipline() {
+        // kc0=100, eval every 3 steps consuming 2 keys: steps 0,1,2
+        // draw 101,102,103; the eval after step 2 consumes 104,105;
+        // step 3 draws 106
+        assert_eq!(step_key(100, 2, 3, 0), 101);
+        assert_eq!(step_key(100, 2, 3, 2), 103);
+        assert_eq!(step_key(100, 2, 3, 3), 106);
+        assert_eq!(step_key(100, 2, 3, 5), 108);
+        assert_eq!(step_key(100, 2, 3, 6), 111);
+        // no evals: plain successor counter
+        assert_eq!(step_key(7, 0, 0, 4), 12);
+    }
+}

@@ -86,7 +86,7 @@ impl TrainConfig {
     }
 
     /// Artifact name of this config's step function.
-    fn step_artifact(&self) -> String {
+    pub(crate) fn step_artifact(&self) -> String {
         format!("{}_step_{}", self.model, self.spec.method.nn_step_algo())
     }
 }
@@ -122,8 +122,8 @@ pub struct Trainer<'a> {
     pub state: ModelState,
     /// pulse cost of the ZS calibration run in `new` (charged into every
     /// subsequent `train` result)
-    calib_cost: PulseCost,
-    key_counter: u64,
+    pub(crate) calib_cost: PulseCost,
+    pub(crate) key_counter: u64,
 }
 
 impl<'a> Trainer<'a> {

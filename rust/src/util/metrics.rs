@@ -92,6 +92,14 @@ pub enum MetricId {
     BenchStdNs,
     /// Bench: throughput, items per second.
     BenchThroughputPerS,
+    /// Pipeline: mean busy fraction across compute workers
+    /// (`train/pipeline.rs`).
+    PipelineStageOccupancy,
+    /// Pipeline: seconds workers spent waiting for an input state
+    /// version.
+    PipelineStallSeconds,
+    /// Pipeline: microbatches claimed but not yet committed.
+    PipelineInflight,
 }
 
 impl MetricId {
@@ -117,6 +125,9 @@ impl MetricId {
         MetricId::BenchMinNs,
         MetricId::BenchStdNs,
         MetricId::BenchThroughputPerS,
+        MetricId::PipelineStageOccupancy,
+        MetricId::PipelineStallSeconds,
+        MetricId::PipelineInflight,
     ];
 }
 
@@ -299,6 +310,30 @@ pub const SPECS: &[KeySpec] = &[
         labels: "case",
         module: "util/bench.rs",
         help: "Bench: throughput in case-specific items per second",
+    },
+    KeySpec {
+        name: "pipeline_stage_occupancy",
+        kind: Kind::Gauge,
+        unit: "fraction",
+        labels: "-",
+        module: "train/pipeline.rs",
+        help: "Mean busy fraction across pipeline compute workers in the last run",
+    },
+    KeySpec {
+        name: "pipeline_stall_seconds",
+        kind: Kind::Histogram,
+        unit: "seconds",
+        labels: "-",
+        module: "train/pipeline.rs",
+        help: "Seconds pipeline workers spent waiting for their input state version",
+    },
+    KeySpec {
+        name: "pipeline_inflight",
+        kind: Kind::Gauge,
+        unit: "1",
+        labels: "-",
+        module: "train/pipeline.rs",
+        help: "Microbatches claimed but not yet committed, sampled at each commit",
     },
 ];
 

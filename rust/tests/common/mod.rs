@@ -1,0 +1,54 @@
+//! Shared integration-test support: artifact/backend gating and
+//! debug-build budget scaling, extracted so the scaling policy cannot
+//! drift between suites (each previously carried its own copy).
+
+// each test binary uses its own subset of these helpers
+#![allow(dead_code)]
+
+use analog_rider::data::Dataset;
+use analog_rider::runtime::{Executor, Registry};
+
+/// Artifact + backend gate: `None` (after an eprintln starting with
+/// "skipping:", which `./ci.sh e2e` greps for) when the checked-in
+/// artifacts are absent or the XLA backend is stubbed out.
+pub fn setup() -> Option<(Executor, Registry)> {
+    let dir = Registry::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    // artifacts may exist while the XLA backend is stubbed out
+    // (runtime::xla) — that's a skip, not a failure
+    let Ok(exec) = Executor::cpu() else {
+        eprintln!("skipping: PJRT/XLA backend unavailable in this build");
+        return None;
+    };
+    Some((exec, Registry::load(dir).expect("manifest")))
+}
+
+/// The HLO interpreter is ~an order of magnitude slower unoptimized, so
+/// debug runs (tier-1 `cargo test -q`) use a reduced budget; release
+/// runs (`./ci.sh e2e`) keep the full one.
+pub fn budget(debug: usize, release: usize) -> usize {
+    if cfg!(debug_assertions) {
+        debug
+    } else {
+        release
+    }
+}
+
+/// Fixed fcn-shaped batches so two trainer instances can replay the
+/// exact same input sequence.
+pub fn batches(reg: &Registry, n: usize) -> Vec<(Vec<f32>, Vec<i32>)> {
+    let spec = reg.model("fcn").unwrap();
+    let ds = Dataset::digits(spec.batch * n, 19);
+    (0..n)
+        .map(|k| {
+            let lo = k * spec.batch;
+            (
+                ds.x[lo * ds.d..(lo + spec.batch) * ds.d].to_vec(),
+                ds.y[lo..lo + spec.batch].to_vec(),
+            )
+        })
+        .collect()
+}

@@ -3,40 +3,12 @@
 //! pulse budget and touch only the listed tiles, and the NN-scale
 //! fault injector must compose with real step artifacts.
 
-use analog_rider::data::Dataset;
+mod common;
+
 use analog_rider::device::fault::{FaultFamily, FaultPlan};
-use analog_rider::runtime::{Executor, Registry};
 use analog_rider::train::fault::NnFaultInjector;
 use analog_rider::train::{Checkpoint, TrainConfig, Trainer};
-
-fn setup() -> Option<(Executor, Registry)> {
-    let dir = Registry::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built");
-        return None;
-    }
-    let Ok(exec) = Executor::cpu() else {
-        eprintln!("skipping: PJRT/XLA backend unavailable in this build");
-        return None;
-    };
-    Some((exec, Registry::load(dir).expect("manifest")))
-}
-
-/// Fixed batches so two trainer instances can replay the exact same
-/// input sequence.
-fn batches(reg: &Registry, n: usize) -> Vec<(Vec<f32>, Vec<i32>)> {
-    let spec = reg.model("fcn").unwrap();
-    let ds = Dataset::digits(spec.batch * n, 19);
-    (0..n)
-        .map(|k| {
-            let lo = k * spec.batch;
-            (
-                ds.x[lo * ds.d..(lo + spec.batch) * ds.d].to_vec(),
-                ds.y[lo..lo + spec.batch].to_vec(),
-            )
-        })
-        .collect()
-}
+use common::{batches, setup};
 
 #[test]
 fn checkpoint_restore_resumes_bit_identical() {

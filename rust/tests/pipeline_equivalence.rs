@@ -1,0 +1,220 @@
+//! Pipeline-parallel trainer equivalence: at staleness `D = 0` the
+//! pipelined schedule must be bit-for-bit identical to the synchronous
+//! [`Trainer`] oracle for every stage/worker topology; at `D > 0` the
+//! trajectory may differ from sync but must be a pure function of
+//! `(cfg, D)` — never of the worker count or thread timing; and a
+//! checkpoint taken between pipelined segments must round-trip through
+//! disk and replay bit-exactly, interoperating with the sync flavor.
+
+mod common;
+
+use analog_rider::data::Dataset;
+use analog_rider::train::{
+    Checkpoint, PipelineConfig, PipelineTrainer, TrainConfig, TrainResult, Trainer,
+};
+use common::{budget, setup};
+
+fn cfg_for(algo: &str, steps: usize, eval_every: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::by_name("fcn", algo).expect("registry name");
+    cfg.ref_mean = 0.3;
+    cfg.ref_std = 0.2;
+    cfg.seed = seed;
+    cfg.steps = steps;
+    cfg.eval_every = eval_every;
+    cfg
+}
+
+fn pcfg(stages: usize, workers: usize, staleness: u64) -> PipelineConfig {
+    PipelineConfig {
+        stages,
+        workers,
+        staleness,
+        plan_threads: 0,
+    }
+}
+
+/// Bitwise comparison of two runs: every per-step loss, every eval
+/// tuple, the final accuracy, the step count and every state leaf.
+/// `f64::to_bits` (not `==`) so a NaN disagreement still fails loudly.
+fn assert_bit_identical(
+    a: &TrainResult,
+    state_a: &[Vec<f32>],
+    b: &TrainResult,
+    state_b: &[Vec<f32>],
+    what: &str,
+) {
+    assert_eq!(a.steps_run, b.steps_run, "{what}: steps_run");
+    assert_eq!(a.losses.len(), b.losses.len(), "{what}: loss count");
+    for (k, (la, lb)) in a.losses.iter().zip(&b.losses).enumerate() {
+        assert_eq!(la.to_bits(), lb.to_bits(), "{what}: loss at step {k}");
+    }
+    assert_eq!(a.evals.len(), b.evals.len(), "{what}: eval count");
+    for ((sa, la, aa), (sb, lb, ab)) in a.evals.iter().zip(&b.evals) {
+        assert_eq!(sa, sb, "{what}: eval step");
+        assert_eq!(la.to_bits(), lb.to_bits(), "{what}: eval loss at {sa}");
+        assert_eq!(aa.to_bits(), ab.to_bits(), "{what}: eval acc at {sa}");
+    }
+    assert_eq!(
+        a.final_eval_acc.to_bits(),
+        b.final_eval_acc.to_bits(),
+        "{what}: final_eval_acc"
+    );
+    assert_eq!(state_a.len(), state_b.len(), "{what}: leaf count");
+    for (i, (la, lb)) in state_a.iter().zip(state_b).enumerate() {
+        assert_eq!(la.len(), lb.len(), "{what}: leaf {i} len");
+        for (j, (va, vb)) in la.iter().zip(lb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{what}: leaf {i} element {j}: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn d0_pipelined_is_bit_identical_to_sync() {
+    let Some((exec, reg)) = setup() else { return };
+    let steps = budget(4, 12);
+    let eval_every = budget(2, 5);
+    let train = Dataset::digits(64, 11);
+    // 50 < eval_batch (200): the ragged-eval path burns a different
+    // number of RNG keys per sweep, which the pipeline's static key
+    // derivation must reproduce exactly
+    let test = Dataset::digits(50, 12);
+
+    let sync = {
+        let mut t = Trainer::new(&exec, &reg, cfg_for("erider", steps, eval_every, 5))
+            .expect("sync trainer");
+        let res = t.train(&train, Some(&test)).expect("sync train");
+        (res, t.state.leaves.clone())
+    };
+
+    for stages in [1usize, 2, 3] {
+        for workers in [1usize, 2, 8] {
+            let mut pt = PipelineTrainer::new(
+                &exec,
+                &reg,
+                cfg_for("erider", steps, eval_every, 5),
+                pcfg(stages, workers, 0),
+            )
+            .expect("pipeline trainer");
+            let res = pt.train(&train, Some(&test)).expect("pipelined train");
+            assert_bit_identical(
+                &sync.0,
+                &sync.1,
+                &res,
+                &pt.inner().state.leaves,
+                &format!("D=0 stages={stages} workers={workers}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn stale_pipelining_is_deterministic_across_topology() {
+    let Some((exec, reg)) = setup() else { return };
+    let steps = budget(5, 10);
+    let eval_every = budget(3, 4);
+    let train = Dataset::digits(64, 21);
+    let test = Dataset::digits(50, 22);
+
+    let run = |stages: usize, workers: usize, d: u64| {
+        let mut pt = PipelineTrainer::new(
+            &exec,
+            &reg,
+            cfg_for("ttv2", steps, eval_every, 7),
+            pcfg(stages, workers, d),
+        )
+        .expect("pipeline trainer");
+        let res = pt.train(&train, Some(&test)).expect("pipelined train");
+        (res, pt.inner().state.leaves.clone())
+    };
+
+    // D=2: the trajectory is allowed to differ from sync, but must be
+    // identical across every stage count, worker count and whatever
+    // interleaving the scheduler happens to produce
+    let reference = run(2, 1, 2);
+    for (stages, workers) in [(2usize, 2usize), (2, 8), (1, 2), (3, 2)] {
+        let got = run(stages, workers, 2);
+        assert_bit_identical(
+            &reference.0,
+            &reference.1,
+            &got.0,
+            &got.1,
+            &format!("D=2 stages={stages} workers={workers}"),
+        );
+    }
+
+    // D >= steps: every microbatch reads the initial weights; an
+    // extreme schedule that maximizes speculative overlap
+    let deep_a = run(2, 2, 1000);
+    let deep_b = run(2, 8, 1000);
+    assert_bit_identical(&deep_a.0, &deep_a.1, &deep_b.0, &deep_b.1, "D=1000");
+}
+
+#[test]
+fn checkpoint_restore_mid_pipeline_round_trips() {
+    let Some((exec, reg)) = setup() else { return };
+    let seg1 = budget(3, 6);
+    let seg2 = budget(3, 6);
+    let train = Dataset::digits(64, 31);
+
+    // segment 1: pipelined with real staleness, then snapshot
+    let mut pt = PipelineTrainer::new(
+        &exec,
+        &reg,
+        cfg_for("erider", seg1, 0, 5),
+        pcfg(2, 2, 1),
+    )
+    .expect("pipeline trainer");
+    pt.train(&train, None).expect("segment 1");
+    let ck = pt.checkpoint(seg1 as u64);
+
+    // disk round-trip (atomic save + load), as in recovery flows
+    let path = std::env::temp_dir().join(format!(
+        "rpallas_pipeline_ck_{}.ckpt",
+        std::process::id()
+    ));
+    ck.save(&path).expect("save");
+    let back = Checkpoint::load(&path).expect("load");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back, ck);
+
+    // segment 2 twice from the same checkpoint: bit-identical replay
+    pt.inner_mut().cfg.steps = seg2;
+    let ahead = pt.train(&train, None).expect("segment 2");
+    let state_ahead = pt.inner().state.leaves.clone();
+    pt.restore(&back);
+    let replay = pt.train(&train, None).expect("segment 2 replay");
+    assert_bit_identical(
+        &ahead,
+        &state_ahead,
+        &replay,
+        &pt.inner().state.leaves,
+        "mid-pipeline restore",
+    );
+
+    // flavor interop: restoring the pipelined checkpoint into a fresh
+    // synchronous trainer and a fresh D=0 pipeline must agree bit for
+    // bit from that point on
+    let mut sync = Trainer::new(&exec, &reg, cfg_for("erider", seg2, 0, 5)).expect("sync");
+    sync.restore(&back);
+    let sync_res = sync.train(&train, None).expect("sync continuation");
+    let mut p0 = PipelineTrainer::new(
+        &exec,
+        &reg,
+        cfg_for("erider", seg2, 0, 5),
+        pcfg(2, 2, 0),
+    )
+    .expect("p0");
+    p0.restore(&back);
+    let p0_res = p0.train(&train, None).expect("d0 continuation");
+    assert_bit_identical(
+        &sync_res,
+        &sync.state.leaves,
+        &p0_res,
+        &p0.inner().state.leaves,
+        "checkpoint interop sync vs D=0",
+    );
+}

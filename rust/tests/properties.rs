@@ -4,6 +4,9 @@
 use analog_rider::data::{Batcher, Dataset};
 use analog_rider::device::{presets, DeviceArray, Response, SoftBounds};
 use analog_rider::prop_assert;
+use analog_rider::runtime::{ModelSpec, StateLeaf};
+use analog_rider::train::fault::{sp_residual_leaves, LossSpikeMonitor};
+use analog_rider::train::DevParams;
 use analog_rider::util::json::Json;
 use analog_rider::util::prop::{self, gen};
 use analog_rider::util::rng::Rng;
@@ -130,6 +133,176 @@ fn prop_pulse_counter_additive() {
             "count {} != expected {}",
             arr.pulse_count,
             expected
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pulse_accounting_is_schedule_invariant() {
+    // `DeviceArray::pulse_count` is the source that feeds the
+    // `device_pulses_total` counter, so this pins the pipeline's pulse
+    // accounting: any legal stage interleaving (per-stage FIFO order
+    // preserved, global order arbitrary — exactly what the commit chain
+    // guarantees at D = 0) must charge the same total and leave the
+    // same weights, bit for bit.
+    prop::check("pulse schedule invariance", 20, |rng| {
+        let dev = SoftBounds::symmetric();
+        let stages = gen::size(rng, 1, 4);
+        let steps = gen::size(rng, 2, 8);
+        let rows = gen::size(rng, 2, 5);
+        let cols = gen::size(rng, 2, 5);
+        let dws: Vec<Vec<Vec<f32>>> = (0..stages)
+            .map(|_| {
+                (0..steps)
+                    .map(|_| gen::vec_uniform_f32(rng, rows * cols, -0.05, 0.05))
+                    .collect()
+            })
+            .collect();
+        let fresh = || -> Vec<DeviceArray> {
+            (0..stages)
+                .map(|_| DeviceArray::uniform(rows, cols, &dev, 0.01, 0.0))
+                .collect()
+        };
+
+        // oracle: the synchronous order (microbatch-major, stages inner)
+        let mut serial = fresh();
+        for k in 0..steps {
+            for s in 0..stages {
+                serial[s].analog_update_det(&dws[s][k]);
+            }
+        }
+
+        // random legal interleaving over identical arrays
+        let mut inter = fresh();
+        let mut next = vec![0usize; stages];
+        let mut remaining = stages * steps;
+        while remaining > 0 {
+            let s = rng.below(stages);
+            if next[s] < steps {
+                inter[s].analog_update_det(&dws[s][next[s]]);
+                next[s] += 1;
+                remaining -= 1;
+            }
+        }
+
+        let ts: u64 = serial.iter().map(|a| a.pulse_count).sum();
+        let ti: u64 = inter.iter().map(|a| a.pulse_count).sum();
+        prop_assert!(ts == ti, "total pulses {} != {}", ts, ti);
+        for (s, (a, b)) in serial.iter().zip(&inter).enumerate() {
+            prop_assert!(
+                a.pulse_count == b.pulse_count,
+                "stage {} pulse count {} != {}",
+                s,
+                a.pulse_count,
+                b.pulse_count
+            );
+            prop_assert!(
+                a.w.iter().zip(&b.w).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "stage {} weights diverged under reordering",
+                s
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_loss_spike_monitor_is_commit_order_invariant() {
+    // The pipelined coordinator feeds the spike monitor through an
+    // in-order reorder buffer: workers complete microbatches in any
+    // order, the buffer drains them in step order. The trigger sequence
+    // must therefore match a serial fold exactly — including around
+    // NaNs and genuine spikes.
+    prop::check("spike monitor reorder", 30, |rng| {
+        let n = gen::size(rng, 5, 40);
+        let losses: Vec<f64> = (0..n)
+            .map(|_| match rng.below(10) {
+                0 => f64::NAN,
+                1 => rng.uniform_in(5.0, 50.0),
+                _ => rng.uniform_in(0.1, 2.0),
+            })
+            .collect();
+        let mut mon = LossSpikeMonitor::new(3.0, 2);
+        let serial: Vec<bool> = losses.iter().map(|&l| mon.observe(l)).collect();
+
+        // completion order: a random permutation of step indices
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut mon2 = LossSpikeMonitor::new(3.0, 2);
+        let mut done = vec![false; n];
+        let mut commit = 0usize;
+        let mut replay = Vec::with_capacity(n);
+        for &k in &order {
+            done[k] = true;
+            while commit < n && done[commit] {
+                replay.push(mon2.observe(losses[commit]));
+                commit += 1;
+            }
+        }
+        prop_assert!(commit == n, "reorder buffer failed to drain");
+        prop_assert!(serial == replay, "trigger sequence diverged under reordering");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sp_residual_invariant_under_stage_partition() {
+    // The pipelined coordinator probes SP residual from leaves
+    // reassembled out of per-stage groups rather than a monolithic
+    // `ModelState`; scattering the leaves across a random partition and
+    // reassembling in manifest order must not move the probe by a bit.
+    prop::check("sp residual partition", 30, |rng| {
+        let mut state = Vec::new();
+        for t in 0..2usize {
+            for role in ["w", "p", "pap", "pam", "q"] {
+                state.push(StateLeaf {
+                    name: format!("t{t}.{role}"),
+                    shape: vec![3, 3],
+                    role: role.into(),
+                    tile: t,
+                });
+            }
+        }
+        state.push(StateLeaf {
+            name: "b".into(),
+            shape: vec![3],
+            role: "bias".into(),
+            tile: 0,
+        });
+        let spec = ModelSpec {
+            name: "toy".into(),
+            batch: 2,
+            eval_batch: 2,
+            d_in: 3,
+            n_classes: 3,
+            state,
+        };
+        let dev = DevParams::from_preset(&presets::OM);
+        let leaves: Vec<Vec<f32>> = spec
+            .state
+            .iter()
+            .map(|l| gen::vec_uniform_f32(rng, l.numel(), -1.0, 1.0))
+            .collect();
+        let whole = sp_residual_leaves(&spec, &leaves, &dev);
+
+        let stages = gen::size(rng, 1, 4);
+        let mut groups: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); stages];
+        for (li, leaf) in leaves.iter().enumerate() {
+            groups[rng.below(stages)].push((li, leaf.clone()));
+        }
+        let mut reassembled = vec![Vec::new(); leaves.len()];
+        for g in groups {
+            for (li, v) in g {
+                reassembled[li] = v;
+            }
+        }
+        let part = sp_residual_leaves(&spec, &reassembled, &dev);
+        prop_assert!(
+            whole.to_bits() == part.to_bits(),
+            "residual {} != {} after partition",
+            whole,
+            part
         );
         Ok(())
     });

@@ -2,35 +2,11 @@
 //! must reduce training loss on the synthetic digits within a small
 //! budget, and the two-stage ZS path must calibrate the reference.
 
+mod common;
+
 use analog_rider::data::Dataset;
-use analog_rider::runtime::{Executor, Registry};
 use analog_rider::train::{TrainConfig, Trainer};
-
-fn setup() -> Option<(Executor, Registry)> {
-    let dir = Registry::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built");
-        return None;
-    }
-    // artifacts may exist while the XLA backend is stubbed out
-    // (runtime::xla) — that's a skip, not a failure
-    let Ok(exec) = Executor::cpu() else {
-        eprintln!("skipping: PJRT/XLA backend unavailable in this build");
-        return None;
-    };
-    Some((exec, Registry::load(dir).expect("manifest")))
-}
-
-/// The HLO interpreter is ~an order of magnitude slower unoptimized, so
-/// debug runs (tier-1 `cargo test -q`) use a reduced budget; release
-/// runs (`./ci.sh e2e`) keep the full one.
-fn budget(debug: usize, release: usize) -> usize {
-    if cfg!(debug_assertions) {
-        debug
-    } else {
-        release
-    }
-}
+use common::{budget, setup};
 
 #[test]
 fn erider_reduces_loss_on_digits() {
